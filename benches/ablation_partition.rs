@@ -1,0 +1,64 @@
+//! Ablation: partitioner choice (METIS-multilevel vs BFS vs random).
+//!
+//! The paper's design rests on METIS producing dense communities with few
+//! inter-community edges; this bench quantifies what that buys: edge cut →
+//! p/s message bytes → communication time → end-to-end parallel epoch
+//! time, plus any accuracy effect.
+//!
+//! Env knobs: CGCN_BENCH_EPOCHS (default 25), CGCN_BENCH_SCALE (0.25).
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::data::synth;
+use cgcn::partition::Method;
+use cgcn::runtime::Engine;
+use std::sync::Arc;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+    if !Engine::available() {
+        eprintln!("ablation_partition: artifacts not found — run `make artifacts` first");
+        return Ok(());
+    }
+    let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 25);
+    let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
+    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+
+    let ds = synth::generate(&synth::AMAZON_PHOTO, scale, 17);
+    let mut hp = HyperParams::for_dataset("synth-photo");
+    hp.communities = 3;
+
+    println!(
+        "Partitioner ablation — parallel ADMM, {} , {epochs} epochs\n",
+        ds.name
+    );
+    println!(
+        "{:<10} {:>9} {:>9} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "method", "edgecut", "cut %", "MB/epoch", "comm(s)", "train(s)", "total(s)", "test acc"
+    );
+    for method in [Method::Metis, Method::Bfs, Method::Random] {
+        let ws = Arc::new(Workspace::build(&ds, &hp, method)?);
+        let edgecut = ws.edgecut;
+        let mut t = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(3))?;
+        let rep = t.train(epochs, method.name())?;
+        println!(
+            "{:<10} {:>9} {:>8.1}% {:>12.2} {:>10.2} {:>10.2} {:>10.2} {:>10.3}",
+            method.name(),
+            edgecut,
+            100.0 * edgecut as f64 / ds.graph.num_edges() as f64,
+            rep.total_bytes() as f64 / rep.epochs.len() as f64 / 1e6,
+            rep.total_comm(),
+            rep.total_train(),
+            rep.total_virtual(),
+            rep.final_test_acc()
+        );
+    }
+    Ok(())
+}

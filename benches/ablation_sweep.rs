@@ -1,0 +1,119 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. link bandwidth sweep (100 Mbit/s .. 50 Gbit/s) — where the paper's
+//!    speedup claim lives as a function of network quality;
+//! 2. ρ = ν sweep — sensitivity of ADMM convergence to the penalty scale
+//!    (the paper tunes 1e-3 vs 1e-4 per dataset);
+//! 3. scheduler ablation — own-block Gauss-Seidel anchoring vs pure Jacobi
+//!    and the paper-literal centralised W update vs the distributed
+//!    row-block reduction.
+//!
+//! Env knobs: CGCN_BENCH_EPOCHS (default 25), CGCN_BENCH_SCALE (0.25).
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, LinkModel, Workspace};
+use cgcn::data::synth;
+use cgcn::partition::Method;
+use cgcn::runtime::Engine;
+use std::sync::Arc;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+    if !Engine::available() {
+        eprintln!("ablation_sweep: artifacts not found — run `make artifacts` first");
+        return Ok(());
+    }
+    let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 25);
+    let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
+    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let ds = synth::generate(&synth::AMAZON_PHOTO, scale, 17);
+    let hp = HyperParams::for_dataset("synth-photo");
+
+    // ---- 1. bandwidth sweep ------------------------------------------------
+    println!("=== link bandwidth sweep (parallel ADMM M=3 vs serial, {epochs} epochs) ===");
+    let serial = {
+        let mut hp_s = hp.clone();
+        hp_s.communities = 1;
+        let ws = Arc::new(Workspace::build(&ds, &hp_s, Method::Metis)?);
+        AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(1))?.train(epochs, "serial")?
+    };
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>9}",
+        "link", "comm(s)", "train(s)", "total(s)", "speedup"
+    );
+    println!(
+        "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>9}",
+        "serial", 0.0, serial.total_train(), serial.total_virtual(), "-"
+    );
+    for mbps in [100.0, 1_000.0, 10_000.0, 50_000.0] {
+        let mut hp_p = hp.clone();
+        hp_p.communities = 3;
+        let ws = Arc::new(Workspace::build(&ds, &hp_p, Method::Metis)?);
+        let mut opts = AdmmOptions::for_mode(3);
+        opts.link = LinkModel::new(mbps, 100.0);
+        let rep = AdmmTrainer::new(ws, engine.clone(), opts)?.train(epochs, "parallel")?;
+        println!(
+            "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>8.2}x",
+            format!("{}M", mbps as u64),
+            rep.total_comm(),
+            rep.total_train(),
+            rep.total_virtual(),
+            serial.total_virtual() / rep.total_virtual()
+        );
+    }
+
+    // ---- 2. rho/nu sweep -----------------------------------------------------
+    println!("\n=== rho = nu sweep (serial ADMM, {epochs} epochs) ===");
+    println!("{:<10} {:>10} {:>10} {:>10}", "rho=nu", "loss", "train acc", "test acc");
+    for rho in [1e-2f32, 1e-3, 1e-4, 1e-5] {
+        let mut hp_r = hp.clone();
+        hp_r.communities = 1;
+        hp_r.rho = rho;
+        hp_r.nu = rho;
+        let ws = Arc::new(Workspace::build(&ds, &hp_r, Method::Metis)?);
+        let rep = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(1))?
+            .train(epochs, "admm")?;
+        let last = rep.epochs.last().unwrap();
+        println!(
+            "{:<10.0e} {:>10.4} {:>10.3} {:>10.3}",
+            rho, last.loss, last.train_acc, last.test_acc
+        );
+    }
+
+    // ---- 3. scheduler ablation -----------------------------------------------
+    println!("\n=== scheduler ablation (parallel M=3, {epochs} epochs) ===");
+    println!(
+        "{:<26} {:>10} {:>10} {:>10} {:>10}",
+        "variant", "train(s)", "comm(s)", "test acc", "loss"
+    );
+    let variants: [(&str, Box<dyn Fn(&mut AdmmOptions)>); 3] = [
+        ("default (GS + dist-W)", Box::new(|_o: &mut AdmmOptions| {})),
+        ("pure Jacobi anchor", Box::new(|o: &mut AdmmOptions| o.gauss_seidel = false)),
+        ("central W (paper lit.)", Box::new(|o: &mut AdmmOptions| o.central_w = true)),
+    ];
+    for (name, tweak) in &variants {
+        let mut hp_p = hp.clone();
+        hp_p.communities = 3;
+        let ws = Arc::new(Workspace::build(&ds, &hp_p, Method::Metis)?);
+        let mut opts = AdmmOptions::for_mode(3);
+        tweak(&mut opts);
+        let rep = AdmmTrainer::new(ws, engine.clone(), opts)?.train(epochs, name)?;
+        let last = rep.epochs.last().unwrap();
+        println!(
+            "{:<26} {:>10.2} {:>10.2} {:>10.3} {:>10.4}",
+            name,
+            rep.total_train(),
+            rep.total_comm(),
+            last.test_acc,
+            last.loss
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Memory probe: repeatedly execute one artifact and report RSS growth.
+//! (Found and now guards against the `execute`-path literal leak — see
+//! runtime/engine.rs BufRef docs. Expect a flat RSS after warmup.)
+use cgcn::runtime::{Engine, In};
+use cgcn::tensor::Matrix;
+use cgcn::util::rng::Rng;
+
+fn rss_kb() -> usize {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    s.split_whitespace().nth(1).unwrap().parse::<usize>().unwrap() * 4
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(&Engine::default_dir())?;
+    let mut rng = Rng::new(1);
+    let x = Matrix::glorot(768, 745, &mut rng);
+    let w = Matrix::glorot(745, 256, &mut rng);
+    let sig = "mm_nn__n768_a745_b256";
+    engine.exec(sig, &[In::Mat(&x), In::Mat(&w)])?;
+    let r0 = rss_kb();
+    for i in 0..200 {
+        engine.exec(sig, &[In::Mat(&x), In::Mat(&w)])?;
+        if i % 50 == 49 {
+            println!("iter {i}: rss {} KB (delta {} KB)", rss_kb(), rss_kb().saturating_sub(r0));
+        }
+    }
+    Ok(())
+}

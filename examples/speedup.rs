@@ -1,0 +1,67 @@
+//! Table-3 analogue on one dataset: total / training / communication time
+//! of Serial vs Parallel ADMM with the virtual-time accounting (critical
+//! path over agents + link-model communication; see DESIGN.md §2 for the
+//! 1-core-testbed substitution).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example speedup -- \
+//!     [dataset] [scale] [epochs]        # default: synth-photo 0.25 50
+//! ```
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::data::synth;
+use cgcn::partition::Method;
+use cgcn::runtime::Engine;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = argv.first().map(|s| s.as_str()).unwrap_or("synth-photo");
+    let scale: f64 = argv.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.25);
+    let epochs: usize = argv.get(2).map(|s| s.parse()).transpose()?.unwrap_or(50);
+
+    let spec = synth::spec_by_name(dataset)
+        .ok_or_else(|| anyhow::anyhow!("dataset must be synth-computers or synth-photo"))?;
+    let ds = synth::generate(&spec, scale, 17);
+    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let hp = HyperParams::for_dataset(dataset);
+
+    let run = |m: usize| -> anyhow::Result<cgcn::metrics::RunReport> {
+        let mut hp_m = hp.clone();
+        hp_m.communities = m;
+        let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
+        let mut t = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(m))?;
+        t.train(epochs, if m == 1 { "serial" } else { "parallel" })
+    };
+
+    log::info!("running Serial ADMM (M=1, layers sequential)");
+    let serial = run(1)?;
+    log::info!("running Parallel ADMM (M=3 + layer parallelism)");
+    let parallel = run(3)?;
+
+    println!("\n{} — {} epochs (virtual time, see DESIGN.md §2)", ds.name, epochs);
+    println!(
+        "{:<22} {:>9} {:>10} {:>14} {:>9}",
+        "", "Total(s)", "Train(s)", "Comm(s)", "Speedup"
+    );
+    println!("{}", serial.table3_row("Serial ADMM", None));
+    println!(
+        "{}",
+        parallel.table3_row(
+            "Parallel ADMM (M=3)",
+            Some(serial.total_virtual() / parallel.total_virtual())
+        )
+    );
+    println!(
+        "
+
+training-time reduction: {:.1}%   comm bytes/epoch: {:.1} MB   wall (1 core): {:.1}s vs {:.1}s",
+        100.0 * (1.0 - parallel.total_train() / serial.total_train()),
+        parallel.total_bytes() as f64 / parallel.epochs.len() as f64 / 1e6,
+        serial.total_wall(),
+        parallel.total_wall(),
+    );
+    Ok(())
+}

@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the dense compute hot-spots of the community-based
+# ADMM trainer. `ref.py` holds the pure-jnp oracles the kernels are tested
+# against (pytest + hypothesis).
+from .matmul_epilogue import matmul
+from .softmax_xent import softmax_xent
+
+__all__ = ["matmul", "softmax_xent"]

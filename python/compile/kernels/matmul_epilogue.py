@@ -1,0 +1,131 @@
+"""Tiled matmul with fused epilogue — the L1 compute kernel.
+
+Every dense product in the ADMM subproblems (`S@W`, `H@W+c`, `Sᵀ@R`,
+`R@Wᵀ`, ...) funnels through this kernel, so the pre-activation tensor of a
+GCN layer never round-trips to HBM: the bias (the paper's cross-community
+aggregate `c = Σ_r p_{l,r→m}`) and the ReLU are applied inside the same
+grid step that finishes the K-reduction.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): (bm, bk, bn) blocks are
+sized for VMEM with 128-lane tiles feeding the MXU; the K-grid dimension is
+the innermost (sequential) axis so the f32 accumulator lives in the output
+block across K-steps. Lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; on-TPU behaviour is estimated
+structurally (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, k_tiles: int, relu: bool):
+    """Grid = (m_tiles, n_tiles, k_tiles); K innermost/sequential."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if relu:
+
+        @pl.when(pl.program_id(2) == k_tiles - 1)
+        def _epilogue():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def _mm_bias_kernel(x_ref, w_ref, c_ref, o_ref, *, k_tiles: int, relu: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_tiles - 1)
+    def _epilogue():
+        r = o_ref[...] + c_ref[...]
+        if relu:
+            r = jnp.maximum(r, 0.0)
+        o_ref[...] = r
+
+
+def matmul(x, w, bias=None, relu=False, use_pallas=True, tile=DEFAULT_TILE):
+    """``epilogue(x @ w + bias)`` with epilogue = ReLU or identity.
+
+    x: (M, K), w: (K, N), bias: None or (M, N). Shapes need not be tile
+    multiples — inputs are zero-padded (zero rows/cols are inert for both
+    the product and the ReLU) and the result sliced back.
+
+    ``use_pallas=False`` selects the plain-XLA lowering of the identical
+    math; artifact configs use it to A/B the kernel against XLA's own
+    fusion on CPU (the bench in EXPERIMENTS.md §Perf).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul: {x.shape} @ {w.shape}"
+    if bias is not None:
+        assert bias.shape == (m, n), f"bias {bias.shape} != {(m, n)}"
+
+    if not use_pallas:
+        r = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        if bias is not None:
+            r = r + bias
+        return jnp.maximum(r, 0.0) if relu else r
+
+    bm = min(tile, _ceil_to(m, 8))
+    bn = min(tile, _ceil_to(n, 8))
+    bk = min(tile, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    if bias is None:
+        kernel = functools.partial(_mm_kernel, k_tiles=grid[2], relu=relu)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp)
+    else:
+        cp = jnp.pad(bias, ((0, mp - m), (0, np_ - n)))
+        kernel = functools.partial(_mm_bias_kernel, k_tiles=grid[2], relu=relu)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp, cp)
+
+    return out[:m, :n]
+
+
+def vmem_bytes(tile=DEFAULT_TILE) -> int:
+    """Estimated VMEM footprint of one grid step (f32): x, w, bias, out
+    blocks. Used by the §Perf structural analysis."""
+    return 4 * tile * tile * 4

@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Deliberately written in the most obvious way possible — these definitions
+ARE the spec. pytest + hypothesis assert `assert_allclose(kernel, ref)`
+across shape/value sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, bias=None, relu=False):
+    """epilogue(x @ w + bias) — oracle for kernels.matmul."""
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        r = r + bias
+    if relu:
+        r = jnp.maximum(r, 0.0)
+    return r
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu_grad_mask(pre):
+    """ReLU subgradient with f'(0) := 0 (keeps zero-padded rows inert)."""
+    return (pre > 0.0).astype(jnp.float32)
+
+
+def softmax_xent_ref(logits, y_onehot, mask, denom):
+    """Masked mean softmax cross-entropy — oracle for kernels.softmax_xent.
+
+    Returns (loss, grad): loss = sum_i mask_i * CE_i / denom,
+    grad = (softmax(logits) - y) * mask[:, None] / denom.
+    """
+    denom = jnp.asarray(denom, jnp.float32)
+    row_max = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - row_max)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    p = e / s
+    lse = jnp.log(s) + row_max
+    picked = jnp.sum(y_onehot * logits, axis=1, keepdims=True)
+    loss = jnp.sum((lse - picked) * mask[:, None]) / denom
+    grad = (p - y_onehot) * mask[:, None] / denom
+    return loss, grad

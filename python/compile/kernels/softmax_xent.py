@@ -1,0 +1,96 @@
+"""Fused masked softmax cross-entropy (loss + gradient) — L1 kernel.
+
+The risk term `R(Z_L, Y)` of Problem 1 and its gradient, which is the inner
+step of the FISTA solve for the `Z_{L,m}` subproblem (paper eq. 7) and the
+loss head of the backprop baselines. One pass per row-block computes the
+numerically-stabilised log-softmax, the masked mean loss contribution and
+the gradient `(softmax(z) − y) ⊙ mask / denom` without materialising the
+probability matrix in HBM.
+
+`denom` is an explicit scalar input (not `sum(mask)`) so that per-community
+invocations normalise by the *global* labeled-node count — keeping the sum
+of community losses equal to the serial loss (DESIGN.md §4 invariant 4).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128
+NEG_INF = -1e30
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _xent_kernel(lg_ref, y_ref, mk_ref, dn_ref, loss_ref, grad_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    lg = lg_ref[...]
+    y = y_ref[...]
+    mask = mk_ref[...]  # (bm, 1)
+    denom = dn_ref[0, 0]
+
+    row_max = jnp.max(lg, axis=1, keepdims=True)
+    e = jnp.exp(lg - row_max)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    p = e / s
+    lse = jnp.log(s) + row_max  # (bm, 1)
+
+    # loss_i = mask_i * (logsumexp(z_i) - z_i[y_i])
+    picked = jnp.sum(y * lg, axis=1, keepdims=True)
+    loss_ref[0, 0] += jnp.sum((lse - picked) * mask) / denom
+    grad_ref[...] = (p - y) * mask / denom
+
+
+def softmax_xent(logits, y_onehot, mask, denom, use_pallas=True):
+    """Masked mean softmax cross-entropy.
+
+    logits: (N, C) f32; y_onehot: (N, C) f32; mask: (N,) f32 weights
+    (0 for unlabeled / padded rows); denom: scalar normaliser.
+    Returns (loss (), grad (N, C)).
+    """
+    n, c = logits.shape
+    assert y_onehot.shape == (n, c)
+    assert mask.shape == (n,)
+
+    if not use_pallas:
+        from . import ref
+
+        return ref.softmax_xent_ref(logits, y_onehot, mask, denom)
+
+    bm = min(ROW_TILE, _ceil_to(n, 8))
+    np_ = _ceil_to(n, bm)
+    # Lane-pad the class dimension; padded logits at -inf contribute
+    # exp(-inf)=0 to the softmax and 0 to the loss (y is zero-padded).
+    cp = _ceil_to(c, ROW_TILE)
+    lg = jnp.pad(logits, ((0, np_ - n), (0, cp - c)), constant_values=NEG_INF)
+    y = jnp.pad(y_onehot, ((0, np_ - n), (0, cp - c)))
+    mk = jnp.pad(mask, (0, np_ - n)).reshape(np_, 1)
+    dn = jnp.asarray(denom, jnp.float32).reshape(1, 1)
+
+    grid = (np_ // bm,)
+    loss, grad = pl.pallas_call(
+        _xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, cp), lambda i: (i, 0)),
+            pl.BlockSpec((bm, cp), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bm, cp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((np_, cp), jnp.float32),
+        ],
+        interpret=True,
+    )(lg, y, mk, dn)
+
+    return loss[0, 0], grad[:n, :c]

@@ -1,0 +1,294 @@
+"""L2 — the JAX compute graphs for every ADMM subproblem and baseline step.
+
+Each public ``build_*`` function returns ``(fn, example_args)`` where ``fn``
+is a pure jax function over fixed shapes. ``aot.py`` lowers each to HLO
+text; the Rust coordinator executes them via PJRT with Python long gone.
+
+Decomposition (see DESIGN.md §1): the coordinator interleaves CSR SpMM
+(`Ã ·`, Rust) with these dense graphs, and every update is arranged so the
+SpMM runs over the *post-projection* width:
+
+    V   = Z_{l-1} W_l              (mm_nn — dense, Pallas-tiled)
+    pre = Ã V + c                  (SpMM + elementwise add, Rust)
+    (val, R) = *_residual(pre, …)  (elementwise artifact)
+    grad_W   = Z_{l-1}ᵀ (Ã R)      (SpMM, then mm_tn)
+    grad_Z  += (Ã R) Wᵀ            (SpMM, then mm_bt)
+
+because `Ã (Z W)` touches `C_l ≤ hidden` columns instead of the raw
+feature width (767/745) — the same associativity trick the paper's message
+definition `p = Ã Z W` exploits.
+
+All scalars (ν, ρ, θ, denom) are rank-0 f32 *inputs* so one artifact serves
+every hyper-parameter setting. f = ReLU with f'(0) := 0 throughout (this is
+what keeps zero-padded community rows provably inert).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, softmax_xent
+from .kernels.ref import relu_grad_mask
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _scalar():
+    return jax.ShapeDtypeStruct((), F32)
+
+
+# --------------------------------------------------------------------------
+# Matmul primitives (all Pallas-tiled)
+# --------------------------------------------------------------------------
+
+
+def build_mm_nn(n, a, b, use_pallas=True):
+    """X @ W — projections V = Z W, logits, Q assembly."""
+
+    def fn(x, w):
+        return (matmul(x, w, use_pallas=use_pallas),)
+
+    return fn, (_spec(n, a), _spec(a, b))
+
+
+def build_mm_tn(n, a, b, use_pallas=True):
+    """Xᵀ @ Y — weight gradients gW = Z_{l-1}ᵀ (Ã R)."""
+
+    def fn(x, y):
+        return (matmul(x.T, y, use_pallas=use_pallas),)
+
+    return fn, (_spec(n, a), _spec(n, b))
+
+
+def build_mm_bt(n, a, b, use_pallas=True):
+    """X @ Wᵀ — Z-gradient back-projection (Ã R) Wᵀ."""
+
+    def fn(x, w):
+        return (matmul(x, w.T, use_pallas=use_pallas),)
+
+    return fn, (_spec(n, b), _spec(a, b))
+
+
+def build_fwd_relu(n, a, b, use_pallas=True):
+    """ReLU(H @ W) — forward hidden layer (eval, init, baselines)."""
+
+    def fn(h, w):
+        return (matmul(h, w, relu=True, use_pallas=use_pallas),)
+
+    return fn, (_spec(n, a), _spec(a, b))
+
+
+# --------------------------------------------------------------------------
+# Elementwise residuals shared by the W (§3.1) and Z (Appendix A)
+# subproblems. `pre` is the aggregated pre-activation Ã(ZW)+c from Rust.
+# --------------------------------------------------------------------------
+
+
+def build_hidden_residual(n, c):
+    """ν-coupling term at a ReLU layer:
+
+    val = ν/2 ||f(pre) − Zt||²,  R = ν (f(pre) − Zt) ⊙ f'(pre).
+
+    Used as-is for ∂φ/∂W_l (l<L) and for the eq.-5 ψ pieces.
+    """
+
+    def fn(pre, zt, nu):
+        act = jnp.maximum(pre, 0.0)
+        d = act - zt
+        val = 0.5 * nu * jnp.sum(d * d)
+        r = nu * d * relu_grad_mask(pre)
+        return val, r
+
+    return fn, (_spec(n, c), _spec(n, c), _scalar())
+
+
+def build_out_residual(n, c):
+    """Augmented-Lagrangian term at the linear output layer:
+
+    val = <U, Zt − pre> + ρ/2 ||Zt − pre||²,  R = −(U + ρ(Zt − pre)).
+
+    (R is the gradient of val wrt `pre`; shared by ∂φ/∂W_L and the eq.-6
+    ψ pieces.)
+    """
+
+    def fn(pre, zt, u, rho):
+        d = zt - pre
+        val = jnp.sum(u * d) + 0.5 * rho * jnp.sum(d * d)
+        r = -(u + rho * d)
+        return val, r
+
+    return fn, (_spec(n, c), _spec(n, c), _spec(n, c), _scalar())
+
+
+def build_hidden_phi(n, c):
+    """Value-only hidden coupling (τ/θ backtracking)."""
+
+    def fn(pre, zt, nu):
+        d = jnp.maximum(pre, 0.0) - zt
+        return (0.5 * nu * jnp.sum(d * d),)
+
+    return fn, (_spec(n, c), _spec(n, c), _scalar())
+
+
+def build_out_phi(n, c):
+    """Value-only output coupling (τ/θ backtracking)."""
+
+    def fn(pre, zt, u, rho):
+        d = zt - pre
+        return (jnp.sum(u * d) + 0.5 * rho * jnp.sum(d * d),)
+
+    return fn, (_spec(n, c), _spec(n, c), _spec(n, c), _scalar())
+
+
+# --------------------------------------------------------------------------
+# Z-subproblem step (eq. 8/10)
+# --------------------------------------------------------------------------
+
+
+def build_z_combine(n, c):
+    """Proximal gradient + quadratic-approximation step:
+
+    g = ν(Z − f(Pin)) + Gsum;   Z⁺ = Z − g/θ.
+    Returns (Z⁺, prox value ν/2||Z−f(Pin)||², ||g||²) — the gradient norm
+    feeds the backtracking test ψ(Z⁺) ≤ ψ(Z) − ||g||²/(2θ).
+    """
+
+    def fn(z, pin, gsum, nu, theta):
+        fpin = jnp.maximum(pin, 0.0)
+        d = z - fpin
+        val = 0.5 * nu * jnp.sum(d * d)
+        g = nu * d + gsum
+        znew = z - g / theta
+        return znew, val, jnp.sum(g * g)
+
+    return fn, (_spec(n, c), _spec(n, c), _spec(n, c), _scalar(), _scalar())
+
+
+def build_z_prox_val(n, c):
+    """Value-only proximal term ν/2||Z − f(Pin)||² (θ backtracking)."""
+
+    def fn(z, pin, nu):
+        d = z - jnp.maximum(pin, 0.0)
+        return (0.5 * nu * jnp.sum(d * d),)
+
+    return fn, (_spec(n, c), _spec(n, c), _scalar())
+
+
+# --------------------------------------------------------------------------
+# Z_L subproblem — FISTA on the risk (eq. 7)
+# --------------------------------------------------------------------------
+
+
+def build_zl_fista(n, c, steps=10, use_pallas=True):
+    """argmin_Z R(Z, Y) + <U, Z − Q> + ρ/2||Z − Q||² via FISTA [Beck'09].
+
+    R is the masked mean softmax cross-entropy (global denom — see
+    kernels/softmax_xent.py). The objective gradient is
+    ∇ = xent_grad(Z) + U + ρ(Z − Q); its Lipschitz constant is bounded by
+    ρ + 1/2 (softmax Hessian ≤ 1/2, masks ≤ 1, denom ≥ 1), giving the
+    static step 1/(ρ + 1/2). `steps` FISTA iterations are unrolled into the
+    artifact. Returns (Z⁺, risk value at Z⁺).
+    """
+
+    def fn(q, u, y, mask, z0, rho, denom):
+        step = 1.0 / (rho + 0.5)
+
+        def grad_at(z):
+            loss, g = softmax_xent(z, y, mask, denom, use_pallas=use_pallas)
+            return loss, g + u + rho * (z - q)
+
+        z = z0
+        v = z0
+        t = 1.0
+        for _ in range(steps):
+            _, g = grad_at(v)
+            z_next = v - step * g
+            t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            v = z_next + ((t - 1.0) / t_next) * (z_next - z)
+            z, t = z_next, t_next
+        loss, _ = softmax_xent(z, y, mask, denom, use_pallas=use_pallas)
+        return z, loss
+
+    return fn, (
+        _spec(n, c),
+        _spec(n, c),
+        _spec(n, c),
+        _spec(n),
+        _spec(n, c),
+        _scalar(),
+        _scalar(),
+    )
+
+
+# --------------------------------------------------------------------------
+# Backprop baselines (GD / Adam / Adagrad / Adadelta drive these)
+# --------------------------------------------------------------------------
+
+
+def build_bp_out_grads(n, a, b, use_pallas=True):
+    """Loss head + gradients of the 2-layer GCN baseline.
+
+    logits = H1 W2 (H1 = Ã Z1 from SpMM);
+    returns (loss, dW2 = H1ᵀ dL, dH1 = dL W2ᵀ).
+    """
+
+    def fn(h1, w2, y, mask, denom):
+        logits = matmul(h1, w2, use_pallas=use_pallas)
+        loss, dl = softmax_xent(logits, y, mask, denom, use_pallas=use_pallas)
+        dw2 = matmul(h1.T, dl, use_pallas=use_pallas)
+        dh1 = matmul(dl, w2.T, use_pallas=use_pallas)
+        return loss, dw2, dh1
+
+    return fn, (_spec(n, a), _spec(a, b), _spec(n, b), _spec(n), _scalar())
+
+
+def build_bp_hidden_grads(n, a, b, use_pallas=True):
+    """dW1 = H0ᵀ (dZ1 ⊙ f'(H0 W1)) — the hidden-layer backward tail.
+
+    dZ1 arrives from the coordinator's SpMM (dZ1 = Ã dH1, Ã symmetric).
+    """
+
+    def fn(h0, w1, dz1):
+        pre = matmul(h0, w1, use_pallas=use_pallas)
+        r = dz1 * relu_grad_mask(pre)
+        dw1 = matmul(h0.T, r, use_pallas=use_pallas)
+        return (dw1,)
+
+    return fn, (_spec(n, a), _spec(a, b), _spec(n, b))
+
+
+def build_xent_loss(n, c, use_pallas=True):
+    """Standalone masked CE loss (epoch logging / eval)."""
+
+    def fn(logits, y, mask, denom):
+        loss, _ = softmax_xent(logits, y, mask, denom, use_pallas=use_pallas)
+        return (loss,)
+
+    return fn, (_spec(n, c), _spec(n, c), _spec(n), _scalar())
+
+
+# --------------------------------------------------------------------------
+# Entry registry — aot.py iterates this.
+# --------------------------------------------------------------------------
+
+# name -> (builder, shape-kind): "nab" = (n, a, b, use_pallas),
+# "nc" = (n, c, use_pallas), "nc_steps" = (n, c, steps, use_pallas).
+ENTRIES = {
+    "mm_nn": (build_mm_nn, "nab"),
+    "mm_tn": (build_mm_tn, "nab"),
+    "mm_bt": (build_mm_bt, "nab"),
+    "fwd_relu": (build_fwd_relu, "nab"),
+    "hidden_residual": (lambda n, c, up: build_hidden_residual(n, c), "nc"),
+    "out_residual": (lambda n, c, up: build_out_residual(n, c), "nc"),
+    "hidden_phi": (lambda n, c, up: build_hidden_phi(n, c), "nc"),
+    "out_phi": (lambda n, c, up: build_out_phi(n, c), "nc"),
+    "z_combine": (lambda n, c, up: build_z_combine(n, c), "nc"),
+    "z_prox_val": (lambda n, c, up: build_z_prox_val(n, c), "nc"),
+    "zl_fista": (build_zl_fista, "nc_steps"),
+    "bp_out_grads": (build_bp_out_grads, "nab"),
+    "bp_hidden_grads": (build_bp_hidden_grads, "nab"),
+    "xent_loss": (build_xent_loss, "nc"),
+}

@@ -1,0 +1,88 @@
+"""AOT driver tests: HLO-text emission + manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+def test_artifact_sig_matches_rust_side():
+    # Must mirror config.rs ArtifactSpec::sig().
+    assert (
+        aot.artifact_sig({"entry": "w_grad", "n": 384, "a": 745, "b": 64})
+        == "w_grad__n384_a745_b64"
+    )
+    assert (
+        aot.artifact_sig({"entry": "zl_fista", "n": 256, "c": 8, "steps": 10})
+        == "zl_fista__n256_c8_steps10"
+    )
+
+
+def test_lower_one_emits_parseable_hlo_text():
+    with tempfile.TemporaryDirectory() as td:
+        spec = {"entry": "mm_nn", "n": 16, "a": 4, "b": 3, "pallas": True}
+        meta = aot.lower_one(spec, {"use_pallas": True, "fista_steps": 2}, td)
+        assert meta["sig"] == "mm_nn__n16_a4_b3"
+        assert meta["num_inputs"] == 2
+        assert meta["num_outputs"] == 1
+        assert meta["input_shapes"] == [[16, 4], [4, 3]]
+        text = open(os.path.join(td, meta["file"])).read()
+        assert text.startswith("HloModule"), text[:80]
+        # return_tuple=True => root is a tuple.
+        assert "ROOT" in text
+
+
+def test_unknown_entry_is_rejected():
+    with pytest.raises(KeyError):
+        aot.build_fn({"entry": "nope", "n": 8}, {})
+
+
+def test_main_end_to_end_dedups_and_writes_manifest():
+    cfg = {
+        "use_pallas": True,
+        "fista_steps": 2,
+        "artifacts": [
+            {"entry": "mm_nn", "n": 16, "a": 4, "b": 3},
+            {"entry": "mm_nn", "n": 16, "a": 4, "b": 3},  # duplicate
+            {"entry": "xent_loss", "n": 16, "c": 3},
+        ],
+    }
+    with tempfile.TemporaryDirectory() as td:
+        cfg_path = os.path.join(td, "cfg.json")
+        out_dir = os.path.join(td, "artifacts")
+        with open(cfg_path, "w") as f:
+            json.dump(cfg, f)
+        proc = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--config", cfg_path, "--out", out_dir],
+            capture_output=True,
+            text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert proc.returncode == 0, proc.stderr
+        manifest = json.load(open(os.path.join(out_dir, "manifest.json")))
+        sigs = [a["sig"] for a in manifest["artifacts"]]
+        assert sigs == sorted(set(sigs)) or len(sigs) == len(set(sigs))
+        assert len(sigs) == 2  # dedup applied
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(out_dir, a["file"]))
+            assert len(a["hlo_sha256"]) == 16
+
+
+def test_every_registered_entry_lowers():
+    # Smoke: tiny shapes, all entries — catches lowering regressions.
+    with tempfile.TemporaryDirectory() as td:
+        for entry, (_, kind) in model.ENTRIES.items():
+            spec = {"entry": entry, "n": 8, "pallas": True}
+            if kind == "nab":
+                spec.update(a=4, b=3)
+            else:
+                spec.update(c=3)
+            if kind == "nc_steps":
+                spec["steps"] = 2
+            meta = aot.lower_one(spec, {"use_pallas": True, "fista_steps": 2}, td)
+            assert meta["num_outputs"] >= 1, entry

@@ -1,0 +1,181 @@
+"""Kernel-vs-oracle tests — the CORE L1 correctness signal.
+
+hypothesis sweeps shapes (including non-tile-multiples and degenerate
+dims), value scales and mask patterns; every case asserts the Pallas
+kernel matches the pure-jnp oracle in `ref.py` to tight tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, softmax_xent
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul_epilogue
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 64),
+    relu=st.booleans(),
+    with_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, relu, with_bias, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, m, k)
+    w = _arr(rng, k, n)
+    bias = _arr(rng, m, n) if with_bias else None
+    got = matmul(x, w, bias=bias, relu=relu)
+    want = ref.matmul_ref(x, w, bias=bias, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 2**31 - 1))
+def test_matmul_value_scales(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, 50, 70, scale=scale)
+    w = _arr(rng, 70, 30, scale=scale)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+def test_matmul_exact_tile_multiples():
+    rng = np.random.default_rng(7)
+    x = _arr(rng, 256, 128)
+    w = _arr(rng, 128, 384)
+    np.testing.assert_allclose(
+        matmul(x, w, relu=True), ref.matmul_ref(x, w, relu=True), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_padded_rows_stay_zero():
+    # Zero rows in, zero rows out — the padding-inertness invariant
+    # (DESIGN.md §4 #1).
+    rng = np.random.default_rng(8)
+    x = np.asarray(rng.normal(size=(40, 30)), np.float32)
+    x[25:] = 0.0
+    w = _arr(rng, 30, 20)
+    out = np.asarray(matmul(jnp.asarray(x), w, relu=True))
+    assert np.all(out[25:] == 0.0)
+
+
+def test_matmul_xla_path_identical():
+    rng = np.random.default_rng(9)
+    x = _arr(rng, 33, 47)
+    w = _arr(rng, 47, 21)
+    b = _arr(rng, 33, 21)
+    a = matmul(x, w, bias=b, relu=True, use_pallas=True)
+    c = matmul(x, w, bias=b, relu=True, use_pallas=False)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 300),
+    c=st.integers(2, 16),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_matches_ref(n, c, frac, seed):
+    rng = np.random.default_rng(seed)
+    logits = _arr(rng, n, c, scale=3.0)
+    labels = rng.integers(0, c, size=n)
+    y = jnp.eye(c, dtype=jnp.float32)[labels]
+    mask = jnp.asarray(rng.random(n) < frac, jnp.float32)
+    denom = float(max(mask.sum(), 1.0))
+    l1, g1 = softmax_xent(logits, y, mask, denom)
+    l2, g2 = ref.softmax_xent_ref(logits, y, mask, denom)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_xent_extreme_logits_stable():
+    logits = jnp.asarray([[1e4, -1e4, 0.0], [-1e4, 1e4, 0.0]], jnp.float32)
+    y = jnp.asarray([[1, 0, 0], [0, 0, 1]], jnp.float32)
+    mask = jnp.ones(2, jnp.float32)
+    loss, grad = softmax_xent(logits, y, mask, 2.0)
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(grad)))
+    # Row 0 predicted correctly with huge margin: ~0 loss contribution.
+    l_ref, _ = ref.softmax_xent_ref(logits, y, mask, 2.0)
+    np.testing.assert_allclose(float(loss), float(l_ref), rtol=1e-5, atol=1e-6)
+
+
+def test_xent_masked_rows_have_zero_grad():
+    rng = np.random.default_rng(11)
+    logits = _arr(rng, 10, 4)
+    y = jnp.eye(4, dtype=jnp.float32)[rng.integers(0, 4, 10)]
+    mask = jnp.asarray([1, 0, 1, 0, 0, 0, 1, 0, 0, 0], jnp.float32)
+    _, grad = softmax_xent(logits, y, mask, 3.0)
+    g = np.asarray(grad)
+    for i in range(10):
+        if mask[i] == 0:
+            assert np.all(g[i] == 0.0)
+        else:
+            assert np.any(g[i] != 0.0)
+
+
+def test_xent_gradient_is_gradient_of_loss():
+    # Finite differences against the kernel's own loss.
+    rng = np.random.default_rng(12)
+    n, c = 6, 5
+    logits = np.asarray(rng.normal(size=(n, c)), np.float32)
+    labels = rng.integers(0, c, n)
+    y = jnp.eye(c, dtype=jnp.float32)[labels]
+    mask = jnp.ones(n, jnp.float32)
+    denom = float(n)
+    _, grad = softmax_xent(jnp.asarray(logits), y, mask, denom)
+    eps = 1e-3
+    for i in range(n):
+        for j in range(c):
+            lp = logits.copy()
+            lp[i, j] += eps
+            lm = logits.copy()
+            lm[i, j] -= eps
+            fp, _ = softmax_xent(jnp.asarray(lp), y, mask, denom)
+            fm, _ = softmax_xent(jnp.asarray(lm), y, mask, denom)
+            fd = (float(fp) - float(fm)) / (2 * eps)
+            assert abs(fd - float(grad[i, j])) < 1e-3, (i, j, fd, float(grad[i, j]))
+
+
+def test_xent_community_sum_equals_global():
+    # Invariant 4 (DESIGN.md): with a global denom, per-community losses
+    # and gradients sum/concatenate to the monolithic result.
+    rng = np.random.default_rng(13)
+    n, c = 90, 7
+    logits = _arr(rng, n, c, scale=2.0)
+    labels = rng.integers(0, c, n)
+    y = jnp.eye(c, dtype=jnp.float32)[labels]
+    mask = jnp.asarray(rng.random(n) < 0.4, jnp.float32)
+    denom = float(mask.sum())
+    lg, gg = softmax_xent(logits, y, mask, denom)
+    cuts = [0, 30, 55, n]
+    loss_sum = 0.0
+    grads = []
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        l, g = softmax_xent(logits[a:b], y[a:b], mask[a:b], denom)
+        loss_sum += float(l)
+        grads.append(np.asarray(g))
+    np.testing.assert_allclose(loss_sum, float(lg), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.concatenate(grads), np.asarray(gg), rtol=1e-5, atol=1e-6)

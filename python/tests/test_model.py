@@ -1,0 +1,255 @@
+"""L2 entry-point tests: each ADMM subproblem graph against independent
+numpy math / jax autodiff, plus composition tests that drive the artifact
+pieces exactly the way the Rust coordinator does."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+RNG = np.random.default_rng(42)
+
+
+def arr(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Matmul primitives
+# --------------------------------------------------------------------------
+
+
+def test_mm_primitives():
+    n, a, b = 30, 12, 9
+    x, w, y = arr(n, a), arr(a, b), arr(n, b)
+    (nn,) = model.build_mm_nn(n, a, b)[0](x, w)
+    np.testing.assert_allclose(nn, x @ w, rtol=1e-4, atol=1e-5)
+    (tn,) = model.build_mm_tn(n, a, b)[0](x, y)
+    np.testing.assert_allclose(tn, x.T @ y, rtol=1e-4, atol=1e-5)
+    (bt,) = model.build_mm_bt(n, a, b)[0](y, w)
+    np.testing.assert_allclose(bt, y @ w.T, rtol=1e-4, atol=1e-5)
+    (fr,) = model.build_fwd_relu(n, a, b)[0](x, w)
+    np.testing.assert_allclose(fr, jnp.maximum(x @ w, 0.0), rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Residual entries: values and gradients (against autodiff)
+# --------------------------------------------------------------------------
+
+
+def test_hidden_residual_is_grad_of_value():
+    n, c = 25, 7
+    fn, _ = model.build_hidden_residual(n, c)
+    pre, zt = arr(n, c), arr(n, c)
+    nu = jnp.float32(0.37)
+    val, r = fn(pre, zt, nu)
+
+    def val_of(pre_):
+        d = jnp.maximum(pre_, 0.0) - zt
+        return 0.5 * nu * jnp.sum(d * d)
+
+    np.testing.assert_allclose(float(val), float(val_of(pre)), rtol=1e-5)
+    r_ad = jax.grad(val_of)(pre)
+    np.testing.assert_allclose(r, r_ad, rtol=1e-4, atol=1e-5)
+    # Value-only entry agrees.
+    pv, _ = model.build_hidden_phi(n, c)
+    np.testing.assert_allclose(float(pv(pre, zt, nu)[0]), float(val), rtol=1e-6)
+
+
+def test_out_residual_is_grad_of_value():
+    n, c = 21, 5
+    fn, _ = model.build_out_residual(n, c)
+    pre, zt, u = arr(n, c), arr(n, c), arr(n, c)
+    rho = jnp.float32(0.01)
+    val, r = fn(pre, zt, u, rho)
+
+    def val_of(pre_):
+        d = zt - pre_
+        return jnp.sum(u * d) + 0.5 * rho * jnp.sum(d * d)
+
+    np.testing.assert_allclose(float(val), float(val_of(pre)), rtol=1e-4)
+    r_ad = jax.grad(val_of)(pre)
+    np.testing.assert_allclose(r, r_ad, rtol=1e-4, atol=1e-5)
+    pv, _ = model.build_out_phi(n, c)
+    np.testing.assert_allclose(float(pv(pre, zt, u, rho)[0]), float(val), rtol=1e-5)
+
+
+def test_w_gradient_composition_matches_autodiff():
+    # gW_l (l<L) assembled the coordinator's way:
+    #   V = Z_{l-1} W; pre = Ã V; (phi, R) = hidden_residual;
+    #   gW = Z_{l-1}ᵀ (Ã R)
+    # must equal d/dW [ ν/2 || f(Ã Z W) − Z_l ||² ].
+    n, a, b = 20, 8, 6
+    adj = np.triu(RNG.random((n, n)) < 0.2, 1)
+    a_np = (adj + adj.T).astype(np.float32) + np.eye(n, dtype=np.float32)
+    at = jnp.asarray(a_np)
+    zprev, zl, w = arr(n, a), arr(n, b), arr(a, b)
+    nu = jnp.float32(0.3)
+
+    def phi_of(w_):
+        act = jnp.maximum(at @ zprev @ w_, 0.0)
+        return 0.5 * nu * jnp.sum((act - zl) ** 2)
+
+    gw_ad = jax.grad(phi_of)(w)
+
+    (v,) = model.build_mm_nn(n, a, b)[0](zprev, w)
+    pre = at @ v  # SpMM (rust)
+    phi, r = model.build_hidden_residual(n, b)[0](pre, zl, nu)
+    ar = at @ r  # SpMM with Ãᵀ = Ã (rust)
+    (gw,) = model.build_mm_tn(n, a, b)[0](zprev, ar)
+    np.testing.assert_allclose(float(phi), float(phi_of(w)), rtol=1e-5)
+    np.testing.assert_allclose(gw, gw_ad, rtol=1e-4, atol=1e-5)
+
+
+def test_z_gradient_composition_matches_autodiff():
+    # The eq.-6 coupling gradient wrt Z_{L-1}:
+    #   d/dZ [ <U, Zt − Ã Z W> + ρ/2||Zt − Ã Z W||² ] = Ãᵀ R Wᵀ
+    # assembled as (Ã R) Wᵀ via mm_bt.
+    n, a, b = 18, 7, 4
+    adj = np.triu(RNG.random((n, n)) < 0.25, 1)
+    a_np = (adj + adj.T).astype(np.float32) + np.eye(n, dtype=np.float32)
+    at = jnp.asarray(a_np)
+    z, zt, u, w = arr(n, a), arr(n, b), arr(n, b), arr(a, b)
+    rho = jnp.float32(0.05)
+
+    def val_of(z_):
+        d = zt - at @ z_ @ w
+        return jnp.sum(u * d) + 0.5 * rho * jnp.sum(d * d)
+
+    gz_ad = jax.grad(val_of)(z)
+
+    (v,) = model.build_mm_nn(n, a, b)[0](z, w)
+    pre = at @ v
+    val, r = model.build_out_residual(n, b)[0](pre, zt, u, rho)
+    ar = at @ r
+    (gz,) = model.build_mm_bt(n, a, b)[0](ar, w)
+    np.testing.assert_allclose(float(val), float(val_of(z)), rtol=1e-4)
+    np.testing.assert_allclose(gz, gz_ad, rtol=1e-4, atol=1e-5)
+
+
+def test_z_combine_step_prox_and_gnorm():
+    n, c = 14, 6
+    fn, _ = model.build_z_combine(n, c)
+    z, pin, gsum = arr(n, c), arr(n, c), arr(n, c)
+    nu, theta = jnp.float32(0.9), jnp.float32(4.0)
+    znew, val, gsq = fn(z, pin, gsum, nu, theta)
+    fpin = np.maximum(np.asarray(pin), 0.0)
+    d = np.asarray(z) - fpin
+    g = 0.9 * d + np.asarray(gsum)
+    np.testing.assert_allclose(float(val), 0.5 * 0.9 * np.sum(d * d), rtol=1e-5)
+    np.testing.assert_allclose(float(gsq), np.sum(g * g), rtol=1e-5)
+    np.testing.assert_allclose(znew, np.asarray(z) - g / 4.0, rtol=1e-5, atol=1e-6)
+    pv, _ = model.build_z_prox_val(n, c)
+    np.testing.assert_allclose(float(pv(z, pin, nu)[0]), float(val), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Z_L FISTA
+# --------------------------------------------------------------------------
+
+
+def test_zl_fista_decreases_objective_and_beats_start():
+    n, c = 40, 5
+    steps = 15
+    fn, _ = model.build_zl_fista(n, c, steps=steps)
+    q, u = arr(n, c), arr(n, c, scale=0.1)
+    labels = RNG.integers(0, c, n)
+    y = jnp.eye(c, dtype=jnp.float32)[labels]
+    mask = jnp.asarray(RNG.random(n) < 0.5, jnp.float32)
+    denom = jnp.float32(max(float(mask.sum()), 1.0))
+    rho = jnp.float32(0.1)
+    z0 = q  # warm start at Q
+
+    def objective(z):
+        from compile.kernels.ref import softmax_xent_ref
+
+        loss, _ = softmax_xent_ref(z, y, mask, denom)
+        return float(loss + jnp.sum(u * (z - q)) + 0.5 * rho * jnp.sum((z - q) ** 2))
+
+    z_new, risk = fn(q, u, y, mask, z0, rho, denom)
+    assert objective(np.asarray(z_new)) < objective(np.asarray(z0)) + 1e-6
+    assert np.isfinite(float(risk))
+    # More steps → at least as good.
+    fn2, _ = model.build_zl_fista(n, c, steps=steps * 3)
+    z_more, _ = fn2(q, u, y, mask, z0, rho, denom)
+    assert objective(np.asarray(z_more)) <= objective(np.asarray(z_new)) + 1e-5
+
+
+def test_zl_fista_converges_to_stationary_point():
+    n, c = 20, 4
+    fn, _ = model.build_zl_fista(n, c, steps=200)
+    q = arr(n, c)
+    u = arr(n, c, scale=0.05)
+    labels = RNG.integers(0, c, n)
+    y = jnp.eye(c, dtype=jnp.float32)[labels]
+    mask = jnp.ones(n, jnp.float32)
+    denom = jnp.float32(n)
+    rho = jnp.float32(0.5)
+    z, _ = fn(q, u, y, mask, q, rho, denom)
+
+    from compile.kernels.ref import softmax_xent_ref
+
+    _, g = softmax_xent_ref(z, y, mask, denom)
+    grad = np.asarray(g + u + rho * (z - q))
+    assert np.abs(grad).max() < 1e-3, np.abs(grad).max()
+
+
+# --------------------------------------------------------------------------
+# Backprop baselines
+# --------------------------------------------------------------------------
+
+
+def test_baseline_pieces_compose_to_autodiff_gradient():
+    # Full 2-layer GCN gradient assembled from the artifact pieces
+    # (+ explicit SpMM) equals jax.grad of the monolithic loss.
+    n, f, hdim, c = 22, 9, 7, 4
+    adj = RNG.random((n, n)) < 0.15
+    adj = np.triu(adj, 1)
+    a_np = (adj + adj.T).astype(np.float32)
+    deg = a_np.sum(1) + 1.0
+    dinv = 1.0 / np.sqrt(deg)
+    a_tilde = jnp.asarray(dinv[:, None] * (a_np + np.eye(n, dtype=np.float32)) * dinv[None, :])
+
+    x = arr(n, f)
+    w1, w2 = arr(f, hdim, scale=0.3), arr(hdim, c, scale=0.3)
+    labels = RNG.integers(0, c, n)
+    y = jnp.eye(c, dtype=jnp.float32)[labels]
+    mask = jnp.asarray(RNG.random(n) < 0.5, jnp.float32)
+    denom = jnp.float32(max(float(mask.sum()), 1.0))
+
+    def loss_of(w1_, w2_):
+        z1 = jnp.maximum(a_tilde @ x @ w1_, 0.0)
+        logits = a_tilde @ z1 @ w2_
+        from compile.kernels.ref import softmax_xent_ref
+
+        return softmax_xent_ref(logits, y, mask, denom)[0]
+
+    gw1_ad, gw2_ad = jax.grad(loss_of, argnums=(0, 1))(w1, w2)
+
+    # Pieces, exactly as the Rust coordinator drives them:
+    h0 = a_tilde @ x  # SpMM (rust)
+    z1 = model.build_fwd_relu(n, f, hdim)[0](h0, w1)[0]
+    h1 = a_tilde @ z1  # SpMM (rust)
+    loss, dw2, dh1 = model.build_bp_out_grads(n, hdim, c)[0](h1, w2, y, mask, denom)
+    dz1 = a_tilde @ dh1  # SpMM with Ãᵀ = Ã (rust)
+    (dw1,) = model.build_bp_hidden_grads(n, f, hdim)[0](h0, w1, dz1)
+
+    np.testing.assert_allclose(float(loss), float(loss_of(w1, w2)), rtol=1e-5)
+    np.testing.assert_allclose(dw2, gw2_ad, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dw1, gw1_ad, rtol=1e-4, atol=1e-5)
+
+
+def test_entry_registry_complete_and_buildable():
+    for name, (builder, kind) in model.ENTRIES.items():
+        if kind == "nab":
+            fn, args = builder(8, 4, 3, True)
+        elif kind == "nc":
+            fn, args = builder(8, 3, True)
+        elif kind == "nc_steps":
+            fn, args = builder(8, 3, 2, True)
+        else:
+            pytest.fail(f"unknown kind {kind} for {name}")
+        out = jax.eval_shape(fn, *args)
+        assert len(jax.tree_util.tree_leaves(out)) >= 1, name

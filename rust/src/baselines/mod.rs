@@ -1,0 +1,140 @@
+//! Baseline optimizers: full-batch backprop GCN training with GD, Adam,
+//! Adagrad and Adadelta — the four comparison methods of the paper's
+//! Figure 2.
+//!
+//! Gradients flow through the same AOT artifacts + Rust SpMM pipeline as
+//! the ADMM trainer (see python/compile/model.py `bp_*` entries); the
+//! optimizers themselves run host-side (they're O(params), off the
+//! roofline). Paper learning rates: 1e-3 for Adam/Adagrad/Adadelta, 1e-1
+//! for GD.
+
+mod optim;
+
+pub use optim::{OptState, Optimizer};
+
+use crate::coordinator::clock::timed;
+use crate::coordinator::{evaluate_forward, Workspace};
+use crate::metrics::{EpochRecord, RunReport};
+use crate::runtime::{Engine, In};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Full-batch backprop trainer for the 2-layer GCN (paper's baseline
+/// architecture; deeper nets are supported by the ADMM path only, matching
+/// the paper's experiments).
+pub struct BaselineTrainer {
+    ws: Arc<Workspace>,
+    engine: Arc<Engine>,
+    opt: Optimizer,
+    w: Vec<Matrix>,
+    opt_state: Vec<OptState>,
+}
+
+impl BaselineTrainer {
+    pub fn new(ws: Arc<Workspace>, engine: Arc<Engine>, opt: Optimizer) -> Result<BaselineTrainer> {
+        ensure!(
+            ws.layers == 2,
+            "baseline trainer supports the paper's 2-layer GCN (got L={})",
+            ws.layers
+        );
+        let mut rng = Rng::new(ws.hp.seed);
+        let dims = ws.dims.clone();
+        let w: Vec<Matrix> = (1..=ws.layers)
+            .map(|l| Matrix::glorot(dims[l - 1], dims[l], &mut rng))
+            .collect();
+        let opt_state = w.iter().map(|wl| OptState::new(wl.shape())).collect();
+        Ok(BaselineTrainer {
+            ws,
+            engine,
+            opt,
+            w,
+            opt_state,
+        })
+    }
+
+    /// One full-batch training step; returns the loss.
+    pub fn step(&mut self) -> Result<f64> {
+        let ws = &self.ws;
+        let n = ws.n_glob;
+        let (c0, c1, c2) = (ws.dims[0], ws.dims[1], ws.dims[2]);
+
+        // Forward: Z1 = f(H0 W1); H1 = Ã Z1.
+        let z1 = self
+            .engine
+            .exec(
+                &ws.sig_nab("fwd_relu", n, c0, c1),
+                &[In::Mat(&ws.h0_glob), In::Mat(&self.w[0])],
+            )?
+            .remove(0)
+            .into_mat();
+        let h1 = ws.a_glob.spmm(&z1);
+
+        // Head: loss + dW2 + dH1.
+        let outs = self.engine.exec(
+            &ws.sig_nab("bp_out_grads", n, c1, c2),
+            &[
+                In::Mat(&h1),
+                In::Mat(&self.w[1]),
+                In::Mat(&ws.y_glob),
+                In::Vec(&ws.train_mask_glob),
+                In::Scalar(ws.denom),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().scalar() as f64;
+        let dw2 = it.next().unwrap().into_mat();
+        let dh1 = it.next().unwrap().into_mat();
+
+        // dZ1 = Ãᵀ dH1 = Ã dH1 (symmetric), then the hidden tail.
+        let dz1 = ws.a_glob.spmm(&dh1);
+        let dw1 = self
+            .engine
+            .exec(
+                &ws.sig_nab("bp_hidden_grads", n, c0, c1),
+                &[In::Mat(&ws.h0_glob), In::Mat(&self.w[0]), In::Mat(&dz1)],
+            )?
+            .remove(0)
+            .into_mat();
+
+        self.opt.apply(&mut self.w[0], &dw1, &mut self.opt_state[0]);
+        self.opt.apply(&mut self.w[1], &dw2, &mut self.opt_state[1]);
+        Ok(loss)
+    }
+
+    pub fn evaluate(&self) -> Result<(f64, f64, f64)> {
+        evaluate_forward(&self.ws, &self.engine, &self.w)
+    }
+
+    pub fn train(&mut self, epochs: usize) -> Result<RunReport> {
+        let label = self.opt.name();
+        let mut report = RunReport::new(label, &format!("n{}", self.ws.n), 1);
+        for e in 0..epochs {
+            let wall0 = Instant::now();
+            let (loss, secs) = timed(|| self.step());
+            let loss = loss?;
+            let wall = wall0.elapsed().as_secs_f64();
+            let (train_acc, test_acc, _) = self.evaluate()?;
+            log::debug!(
+                "[{label}] epoch {e}: loss={loss:.4} train={train_acc:.3} test={test_acc:.3}"
+            );
+            report.push(EpochRecord {
+                epoch: e,
+                train_acc,
+                test_acc,
+                loss,
+                t_train: secs,
+                t_comm: 0.0,
+                t_wall: wall,
+                bytes: 0,
+            });
+        }
+        Ok(report)
+    }
+
+    pub fn weights(&self) -> &[Matrix] {
+        &self.w
+    }
+}

@@ -1,0 +1,229 @@
+//! First-order optimizers (the paper's four comparison methods).
+//!
+//! Formulas follow the standard references: GD, Adagrad [Duchi'11],
+//! Adadelta [Zeiler'12], Adam [Kingma & Ba'15]. Each is unit-tested against
+//! hand-computed updates and on a quadratic convergence check.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Optimizer kind + hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optimizer {
+    /// Vanilla gradient descent (paper lr: 1e-1).
+    Gd { lr: f32 },
+    /// Adam (paper lr: 1e-3).
+    Adam {
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+    },
+    /// Adagrad (paper lr: 1e-3).
+    Adagrad { lr: f32, eps: f32 },
+    /// Adadelta (paper "lr" 1e-3 scales the update).
+    Adadelta { lr: f32, rho: f32, eps: f32 },
+}
+
+/// Per-parameter optimizer state (first/second moment accumulators).
+#[derive(Clone, Debug)]
+pub struct OptState {
+    pub m: Matrix,
+    pub v: Matrix,
+    pub t: u64,
+}
+
+impl OptState {
+    pub fn new((rows, cols): (usize, usize)) -> OptState {
+        OptState {
+            m: Matrix::zeros(rows, cols),
+            v: Matrix::zeros(rows, cols),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer {
+    /// Parse a CLI method name with the paper's default learning rate when
+    /// `lr` is None/"auto".
+    pub fn parse(name: &str, lr: Option<&str>) -> Result<Optimizer> {
+        let lr_val = |default: f32| -> Result<f32> {
+            match lr {
+                None | Some("auto") | Some("") => Ok(default),
+                Some(s) => Ok(s.parse::<f32>()?),
+            }
+        };
+        Ok(match name {
+            "gd" => Optimizer::Gd { lr: lr_val(1e-1)? },
+            "adam" => Optimizer::Adam {
+                lr: lr_val(1e-3)?,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            "adagrad" => Optimizer::Adagrad {
+                lr: lr_val(1e-3)?,
+                eps: 1e-10,
+            },
+            "adadelta" => Optimizer::Adadelta {
+                lr: lr_val(1e-3)?,
+                rho: 0.95,
+                eps: 1e-6,
+            },
+            other => bail!("unknown optimizer '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::Gd { .. } => "gd",
+            Optimizer::Adam { .. } => "adam",
+            Optimizer::Adagrad { .. } => "adagrad",
+            Optimizer::Adadelta { .. } => "adadelta",
+        }
+    }
+
+    /// In-place parameter update.
+    pub fn apply(&self, w: &mut Matrix, grad: &Matrix, st: &mut OptState) {
+        assert_eq!(w.shape(), grad.shape());
+        st.t += 1;
+        match *self {
+            Optimizer::Gd { lr } => {
+                w.axpy(-lr, grad);
+            }
+            Optimizer::Adam {
+                lr,
+                beta1,
+                beta2,
+                eps,
+            } => {
+                let bc1 = 1.0 - beta1.powi(st.t as i32);
+                let bc2 = 1.0 - beta2.powi(st.t as i32);
+                let wd = w.data_mut();
+                let md = st.m.data_mut();
+                let vd = st.v.data_mut();
+                for i in 0..wd.len() {
+                    let g = grad.data()[i];
+                    md[i] = beta1 * md[i] + (1.0 - beta1) * g;
+                    vd[i] = beta2 * vd[i] + (1.0 - beta2) * g * g;
+                    let mhat = md[i] / bc1;
+                    let vhat = vd[i] / bc2;
+                    wd[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+            Optimizer::Adagrad { lr, eps } => {
+                let wd = w.data_mut();
+                let vd = st.v.data_mut();
+                for i in 0..wd.len() {
+                    let g = grad.data()[i];
+                    vd[i] += g * g;
+                    wd[i] -= lr * g / (vd[i].sqrt() + eps);
+                }
+            }
+            Optimizer::Adadelta { lr, rho, eps } => {
+                // m = E[g²], v = E[Δ²].
+                let wd = w.data_mut();
+                let md = st.m.data_mut();
+                let vd = st.v.data_mut();
+                for i in 0..wd.len() {
+                    let g = grad.data()[i];
+                    md[i] = rho * md[i] + (1.0 - rho) * g * g;
+                    let dx = -((vd[i] + eps).sqrt() / (md[i] + eps).sqrt()) * g;
+                    vd[i] = rho * vd[i] + (1.0 - rho) * dx * dx;
+                    wd[i] += lr * dx;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_converges(opt: Optimizer, iters: usize, lr_scale_tol: f32) {
+        // Minimise f(w) = ||w - 3||²/2 elementwise; grad = w - 3.
+        let mut w = Matrix::from_vec(2, 2, vec![0.0, 10.0, -5.0, 3.0]);
+        let mut st = OptState::new((2, 2));
+        for _ in 0..iters {
+            let grad = w.map(|x| x - 3.0);
+            opt.apply(&mut w, &grad, &mut st);
+        }
+        for &x in w.data() {
+            assert!(
+                (x - 3.0).abs() < lr_scale_tol,
+                "{opt:?} did not converge: {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn gd_known_step() {
+        let opt = Optimizer::Gd { lr: 0.5 };
+        let mut w = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let g = Matrix::from_vec(1, 2, vec![0.2, -0.4]);
+        let mut st = OptState::new((1, 2));
+        opt.apply(&mut w, &g, &mut st);
+        assert_eq!(w.data(), &[0.9, 2.2]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // After one step, |Δw| ≈ lr regardless of gradient scale.
+        let opt = Optimizer::parse("adam", None).unwrap();
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut w = Matrix::zeros(1, 1);
+            let g = Matrix::from_vec(1, 1, vec![scale]);
+            let mut st = OptState::new((1, 1));
+            opt.apply(&mut w, &g, &mut st);
+            assert!(
+                (w.data()[0].abs() - 1e-3).abs() < 1e-5,
+                "scale {scale}: step {}",
+                w.data()[0]
+            );
+        }
+    }
+
+    #[test]
+    fn adagrad_accumulates_and_decays_step() {
+        let opt = Optimizer::Adagrad { lr: 1.0, eps: 0.0 };
+        let mut w = Matrix::zeros(1, 1);
+        let g = Matrix::from_vec(1, 1, vec![2.0]);
+        let mut st = OptState::new((1, 1));
+        opt.apply(&mut w, &g, &mut st);
+        // v = 4, step = 1 * 2/2 = 1.
+        assert!((w.data()[0] + 1.0).abs() < 1e-6);
+        opt.apply(&mut w, &g, &mut st);
+        // v = 8, step = 2/sqrt(8).
+        assert!((w.data()[0] + 1.0 + 2.0 / 8f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        quad_converges(Optimizer::Gd { lr: 0.1 }, 200, 1e-3);
+        quad_converges(Optimizer::parse("adam", Some("0.1")).unwrap(), 800, 2e-2);
+        quad_converges(Optimizer::Adagrad { lr: 2.0, eps: 1e-10 }, 2000, 5e-2);
+        quad_converges(
+            Optimizer::Adadelta {
+                lr: 1.0,
+                rho: 0.95,
+                eps: 1e-6,
+            },
+            3000,
+            5e-2,
+        );
+    }
+
+    #[test]
+    fn parse_defaults_match_paper() {
+        assert_eq!(
+            Optimizer::parse("gd", None).unwrap(),
+            Optimizer::Gd { lr: 0.1 }
+        );
+        match Optimizer::parse("adam", None).unwrap() {
+            Optimizer::Adam { lr, .. } => assert_eq!(lr, 1e-3),
+            _ => unreachable!(),
+        }
+        assert!(Optimizer::parse("sgd-nope", None).is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Benchmark harness — criterion is not resolvable offline, so `cargo
+//! bench` targets (`benches/*.rs`, `harness = false`) use this module:
+//! warmup + timed iterations + robust summary statistics, plus table
+//! printing helpers shared by the paper-reproduction benches.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Configuration for a micro-benchmark run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 3,
+            iters: 10,
+        }
+    }
+}
+
+/// Time `f` (seconds per iteration) with warmup; returns a summary.
+pub fn bench<T>(opts: BenchOpts, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..opts.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    for _ in 0..opts.iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Print one bench row: name, mean ± std, p50, min.
+pub fn report_row(name: &str, s: &Summary) {
+    println!(
+        "{name:<44} {:>10} ±{:>9}  p50 {:>10}  min {:>10}",
+        fmt_secs(s.mean),
+        fmt_secs(s.std),
+        fmt_secs(s.p50),
+        fmt_secs(s.min)
+    );
+}
+
+/// Human duration: ns/µs/ms/s with 3 significant digits.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// GFLOP/s helper for matmul-ish kernels.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(
+            BenchOpts {
+                warmup_iters: 1,
+                iters: 5,
+            },
+            || {
+                let mut x = 0u64;
+                for i in 0..10_000 {
+                    x = x.wrapping_add(i * i);
+                }
+                x
+            },
+        );
+        assert_eq!(s.n, 5);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

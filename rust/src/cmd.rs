@@ -1,0 +1,115 @@
+//! CLI subcommand implementations (wired from `main.rs`).
+
+use crate::config;
+use crate::data::{self, synth, Dataset};
+use crate::partition::Method;
+use crate::util::cli::Args;
+
+/// Resolve a dataset by name: synthetic spec, fixture, or `.cgnp` path.
+pub fn load_dataset(name: &str, scale: f64, seed: u64) -> anyhow::Result<Dataset> {
+    if let Some(spec) = synth::spec_by_name(name) {
+        return Ok(synth::generate(&spec, scale, seed));
+    }
+    match name {
+        "fig1" => Ok(data::fixtures::fig1()),
+        "caveman" | "caveman-l3" => Ok(data::fixtures::caveman(24, seed)),
+        path if path.ends_with(".cgnp") => data::format::load(std::path::Path::new(path)),
+        other => anyhow::bail!(
+            "unknown dataset '{other}' (try synth-computers, synth-photo, fig1, caveman, or a .cgnp path)"
+        ),
+    }
+}
+
+/// `cgcn plan` — write configs/artifacts.json from the canonical shape plan.
+pub fn cmd_plan(args: &Args) -> i32 {
+    let hidden = args.get_usize("hidden");
+    let scale: f64 = args.get_f64("scale");
+    let out = match args.get("out") {
+        Some("") | None => "configs/artifacts.json".to_string(),
+        Some(p) => p.to_string(),
+    };
+    let datasets = config::default_plan_datasets(hidden, scale, vec![1, 3]);
+    let json = config::plan_to_json(&datasets);
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(&out, json.to_pretty() + "\n") {
+        Ok(()) => {
+            let n = json.get("artifacts").as_arr().map(|a| a.len()).unwrap_or(0);
+            println!("wrote {n} artifact specs to {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing {out}: {e}");
+            1
+        }
+    }
+}
+
+/// `cgcn data` — dataset stats / generation / export.
+pub fn cmd_data(args: &Args) -> i32 {
+    let name = args.get_str("dataset");
+    let scale = args.get_f64("scale");
+    let seed = args.get_u64("seed");
+    let ds = match load_dataset(&name, scale, seed) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "{:<18} {:>7} {:>8} {:>7} {:>7} {:>9} {:>9} {:>8}",
+        "dataset", "nodes", "train", "test", "classes", "features", "edges", "avgdeg"
+    );
+    println!("{}", ds.stats_row());
+    if let Some(out) = args.get("out").filter(|s| !s.is_empty()) {
+        if let Err(e) = data::format::save(&ds, std::path::Path::new(out)) {
+            eprintln!("error saving: {e:#}");
+            return 1;
+        }
+        println!("saved to {out}");
+    }
+    0
+}
+
+/// `cgcn artifacts` — list and compile-check artifacts.
+pub fn cmd_artifacts(_args: &Args) -> i32 {
+    let dir = crate::runtime::Engine::default_dir();
+    let engine = match crate::runtime::Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    println!("{} artifacts indexed in {}", engine.len(), dir.display());
+    0
+}
+
+/// `cgcn train` — run one training configuration and print per-epoch rows.
+pub fn cmd_train(args: &Args) -> i32 {
+    match crate::coordinator::run_from_args(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// `cgcn worker` — community worker process (TCP transport).
+pub fn cmd_worker(args: &Args) -> i32 {
+    match crate::coordinator::transport::worker_main(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Parse the partition method CLI value.
+pub fn parse_method(s: &str) -> anyhow::Result<Method> {
+    Method::parse(s).ok_or_else(|| anyhow::anyhow!("unknown partition method '{s}'"))
+}

@@ -1,0 +1,478 @@
+//! Experiment configuration and artifact shape planning.
+//!
+//! This module is the single source of truth for every shape that crosses
+//! the Python/Rust boundary: `cgcn plan` serialises the artifact shape list
+//! to `configs/artifacts.json`, `python -m compile.aot` lowers exactly
+//! those shapes, and the [`crate::runtime`] looks artifacts up by the same
+//! signatures. The padding rules here and the partitioner's balance cap
+//! use the same constant, so a valid partition always fits its padded
+//! artifact.
+
+use crate::util::json::Json;
+
+/// Row-tile multiple: community/global row counts are padded to this, so
+/// Pallas BlockSpecs never see ragged edges (128 = TPU lane count).
+pub const ROW_TILE: usize = 128;
+
+/// Allowed partition imbalance — must match `partition::metis`'s EPS.
+pub const BALANCE_EPS: f64 = 0.10;
+
+/// Round up to the row tile.
+pub fn pad_to_tile(n: usize) -> usize {
+    n.div_ceil(ROW_TILE) * ROW_TILE
+}
+
+/// Hard cap on community size for an (n, m) partition.
+pub fn community_cap(n: usize, m: usize) -> usize {
+    if m == 1 {
+        n
+    } else {
+        ((1.0 + BALANCE_EPS) * n as f64 / m as f64).ceil() as usize
+    }
+}
+
+/// Padded per-community row count for an (n, m) partition.
+pub fn padded_community(n: usize, m: usize) -> usize {
+    pad_to_tile(community_cap(n, m))
+}
+
+/// Padded global row count.
+pub fn padded_global(n: usize) -> usize {
+    pad_to_tile(n)
+}
+
+/// Hyper-parameters of one training run (paper §4 settings by default).
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    /// Hidden units per GCN layer (paper: 1000; fast profile: 256).
+    pub hidden: usize,
+    /// Number of GCN layers L (paper: 2). L > 2 exercises the eq.-5 path.
+    pub layers: usize,
+    /// ADMM penalty ρ (paper: 1e-3 computers / 1e-4 photo).
+    pub rho: f32,
+    /// Relaxation weight ν (paper: same values as ρ).
+    pub nu: f32,
+    /// Communities M (paper: 3).
+    pub communities: usize,
+    /// Training epochs (paper: 50).
+    pub epochs: usize,
+    /// FISTA iterations inside the Z_L artifact.
+    pub fista_steps: usize,
+    /// RNG seed for init / partitioning.
+    pub seed: u64,
+}
+
+impl HyperParams {
+    /// Paper defaults for a named dataset (ρ=ν=1e-3 for computers,
+    /// 1e-4 for photo; 1e-3 otherwise).
+    pub fn for_dataset(name: &str) -> HyperParams {
+        let rho = if name.contains("photo") { 1e-4 } else { 1e-3 };
+        HyperParams {
+            hidden: 256,
+            layers: 2,
+            rho,
+            nu: rho,
+            communities: 3,
+            epochs: 50,
+            fista_steps: 10,
+            seed: 17,
+        }
+    }
+
+    /// Layer dimension chain C_0..C_L for a dataset with the given
+    /// feature/class counts.
+    pub fn dims(&self, features: usize, classes: usize) -> Vec<usize> {
+        let mut d = vec![features];
+        for _ in 1..self.layers {
+            d.push(self.hidden);
+        }
+        d.push(classes);
+        d
+    }
+}
+
+/// One dataset's shape requirements for planning.
+#[derive(Clone, Debug)]
+pub struct PlanDataset {
+    pub name: String,
+    pub nodes: usize,
+    pub features: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub fista_steps: usize,
+    /// Community counts to support (1 = serial).
+    pub ms: Vec<usize>,
+}
+
+impl PlanDataset {
+    fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.features];
+        for _ in 1..self.layers {
+            d.push(self.hidden);
+        }
+        d.push(self.classes);
+        d
+    }
+
+    /// All padded row counts this dataset needs artifacts for.
+    pub fn row_counts(&self) -> Vec<usize> {
+        let mut ns = vec![padded_global(self.nodes)];
+        for &m in &self.ms {
+            if m > 1 {
+                ns.push(padded_community(self.nodes, m));
+            }
+        }
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+}
+
+/// Artifact spec mirrored by `aot.artifact_sig` on the Python side.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactSpec {
+    pub entry: &'static str,
+    pub n: usize,
+    /// (a, b) for matmul-shaped entries; 0 when unused.
+    pub a: usize,
+    pub b: usize,
+    /// c for single-dim entries; 0 when unused.
+    pub c: usize,
+    /// FISTA steps for zl_fista; 0 when unused.
+    pub steps: usize,
+    pub pallas: bool,
+}
+
+impl ArtifactSpec {
+    /// The artifact signature — must match `aot.artifact_sig`.
+    pub fn sig(&self) -> String {
+        let mut parts = Vec::new();
+        parts.push(format!("n{}", self.n));
+        if self.a > 0 {
+            parts.push(format!("a{}", self.a));
+        }
+        if self.b > 0 {
+            parts.push(format!("b{}", self.b));
+        }
+        if self.c > 0 {
+            parts.push(format!("c{}", self.c));
+        }
+        if self.steps > 0 {
+            parts.push(format!("steps{}", self.steps));
+        }
+        format!("{}__{}", self.entry, parts.join("_"))
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("entry", Json::str(self.entry)),
+            ("n", Json::num(self.n as f64)),
+            ("pallas", Json::Bool(self.pallas)),
+        ];
+        if self.a > 0 {
+            pairs.push(("a", Json::num(self.a as f64)));
+        }
+        if self.b > 0 {
+            pairs.push(("b", Json::num(self.b as f64)));
+        }
+        if self.c > 0 {
+            pairs.push(("c", Json::num(self.c as f64)));
+        }
+        if self.steps > 0 {
+            pairs.push(("steps", Json::num(self.steps as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+fn nab(entry: &'static str, n: usize, a: usize, b: usize, pallas: bool) -> ArtifactSpec {
+    ArtifactSpec {
+        entry,
+        n,
+        a,
+        b,
+        c: 0,
+        steps: 0,
+        pallas,
+    }
+}
+
+fn nc(entry: &'static str, n: usize, c: usize, pallas: bool) -> ArtifactSpec {
+    ArtifactSpec {
+        entry,
+        n,
+        a: 0,
+        b: 0,
+        c,
+        steps: 0,
+        pallas,
+    }
+}
+
+/// Pallas-interpret grids get expensive on CPU above this row count; the
+/// kernel story is identical either way (same math, same artifact
+/// interface), so larger shapes default to the plain-XLA lowering. See
+/// EXPERIMENTS.md §Perf for the measured crossover.
+pub const PALLAS_MAX_ROWS: usize = 512;
+
+/// Enumerate every artifact a dataset needs (one call covers serial,
+/// parallel and baseline training plus eval).
+pub fn dataset_artifacts(ds: &PlanDataset) -> Vec<ArtifactSpec> {
+    let dims = ds.dims();
+    let l = dims.len() - 1; // number of layers
+    let mut out = Vec::new();
+    for &n in &ds.row_counts() {
+        let pallas = n <= PALLAS_MAX_ROWS;
+        for layer in 1..=l {
+            let (a, b) = (dims[layer - 1], dims[layer]);
+            // Matmul primitives used by both ADMM phases and baselines:
+            // V = Z W (mm_nn), gW = Zᵀ(ÃR) (mm_tn), Gz = (ÃR)Wᵀ (mm_bt).
+            out.push(nab("mm_nn", n, a, b, pallas));
+            out.push(nab("mm_tn", n, a, b, pallas));
+            out.push(nab("mm_bt", n, a, b, pallas));
+            if layer < l {
+                out.push(nab("fwd_relu", n, a, b, pallas));
+                out.push(nab("bp_hidden_grads", n, a, b, pallas));
+            } else {
+                out.push(nab("bp_out_grads", n, a, b, pallas));
+            }
+        }
+        // Elementwise residual/value entries per distinct layer width.
+        for layer in 1..l {
+            let c = dims[layer];
+            out.push(nc("hidden_residual", n, c, pallas));
+            out.push(nc("hidden_phi", n, c, pallas));
+            out.push(nc("z_combine", n, c, pallas));
+            out.push(nc("z_prox_val", n, c, pallas));
+        }
+        let classes = dims[l];
+        out.push(nc("out_residual", n, classes, pallas));
+        out.push(nc("out_phi", n, classes, pallas));
+        out.push(ArtifactSpec {
+            entry: "zl_fista",
+            n,
+            a: 0,
+            b: 0,
+            c: classes,
+            steps: ds.fista_steps,
+            pallas,
+        });
+        out.push(nc("xent_loss", n, classes, pallas));
+    }
+    out
+}
+
+/// The default plan: test fixtures + fast-profile synthetic datasets.
+pub fn default_plan_datasets(hidden: usize, scale: f64, ms: Vec<usize>) -> Vec<PlanDataset> {
+    use crate::data::synth;
+    let scaled = |spec: &synth::SynthSpec| -> usize {
+        // Must mirror data::synth::generate's node-count rule.
+        ((spec.nodes as f64 * scale).round() as usize).max(spec.classes * 8)
+    };
+    vec![
+        // Tiny fixtures for rust integration tests.
+        PlanDataset {
+            name: "fig1".into(),
+            nodes: 9,
+            features: 4,
+            classes: 3,
+            hidden: 8,
+            layers: 2,
+            fista_steps: 10,
+            ms: ms.clone(),
+        },
+        PlanDataset {
+            name: "caveman".into(),
+            nodes: 48,
+            features: 6,
+            classes: 2,
+            hidden: 8,
+            layers: 2,
+            fista_steps: 10,
+            ms: ms.clone(),
+        },
+        // Three-layer fixture exercising the eq.-5 (hidden Z) path.
+        PlanDataset {
+            name: "caveman-l3".into(),
+            nodes: 48,
+            features: 6,
+            classes: 2,
+            hidden: 8,
+            layers: 3,
+            fista_steps: 10,
+            ms: ms.clone(),
+        },
+        PlanDataset {
+            name: "synth-computers".into(),
+            nodes: scaled(&synth::AMAZON_COMPUTERS),
+            features: synth::AMAZON_COMPUTERS.features,
+            classes: synth::AMAZON_COMPUTERS.classes,
+            hidden,
+            layers: 2,
+            fista_steps: 10,
+            ms: ms.clone(),
+        },
+        PlanDataset {
+            name: "synth-photo".into(),
+            nodes: scaled(&synth::AMAZON_PHOTO),
+            features: synth::AMAZON_PHOTO.features,
+            classes: synth::AMAZON_PHOTO.classes,
+            hidden,
+            layers: 2,
+            fista_steps: 10,
+            ms,
+        },
+    ]
+}
+
+/// Serialise a plan to the configs/artifacts.json format aot.py consumes.
+pub fn plan_to_json(datasets: &[PlanDataset]) -> Json {
+    let mut specs = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for ds in datasets {
+        for spec in dataset_artifacts(ds) {
+            if seen.insert(spec.sig()) {
+                specs.push(spec);
+            }
+        }
+    }
+    specs.sort_by_key(|s| s.sig());
+    Json::obj(vec![
+        ("use_pallas", Json::Bool(true)),
+        ("fista_steps", Json::num(10.0)),
+        (
+            "artifacts",
+            Json::arr(specs.iter().map(|s| s.to_json()).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_rules() {
+        assert_eq!(pad_to_tile(1), 128);
+        assert_eq!(pad_to_tile(128), 128);
+        assert_eq!(pad_to_tile(129), 256);
+        assert_eq!(community_cap(100, 1), 100);
+        assert_eq!(community_cap(300, 3), 110);
+        assert_eq!(padded_community(300, 3), 128);
+        assert_eq!(padded_global(383), 384);
+    }
+
+    #[test]
+    fn partition_always_fits_padded_community() {
+        // Any valid partition (imbalance <= 1+EPS) fits the padded size.
+        use crate::data::fixtures;
+        use crate::partition::{partition, Method};
+        let ds = fixtures::caveman(30, 2);
+        for m in [2, 3, 4] {
+            let p = partition(&ds.graph, m, Method::Metis, 5);
+            let cap = community_cap(ds.n(), m);
+            for s in p.sizes() {
+                assert!(s <= cap, "community size {s} > cap {cap} (m={m})");
+            }
+        }
+    }
+
+    #[test]
+    fn sig_format_matches_python_side() {
+        // Mirrors aot.artifact_sig ordering: n, a, b, c, steps.
+        let s = nab("w_grad_hidden", 384, 745, 64, false);
+        assert_eq!(s.sig(), "w_grad_hidden__n384_a745_b64");
+        let f = ArtifactSpec {
+            entry: "zl_fista",
+            n: 256,
+            a: 0,
+            b: 0,
+            c: 8,
+            steps: 10,
+            pallas: true,
+        };
+        assert_eq!(f.sig(), "zl_fista__n256_c8_steps10");
+    }
+
+    #[test]
+    fn two_layer_dataset_artifact_inventory() {
+        let ds = PlanDataset {
+            name: "t".into(),
+            nodes: 100,
+            features: 16,
+            classes: 4,
+            hidden: 8,
+            layers: 2,
+            fista_steps: 10,
+            ms: vec![1, 3],
+        };
+        let arts = dataset_artifacts(&ds);
+        assert_eq!(ds.row_counts(), vec![128]);
+        let entries: std::collections::HashSet<_> = arts.iter().map(|a| a.entry).collect();
+        for e in [
+            "mm_nn",
+            "mm_tn",
+            "mm_bt",
+            "fwd_relu",
+            "hidden_residual",
+            "hidden_phi",
+            "out_residual",
+            "out_phi",
+            "z_combine",
+            "z_prox_val",
+            "zl_fista",
+            "bp_out_grads",
+            "bp_hidden_grads",
+            "xent_loss",
+        ] {
+            assert!(entries.contains(e), "missing entry {e}");
+        }
+    }
+
+    #[test]
+    fn three_layer_dataset_has_hidden_width_entries_per_layer() {
+        let ds = PlanDataset {
+            name: "t3".into(),
+            nodes: 100,
+            features: 16,
+            classes: 4,
+            hidden: 8,
+            layers: 3,
+            fista_steps: 10,
+            ms: vec![1],
+        };
+        let arts = dataset_artifacts(&ds);
+        // mm primitives exist for every layer dim pair.
+        for (a, b) in [(16, 8), (8, 8), (8, 4)] {
+            assert!(
+                arts.iter()
+                    .any(|s| s.entry == "mm_nn" && s.a == a && s.b == b),
+                "missing mm_nn {a}x{b}"
+            );
+        }
+        assert!(arts.iter().any(|s| s.entry == "hidden_residual" && s.c == 8));
+    }
+
+    #[test]
+    fn plan_json_is_parseable_and_deduped() {
+        let plan = plan_to_json(&default_plan_datasets(64, 0.05, vec![1, 3]));
+        let text = plan.to_pretty();
+        let back = Json::parse(&text).unwrap();
+        let arts = back.get("artifacts").as_arr().unwrap();
+        assert!(arts.len() > 20);
+        let mut sigs = std::collections::HashSet::new();
+        for a in arts {
+            let key = format!(
+                "{}_{}_{}_{}_{}_{}",
+                a.get("entry").as_str().unwrap(),
+                a.get("n").as_f64().unwrap(),
+                a.get("a").as_f64().unwrap_or(0.0),
+                a.get("b").as_f64().unwrap_or(0.0),
+                a.get("c").as_f64().unwrap_or(0.0),
+                a.get("steps").as_f64().unwrap_or(0.0),
+            );
+            assert!(sigs.insert(key), "duplicate artifact in plan");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Virtual-time accounting for the distributed schedule.
+//!
+//! This container has a single CPU core, so agents cannot physically run
+//! concurrently; the paper's testbed gave each agent its own execution
+//! resources. We therefore measure each agent's compute individually and
+//! account parallel phases at their critical path (`max` over agents),
+//! serial phases as the sum — exactly what an M-machine deployment of the
+//! same binaries would observe, minus OS jitter. Communication is priced
+//! by a configurable link model over *measured* message bytes (the wire
+//! encoding the TCP transport actually ships). DESIGN.md §2 documents the
+//! substitution; the real wall-clock is always reported alongside.
+
+use std::time::Instant;
+
+/// Bandwidth/latency model of the inter-agent links.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Bandwidth in bytes/second.
+    pub bytes_per_sec: f64,
+    /// Per-message latency in seconds.
+    pub latency: f64,
+}
+
+impl LinkModel {
+    /// `mbps` megabit/s, `lat_us` microseconds (defaults mimic the paper's
+    /// LAN: 1 Gbit/s, 100 µs).
+    pub fn new(mbps: f64, lat_us: f64) -> LinkModel {
+        LinkModel {
+            bytes_per_sec: mbps * 1e6 / 8.0,
+            latency: lat_us * 1e-6,
+        }
+    }
+
+    /// Transfer time of one message.
+    pub fn msg_secs(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bytes_per_sec
+    }
+}
+
+/// Accumulates one epoch's virtual time, split the way Table 3 reports it.
+#[derive(Clone, Debug, Default)]
+pub struct EpochClock {
+    /// Virtual training (compute) seconds.
+    pub train: f64,
+    /// Virtual communication seconds.
+    pub comm: f64,
+    /// Bytes shipped this epoch.
+    pub bytes: u64,
+    /// Messages shipped this epoch.
+    pub messages: u64,
+}
+
+impl EpochClock {
+    /// Add a parallel compute phase: agents ran "concurrently", wall time
+    /// is the slowest agent (critical path).
+    pub fn parallel_phase(&mut self, per_agent_secs: &[f64]) {
+        self.train += per_agent_secs.iter().copied().fold(0.0, f64::max);
+    }
+
+    /// Add a serial compute phase (sum of parts).
+    pub fn serial_phase(&mut self, secs: f64) {
+        self.train += secs;
+    }
+
+    /// Peer-to-peer exchange: every agent transmits its own messages
+    /// sequentially, agents in parallel ⇒ max over senders.
+    pub fn exchange(&mut self, link: &LinkModel, per_sender_bytes: &[Vec<u64>]) {
+        let mut worst = 0.0f64;
+        for msgs in per_sender_bytes {
+            let mut t = 0.0;
+            for &b in msgs {
+                t += link.msg_secs(b);
+                self.bytes += b;
+                self.messages += 1;
+            }
+            worst = worst.max(t);
+        }
+        self.comm += worst;
+    }
+
+    /// Star gather/broadcast through the leader: the leader's NIC is the
+    /// bottleneck, messages serialise there.
+    pub fn star(&mut self, link: &LinkModel, msgs: &[u64]) {
+        for &b in msgs {
+            self.comm += link.msg_secs(b);
+            self.bytes += b;
+            self.messages += 1;
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.train + self.comm
+    }
+}
+
+/// Measure a closure's wall time, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model_math() {
+        let link = LinkModel::new(1000.0, 100.0); // 1 Gbit/s, 100 µs
+        // 1 MB at 125 MB/s = 8 ms, + 0.1 ms latency.
+        let t = link.msg_secs(1_000_000);
+        assert!((t - 0.0081).abs() < 1e-4, "{t}");
+    }
+
+    #[test]
+    fn parallel_phase_takes_max_serial_takes_sum() {
+        let mut c = EpochClock::default();
+        c.parallel_phase(&[0.1, 0.5, 0.2]);
+        assert!((c.train - 0.5).abs() < 1e-12);
+        c.serial_phase(0.3);
+        assert!((c.train - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchange_is_max_over_senders_star_is_sum() {
+        let link = LinkModel {
+            bytes_per_sec: 1000.0,
+            latency: 0.0,
+        };
+        let mut c = EpochClock::default();
+        c.exchange(&link, &[vec![1000, 1000], vec![500]]);
+        assert!((c.comm - 2.0).abs() < 1e-9); // max(2.0, 0.5)
+        assert_eq!(c.bytes, 2500);
+        assert_eq!(c.messages, 3);
+        let mut s = EpochClock::default();
+        s.star(&link, &[1000, 1000, 500]);
+        assert!((s.comm - 2.5).abs() < 1e-9);
+    }
+}

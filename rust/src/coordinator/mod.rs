@@ -1,0 +1,150 @@
+//! The paper's system contribution: community-based layerwise distributed
+//! ADMM training of GCNs.
+//!
+//! - [`workspace`] — partition, padded `Ã` blocks, per-community tensors.
+//! - [`admm`] — Algorithm 1 (W/Z/U subproblems, p/s message protocol).
+//! - [`clock`] — virtual-time accounting + link model (1-core testbed).
+//! - [`transport`] — the multi-process TCP runtime (leader + workers).
+
+pub mod admm;
+pub mod clock;
+pub mod transport;
+pub mod workspace;
+
+pub use admm::{evaluate_forward, AdmmOptions, AdmmTrainer};
+pub use clock::{EpochClock, LinkModel};
+pub use workspace::{Community, Workspace};
+
+use crate::baselines;
+use crate::config::HyperParams;
+use crate::metrics::RunReport;
+use crate::runtime::Engine;
+use crate::util::cli::Args;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Everything `cgcn train` needs, resolved from CLI arguments.
+pub struct TrainSetup {
+    pub ws: Arc<Workspace>,
+    pub engine: Arc<Engine>,
+    pub hp: HyperParams,
+    pub method: String,
+    pub link: LinkModel,
+    pub epochs: usize,
+}
+
+/// Resolve CLI args into a workspace + engine (shared by train and bench).
+pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
+    let dataset = args.get_str("dataset");
+    let scale = args.get_f64("scale");
+    let seed = args.get_u64("seed");
+    let method = args.get_str("method");
+
+    let mut hp = HyperParams::for_dataset(&dataset);
+    hp.hidden = args.get_usize("hidden");
+    hp.layers = args.get_usize("layers");
+    hp.communities = args.get_usize("communities");
+    hp.epochs = args.get_usize("epochs");
+    hp.seed = seed;
+    if let Some(r) = args.get("rho").filter(|s| *s != "auto") {
+        hp.rho = r.parse().context("--rho")?;
+    }
+    if let Some(n) = args.get("nu").filter(|s| *s != "auto") {
+        hp.nu = n.parse().context("--nu")?;
+    }
+    // Fixture dims are fixed by the artifact plan.
+    if dataset.starts_with("fig1") || dataset.starts_with("caveman") {
+        hp.hidden = 8;
+        if dataset == "caveman-l3" {
+            hp.layers = 3;
+        }
+    }
+
+    let ds = crate::cmd::load_dataset(&dataset, scale, seed)?;
+    let pmethod = crate::cmd::parse_method(&args.get_str("partition"))?;
+    let ws = Arc::new(Workspace::build(&ds, &hp, pmethod)?);
+    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let link = LinkModel::new(args.get_f64("link-mbps"), args.get_f64("link-lat-us"));
+    Ok(TrainSetup {
+        ws,
+        engine,
+        hp: hp.clone(),
+        method,
+        link,
+        epochs: hp.epochs,
+    })
+}
+
+/// Run one training configuration (ADMM or a baseline optimizer).
+pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
+    let label = match setup.method.as_str() {
+        "admm" => {
+            if setup.ws.m == 1 {
+                "admm-serial".to_string()
+            } else {
+                format!("admm-parallel-m{}", setup.ws.m)
+            }
+        }
+        other => other.to_string(),
+    };
+    match setup.method.as_str() {
+        "admm" => {
+            if args.get_str("transport") == "tcp" {
+                return transport::run_tcp_training(setup, args);
+            }
+            let mut opts = AdmmOptions::for_mode(setup.ws.m);
+            opts.link = setup.link;
+            if args.get_flag("parallel-layers") {
+                opts.parallel_layers = true;
+            }
+            let mut trainer = AdmmTrainer::new(setup.ws.clone(), setup.engine.clone(), opts)?;
+            let mut report = trainer.train(setup.epochs, &label)?;
+            report.dataset = args.get_str("dataset");
+            Ok(report)
+        }
+        "gd" | "adam" | "adagrad" | "adadelta" => {
+            let opt = baselines::Optimizer::parse(&setup.method, args.get("lr"))?;
+            let mut trainer =
+                baselines::BaselineTrainer::new(setup.ws.clone(), setup.engine.clone(), opt)?;
+            let mut report = trainer.train(setup.epochs)?;
+            report.dataset = args.get_str("dataset");
+            Ok(report)
+        }
+        other => bail!("unknown method '{other}' (admm|gd|adam|adagrad|adadelta)"),
+    }
+}
+
+/// `cgcn train` entry point.
+pub fn run_from_args(args: &Args) -> Result<()> {
+    let setup = setup_from_args(args)?;
+    log::info!(
+        "train: dataset={} n={} m={} method={} hidden={} layers={} epochs={}",
+        args.get_str("dataset"),
+        setup.ws.n,
+        setup.ws.m,
+        setup.method,
+        setup.hp.hidden,
+        setup.hp.layers,
+        setup.epochs
+    );
+    let report = run_training(&setup, args)?;
+    if std::env::var("CGCN_PROFILE").is_ok() {
+        eprintln!("--- engine stats (top 15 by exec time) ---");
+        for (sig, s) in setup.engine.stats().into_iter().take(15) {
+            eprintln!(
+                "{sig:<44} calls {:>6}  exec {:>8.3}s  marshal {:>8.3}s  compile {:>6.3}s",
+                s.calls, s.exec_secs, s.marshal_secs, s.compile_secs
+            );
+        }
+    }
+    if args.get_flag("csv") {
+        print!("{}", report.to_csv());
+    } else {
+        println!("{}", report.summary_json().to_pretty());
+    }
+    if let Some(out) = args.get("out").filter(|s| !s.is_empty()) {
+        std::fs::write(out, report.to_csv())?;
+        log::info!("wrote per-epoch CSV to {out}");
+    }
+    Ok(())
+}

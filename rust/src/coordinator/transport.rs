@@ -1,0 +1,475 @@
+//! Multi-process distributed runtime: leader + one worker process per
+//! community, speaking a length-framed binary protocol over TCP.
+//!
+//! This is the deployment shape the paper describes (1 agent = 1 machine):
+//! the leader owns the W subproblem (agent M+1) and message routing (star
+//! topology); each worker owns one community's Z/U state and subproblems.
+//! Workers rebuild the deterministic workspace from the run config on their
+//! command line (dataset synthesis, partitioning and init are all seeded),
+//! so only *state deltas* cross the wire: W broadcasts, p/s messages and
+//! Z/U reports — exactly the traffic the virtual link model prices in
+//! local mode. On this 1-core container the processes time-slice a single
+//! CPU, so TCP mode demonstrates correctness + real byte counts, not
+//! speedup (DESIGN.md §2).
+//!
+//! Protocol frames (all little-endian, via [`crate::util::wire`]):
+//!
+//! | tag | dir            | payload                                    |
+//! |-----|----------------|---------------------------------------------|
+//! | 1   | worker→leader  | Hello { worker index }                      |
+//! | 3   | leader→worker  | SetW { L weight matrices }                  |
+//! | 4   | worker→leader  | PMsgs { (layer, dst, matrix)* }             |
+//! | 5   | leader→worker  | PDeliver { (layer, src, matrix)* }          |
+//! | 6   | worker→leader  | SMsgs { (layer, dst, s1, s2)* }             |
+//! | 7   | leader→worker  | SDeliver { (layer, src, s1, s2)* }          |
+//! | 8   | worker→leader  | ZReport { Z_1..Z_L, U, compute seconds }    |
+//! | 9   | leader→worker  | Shutdown                                    |
+
+use super::admm::{AdmmOptions, AdmmTrainer, MessagePhase};
+use super::TrainSetup;
+use crate::metrics::{EpochRecord, RunReport};
+use crate::runtime::Engine;
+use crate::tensor::Matrix;
+use crate::util::cli::Args;
+use crate::util::wire::{read_frame, write_frame, Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+const TAG_HELLO: u8 = 1;
+const TAG_SET_W: u8 = 3;
+const TAG_P_MSGS: u8 = 4;
+const TAG_P_DELIVER: u8 = 5;
+const TAG_S_MSGS: u8 = 6;
+const TAG_S_DELIVER: u8 = 7;
+const TAG_Z_REPORT: u8 = 8;
+const TAG_SHUTDOWN: u8 = 9;
+
+fn enc_matrix(e: &mut Enc, m: &Matrix) {
+    e.u32(m.rows() as u32).u32(m.cols() as u32).f32s(m.data());
+}
+
+fn dec_matrix(d: &mut Dec) -> Result<Matrix> {
+    let rows = d.u32()? as usize;
+    let cols = d.u32()? as usize;
+    let data = d.f32s()?;
+    anyhow::ensure!(data.len() == rows * cols, "matrix payload size mismatch");
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    /// Bytes sent + received on this connection (comm accounting).
+    bytes: u64,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Result<Conn> {
+        stream.set_nodelay(true)?;
+        Ok(Conn {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            bytes: 0,
+        })
+    }
+
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        self.bytes += payload.len() as u64 + 4;
+        write_frame(&mut self.writer, payload)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let frame = read_frame(&mut self.reader)?
+            .ok_or_else(|| anyhow::anyhow!("peer closed connection"))?;
+        self.bytes += frame.len() as u64 + 4;
+        Ok(frame)
+    }
+
+    fn expect(&mut self, tag: u8) -> Result<Vec<u8>> {
+        let frame = self.recv()?;
+        anyhow::ensure!(
+            frame.first() == Some(&tag),
+            "expected frame tag {tag}, got {:?}",
+            frame.first()
+        );
+        Ok(frame)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leader side
+// ---------------------------------------------------------------------------
+
+/// Run parallel ADMM with real worker processes. The leader keeps the full
+/// trainer (for W updates + evaluation) and mirrors worker Z/U state from
+/// their reports.
+pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
+    let ws = setup.ws.clone();
+    anyhow::ensure!(ws.m > 1, "tcp transport needs --communities > 1");
+    let l_total = ws.layers;
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    log::info!("leader listening on {addr}, spawning {} workers", ws.m);
+
+    // Spawn workers with the same run config; everything deterministic.
+    // CGCN_WORKER_EXE lets integration tests point at the real binary
+    // (current_exe would be the test harness there).
+    let exe = match std::env::var("CGCN_WORKER_EXE") {
+        Ok(path) => std::path::PathBuf::from(path),
+        Err(_) => std::env::current_exe()?,
+    };
+    let mut children = Vec::new();
+    for mi in 0..ws.m {
+        let child = std::process::Command::new(&exe)
+            .args([
+                "worker",
+                "--listen",
+                &addr.to_string(),
+                "--worker-idx",
+                &mi.to_string(),
+                "--dataset",
+                &args.get_str("dataset"),
+                "--scale",
+                &args.get_str("scale"),
+                "--seed",
+                &args.get_str("seed"),
+                "--hidden",
+                &args.get_str("hidden"),
+                "--layers",
+                &args.get_str("layers"),
+                "--communities",
+                &args.get_str("communities"),
+                "--rho",
+                &args.get_str("rho"),
+                "--nu",
+                &args.get_str("nu"),
+                "--partition",
+                &args.get_str("partition"),
+                "--epochs",
+                &args.get_str("epochs"),
+            ])
+            .spawn()
+            .context("spawning worker process")?;
+        children.push(child);
+    }
+
+    // Accept + index connections by Hello.
+    let mut conns: Vec<Option<Conn>> = (0..ws.m).map(|_| None).collect();
+    for _ in 0..ws.m {
+        let (stream, _) = listener.accept()?;
+        let mut conn = Conn::new(stream)?;
+        let hello = conn.expect(TAG_HELLO)?;
+        let mut d = Dec::new(&hello[1..]);
+        let idx = d.u32()? as usize;
+        anyhow::ensure!(idx < ws.m && conns[idx].is_none(), "bad worker index {idx}");
+        conns[idx] = Some(conn);
+    }
+    let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
+
+    // Leader-side trainer: W updates + evaluation + state mirror.
+    let mut opts = AdmmOptions::for_mode(ws.m);
+    opts.link = setup.link;
+    let mut trainer = AdmmTrainer::new(ws.clone(), setup.engine.clone(), opts)?;
+
+    let mut report = RunReport::new(
+        &format!("admm-tcp-m{}", ws.m),
+        &args.get_str("dataset"),
+        ws.m,
+    );
+    let epochs = setup.epochs;
+    for e in 0..epochs {
+        let wall0 = Instant::now();
+        let bytes0: u64 = conns.iter().map(|c| c.bytes).sum();
+
+        // 1. W update at the leader (gather is implicit: state mirrored).
+        let z_glob: Vec<Matrix> = (0..l_total).map(|li| ws.gather(&trainer.state.z[li])).collect();
+        let u_glob = ws.gather(&trainer.state.u);
+        let mut w_secs = Vec::new();
+        for l in 1..=l_total {
+            let t0 = Instant::now();
+            trainer.update_w_public(l, &z_glob, &u_glob)?;
+            w_secs.push(t0.elapsed().as_secs_f64());
+        }
+
+        // 2. Broadcast W.
+        let mut enc = Enc::new();
+        enc.u8(TAG_SET_W).u32(l_total as u32);
+        for w in &trainer.state.w {
+            enc_matrix(&mut enc, w);
+        }
+        let w_frame = enc.into_bytes();
+        for conn in conns.iter_mut() {
+            conn.send(&w_frame)?;
+        }
+
+        // 3. Collect p messages, route to destinations.
+        let mut inbox_p: Vec<Vec<(u32, u32, Matrix)>> = vec![Vec::new(); ws.m];
+        for (src, conn) in conns.iter_mut().enumerate() {
+            let frame = conn.expect(TAG_P_MSGS)?;
+            let mut d = Dec::new(&frame[1..]);
+            let count = d.u32()?;
+            for _ in 0..count {
+                let l = d.u32()?;
+                let dst = d.u32()? as usize;
+                let mat = dec_matrix(&mut d)?;
+                inbox_p[dst].push((l, src as u32, mat));
+            }
+        }
+        for (dst, conn) in conns.iter_mut().enumerate() {
+            let mut enc = Enc::new();
+            enc.u8(TAG_P_DELIVER).u32(inbox_p[dst].len() as u32);
+            for (l, src, mat) in &inbox_p[dst] {
+                enc.u32(*l).u32(*src);
+                enc_matrix(&mut enc, mat);
+            }
+            conn.send(&enc.into_bytes())?;
+        }
+
+        // 4. Collect + route s messages.
+        let mut inbox_s: Vec<Vec<(u32, u32, Matrix, Matrix)>> = vec![Vec::new(); ws.m];
+        for (src, conn) in conns.iter_mut().enumerate() {
+            let frame = conn.expect(TAG_S_MSGS)?;
+            let mut d = Dec::new(&frame[1..]);
+            let count = d.u32()?;
+            for _ in 0..count {
+                let l = d.u32()?;
+                let dst = d.u32()? as usize;
+                let s1 = dec_matrix(&mut d)?;
+                let s2 = dec_matrix(&mut d)?;
+                inbox_s[dst].push((l, src as u32, s1, s2));
+            }
+        }
+        for (dst, conn) in conns.iter_mut().enumerate() {
+            let mut enc = Enc::new();
+            enc.u8(TAG_S_DELIVER).u32(inbox_s[dst].len() as u32);
+            for (l, src, s1, s2) in &inbox_s[dst] {
+                enc.u32(*l).u32(*src);
+                enc_matrix(&mut enc, s1);
+                enc_matrix(&mut enc, s2);
+            }
+            conn.send(&enc.into_bytes())?;
+        }
+
+        // 5. Z reports: mirror worker state.
+        let mut z_secs = vec![0.0f64; ws.m];
+        for (mi, conn) in conns.iter_mut().enumerate() {
+            let frame = conn.expect(TAG_Z_REPORT)?;
+            let mut d = Dec::new(&frame[1..]);
+            let layers = d.u32()? as usize;
+            anyhow::ensure!(layers == l_total, "layer count mismatch in ZReport");
+            for li in 0..l_total {
+                trainer.state.z[li][mi] = dec_matrix(&mut d)?;
+            }
+            trainer.state.u[mi] = dec_matrix(&mut d)?;
+            z_secs[mi] = d.f64()?;
+        }
+
+        let wall = wall0.elapsed().as_secs_f64();
+        let bytes: u64 = conns.iter().map(|c| c.bytes).sum::<u64>() - bytes0;
+        let (train_acc, test_acc, loss) = trainer.evaluate()?;
+        // Virtual accounting mirrors local mode: W layers at critical path,
+        // worker compute at critical path, comm from *measured* bytes.
+        let t_train = w_secs.iter().copied().fold(0.0, f64::max)
+            + z_secs.iter().copied().fold(0.0, f64::max);
+        let t_comm = setup.link.msg_secs(bytes / ws.m as u64) * ws.m as f64;
+        log::info!(
+            "[tcp] epoch {e}: loss={loss:.4} train={train_acc:.3} test={test_acc:.3} \
+             wall={wall:.2}s bytes={bytes}"
+        );
+        report.push(EpochRecord {
+            epoch: e,
+            train_acc,
+            test_acc,
+            loss,
+            t_train,
+            t_comm,
+            t_wall: wall,
+            bytes,
+        });
+    }
+
+    for conn in conns.iter_mut() {
+        let mut enc = Enc::new();
+        enc.u8(TAG_SHUTDOWN);
+        conn.send(&enc.into_bytes()).ok();
+    }
+    for mut child in children {
+        child.wait().ok();
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Worker process entry (`cgcn worker --listen <leader addr> --worker-idx i
+/// <run config>`): owns one community's Z/U state.
+pub fn worker_main(args: &Args) -> Result<()> {
+    let addr = args.get_str("listen");
+    if addr.is_empty() {
+        bail!("worker needs --listen <leader address>");
+    }
+    let mi = args.get_usize("worker-idx");
+
+    // Rebuild the deterministic workspace + initial state.
+    let setup = super::setup_from_args(args)?;
+    let ws = setup.ws.clone();
+    let l_total = ws.layers;
+    anyhow::ensure!(mi < ws.m, "worker index {mi} out of range");
+    let mut trainer = AdmmTrainer::new(
+        ws.clone(),
+        Arc::new(Engine::load(&Engine::default_dir())?),
+        AdmmOptions::for_mode(ws.m),
+    )?;
+
+    let mut conn = Conn::new(TcpStream::connect(&addr)?)?;
+    let mut enc = Enc::new();
+    enc.u8(TAG_HELLO).u32(mi as u32);
+    conn.send(&enc.into_bytes())?;
+    log::info!("worker {mi} connected to {addr}");
+
+    loop {
+        // SetW or Shutdown.
+        let frame = conn.recv()?;
+        match frame.first() {
+            Some(&TAG_SHUTDOWN) => break,
+            Some(&TAG_SET_W) => {}
+            other => bail!("unexpected frame {other:?}"),
+        }
+        let t0 = Instant::now();
+        let mut d = Dec::new(&frame[1..]);
+        let count = d.u32()? as usize;
+        anyhow::ensure!(count == l_total);
+        for li in 0..count {
+            trainer.state.w[li] = dec_matrix(&mut d)?;
+        }
+
+        // Local p products.
+        let (p_own, p_out) = trainer.local_p_products(mi)?;
+
+        // Ship outgoing p.
+        let mut enc = Enc::new();
+        let total: usize = p_out.iter().map(|v| v.len()).sum();
+        enc.u8(TAG_P_MSGS).u32(total as u32);
+        for (l, msgs) in p_out.iter().enumerate() {
+            for (dst, mat) in msgs {
+                enc.u32(l as u32).u32(*dst as u32);
+                enc_matrix(&mut enc, mat);
+            }
+        }
+        conn.send(&enc.into_bytes())?;
+
+        // Receive incoming p; fold into full/cross sums.
+        let frame = conn.expect(TAG_P_DELIVER)?;
+        let mut d = Dec::new(&frame[1..]);
+        let count = d.u32()?;
+        let mut p_cross: Vec<Matrix> = (0..l_total)
+            .map(|l| Matrix::zeros(ws.n_pad, ws.dims[l + 1]))
+            .collect();
+        let mut p_in: Vec<Vec<(usize, Matrix)>> = vec![Vec::new(); l_total];
+        for _ in 0..count {
+            let l = d.u32()? as usize;
+            let src = d.u32()? as usize;
+            let mat = dec_matrix(&mut d)?;
+            p_cross[l].add_assign(&mat);
+            p_in[l].push((src, mat));
+        }
+        let p_full: Vec<Matrix> = (0..l_total)
+            .map(|l| {
+                let mut f = p_own[l].clone();
+                f.add_assign(&p_cross[l]);
+                f
+            })
+            .collect();
+
+        // Second-order messages for each neighbor (eq. 4, local data only).
+        let mut enc = Enc::new();
+        let mut s_msgs: Vec<(usize, usize, Matrix, Matrix)> = Vec::new();
+        for &dst in &ws.communities[mi].neighbors {
+            for l in 0..l_total {
+                let p_from_dst = p_in[l]
+                    .iter()
+                    .find(|(src, _)| *src == dst)
+                    .map(|(_, m)| m)
+                    .ok_or_else(|| anyhow::anyhow!("missing p from neighbor {dst}"))?;
+                let mut sum = p_full[l].clone();
+                sum.axpy(-1.0, p_from_dst);
+                let (s1, s2) = if l + 1 < l_total {
+                    (trainer.state.z[l][mi].clone(), sum)
+                } else {
+                    let mut s1 = trainer.state.z[l_total - 1][mi].clone();
+                    s1.axpy(-1.0, &sum);
+                    (s1, trainer.state.u[mi].clone())
+                };
+                s_msgs.push((l, dst, s1, s2));
+            }
+        }
+        enc.u8(TAG_S_MSGS).u32(s_msgs.len() as u32);
+        for (l, dst, s1, s2) in &s_msgs {
+            enc.u32(*l as u32).u32(*dst as u32);
+            enc_matrix(&mut enc, s1);
+            enc_matrix(&mut enc, s2);
+        }
+        conn.send(&enc.into_bytes())?;
+
+        // Receive incoming s.
+        let frame = conn.expect(TAG_S_DELIVER)?;
+        let mut d = Dec::new(&frame[1..]);
+        let count = d.u32()?;
+        let mut s_in: Vec<Vec<(usize, Matrix, Matrix)>> = vec![Vec::new(); l_total];
+        for _ in 0..count {
+            let l = d.u32()? as usize;
+            let src = d.u32()? as usize;
+            let s1 = dec_matrix(&mut d)?;
+            let s2 = dec_matrix(&mut d)?;
+            s_in[l].push((src, s1, s2));
+        }
+
+        // Assemble a MessagePhase view with only column `mi` populated.
+        let mut ph = MessagePhase {
+            p_full: vec![Vec::new(); l_total],
+            p_cross: vec![Vec::new(); l_total],
+            p_out: vec![vec![Vec::new(); ws.m]; l_total],
+            s_in: vec![vec![Vec::new(); ws.m]; l_total],
+        };
+        for l in 0..l_total {
+            for other in 0..ws.m {
+                ph.p_full[l].push(if other == mi {
+                    p_full[l].clone()
+                } else {
+                    Matrix::zeros(0, 0)
+                });
+                ph.p_cross[l].push(if other == mi {
+                    p_cross[l].clone()
+                } else {
+                    Matrix::zeros(0, 0)
+                });
+            }
+            ph.p_out[l][mi] = p_out[l].clone();
+            ph.s_in[l][mi] = s_in[l].clone();
+        }
+
+        // Z + U updates for this community only.
+        let z_prev: Vec<Vec<Matrix>> = trainer.state.z.clone();
+        trainer.update_community_public(mi, &z_prev, &ph)?;
+        let secs = t0.elapsed().as_secs_f64();
+
+        // Report fresh state.
+        let mut enc = Enc::new();
+        enc.u8(TAG_Z_REPORT).u32(l_total as u32);
+        for li in 0..l_total {
+            enc_matrix(&mut enc, &trainer.state.z[li][mi]);
+        }
+        enc_matrix(&mut enc, &trainer.state.u[mi]);
+        enc.f64(secs);
+        conn.send(&enc.into_bytes())?;
+    }
+    log::info!("worker {mi} shutting down");
+    Ok(())
+}

@@ -1,0 +1,388 @@
+//! Workspace: everything static for one training run — the partition, the
+//! padded `Ã` blocks, per-community tensors and the permuted global view.
+//!
+//! Node order is *community-major*: the global permutation concatenates the
+//! partition's member lists, so community `m` owns the contiguous global
+//! row range `offsets[m] .. offsets[m] + size[m]` and gather/scatter between
+//! community-padded matrices and global matrices are plain row copies.
+
+use crate::config::{self, HyperParams};
+use crate::data::Dataset;
+use crate::graph::{split_blocks, Csr};
+use crate::partition::{self, Method, Partition};
+use crate::tensor::Matrix;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Static per-community data.
+pub struct Community {
+    /// Real (unpadded) node count n_m.
+    pub size: usize,
+    /// Neighbor communities N_m (paper §2).
+    pub neighbors: Vec<usize>,
+    /// r → Ã_{m,r}, padded to (n_pad × n_pad). Includes r = m.
+    pub blocks: HashMap<usize, Csr>,
+    /// r → Ã_{r,m} = Ã_{m,r}ᵀ, padded to (n_pad × n_pad) (what this
+    /// community applies when *sending* rows that live on r).
+    pub blocks_t: HashMap<usize, Csr>,
+    /// r → number of this community's *boundary* nodes toward r (distinct
+    /// nonzero columns of Ã_{r,m}) — the rows of Z_m that must actually be
+    /// shipped to r for cross-block products; sizes the W-phase exchange.
+    pub boundary_to: HashMap<usize, usize>,
+    /// r → number of r's nodes adjacent to this community (distinct nonzero
+    /// columns of Ã_{m,r}) — the only nonzero rows of an outgoing
+    /// first-order message p_{l,m→r}, so they size the p exchange.
+    pub boundary_from: HashMap<usize, usize>,
+    /// Features X_m (n_pad × C0), zero-padded.
+    pub x: Matrix,
+    /// One-hot labels Y_m (n_pad × C_L), zero-padded.
+    pub y: Matrix,
+    /// Train mask (n_pad), zero on padding.
+    pub train_mask: Vec<f32>,
+    /// Global (permuted) row offset of this community.
+    pub row_offset: usize,
+}
+
+/// The full static workspace shared by all agents.
+pub struct Workspace {
+    pub hp: HyperParams,
+    pub m: usize,
+    /// Per-community padded row count (equals n_glob when m == 1).
+    pub n_pad: usize,
+    /// Padded global row count.
+    pub n_glob: usize,
+    /// Real node count N.
+    pub n: usize,
+    /// Layer dims C_0..C_L.
+    pub dims: Vec<usize>,
+    /// Number of layers L.
+    pub layers: usize,
+    /// Global normalised adjacency in permuted order, padded (n_glob²).
+    pub a_glob: Csr,
+    /// Permuted global features (n_glob × C0).
+    pub x_glob: Matrix,
+    /// Cached H0 = Ã X (n_glob × C0) — used by eval, init and baselines.
+    pub h0_glob: Matrix,
+    /// Per-community rows of H0, padded (n_pad × C0): the W_1 subproblem's
+    /// sparse aggregate S_m = Σ_r Ã_{m,r} X_r, which is static because X
+    /// never changes — so the layer-1 W update needs no per-epoch SpMM or
+    /// boundary exchange at all.
+    pub h0_comm: Vec<Matrix>,
+    /// Permuted global one-hot labels (n_glob × C_L).
+    pub y_glob: Matrix,
+    /// Permuted global masks (n_glob).
+    pub train_mask_glob: Vec<f32>,
+    pub test_mask_glob: Vec<f32>,
+    /// Permuted labels (length n, unpadded).
+    pub labels: Vec<usize>,
+    /// Global labeled-node count (the softmax denom — shared by every
+    /// community so per-community losses sum to the serial loss).
+    pub denom: f32,
+    pub communities: Vec<Community>,
+    pub partition: Partition,
+    /// Edge cut of the partition (reported in ablations).
+    pub edgecut: usize,
+}
+
+impl Workspace {
+    /// Build a workspace: partition, permute, extract and pad blocks.
+    pub fn build(ds: &Dataset, hp: &HyperParams, method: Method) -> Result<Workspace> {
+        let n = ds.n();
+        let m = hp.communities;
+        let dims = hp.dims(ds.num_features(), ds.num_classes);
+        let layers = dims.len() - 1;
+
+        let part = partition::partition(&ds.graph, m, method, hp.seed);
+        let cap = config::community_cap(n, m);
+        for (ci, s) in part.sizes().iter().enumerate() {
+            anyhow::ensure!(
+                *s <= cap,
+                "community {ci} has {s} nodes > cap {cap}; partition/balance mismatch"
+            );
+        }
+        let n_pad = if m == 1 {
+            config::padded_global(n)
+        } else {
+            config::padded_community(n, m)
+        };
+        let n_glob = config::padded_global(n);
+        let edgecut = part.edgecut(&ds.graph);
+
+        // ---- permute to community-major order -----------------------------
+        let mut perm = Vec::with_capacity(n); // perm[new] = old
+        let mut offsets = Vec::with_capacity(m);
+        for mem in &part.members {
+            offsets.push(perm.len());
+            perm.extend_from_slice(mem);
+        }
+
+        let a = ds.graph.normalized_adjacency();
+        debug_assert!(a.is_symmetric(1e-6));
+        let blocks = split_blocks(&a, &part.members);
+
+        // Global permuted Ã (rows/cols reordered), padded.
+        let mut old_to_new = vec![0usize; n];
+        for (new, &old) in perm.iter().enumerate() {
+            old_to_new[old] = new;
+        }
+        let mut trips = Vec::with_capacity(a.nnz());
+        for old_r in 0..n {
+            let (cols, vals) = a.row(old_r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                trips.push((old_to_new[old_r], old_to_new[c as usize], v));
+            }
+        }
+        let a_glob = Csr::from_triplets(n_glob, n_glob, &trips);
+
+        // Permuted global tensors, padded.
+        let x_glob = ds.features.gather_rows(&perm).pad_rows(n_glob);
+        let classes = ds.num_classes;
+        let mut y_glob = Matrix::zeros(n_glob, classes);
+        let mut train_mask_glob = vec![0.0f32; n_glob];
+        let mut test_mask_glob = vec![0.0f32; n_glob];
+        let mut labels = Vec::with_capacity(n);
+        for (new, &old) in perm.iter().enumerate() {
+            y_glob.set(new, ds.labels[old], 1.0);
+            train_mask_glob[new] = ds.train_mask[old];
+            test_mask_glob[new] = ds.test_mask[old];
+            labels.push(ds.labels[old]);
+        }
+        let denom = train_mask_glob.iter().sum::<f32>().max(1.0);
+        let h0_glob = a_glob.spmm(&x_glob);
+
+        // ---- per-community data -------------------------------------------
+        let mut communities = Vec::with_capacity(m);
+        for ci in 0..m {
+            let mem = &part.members[ci];
+            let size = mem.len();
+            let mut cblocks = HashMap::new();
+            let mut cblocks_t = HashMap::new();
+            let mut boundary_to = HashMap::new();
+            let mut boundary_from = HashMap::new();
+            for r in blocks.neighbors[ci].iter().copied().chain([ci]) {
+                if let Some(b) = blocks.block(ci, r) {
+                    let bt = b.transpose();
+                    if r != ci {
+                        boundary_to.insert(r, bt.distinct_cols());
+                        boundary_from.insert(r, b.distinct_cols());
+                    }
+                    cblocks.insert(r, b.pad_to(n_pad, n_pad));
+                    cblocks_t.insert(r, bt.pad_to(n_pad, n_pad));
+                }
+            }
+            let x = ds.features.gather_rows(mem).pad_rows(n_pad);
+            let mut y = Matrix::zeros(n_pad, classes);
+            let mut train_mask = vec![0.0f32; n_pad];
+            for (li, &g) in mem.iter().enumerate() {
+                y.set(li, ds.labels[g], 1.0);
+                train_mask[li] = ds.train_mask[g];
+            }
+            communities.push(Community {
+                size,
+                neighbors: blocks.neighbors[ci].clone(),
+                blocks: cblocks,
+                blocks_t: cblocks_t,
+                boundary_to,
+                boundary_from,
+                x,
+                y,
+                train_mask,
+                row_offset: offsets[ci],
+            });
+        }
+
+        // Static W_1 aggregates: community rows of H0, padded.
+        let h0_comm: Vec<Matrix> = communities
+            .iter()
+            .map(|c| {
+                h0_glob
+                    .slice_rows(c.row_offset, c.row_offset + c.size)
+                    .pad_rows(n_pad)
+            })
+            .collect();
+
+        Ok(Workspace {
+            hp: hp.clone(),
+            m,
+            n_pad,
+            n_glob,
+            n,
+            dims,
+            layers,
+            a_glob,
+            x_glob,
+            h0_glob,
+            h0_comm,
+            y_glob,
+            train_mask_glob,
+            test_mask_glob,
+            labels,
+            denom,
+            communities,
+            partition: part,
+            edgecut,
+        })
+    }
+
+    /// Gather per-community padded matrices into a global padded matrix
+    /// (strips community padding; global padding rows stay zero).
+    pub fn gather(&self, per_comm: &[Matrix]) -> Matrix {
+        assert_eq!(per_comm.len(), self.m);
+        let cols = per_comm[0].cols();
+        let mut out = Matrix::zeros(self.n_glob, cols);
+        for (c, mat) in self.communities.iter().zip(per_comm) {
+            assert_eq!(mat.cols(), cols);
+            let src = mat.slice_rows(0, c.size);
+            out.copy_rows_from(&src, c.row_offset);
+        }
+        out
+    }
+
+    /// Scatter a global padded matrix into per-community padded matrices.
+    pub fn scatter(&self, global: &Matrix) -> Vec<Matrix> {
+        self.communities
+            .iter()
+            .map(|c| {
+                global
+                    .slice_rows(c.row_offset, c.row_offset + c.size)
+                    .pad_rows(self.n_pad)
+            })
+            .collect()
+    }
+
+    /// Bytes on the wire for a community-padded matrix message (only real
+    /// rows are shipped — padding is reconstructed at the receiver).
+    pub fn msg_bytes(&self, real_rows: usize, cols: usize) -> u64 {
+        // wire: u32 tag + u32 from + u32 to + u32 layer + u64 len + payload
+        24 + (real_rows * cols * 4) as u64
+    }
+
+    /// Artifact signature helpers bound to this workspace's shapes.
+    pub fn sig_nab(&self, entry: &str, n: usize, a: usize, b: usize) -> String {
+        format!("{entry}__n{n}_a{a}_b{b}")
+    }
+    pub fn sig_nc(&self, entry: &str, n: usize, c: usize) -> String {
+        format!("{entry}__n{n}_c{c}")
+    }
+    pub fn sig_fista(&self, n: usize) -> String {
+        format!(
+            "zl_fista__n{n}_c{}_steps{}",
+            self.dims[self.layers], self.hp.fista_steps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+
+    fn ws(m: usize) -> Workspace {
+        let ds = fixtures::caveman(24, 3);
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = m;
+        hp.hidden = 8;
+        Workspace::build(&ds, &hp, Method::Metis).unwrap()
+    }
+
+    #[test]
+    fn builds_serial_and_parallel() {
+        for m in [1, 2, 3] {
+            let w = ws(m);
+            assert_eq!(w.m, m);
+            assert_eq!(w.n, 48);
+            assert_eq!(w.n_glob, 128);
+            assert_eq!(w.communities.len(), m);
+            let total: usize = w.communities.iter().map(|c| c.size).sum();
+            assert_eq!(total, 48);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let w = ws(3);
+        let mut per = Vec::new();
+        for (ci, c) in w.communities.iter().enumerate() {
+            let mut m = Matrix::zeros(w.n_pad, 4);
+            for r in 0..c.size {
+                for col in 0..4 {
+                    m.set(r, col, (ci * 1000 + r * 4 + col) as f32);
+                }
+            }
+            per.push(m);
+        }
+        let global = w.gather(&per);
+        let back = w.scatter(&global);
+        for (a, b) in per.iter().zip(&back) {
+            assert_eq!(a.data(), b.data());
+        }
+        // Global padding rows are zero.
+        for r in w.n..w.n_glob {
+            assert!(global.row(r).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn blockwise_product_matches_global_product() {
+        // Σ_r Ã_{m,r} Z_r == rows_m(Ã Z) — invariant 4, with padding.
+        let w = ws(3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let zg = Matrix::glorot(w.n_glob, 5, &mut rng);
+        // Zero the padding rows as the coordinator maintains.
+        let mut zg_clean = Matrix::zeros(w.n_glob, 5);
+        zg_clean.copy_rows_from(&zg.slice_rows(0, w.n), 0);
+        let z_comm = w.scatter(&zg_clean);
+        let full = w.a_glob.spmm(&zg_clean);
+        for (ci, c) in w.communities.iter().enumerate() {
+            let mut acc = Matrix::zeros(w.n_pad, 5);
+            for (&r, blk) in &c.blocks {
+                acc.add_assign(&blk.spmm(&z_comm[r]));
+            }
+            let expect = full
+                .slice_rows(c.row_offset, c.row_offset + c.size)
+                .pad_rows(w.n_pad);
+            assert!(
+                acc.max_abs_diff(&expect) < 1e-5,
+                "community {ci} block product mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn transposed_blocks_are_transposes() {
+        let w = ws(3);
+        for c in &w.communities {
+            for (r, b) in &c.blocks {
+                let bt = &c.blocks_t[r];
+                assert!(bt.to_dense().max_abs_diff(&b.to_dense().transpose()) < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn denom_is_global_train_count() {
+        let w = ws(3);
+        let per_comm: f32 = w
+            .communities
+            .iter()
+            .map(|c| c.train_mask.iter().sum::<f32>())
+            .sum();
+        assert_eq!(w.denom, per_comm);
+        assert!(w.denom > 0.0);
+    }
+
+    #[test]
+    fn neighbor_blocks_present_and_symmetric() {
+        let w = ws(3);
+        for (ci, c) in w.communities.iter().enumerate() {
+            assert!(c.blocks.contains_key(&ci), "diagonal block missing");
+            for &r in &c.neighbors {
+                assert!(c.blocks.contains_key(&r));
+                assert!(
+                    w.communities[r].neighbors.contains(&ci),
+                    "neighbor sets not symmetric"
+                );
+            }
+        }
+    }
+}

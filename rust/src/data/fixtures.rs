@@ -1,0 +1,105 @@
+//! Tiny deterministic datasets for unit / integration tests.
+
+use super::Dataset;
+use crate::graph::Graph;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// The paper's Figure-1 graph: 9 nodes, 3 communities, bridges 0↔2.
+/// Labels = community ids, features = noisy one-hot of label.
+pub fn fig1() -> Dataset {
+    let edges = [
+        (0, 1),
+        (0, 2),
+        (1, 3),
+        (2, 3),
+        (4, 5),
+        (6, 7),
+        (7, 8),
+        (6, 8),
+        (2, 6),
+        (3, 6),
+    ];
+    let graph = Graph::from_edges(9, &edges);
+    let labels = vec![0, 0, 0, 0, 1, 1, 2, 2, 2];
+    let mut rng = Rng::new(0xF161);
+    let features = Matrix::from_fn(9, 4, |r, c| {
+        let base = if labels[r] == c { 1.0 } else { 0.0 };
+        base + (rng.gen_f32() - 0.5) * 0.1
+    });
+    // Train on 5 nodes, test on the rest.
+    let train_mask = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0];
+    let test_mask = vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+    let ds = Dataset {
+        name: "fig1".into(),
+        graph,
+        features,
+        labels,
+        num_classes: 3,
+        train_mask,
+        test_mask,
+    };
+    ds.validate();
+    ds
+}
+
+/// A two-community "caveman" graph with `per` nodes per cave and a couple
+/// of bridges: bigger than fig1 but still fast, good for convergence tests.
+pub fn caveman(per: usize, seed: u64) -> Dataset {
+    let n = per * 2;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for half in 0..2 {
+        let off = half * per;
+        for i in 0..per {
+            for j in (i + 1)..per {
+                if rng.gen_bool(0.5) {
+                    edges.push((off + i, off + j));
+                }
+            }
+        }
+    }
+    // Bridges.
+    edges.push((0, per));
+    edges.push((per / 2, per + per / 2));
+    let graph = Graph::from_edges(n, &edges);
+    let labels: Vec<usize> = (0..n).map(|i| i / per).collect();
+    let features = Matrix::from_fn(n, 6, |r, c| {
+        let base = if labels[r] == c % 2 { 1.0 } else { 0.0 };
+        base + (rng.gen_f32() - 0.5) * 0.2
+    });
+    let train_mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let test_mask: Vec<f32> = (0..n).map(|i| if i % 3 == 1 { 1.0 } else { 0.0 }).collect();
+    let ds = Dataset {
+        name: format!("caveman-{per}"),
+        graph,
+        features,
+        labels,
+        num_classes: 2,
+        train_mask,
+        test_mask,
+    };
+    ds.validate();
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_valid() {
+        let ds = fig1();
+        assert_eq!(ds.n(), 9);
+        assert_eq!(ds.num_classes, 3);
+        assert_eq!(ds.graph.num_edges(), 10);
+    }
+
+    #[test]
+    fn caveman_valid_and_bridged() {
+        let ds = caveman(8, 1);
+        assert_eq!(ds.n(), 16);
+        assert!(ds.graph.has_edge(0, 8));
+        ds.validate();
+    }
+}

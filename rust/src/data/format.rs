@@ -1,0 +1,144 @@
+//! `.cgnp` — the on-disk binary dataset format.
+//!
+//! Layout (all little-endian, via [`crate::util::wire`]):
+//!
+//! ```text
+//! magic "CGNP" | version u32 | name str
+//! n u64 | num_classes u32 | features: u64 rows, u64 cols, f32 data
+//! labels u32s | train_mask f32s | test_mask f32s
+//! edges: u64 count, (u32, u32) pairs
+//! ```
+//!
+//! Real Amazon datasets exported from torch-geometric can be converted to
+//! this format (see README §Datasets) and dropped in — the loaders don't
+//! care whether a graph is synthetic.
+
+use super::Dataset;
+use crate::graph::Graph;
+use crate::tensor::Matrix;
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"CGNP";
+const VERSION: u32 = 1;
+
+/// Serialise a dataset to bytes.
+pub fn to_bytes(ds: &Dataset) -> Vec<u8> {
+    let mut e = Enc::with_capacity(ds.n() * (ds.num_features() + 4) * 4);
+    e.u8(MAGIC[0]).u8(MAGIC[1]).u8(MAGIC[2]).u8(MAGIC[3]);
+    e.u32(VERSION);
+    e.str(&ds.name);
+    e.u64(ds.n() as u64);
+    e.u32(ds.num_classes as u32);
+    e.u64(ds.features.rows() as u64);
+    e.u64(ds.features.cols() as u64);
+    e.f32s(ds.features.data());
+    e.u32s(&ds.labels.iter().map(|&l| l as u32).collect::<Vec<_>>());
+    e.f32s(&ds.train_mask);
+    e.f32s(&ds.test_mask);
+    e.u64(ds.graph.num_edges() as u64);
+    for &(u, v) in ds.graph.edges() {
+        e.u32(u).u32(v);
+    }
+    e.into_bytes()
+}
+
+/// Parse a dataset from bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<Dataset> {
+    let mut d = Dec::new(bytes);
+    let magic = [d.u8()?, d.u8()?, d.u8()?, d.u8()?];
+    if &magic != MAGIC {
+        bail!("not a .cgnp file (bad magic)");
+    }
+    let version = d.u32()?;
+    if version != VERSION {
+        bail!("unsupported .cgnp version {version}");
+    }
+    let name = d.str()?;
+    let n = d.u64()? as usize;
+    let num_classes = d.u32()? as usize;
+    let rows = d.u64()? as usize;
+    let cols = d.u64()? as usize;
+    let fdata = d.f32s()?;
+    if fdata.len() != rows * cols || rows != n {
+        bail!("feature shape mismatch");
+    }
+    let features = Matrix::from_vec(rows, cols, fdata);
+    let labels: Vec<usize> = d.u32s()?.into_iter().map(|l| l as usize).collect();
+    let train_mask = d.f32s()?;
+    let test_mask = d.f32s()?;
+    let num_edges = d.u64()? as usize;
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        edges.push((d.u32()? as usize, d.u32()? as usize));
+    }
+    if !d.done() {
+        bail!("trailing bytes in .cgnp file");
+    }
+    let ds = Dataset {
+        name,
+        graph: Graph::from_edges(n, &edges),
+        features,
+        labels,
+        num_classes,
+        train_mask,
+        test_mask,
+    };
+    ds.validate();
+    Ok(ds)
+}
+
+/// Save to a file.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    std::fs::write(path, to_bytes(ds)).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let ds = fixtures::caveman(10, 5);
+        let bytes = to_bytes(&ds);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.train_mask, ds.train_mask);
+        assert_eq!(back.test_mask, ds.test_mask);
+        assert_eq!(back.features.data(), ds.features.data());
+        assert_eq!(back.graph.edges(), ds.graph.edges());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let ds = fixtures::fig1();
+        let mut bytes = to_bytes(&ds);
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err());
+        let bytes = to_bytes(&ds);
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cgcn_test_format");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fig1.cgnp");
+        let ds = fixtures::fig1();
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.n(), 9);
+        std::fs::remove_file(path).ok();
+    }
+}

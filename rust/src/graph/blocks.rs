@@ -1,0 +1,233 @@
+//! Community block decomposition of the normalised adjacency.
+//!
+//! Given a partition `V = ∪ V_m`, the paper splits `Ã` into `M×M` blocks
+//! `Ã_{m,r}` (Problem 3). [`split_blocks`] extracts those blocks as CSR
+//! matrices over *community-local* indices, together with the neighbor sets
+//! `N_m = { r ≠ m | Ã_{m,r} ≠ 0 }` that drive the message protocol.
+
+use super::Csr;
+use std::collections::BTreeSet;
+
+/// The `M×M` block view of a square sparse matrix under a node partition.
+#[derive(Clone, Debug)]
+pub struct BlockMatrix {
+    /// Number of communities M.
+    pub m: usize,
+    /// Community sizes n_m (unpadded).
+    pub sizes: Vec<usize>,
+    /// Global node ids per community (defines local ordering).
+    pub members: Vec<Vec<usize>>,
+    /// blocks[m * M + r] = Ã_{m,r} (n_m × n_r, local indices); `None` when
+    /// structurally empty.
+    blocks: Vec<Option<Csr>>,
+    /// Neighbor community sets N_m (paper §2), excluding m itself.
+    pub neighbors: Vec<Vec<usize>>,
+}
+
+impl BlockMatrix {
+    pub fn block(&self, m: usize, r: usize) -> Option<&Csr> {
+        self.blocks[m * self.m + r].as_ref()
+    }
+
+    /// Communication volume if each non-empty off-diagonal block implies a
+    /// message of `bytes_per_row * n_r` bytes — used by partition ablations.
+    pub fn offdiag_nnz(&self) -> usize {
+        let mut t = 0;
+        for m in 0..self.m {
+            for r in 0..self.m {
+                if m != r {
+                    if let Some(b) = self.block(m, r) {
+                        t += b.nnz();
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Total nnz across all blocks (should equal the source matrix nnz).
+    pub fn total_nnz(&self) -> usize {
+        self.blocks
+            .iter()
+            .flatten()
+            .map(|b| b.nnz())
+            .sum()
+    }
+}
+
+/// Split square sparse `a` into blocks under `members` (disjoint cover of
+/// `0..a.nrows()`).
+pub fn split_blocks(a: &Csr, members: &[Vec<usize>]) -> BlockMatrix {
+    let n = a.nrows();
+    assert_eq!(a.ncols(), n, "split_blocks needs a square matrix");
+    let m = members.len();
+
+    // global -> (community, local index); also validates disjoint cover.
+    let mut owner = vec![usize::MAX; n];
+    let mut local = vec![u32::MAX; n];
+    for (ci, mem) in members.iter().enumerate() {
+        for (li, &g) in mem.iter().enumerate() {
+            assert!(g < n, "member {g} out of range");
+            assert_eq!(owner[g], usize::MAX, "node {g} in two communities");
+            owner[g] = ci;
+            local[g] = li as u32;
+        }
+    }
+    assert!(
+        owner.iter().all(|&o| o != usize::MAX),
+        "partition does not cover all nodes"
+    );
+
+    // Accumulate triplets per block.
+    let mut trips: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); m * m];
+    for (ci, mem) in members.iter().enumerate() {
+        for (li, &g) in mem.iter().enumerate() {
+            let (cols, vals) = a.row(g);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let cj = owner[c as usize];
+                let lj = local[c as usize] as usize;
+                trips[ci * m + cj].push((li, lj, v));
+            }
+        }
+    }
+
+    let sizes: Vec<usize> = members.iter().map(|v| v.len()).collect();
+    let mut blocks = Vec::with_capacity(m * m);
+    let mut neighbors: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); m];
+    for mi in 0..m {
+        for r in 0..m {
+            let t = &trips[mi * m + r];
+            if t.is_empty() {
+                blocks.push(None);
+            } else {
+                if mi != r {
+                    neighbors[mi].insert(r);
+                }
+                blocks.push(Some(Csr::from_triplets(sizes[mi], sizes[r], t)));
+            }
+        }
+    }
+
+    BlockMatrix {
+        m,
+        sizes,
+        members: members.to_vec(),
+        blocks,
+        neighbors: neighbors
+            .into_iter()
+            .map(|s| s.into_iter().collect())
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    /// The Figure-1 style fixture: three communities {a,b,c,d}, {e,f},
+    /// {g,h,i} with one bridge c-g and d-g (community 1 <-> 3).
+    fn fig1() -> (Graph, Vec<Vec<usize>>) {
+        // nodes: a=0 b=1 c=2 d=3 | e=4 f=5 | g=6 h=7 i=8
+        let edges = [
+            (0, 1),
+            (0, 2),
+            (1, 3),
+            (2, 3), // community 0 internal
+            (4, 5), // community 1 internal
+            (6, 7),
+            (7, 8),
+            (6, 8), // community 2 internal
+            (2, 6),
+            (3, 6), // bridges 0 <-> 2
+        ];
+        let g = Graph::from_edges(9, &edges);
+        let members = vec![vec![0, 1, 2, 3], vec![4, 5], vec![6, 7, 8]];
+        (g, members)
+    }
+
+    #[test]
+    fn neighbor_sets_match_paper_fig1() {
+        let (g, members) = fig1();
+        let a = g.normalized_adjacency();
+        let b = split_blocks(&a, &members);
+        // N_1 = {3} in paper terms (0-indexed: N_0 = {2}).
+        assert_eq!(b.neighbors[0], vec![2]);
+        assert_eq!(b.neighbors[1], Vec::<usize>::new());
+        assert_eq!(b.neighbors[2], vec![0]);
+        // Symmetry of neighborhood relation.
+        for m in 0..b.m {
+            for &r in &b.neighbors[m] {
+                assert!(b.neighbors[r].contains(&m), "N not symmetric: {m} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_reassemble_to_full_matrix() {
+        let (g, members) = fig1();
+        let a = g.normalized_adjacency();
+        let b = split_blocks(&a, &members);
+        assert_eq!(b.total_nnz(), a.nnz());
+        // Check entries: Ã[g_i, g_j] == block[m,r][l_i, l_j].
+        for (m, mem_m) in members.iter().enumerate() {
+            for (r, mem_r) in members.iter().enumerate() {
+                for (li, &gi) in mem_m.iter().enumerate() {
+                    for (lj, &gj) in mem_r.iter().enumerate() {
+                        let expect = a.get(gi, gj);
+                        let got = b.block(m, r).map(|c| c.get(li, lj)).unwrap_or(0.0);
+                        assert!(
+                            (expect - got).abs() < 1e-7,
+                            "mismatch at global ({gi},{gj}) block ({m},{r})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blockwise_spmm_equals_full_spmm() {
+        // The paper's 'no performance loss' property: block-assembled
+        // products equal the monolithic product (DESIGN.md §4 invariant 4).
+        let (g, members) = fig1();
+        let a = g.normalized_adjacency();
+        let b = split_blocks(&a, &members);
+        let mut rng = Rng::new(20);
+        let x = Matrix::glorot(9, 4, &mut rng);
+        let full = a.spmm(&x);
+        // Per-community local features.
+        let locals: Vec<Matrix> = members.iter().map(|mem| x.gather_rows(mem)).collect();
+        for (m, mem) in members.iter().enumerate() {
+            let mut acc = Matrix::zeros(mem.len(), 4);
+            for r in 0..b.m {
+                if let Some(blk) = b.block(m, r) {
+                    acc.add_assign(&blk.spmm(&locals[r]));
+                }
+            }
+            let expect = full.gather_rows(mem);
+            assert!(
+                acc.max_abs_diff(&expect) < 1e-5,
+                "community {m} blockwise product differs"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "in two communities")]
+    fn overlapping_partition_rejected() {
+        let (g, _) = fig1();
+        let a = g.normalized_adjacency();
+        let _ = split_blocks(&a, &[vec![0, 1], vec![1, 2, 3, 4, 5, 6, 7, 8]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn incomplete_partition_rejected() {
+        let (g, _) = fig1();
+        let a = g.normalized_adjacency();
+        let _ = split_blocks(&a, &[vec![0, 1, 2]]);
+    }
+}

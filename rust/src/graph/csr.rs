@@ -1,0 +1,428 @@
+//! Undirected graphs and CSR sparse matrices.
+
+use crate::tensor::Matrix;
+
+/// An undirected, unweighted graph stored as a symmetric adjacency list.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    /// Canonical edge list (u < v), deduplicated, sorted.
+    edges: Vec<(u32, u32)>,
+    /// adj[u] = sorted neighbors of u.
+    adj: Vec<Vec<u32>>,
+}
+
+impl Graph {
+    /// Build from an edge list. Self-loops are dropped, duplicates merged,
+    /// direction ignored.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Graph {
+        let mut canon: Vec<(u32, u32)> = edges
+            .iter()
+            .filter(|&&(u, v)| u != v)
+            .map(|&(u, v)| {
+                assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
+                if u < v {
+                    (u as u32, v as u32)
+                } else {
+                    (v as u32, u as u32)
+                }
+            })
+            .collect();
+        canon.sort_unstable();
+        canon.dedup();
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in &canon {
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        for a in &mut adj {
+            a.sort_unstable();
+        }
+        Graph {
+            n,
+            edges: canon,
+            adj,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.adj[u]
+    }
+    pub fn avg_degree(&self) -> f64 {
+        2.0 * self.num_edges() as f64 / self.n.max(1) as f64
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&(v as u32)).is_ok()
+    }
+
+    /// The GCN-normalised adjacency with self-loops:
+    /// `Ã = (D+I)^{-1/2} (A+I) (D+I)^{-1/2}` (paper, Problem 1).
+    /// Symmetric by construction.
+    pub fn normalized_adjacency(&self) -> Csr {
+        let inv_sqrt: Vec<f32> = (0..self.n)
+            .map(|u| 1.0 / ((self.degree(u) + 1) as f32).sqrt())
+            .collect();
+        let mut rows = Vec::with_capacity(self.n);
+        for u in 0..self.n {
+            // Sorted col insertion: neighbors are sorted; weave in diagonal.
+            let mut cols = Vec::with_capacity(self.adj[u].len() + 1);
+            let mut vals = Vec::with_capacity(self.adj[u].len() + 1);
+            let mut placed_diag = false;
+            for &v in &self.adj[u] {
+                if !placed_diag && (v as usize) > u {
+                    cols.push(u as u32);
+                    vals.push(inv_sqrt[u] * inv_sqrt[u]);
+                    placed_diag = true;
+                }
+                cols.push(v);
+                vals.push(inv_sqrt[u] * inv_sqrt[v as usize]);
+            }
+            if !placed_diag {
+                cols.push(u as u32);
+                vals.push(inv_sqrt[u] * inv_sqrt[u]);
+            }
+            rows.push((cols, vals));
+        }
+        Csr::from_rows(self.n, rows)
+    }
+}
+
+/// Compressed-sparse-row f32 matrix (possibly rectangular — community
+/// blocks `Ã_{m,r}` are n_m × n_r).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from per-row (cols, vals); cols must be sorted & in range.
+    pub fn from_rows(ncols: usize, rows: Vec<(Vec<u32>, Vec<f32>)>) -> Csr {
+        let nrows = rows.len();
+        let nnz: usize = rows.iter().map(|(c, _)| c.len()).sum();
+        let mut row_ptr = Vec::with_capacity(nrows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        row_ptr.push(0u32);
+        for (cols, v) in rows {
+            assert_eq!(cols.len(), v.len());
+            debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "unsorted row");
+            debug_assert!(cols.iter().all(|&c| (c as usize) < ncols));
+            col_idx.extend_from_slice(&cols);
+            vals.extend_from_slice(&v);
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr {
+            nrows,
+            ncols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Build from (row, col, val) triplets (need not be sorted; duplicates
+    /// summed).
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: &[(usize, usize, f32)],
+    ) -> Csr {
+        let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); nrows];
+        for &(r, c, v) in triplets {
+            assert!(r < nrows && c < ncols);
+            per_row[r].push((c as u32, v));
+        }
+        let rows = per_row
+            .into_iter()
+            .map(|mut row| {
+                row.sort_unstable_by_key(|&(c, _)| c);
+                let mut cols = Vec::with_capacity(row.len());
+                let mut vals: Vec<f32> = Vec::with_capacity(row.len());
+                for (c, v) in row {
+                    if cols.last() == Some(&c) {
+                        *vals.last_mut().unwrap() += v;
+                    } else {
+                        cols.push(c);
+                        vals.push(v);
+                    }
+                }
+                (cols, vals)
+            })
+            .collect();
+        Csr::from_rows(ncols, rows)
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&(c as u32)) {
+            Ok(i) => vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Verify symmetry (requires square). Used by tests and to justify the
+    /// `Ã^T = Ã` optimisation in the coordinator.
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if (self.get(c as usize, r) - v).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Transpose (O(nnz)); needed for rectangular blocks `Ã_{r,m} = Ã_{m,r}^T`.
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0u32; self.ncols + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let row_ptr = counts.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![0.0f32; self.nnz()];
+        let mut next = counts;
+        for r in 0..self.nrows {
+            let (cols, v) = self.row(r);
+            for (&c, &x) in cols.iter().zip(v) {
+                let slot = next[c as usize] as usize;
+                col_idx[slot] = r as u32;
+                vals[slot] = x;
+                next[c as usize] += 1;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Sparse × dense: `out = self @ x` where x is (ncols × k) dense.
+    /// This is the L3 hot path (profiled + optimised in the perf pass):
+    /// row-major accumulation so each nonzero streams a contiguous slice.
+    pub fn spmm(&self, x: &Matrix) -> Matrix {
+        assert_eq!(
+            self.ncols,
+            x.rows(),
+            "spmm shape mismatch: {}x{} @ {}x{}",
+            self.nrows,
+            self.ncols,
+            x.rows(),
+            x.cols()
+        );
+        let k = x.cols();
+        let mut out = Matrix::zeros(self.nrows, k);
+        let xd = x.data();
+        let od = out.data_mut();
+        for r in 0..self.nrows {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            let orow = &mut od[r * k..(r + 1) * k];
+            for i in lo..hi {
+                let c = self.col_idx[i] as usize;
+                let v = self.vals[i];
+                let xrow = &xd[c * k..(c + 1) * k];
+                // Vectorisable axpy over contiguous rows.
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += v * xv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of distinct columns with at least one nonzero (the boundary
+    /// size when this is a cross-community block).
+    pub fn distinct_cols(&self) -> usize {
+        let mut seen = vec![false; self.ncols];
+        for &c in &self.col_idx {
+            seen[c as usize] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+
+    /// Zero-pad to a larger shape (extra rows empty, extra cols unused).
+    /// Used to lift community blocks to the padded artifact shapes.
+    pub fn pad_to(&self, nrows: usize, ncols: usize) -> Csr {
+        assert!(nrows >= self.nrows && ncols >= self.ncols);
+        let mut row_ptr = self.row_ptr.clone();
+        row_ptr.resize(nrows + 1, *self.row_ptr.last().unwrap());
+        Csr {
+            nrows,
+            ncols,
+            row_ptr,
+            col_idx: self.col_idx.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Dense representation (tests / small graphs only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                m.set(r, c as usize, v);
+            }
+        }
+        m
+    }
+
+    /// Row sums (used in normalisation sanity tests).
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.nrows)
+            .map(|r| self.row(r).1.iter().sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn path_graph(n: usize) -> Graph {
+        Graph::from_edges(n, &(0..n - 1).map(|i| (i, i + 1)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn graph_dedup_and_canonical() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 0), (2, 3), (3, 3), (2, 3)]);
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(3, 3));
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn normalized_adjacency_known_values() {
+        // Path 0-1-2: deg = [1,2,1]; d+1 = [2,3,2].
+        let g = path_graph(3);
+        let a = g.normalized_adjacency();
+        assert!((a.get(0, 0) - 0.5).abs() < 1e-6); // 1/2
+        assert!((a.get(1, 1) - 1.0 / 3.0).abs() < 1e-6);
+        assert!((a.get(0, 1) - 1.0 / (2.0f32 * 3.0).sqrt()).abs() < 1e-6);
+        assert_eq!(a.get(0, 2), 0.0);
+        assert!(a.is_symmetric(1e-7));
+    }
+
+    #[test]
+    fn normalized_adjacency_isolated_node() {
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        let a = g.normalized_adjacency();
+        // Node 2 is isolated: Ã[2,2] = 1/(0+1) = 1.
+        assert!((a.get(2, 2) - 1.0).abs() < 1e-6);
+        assert_eq!(a.row(2).0.len(), 1);
+    }
+
+    #[test]
+    fn csr_triplets_merge_duplicates() {
+        let c = Csr::from_triplets(2, 2, &[(0, 1, 1.0), (0, 1, 2.0), (1, 0, 5.0)]);
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.get(0, 1), 3.0);
+        assert_eq!(c.get(1, 0), 5.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let mut rng = Rng::new(10);
+        for _ in 0..5 {
+            let n = 3 + rng.gen_range(20);
+            let m = 3 + rng.gen_range(20);
+            let k = 1 + rng.gen_range(8);
+            let mut trips = Vec::new();
+            for r in 0..n {
+                for c in 0..m {
+                    if rng.gen_bool(0.2) {
+                        trips.push((r, c, rng.gen_f32() * 2.0 - 1.0));
+                    }
+                }
+            }
+            let s = Csr::from_triplets(n, m, &trips);
+            let x = Matrix::glorot(m, k, &mut rng);
+            let fast = s.spmm(&x);
+            let slow = s.to_dense().matmul(&x);
+            assert!(fast.max_abs_diff(&slow) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let mut rng = Rng::new(11);
+        let mut trips = Vec::new();
+        for r in 0..13 {
+            for c in 0..7 {
+                if rng.gen_bool(0.3) {
+                    trips.push((r, c, rng.gen_f32()));
+                }
+            }
+        }
+        let s = Csr::from_triplets(13, 7, &trips);
+        let t = s.transpose();
+        assert_eq!(t.nrows(), 7);
+        assert_eq!(t.ncols(), 13);
+        assert!(t.to_dense().max_abs_diff(&s.to_dense().transpose()) < 1e-7);
+        // Double transpose is identity.
+        assert_eq!(t.transpose(), s);
+    }
+
+    #[test]
+    fn spectral_property_perron_eigenvector() {
+        // Ã (D+I)^{1/2} 1 = (D+I)^{1/2} 1 exactly: v_i = sqrt(d_i + 1) is an
+        // eigenvector with eigenvalue 1 (the Perron vector of the
+        // self-looped normalised adjacency).
+        let g = path_graph(10);
+        let a = g.normalized_adjacency();
+        let v = Matrix::from_fn(10, 1, |r, _| ((g.degree(r) + 1) as f32).sqrt());
+        let av = a.spmm(&v);
+        assert!(av.max_abs_diff(&v) < 1e-5);
+        // And all row sums are strictly positive.
+        for s in a.row_sums() {
+            assert!(s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: CSR sparse matrices, GCN normalisation, community
+//! block extraction, and the SpMM hot path.
+//!
+//! The ADMM coordinator never materialises a dense adjacency matrix: all
+//! `Ã`-products (the sparse half of every subproblem — see DESIGN.md §1)
+//! run through [`Csr::spmm`] on per-community blocks extracted by
+//! [`blocks::split_blocks`].
+
+mod csr;
+pub mod blocks;
+
+pub use csr::{Csr, Graph};
+pub use blocks::{split_blocks, BlockMatrix};

@@ -1,0 +1,42 @@
+//! # CGCN — Community-based Layerwise Distributed Training of GCNs
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"Community-based Layerwise Distributed Training of Graph Convolutional
+//! Networks"* (Li et al., 2021).
+//!
+//! The crate is organised bottom-up:
+//!
+//! - [`util`] — in-house substrates (RNG, JSON, CLI, logging, wire format,
+//!   stats, property-testing) — the offline registry only carries the `xla`
+//!   crate closure, so these are built from scratch.
+//! - [`tensor`] — host-side dense f32 matrices.
+//! - [`graph`] — CSR graphs, symmetric GCN normalisation, block extraction
+//!   and the SpMM hot path.
+//! - [`data`] — synthetic Amazon-like SBM datasets (Table 2 statistics) and
+//!   a binary dataset format.
+//! - [`partition`] — METIS-style multilevel partitioner plus baselines.
+//! - [`runtime`] — PJRT bridge: loads AOT-compiled HLO-text artifacts and
+//!   executes them from the training hot path (Python never runs here).
+//! - [`coordinator`] — the paper's contribution: the community-based
+//!   layerwise ADMM trainer (Algorithm 1) with the first/second-order
+//!   message protocol (eq. 4), serial and parallel schedules, and
+//!   virtual-time accounting.
+//! - [`baselines`] — full-batch backprop GCN with GD/Adam/Adagrad/Adadelta.
+//! - [`metrics`] — timers, counters and CSV emission for the paper's
+//!   tables/figures.
+//! - [`config`] — experiment configuration mirroring the paper's settings.
+//! - [`bench`] — the micro/macro benchmark harness (criterion is not
+//!   available offline).
+
+pub mod bench;
+pub mod cmd;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

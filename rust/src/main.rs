@@ -1,0 +1,58 @@
+//! `cgcn` — the CLI entry point / launcher.
+//!
+//! Subcommands:
+//!   plan        write configs/artifacts.json (shape source of truth)
+//!   data        dataset utilities (stats / generate / export)
+//!   train       train with ADMM (serial or parallel) or a baseline
+//!   eval        evaluate saved predictions / quick forward pass
+//!   worker      internal: community worker process (TCP transport)
+//!   artifacts   list indexed artifacts and compile-check them
+
+use cgcn::util::cli::ArgSpec;
+
+fn main() {
+    cgcn::util::logger::init();
+    let spec = ArgSpec::new(
+        "cgcn",
+        "community-based layerwise distributed GCN training (ADMM)",
+    )
+    .opt("dataset", Some("synth-computers"), "dataset name or .cgnp path")
+    .opt("scale", Some("0.25"), "synthetic dataset node-count scale (0,1]")
+    .opt("hidden", Some("256"), "hidden units per GCN layer")
+    .opt("layers", Some("2"), "GCN layers L")
+    .opt("epochs", Some("50"), "training epochs")
+    .opt("communities", Some("3"), "number of communities M (1 = serial)")
+    .opt("method", Some("admm"), "train method: admm|gd|adam|adagrad|adadelta")
+    .opt("partition", Some("metis"), "partitioner: metis|random|bfs")
+    .opt("rho", Some("auto"), "ADMM rho (auto = paper default per dataset)")
+    .opt("nu", Some("auto"), "ADMM nu (auto = paper default per dataset)")
+    .opt("lr", Some("auto"), "baseline learning rate (auto = paper default)")
+    .opt("seed", Some("17"), "random seed")
+    .opt("out", Some(""), "output path (plan json / csv / cgnp)")
+    .opt("transport", Some("local"), "agent transport: local|tcp")
+    .opt("link-mbps", Some("10000"), "simulated link bandwidth (Mbit/s; default models the paper's same-machine agents)")
+    .opt("link-lat-us", Some("100"), "simulated link latency (microseconds)")
+    .opt("listen", Some(""), "worker: leader address to connect to")
+    .opt("worker-idx", Some("0"), "worker: community index owned by this process")
+    .flag("parallel-layers", "ADMM: update W layers in parallel (paper Alg. 1)")
+    .flag("csv", "emit per-epoch CSV to stdout");
+    let args = spec.parse_env();
+
+    let code = match args.subcommand() {
+        Some("plan") => cgcn::cmd::cmd_plan(&args),
+        Some("data") => cgcn::cmd::cmd_data(&args),
+        Some("train") => cgcn::cmd::cmd_train(&args),
+        Some("artifacts") => cgcn::cmd::cmd_artifacts(&args),
+        Some("worker") => cgcn::cmd::cmd_worker(&args),
+        other => {
+            eprintln!(
+                "unknown or missing subcommand {:?}\n\n{}",
+                other,
+                spec.usage()
+            );
+            eprintln!("subcommands: plan | data | train | artifacts | worker");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,169 @@
+//! Run metrics: per-epoch records, Table-3-style timing summaries, CSV
+//! emission for the Figure-2 accuracy curves.
+
+use crate::util::json::Json;
+
+/// One epoch of a training run.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    pub loss: f64,
+    /// Virtual training (compute) seconds this epoch.
+    pub t_train: f64,
+    /// Virtual communication seconds this epoch.
+    pub t_comm: f64,
+    /// Real wall-clock seconds this epoch (all agents share one core).
+    pub t_wall: f64,
+    pub bytes: u64,
+}
+
+/// A full training run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub method: String,
+    pub dataset: String,
+    pub communities: usize,
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl RunReport {
+    pub fn new(method: &str, dataset: &str, communities: usize) -> RunReport {
+        RunReport {
+            method: method.to_string(),
+            dataset: dataset.to_string(),
+            communities,
+            epochs: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.epochs.push(rec);
+    }
+
+    pub fn total_train(&self) -> f64 {
+        self.epochs.iter().map(|e| e.t_train).sum()
+    }
+    pub fn total_comm(&self) -> f64 {
+        self.epochs.iter().map(|e| e.t_comm).sum()
+    }
+    pub fn total_virtual(&self) -> f64 {
+        self.total_train() + self.total_comm()
+    }
+    pub fn total_wall(&self) -> f64 {
+        self.epochs.iter().map(|e| e.t_wall).sum()
+    }
+    pub fn total_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.bytes).sum()
+    }
+    pub fn final_train_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.train_acc).unwrap_or(0.0)
+    }
+    pub fn final_test_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+    /// Best test accuracy across epochs.
+    pub fn best_test_acc(&self) -> f64 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f64::max)
+    }
+
+    /// CSV with header — the Figure-2 series format.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "method,dataset,communities,epoch,train_acc,test_acc,loss,t_train,t_comm,t_wall,bytes\n",
+        );
+        for e in &self.epochs {
+            s.push_str(&format!(
+                "{},{},{},{},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{}\n",
+                self.method,
+                self.dataset,
+                self.communities,
+                e.epoch,
+                e.train_acc,
+                e.test_acc,
+                e.loss,
+                e.t_train,
+                e.t_comm,
+                e.t_wall,
+                e.bytes
+            ));
+        }
+        s
+    }
+
+    /// JSON summary (machine-readable experiment record).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("dataset", Json::str(&self.dataset)),
+            ("communities", Json::num(self.communities as f64)),
+            ("epochs", Json::num(self.epochs.len() as f64)),
+            ("total_train_s", Json::num(self.total_train())),
+            ("total_comm_s", Json::num(self.total_comm())),
+            ("total_virtual_s", Json::num(self.total_virtual())),
+            ("total_wall_s", Json::num(self.total_wall())),
+            ("total_bytes", Json::num(self.total_bytes() as f64)),
+            ("final_train_acc", Json::num(self.final_train_acc())),
+            ("final_test_acc", Json::num(self.final_test_acc())),
+            ("best_test_acc", Json::num(self.best_test_acc())),
+        ])
+    }
+
+    /// One Table-3 style row: total / training / communication / speedup
+    /// (speedup is filled by the caller who knows the serial total).
+    pub fn table3_row(&self, label: &str, speedup: Option<f64>) -> String {
+        format!(
+            "{:<22} {:>9.2} {:>10.2} {:>14.2} {:>9}",
+            label,
+            self.total_virtual(),
+            self.total_train(),
+            self.total_comm(),
+            speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, t: f64, c: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            train_acc: 0.5 + epoch as f64 * 0.01,
+            test_acc: 0.4 + epoch as f64 * 0.01,
+            loss: 1.0 / (epoch + 1) as f64,
+            t_train: t,
+            t_comm: c,
+            t_wall: t + c,
+            bytes: 1000,
+        }
+    }
+
+    #[test]
+    fn totals_and_csv() {
+        let mut r = RunReport::new("admm-parallel", "synth-photo", 3);
+        r.push(rec(0, 1.0, 0.5));
+        r.push(rec(1, 2.0, 0.25));
+        assert!((r.total_train() - 3.0).abs() < 1e-12);
+        assert!((r.total_comm() - 0.75).abs() < 1e-12);
+        assert!((r.total_virtual() - 3.75).abs() < 1e-12);
+        assert_eq!(r.total_bytes(), 2000);
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("method,dataset"));
+        assert!(csv.contains("admm-parallel,synth-photo,3,1,"));
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let mut r = RunReport::new("adam", "fig1", 1);
+        r.push(rec(0, 0.1, 0.0));
+        let j = Json::parse(&r.summary_json().to_string()).unwrap();
+        assert_eq!(j.get("method").as_str(), Some("adam"));
+        assert_eq!(j.get("epochs").as_usize(), Some(1));
+    }
+}

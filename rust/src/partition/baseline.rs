@@ -1,0 +1,117 @@
+//! Baseline partitioners: random and BFS-order chunking.
+//!
+//! Used as ablation comparators for the METIS-style partitioner: both are
+//! valid (disjoint, balanced, non-empty) but make no attempt to minimise
+//! edge-cut, so they bound the communication cost from above (random) and
+//! give a cheap locality heuristic (BFS).
+
+use super::Partition;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Exactly-balanced random partition: shuffle nodes, deal round-robin.
+pub fn random(g: &Graph, m: usize, rng: &mut Rng) -> Partition {
+    let mut order: Vec<usize> = (0..g.n()).collect();
+    rng.shuffle(&mut order);
+    let mut assignment = vec![0usize; g.n()];
+    for (i, &v) in order.iter().enumerate() {
+        assignment[v] = i % m;
+    }
+    Partition::from_assignment(m, assignment)
+}
+
+/// BFS partition: traverse from a random root (restarting on disconnected
+/// components) and cut the traversal order into `m` near-equal chunks.
+/// Contiguous BFS regions tend to share edges, so this captures *some*
+/// locality without any optimisation.
+pub fn bfs(g: &Graph, m: usize, rng: &mut Rng) -> Partition {
+    let n = g.n();
+    let mut order = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    let root = rng.gen_range(n);
+    queue.push_back(root);
+    visited[root] = true;
+    let mut next_unvisited = 0usize;
+    while order.len() < n {
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in g.neighbors(u) {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    queue.push_back(v as usize);
+                }
+            }
+        }
+        // Restart on another component if needed.
+        while next_unvisited < n && visited[next_unvisited] {
+            next_unvisited += 1;
+        }
+        if next_unvisited < n {
+            visited[next_unvisited] = true;
+            queue.push_back(next_unvisited);
+        }
+    }
+    chunk_order(&order, m)
+}
+
+/// Cut a node order into `m` near-equal contiguous chunks.
+pub(super) fn chunk_order(order: &[usize], m: usize) -> Partition {
+    let n = order.len();
+    let mut assignment = vec![0usize; n];
+    // Sizes differ by at most 1: first (n % m) chunks get one extra.
+    let base = n / m;
+    let extra = n % m;
+    let mut pos = 0;
+    for c in 0..m {
+        let len = base + usize::from(c < extra);
+        for &v in &order[pos..pos + len] {
+            assignment[v] = c;
+        }
+        pos += len;
+    }
+    Partition::from_assignment(m, assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+
+    #[test]
+    fn random_is_exactly_balanced() {
+        let ds = fixtures::caveman(25, 1); // n = 50
+        let mut rng = Rng::new(2);
+        let p = random(&ds.graph, 4, &mut rng);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 50);
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13), "{sizes:?}");
+    }
+
+    #[test]
+    fn bfs_covers_disconnected_graphs() {
+        // Two components, no edges between.
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4), (4, 5)]);
+        let mut rng = Rng::new(3);
+        let p = bfs(&g, 2, &mut rng);
+        p.validate(6);
+        assert_eq!(p.sizes(), vec![3, 3]);
+    }
+
+    #[test]
+    fn bfs_beats_random_on_caveman() {
+        let ds = fixtures::caveman(30, 4);
+        let mut rng = Rng::new(4);
+        let pb = bfs(&ds.graph, 2, &mut rng);
+        let pr = random(&ds.graph, 2, &mut rng);
+        assert!(pb.edgecut(&ds.graph) < pr.edgecut(&ds.graph));
+    }
+
+    #[test]
+    fn chunk_sizes_differ_by_at_most_one() {
+        let order: Vec<usize> = (0..17).collect();
+        let p = chunk_order(&order, 5);
+        let sizes = p.sizes();
+        assert_eq!(sizes, vec![4, 4, 3, 3, 3]);
+    }
+}

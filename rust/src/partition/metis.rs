@@ -1,0 +1,444 @@
+//! Multilevel k-way partitioner (METIS-style, [Karypis & Kumar '98]).
+//!
+//! Three phases, as in the paper the paper cites:
+//!
+//! 1. **Coarsening** — repeated heavy-edge matching (HEM): match each
+//!    vertex to its heaviest-edge unmatched neighbor, contract matched
+//!    pairs, summing vertex and edge weights. Stops when the graph is small
+//!    or stops shrinking.
+//! 2. **Initial partitioning** — greedy graph growing on the coarsest
+//!    graph: BFS-grow each part from a random seed until it reaches its
+//!    weight share.
+//! 3. **Uncoarsening + refinement** — project the assignment back level by
+//!    level, running Fiduccia–Mattheyses-style boundary refinement passes
+//!    (positive-gain moves under a balance cap) at every level.
+
+use super::Partition;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Allowed imbalance: max part weight <= (1 + EPS) * ideal.
+const EPS: f64 = 0.10;
+/// Stop coarsening below this many vertices (scaled by m).
+const COARSEST: usize = 64;
+/// FM passes per level.
+const FM_PASSES: usize = 4;
+
+/// Weighted graph used across coarsening levels.
+#[derive(Clone, Debug)]
+struct WGraph {
+    /// Vertex weights (number of original vertices inside).
+    vwgt: Vec<u64>,
+    /// adj[u] = (neighbor, edge weight), neighbor-sorted, no self loops.
+    adj: Vec<Vec<(u32, u64)>>,
+}
+
+impl WGraph {
+    fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+    fn total_weight(&self) -> u64 {
+        self.vwgt.iter().sum()
+    }
+
+    fn from_graph(g: &Graph) -> WGraph {
+        WGraph {
+            vwgt: vec![1; g.n()],
+            adj: (0..g.n())
+                .map(|u| g.neighbors(u).iter().map(|&v| (v, 1u64)).collect())
+                .collect(),
+        }
+    }
+}
+
+/// Entry point: multilevel k-way partition.
+pub fn partition(g: &Graph, m: usize, rng: &mut Rng) -> Partition {
+    if m == 1 {
+        return Partition::from_assignment(1, vec![0; g.n()]);
+    }
+    if m >= g.n() {
+        // Degenerate: one node per community (+ leftovers into part 0).
+        let assignment: Vec<usize> = (0..g.n()).map(|v| v % m).collect();
+        return Partition::from_assignment(m, assignment);
+    }
+
+    // ---- phase 1: coarsen -------------------------------------------------
+    let mut levels: Vec<WGraph> = vec![WGraph::from_graph(g)];
+    let mut maps: Vec<Vec<u32>> = Vec::new(); // maps[l][v_fine] = v_coarse
+    let stop = COARSEST.max(8 * m);
+    loop {
+        let cur = levels.last().unwrap();
+        if cur.n() <= stop {
+            break;
+        }
+        let (coarse, map) = contract(cur, rng);
+        // Stalled (e.g. star graphs): stop coarsening.
+        if coarse.n() as f64 > cur.n() as f64 * 0.95 {
+            break;
+        }
+        levels.push(coarse);
+        maps.push(map);
+    }
+
+    // ---- phase 2: initial partition on coarsest ---------------------------
+    let coarsest = levels.last().unwrap();
+    let mut assignment = greedy_growing(coarsest, m, rng);
+    balance_fix(coarsest, m, &mut assignment);
+    fm_refine(coarsest, m, &mut assignment, rng);
+
+    // ---- phase 3: uncoarsen + refine ---------------------------------------
+    for l in (0..maps.len()).rev() {
+        let fine = &levels[l];
+        let map = &maps[l];
+        let mut fine_assignment = vec![0usize; fine.n()];
+        for v in 0..fine.n() {
+            fine_assignment[v] = assignment[map[v] as usize];
+        }
+        assignment = fine_assignment;
+        fm_refine(fine, m, &mut assignment, rng);
+    }
+
+    ensure_nonempty(&levels[0], m, &mut assignment);
+    Partition::from_assignment(m, assignment)
+}
+
+/// Heavy-edge matching contraction. Returns the coarse graph and the
+/// fine→coarse vertex map.
+fn contract(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.n();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; n];
+    for &u in &order {
+        if mate[u] != u32::MAX {
+            continue;
+        }
+        // Heaviest unmatched neighbor.
+        let mut best: Option<(u32, u64)> = None;
+        for &(v, w) in &g.adj[u] {
+            if mate[v as usize] == u32::MAX
+                && best.map(|(_, bw)| w > bw).unwrap_or(true)
+            {
+                best = Some((v, w));
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                mate[u] = v;
+                mate[v as usize] = u as u32;
+            }
+            None => mate[u] = u as u32, // matched with itself
+        }
+    }
+
+    // Assign coarse ids (pair gets one id).
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for u in 0..n {
+        if map[u] != u32::MAX {
+            continue;
+        }
+        let v = mate[u] as usize;
+        map[u] = next;
+        map[v] = next; // v == u for self-matched
+        next += 1;
+    }
+    let cn = next as usize;
+
+    // Build coarse adjacency by accumulating weights.
+    let mut vwgt = vec![0u64; cn];
+    for u in 0..n {
+        vwgt[map[u] as usize] += g.vwgt[u];
+    }
+    let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); cn];
+    // Single pass over fine edges.
+    let mut acc: Vec<std::collections::HashMap<u32, u64>> =
+        vec![std::collections::HashMap::new(); cn];
+    for u in 0..n {
+        let cu = map[u];
+        for &(v, w) in &g.adj[u] {
+            let cv = map[v as usize];
+            if cu != cv {
+                *acc[cu as usize].entry(cv).or_insert(0) += w;
+            }
+        }
+    }
+    for (cu, h) in acc.into_iter().enumerate() {
+        // Each fine edge (u,v) with map[u]=cu, map[v]=cv contributes its
+        // weight to acc[cu][cv] exactly once (from the u side), and to
+        // acc[cv][cu] once (from the v side) — so `acc` is already the
+        // symmetric inter-cluster weight, no halving needed.
+        let mut row: Vec<(u32, u64)> = h.into_iter().collect();
+        row.sort_unstable_by_key(|&(v, _)| v);
+        adj[cu] = row;
+    }
+
+    (WGraph { vwgt, adj }, map)
+}
+
+/// Greedy graph growing initial partition over vertex weights.
+fn greedy_growing(g: &WGraph, m: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = g.n();
+    let total = g.total_weight();
+    let unassigned = usize::MAX;
+    let mut assignment = vec![unassigned; n];
+    let mut remaining_weight = total;
+    let mut remaining_nodes = n;
+
+    for part in 0..m {
+        if remaining_nodes == 0 {
+            break;
+        }
+        let target = remaining_weight / (m - part) as u64;
+        // Random unassigned seed.
+        let seed = {
+            let mut s = rng.gen_range(n);
+            while assignment[s] != unassigned {
+                s = (s + 1) % n;
+            }
+            s
+        };
+        let mut grown = 0u64;
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(seed);
+        while grown < target.max(1) && remaining_nodes > 0 {
+            let u = match queue.pop_front() {
+                Some(u) => u,
+                None => {
+                    // Disconnected: jump to any unassigned vertex.
+                    match assignment.iter().position(|&a| a == unassigned) {
+                        Some(u) => u,
+                        None => break,
+                    }
+                }
+            };
+            if assignment[u] != unassigned {
+                continue;
+            }
+            assignment[u] = part;
+            grown += g.vwgt[u];
+            remaining_nodes -= 1;
+            for &(v, _) in &g.adj[u] {
+                if assignment[v as usize] == unassigned {
+                    queue.push_back(v as usize);
+                }
+            }
+        }
+        remaining_weight -= grown.min(remaining_weight);
+    }
+    // Leftovers -> lightest part.
+    let mut weights = vec![0u64; m];
+    for v in 0..n {
+        if assignment[v] != unassigned {
+            weights[assignment[v]] += g.vwgt[v];
+        }
+    }
+    for v in 0..n {
+        if assignment[v] == unassigned {
+            let lightest = (0..m).min_by_key(|&p| weights[p]).unwrap();
+            assignment[v] = lightest;
+            weights[lightest] += g.vwgt[v];
+        }
+    }
+    assignment
+}
+
+/// Move vertices from overweight parts to lighter ones until the balance
+/// cap holds (used right after initial partitioning).
+fn balance_fix(g: &WGraph, m: usize, assignment: &mut [usize]) {
+    let total = g.total_weight();
+    let cap = (((1.0 + EPS) * total as f64) / m as f64).ceil() as u64;
+    let mut weights = vec![0u64; m];
+    for v in 0..g.n() {
+        weights[assignment[v]] += g.vwgt[v];
+    }
+    for v in 0..g.n() {
+        let p = assignment[v];
+        if weights[p] > cap {
+            let lightest = (0..m).min_by_key(|&q| weights[q]).unwrap();
+            if lightest != p && weights[lightest] + g.vwgt[v] <= cap {
+                weights[p] -= g.vwgt[v];
+                weights[lightest] += g.vwgt[v];
+                assignment[v] = lightest;
+            }
+        }
+    }
+}
+
+/// FM-style boundary refinement: greedy positive-gain moves with a balance
+/// cap, several passes.
+fn fm_refine(g: &WGraph, m: usize, assignment: &mut [usize], rng: &mut Rng) {
+    let n = g.n();
+    let total = g.total_weight();
+    let cap = (((1.0 + EPS) * total as f64) / m as f64).ceil() as u64;
+    let mut weights = vec![0u64; m];
+    let mut counts = vec![0u64; m];
+    for v in 0..n {
+        weights[assignment[v]] += g.vwgt[v];
+        counts[assignment[v]] += 1;
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    for _pass in 0..FM_PASSES {
+        rng.shuffle(&mut order);
+        let mut moved = 0usize;
+        // Per-vertex connectivity to each part (computed lazily).
+        let mut conn = vec![0u64; m];
+        for &u in &order {
+            let from = assignment[u];
+            if counts[from] <= 1 {
+                continue; // never empty a part
+            }
+            // Connectivity of u to each part.
+            for c in conn.iter_mut() {
+                *c = 0;
+            }
+            for &(v, w) in &g.adj[u] {
+                conn[assignment[v as usize]] += w;
+            }
+            let internal = conn[from];
+            // Best external part by gain, then by resulting balance.
+            let mut best: Option<(usize, i64)> = None;
+            for p in 0..m {
+                if p == from {
+                    continue;
+                }
+                if weights[p] + g.vwgt[u] > cap {
+                    continue;
+                }
+                let gain = conn[p] as i64 - internal as i64;
+                let better = match best {
+                    None => gain > 0 || (gain == 0 && weights[p] + g.vwgt[u] < weights[from]),
+                    Some((bp, bg)) => gain > bg || (gain == bg && weights[p] < weights[bp]),
+                };
+                if better && (gain > 0 || (gain == 0 && weights[p] + g.vwgt[u] < weights[from])) {
+                    best = Some((p, gain));
+                }
+            }
+            if let Some((p, _)) = best {
+                weights[from] -= g.vwgt[u];
+                counts[from] -= 1;
+                weights[p] += g.vwgt[u];
+                counts[p] += 1;
+                assignment[u] = p;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Final guard: no empty communities on the finest level.
+fn ensure_nonempty(g: &WGraph, m: usize, assignment: &mut [usize]) {
+    let n = g.n();
+    let mut counts = vec![0usize; m];
+    for v in 0..n {
+        counts[assignment[v]] += 1;
+    }
+    for p in 0..m {
+        while counts[p] == 0 {
+            // Take a vertex from the largest part (lowest degree first to
+            // minimise cut damage).
+            let donor = (0..m).max_by_key(|&q| counts[q]).unwrap();
+            let v = (0..n)
+                .filter(|&v| assignment[v] == donor)
+                .min_by_key(|&v| g.adj[v].len())
+                .expect("donor part is non-empty");
+            assignment[v] = p;
+            counts[donor] -= 1;
+            counts[p] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+
+    #[test]
+    fn coarsening_preserves_total_weight() {
+        let ds = fixtures::caveman(40, 2);
+        let wg = WGraph::from_graph(&ds.graph);
+        let mut rng = Rng::new(8);
+        let (coarse, map) = contract(&wg, &mut rng);
+        assert_eq!(coarse.total_weight(), wg.total_weight());
+        assert!(coarse.n() < wg.n());
+        assert!(map.iter().all(|&c| (c as usize) < coarse.n()));
+        // Coarse adjacency is symmetric.
+        for u in 0..coarse.n() {
+            for &(v, w) in &coarse.adj[u] {
+                let back = coarse.adj[v as usize]
+                    .iter()
+                    .find(|&&(x, _)| x as usize == u)
+                    .map(|&(_, bw)| bw);
+                assert_eq!(back, Some(w), "asymmetric coarse edge {u}-{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn contraction_preserves_cut_weights() {
+        // The cut between two caves survives contraction as total weight.
+        let ds = fixtures::caveman(20, 6);
+        let wg = WGraph::from_graph(&ds.graph);
+        let mut rng = Rng::new(9);
+        let (coarse, map) = contract(&wg, &mut rng);
+        // Sum of all edge weights is preserved (each fine edge either
+        // contracts away into a vertex or contributes its weight to a
+        // coarse edge).
+        let fine_total: u64 = wg.adj.iter().flatten().map(|&(_, w)| w).sum::<u64>() / 2;
+        let coarse_total: u64 =
+            coarse.adj.iter().flatten().map(|&(_, w)| w).sum::<u64>() / 2;
+        let contracted: u64 = {
+            // Edges whose endpoints share a coarse vertex.
+            let mut t = 0;
+            for u in 0..wg.n() {
+                for &(v, w) in &wg.adj[u] {
+                    if map[u] == map[v as usize] && u < v as usize {
+                        t += w;
+                    }
+                }
+            }
+            t
+        };
+        assert_eq!(fine_total, coarse_total + contracted);
+    }
+
+    #[test]
+    fn greedy_growing_assigns_everything() {
+        let ds = fixtures::caveman(30, 3);
+        let wg = WGraph::from_graph(&ds.graph);
+        let mut rng = Rng::new(10);
+        let a = greedy_growing(&wg, 3, &mut rng);
+        assert!(a.iter().all(|&p| p < 3));
+        assert_eq!(a.len(), 60);
+    }
+
+    #[test]
+    fn refinement_never_violates_validity() {
+        let ds = fixtures::caveman(25, 4);
+        let wg = WGraph::from_graph(&ds.graph);
+        let mut rng = Rng::new(11);
+        let mut a = greedy_growing(&wg, 4, &mut rng);
+        let before: Vec<usize> = a.clone();
+        fm_refine(&wg, 4, &mut a, &mut rng);
+        assert_eq!(a.len(), before.len());
+        assert!(a.iter().all(|&p| p < 4));
+        // Refinement does not increase the cut.
+        let cut = |asg: &[usize]| -> u64 {
+            let mut t = 0;
+            for u in 0..wg.n() {
+                for &(v, w) in &wg.adj[u] {
+                    if asg[u] != asg[v as usize] && u < v as usize {
+                        t += w;
+                    }
+                }
+            }
+            t
+        };
+        assert!(cut(&a) <= cut(&before));
+    }
+}

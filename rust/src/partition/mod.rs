@@ -1,0 +1,201 @@
+//! Graph partitioning: the paper partitions `G` into `M` dense communities
+//! with METIS [Karypis & Kumar '98]. We implement the same multilevel
+//! scheme from scratch ([`metis`]) plus [`baseline`] partitioners (random,
+//! BFS) used as ablations — the paper's speedup depends on low edge-cut
+//! (small `p`/`s` messages), which the ablation bench quantifies.
+
+pub mod baseline;
+pub mod metis;
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Which partitioner to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Multilevel heavy-edge-matching + FM refinement (METIS-style).
+    Metis,
+    /// Uniform random assignment (worst-case communication).
+    Random,
+    /// BFS traversal chunks (cheap locality).
+    Bfs,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "metis" => Some(Method::Metis),
+            "random" => Some(Method::Random),
+            "bfs" => Some(Method::Bfs),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Metis => "metis",
+            Method::Random => "random",
+            Method::Bfs => "bfs",
+        }
+    }
+}
+
+/// A disjoint cover of the graph's nodes into `m` communities.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// members[c] = sorted global node ids of community c.
+    pub members: Vec<Vec<usize>>,
+    /// assignment[v] = community of node v.
+    pub assignment: Vec<usize>,
+}
+
+impl Partition {
+    pub fn from_assignment(m: usize, assignment: Vec<usize>) -> Partition {
+        let mut members = vec![Vec::new(); m];
+        for (v, &c) in assignment.iter().enumerate() {
+            assert!(c < m, "assignment out of range");
+            members[c].push(v);
+        }
+        Partition {
+            members,
+            assignment,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.members.iter().map(|v| v.len()).collect()
+    }
+
+    /// Number of edges crossing communities.
+    pub fn edgecut(&self, g: &Graph) -> usize {
+        g.edges()
+            .iter()
+            .filter(|&&(u, v)| self.assignment[u as usize] != self.assignment[v as usize])
+            .count()
+    }
+
+    /// max community size / ideal size — 1.0 is perfectly balanced.
+    pub fn imbalance(&self, n: usize) -> f64 {
+        let ideal = n as f64 / self.m() as f64;
+        self.sizes()
+            .iter()
+            .map(|&s| s as f64 / ideal)
+            .fold(0.0, f64::max)
+    }
+
+    /// Validate the partition is a disjoint cover (panics otherwise).
+    pub fn validate(&self, n: usize) {
+        assert_eq!(self.assignment.len(), n);
+        let total: usize = self.sizes().iter().sum();
+        assert_eq!(total, n, "partition does not cover all nodes");
+        for (c, mem) in self.members.iter().enumerate() {
+            for &v in mem {
+                assert_eq!(self.assignment[v], c);
+            }
+        }
+    }
+}
+
+/// Partition `g` into `m` communities with the chosen method.
+///
+/// All methods guarantee: disjoint cover, every community non-empty
+/// (for m <= n), imbalance <= ~1.1 for metis/bfs (random is balanced in
+/// expectation and then rebalanced exactly).
+pub fn partition(g: &Graph, m: usize, method: Method, seed: u64) -> Partition {
+    assert!(m >= 1, "need at least one community");
+    assert!(m <= g.n(), "more communities than nodes");
+    let mut rng = Rng::new(seed);
+    let p = match method {
+        Method::Metis => metis::partition(g, m, &mut rng),
+        Method::Random => baseline::random(g, m, &mut rng),
+        Method::Bfs => baseline::bfs(g, m, &mut rng),
+    };
+    p.validate(g.n());
+    debug_assert!(p.members.iter().all(|mem| !mem.is_empty()));
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+    use crate::data::synth;
+    use crate::prop_assert;
+    use crate::util::proplite;
+
+    #[test]
+    fn all_methods_produce_valid_partitions() {
+        let ds = fixtures::caveman(20, 3);
+        for method in [Method::Metis, Method::Random, Method::Bfs] {
+            for m in [1, 2, 3, 5] {
+                let p = partition(&ds.graph, m, method, 7);
+                p.validate(ds.n());
+                assert_eq!(p.m(), m);
+                assert!(
+                    p.members.iter().all(|mem| !mem.is_empty()),
+                    "{:?} m={m} produced an empty community",
+                    method
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn metis_beats_random_on_planted_communities() {
+        let ds = synth::generate(&synth::AMAZON_PHOTO, 0.08, 5);
+        let pm = partition(&ds.graph, 3, Method::Metis, 1);
+        let pr = partition(&ds.graph, 3, Method::Random, 1);
+        let cm = pm.edgecut(&ds.graph);
+        let cr = pr.edgecut(&ds.graph);
+        assert!(
+            (cm as f64) < 0.7 * cr as f64,
+            "metis edgecut {cm} not clearly better than random {cr}"
+        );
+    }
+
+    #[test]
+    fn metis_recovers_caveman_split() {
+        let ds = fixtures::caveman(16, 9);
+        let p = partition(&ds.graph, 2, Method::Metis, 3);
+        // Each community should be (almost) one cave: edgecut ~= bridges (2).
+        let cut = p.edgecut(&ds.graph);
+        assert!(cut <= 4, "caveman edgecut {cut} too high");
+        assert!(p.imbalance(ds.n()) <= 1.15);
+    }
+
+    #[test]
+    fn partition_property_disjoint_cover_balanced() {
+        proplite::check("partition-valid", 25, 0xBEEF, |g| {
+            let n = g.usize_in(6, 80).max(6);
+            let edges = g.edges(n, 0.15);
+            let graph = crate::graph::Graph::from_edges(n, &edges);
+            let m = g.usize_in(1, 4).clamp(1, n);
+            for method in [Method::Metis, Method::Random, Method::Bfs] {
+                let p = partition(&graph, m, method, g.rng.next_u64());
+                let total: usize = p.sizes().iter().sum();
+                prop_assert!(total == n, "{method:?}: cover {total} != {n}");
+                prop_assert!(
+                    p.members.iter().all(|mem| !mem.is_empty()),
+                    "{method:?}: empty community (n={n}, m={m})"
+                );
+                prop_assert!(
+                    p.imbalance(n) <= 1.5 + 1e-9,
+                    "{method:?}: imbalance {} too high (n={n}, m={m})",
+                    p.imbalance(n)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn m_equals_one_is_trivial() {
+        let ds = fixtures::fig1();
+        let p = partition(&ds.graph, 1, Method::Metis, 0);
+        assert_eq!(p.sizes(), vec![9]);
+        assert_eq!(p.edgecut(&ds.graph), 0);
+    }
+}

@@ -1,0 +1,462 @@
+//! The artifact execution engine.
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A pre-marshalled input buffer: build once with [`Engine::prepare`],
+/// reuse across calls (e.g. the fixed aggregate `S_m` across τ-backtracking
+/// trials — saves a multi-MB host copy per trial).
+pub struct Prepared {
+    buf: xla::PjRtBuffer,
+    rows: usize,
+    cols: usize,
+}
+
+// SAFETY: a PjRtBuffer is immutable once created; see the Engine
+// thread-safety note.
+unsafe impl Send for Prepared {}
+unsafe impl Sync for Prepared {}
+
+/// An input operand for an artifact call.
+pub enum In<'a> {
+    /// Dense matrix (n × m) — row-major f32, marshalled per call.
+    Mat(&'a Matrix),
+    /// Pre-marshalled matrix (see [`Prepared`]).
+    Prep(&'a Prepared),
+    /// Rank-1 vector (masks).
+    Vec(&'a [f32]),
+    /// Rank-0 scalar (ν, ρ, θ, denom, ...).
+    Scalar(f32),
+}
+
+/// Owned-or-borrowed device buffer so `execute_b` sees one slice type.
+///
+/// Inputs are marshalled straight to PJRT buffers (`execute_b`), NOT
+/// through `Literal` + `execute`: the C wrapper of `execute` leaks the
+/// per-argument device copies (~input size per call — measured in
+/// examples/leak_probe.rs), while buffers we create ourselves are freed by
+/// `PjRtBuffer`'s Drop.
+enum BufRef<'a> {
+    Own(xla::PjRtBuffer),
+    Ref(&'a xla::PjRtBuffer),
+}
+
+impl<'a> std::borrow::Borrow<xla::PjRtBuffer> for BufRef<'a> {
+    fn borrow(&self) -> &xla::PjRtBuffer {
+        match self {
+            BufRef::Own(b) => b,
+            BufRef::Ref(b) => b,
+        }
+    }
+}
+
+impl<'a> In<'a> {
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            In::Mat(m) => vec![m.rows(), m.cols()],
+            In::Prep(p) => vec![p.rows, p.cols],
+            In::Vec(v) => vec![v.len()],
+            In::Scalar(_) => vec![],
+        }
+    }
+
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<BufRef<'a>> {
+        Ok(match self {
+            In::Mat(m) => BufRef::Own(client.buffer_from_host_buffer(
+                m.data(),
+                &[m.rows(), m.cols()],
+                None,
+            )?),
+            In::Prep(p) => BufRef::Ref(&p.buf),
+            In::Vec(v) => BufRef::Own(client.buffer_from_host_buffer(v, &[v.len()], None)?),
+            In::Scalar(s) => {
+                BufRef::Own(client.buffer_from_host_buffer(&[*s], &[], None)?)
+            }
+        })
+    }
+}
+
+/// An output operand from an artifact call.
+#[derive(Debug)]
+pub enum Out {
+    Mat(Matrix),
+    Scalar(f32),
+}
+
+impl Out {
+    pub fn into_mat(self) -> Matrix {
+        match self {
+            Out::Mat(m) => m,
+            Out::Scalar(s) => panic!("expected matrix output, got scalar {s}"),
+        }
+    }
+    pub fn scalar(&self) -> f32 {
+        match self {
+            Out::Scalar(s) => *s,
+            Out::Mat(m) => panic!("expected scalar output, got {:?}", m.shape()),
+        }
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+struct ArtifactMeta {
+    file: PathBuf,
+    input_shapes: Vec<Vec<usize>>,
+    num_outputs: usize,
+}
+
+/// Per-artifact execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    /// Seconds spent inside PJRT execute (compute).
+    pub exec_secs: f64,
+    /// Seconds spent converting literals (host marshalling).
+    pub marshal_secs: f64,
+    /// Seconds spent compiling (once per signature).
+    pub compile_secs: f64,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine. Create once, share via `Arc` across agent threads.
+///
+/// # Thread safety
+/// The `xla` crate does not mark its wrappers `Send`/`Sync` (raw pointers),
+/// but the underlying PJRT CPU client and loaded executables are
+/// thread-safe by the PJRT C API contract (XLA's `PjRtClient`/
+/// `PjRtLoadedExecutable` are documented thread-safe; the CPU plugin
+/// serialises internally where needed). Executions from multiple agent
+/// threads are therefore sound; compilation is guarded by our own mutex.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: Mutex<HashMap<String, &'static Compiled>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+// SAFETY: see the struct-level docs — PJRT CPU client & executables are
+// thread-safe; all interior mutability on the Rust side is mutex-guarded.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load the manifest from an artifacts directory (`make artifacts`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut manifest = HashMap::new();
+        for a in json
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let sig = a
+                .get("sig")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing 'sig'"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing 'file'"))?,
+            );
+            let input_shapes = a
+                .get("input_shapes")
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifact missing 'input_shapes'"))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| {
+                            dims.iter().filter_map(|d| d.as_usize()).collect::<Vec<_>>()
+                        })
+                        .ok_or_else(|| anyhow!("bad input shape"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let num_outputs = a
+                .get("num_outputs")
+                .as_usize()
+                .ok_or_else(|| anyhow!("artifact missing 'num_outputs'"))?;
+            manifest.insert(
+                sig,
+                ArtifactMeta {
+                    file,
+                    input_shapes,
+                    num_outputs,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "runtime: {} artifacts indexed from {} (platform={})",
+            manifest.len(),
+            dir.display(),
+            client.platform_name()
+        );
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The default artifacts directory, honouring `CGCN_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CGCN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if an artifacts directory with a manifest exists (used by
+    /// integration tests to skip gracefully before `make artifacts`).
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, sig: &str) -> bool {
+        self.manifest.contains_key(sig)
+    }
+
+    /// Number of indexed artifacts.
+    pub fn len(&self) -> usize {
+        self.manifest.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.manifest.is_empty()
+    }
+
+    fn compiled(&self, sig: &str) -> Result<&'static Compiled> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(c) = cache.get(sig) {
+                return Ok(c);
+            }
+        }
+        let meta = self
+            .manifest
+            .get(sig)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact '{sig}' not in manifest ({} entries) — regenerate with \
+                     `cgcn plan` + `make artifacts`",
+                    self.manifest.len()
+                )
+            })?
+            .clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {sig}"))?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+        // Executables live for the program lifetime; leaking gives us a
+        // &'static we can hand out without self-referential lifetimes.
+        let compiled: &'static Compiled = Box::leak(Box::new(Compiled { exe }));
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(sig.to_string())
+            .or_default()
+            .compile_secs += compile_secs;
+        let mut cache = self.cache.lock().unwrap();
+        Ok(*cache.entry(sig.to_string()).or_insert(compiled))
+    }
+
+    /// Pre-marshal a matrix into a reusable input buffer.
+    pub fn prepare(&self, m: &Matrix) -> Result<Prepared> {
+        Ok(Prepared {
+            buf: self
+                .client
+                .buffer_from_host_buffer(m.data(), &[m.rows(), m.cols()], None)?,
+            rows: m.rows(),
+            cols: m.cols(),
+        })
+    }
+
+    /// Pre-compile a set of signatures (startup, off the timed path).
+    pub fn warmup(&self, sigs: &[String]) -> Result<()> {
+        for sig in sigs {
+            self.compiled(sig)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact. Input shapes are validated against the
+    /// manifest; outputs are decomposed from the result tuple into
+    /// matrices / scalars by rank.
+    pub fn exec(&self, sig: &str, inputs: &[In]) -> Result<Vec<Out>> {
+        let meta = self
+            .manifest
+            .get(sig)
+            .ok_or_else(|| anyhow!("artifact '{sig}' not in manifest"))?;
+        if inputs.len() != meta.input_shapes.len() {
+            bail!(
+                "{sig}: expected {} inputs, got {}",
+                meta.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (input, expect)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            let got = input.shape();
+            if &got != expect {
+                bail!("{sig}: input {i} shape {got:?} != expected {expect:?}");
+            }
+        }
+        let exe = self.compiled(sig)?;
+
+        let t0 = Instant::now();
+        let buffers = inputs
+            .iter()
+            .map(|i| i.to_buffer(&self.client))
+            .collect::<Result<Vec<_>>>()?;
+        let t1 = Instant::now();
+        let result = exe
+            .exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing {sig}"))?[0][0]
+            .to_literal_sync()?;
+        let t2 = Instant::now();
+
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.num_outputs {
+            bail!(
+                "{sig}: expected {} outputs, got {}",
+                meta.num_outputs,
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for part in parts {
+            let shape = part.array_shape()?;
+            let dims = shape.dims();
+            match dims.len() {
+                0 => outs.push(Out::Scalar(part.to_vec::<f32>()?[0])),
+                2 => {
+                    let (r, c) = (dims[0] as usize, dims[1] as usize);
+                    outs.push(Out::Mat(Matrix::from_vec(r, c, part.to_vec::<f32>()?)));
+                }
+                other => bail!("{sig}: unsupported output rank {other}"),
+            }
+        }
+        let t3 = Instant::now();
+
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(sig.to_string()).or_default();
+        s.calls += 1;
+        s.exec_secs += (t2 - t1).as_secs_f64();
+        s.marshal_secs += (t1 - t0).as_secs_f64() + (t3 - t2).as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Snapshot of accumulated per-artifact stats.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.exec_secs.total_cmp(&a.1.exec_secs));
+        v
+    }
+
+    /// Total seconds spent in PJRT execute across all artifacts.
+    pub fn total_exec_secs(&self) -> f64 {
+        self.stats
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.exec_secs)
+            .sum()
+    }
+
+    /// Reset accumulated stats (between benchmark phases).
+    pub fn reset_stats(&self) {
+        self.stats.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full end-to-end engine tests live in rust/tests/ (they need
+    // `make artifacts`); here we test manifest parsing and input checks
+    // against a tiny fake manifest.
+
+    fn fake_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cgcn_engine_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let dir = fake_dir().join("nope");
+        let err = match Engine::load(&dir) {
+            Err(e) => e,
+            Ok(_) => panic!("expected load to fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_parses_and_validates_inputs() {
+        let dir = fake_dir();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"sig": "t__n8_a4_b2", "file": "t.hlo.txt",
+                "input_shapes": [[8, 4], [4, 2], []], "num_outputs": 1}]}"#,
+        )
+        .unwrap();
+        let engine = Engine::load(&dir).unwrap();
+        assert!(engine.has("t__n8_a4_b2"));
+        assert!(!engine.has("other"));
+        // Wrong arity.
+        let m = Matrix::zeros(8, 4);
+        let err = engine.exec("t__n8_a4_b2", &[In::Mat(&m)]).unwrap_err();
+        assert!(format!("{err}").contains("expected 3 inputs"));
+        // Wrong shape.
+        let w = Matrix::zeros(3, 2);
+        let err = engine
+            .exec(
+                "t__n8_a4_b2",
+                &[In::Mat(&m), In::Mat(&w), In::Scalar(1.0)],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("shape"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime bridge — loads the AOT-compiled HLO-text artifacts and
+//! executes them from the training hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is how
+//! the Rust coordinator reaches the L2/L1 compute graphs afterwards:
+//!
+//! ```text
+//! manifest.json ─► ArtifactMeta ─► (lazy) PjRtClient::compile ─► execute
+//! ```
+//!
+//! Executables are compiled once per artifact signature and cached;
+//! per-call timing is accumulated so the benchmark harness can separate
+//! "XLA compute" from coordinator overhead.
+
+mod engine;
+
+pub use engine::{Engine, ExecStats, In, Out, Prepared};

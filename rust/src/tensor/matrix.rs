@@ -1,0 +1,357 @@
+//! The dense row-major f32 matrix type.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            for r in 0..self.rows {
+                write!(f, "\n  {:?}", &self.data[r * self.cols..(r + 1) * self.cols])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "from_vec: {}x{} needs {} elements, got {}",
+            rows,
+            cols,
+            rows * cols,
+            data.len()
+        );
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Glorot/Xavier-uniform init — the standard GCN weight init [Kipf'17].
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let limit = (6.0 / (rows + cols) as f64).sqrt() as f32;
+        Matrix::from_fn(rows, cols, |_, _| (rng.gen_f32() * 2.0 - 1.0) * limit)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy `src`'s rows into `self` starting at `row_off` (shape-checked).
+    pub fn copy_rows_from(&mut self, src: &Matrix, row_off: usize) {
+        assert_eq!(self.cols, src.cols);
+        assert!(row_off + src.rows <= self.rows);
+        let start = row_off * self.cols;
+        self.data[start..start + src.data.len()].copy_from_slice(&src.data);
+    }
+
+    /// Extract rows `[lo, hi)` as a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather the given rows into a new matrix (used to regroup nodes by
+    /// community).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Zero-pad to `new_rows` rows (new_rows >= rows).
+    pub fn pad_rows(&self, new_rows: usize) -> Matrix {
+        assert!(new_rows >= self.rows);
+        let mut out = Matrix::zeros(new_rows, self.cols);
+        out.copy_rows_from(self, 0);
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reference dense matmul (ikj loop order, row-major friendly). Used
+    /// for verification and small host-side products; the training path
+    /// uses XLA artifacts instead.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, rhs.rows,
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, rhs.rows, rhs.cols
+        );
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        let n = rhs.cols;
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let rhs_row = &rhs.data[k * n..(k + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(rhs_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    // ---- elementwise ------------------------------------------------------
+
+    pub fn add(&self, rhs: &Matrix) -> Matrix {
+        self.zip(rhs, |a, b| a + b)
+    }
+    pub fn sub(&self, rhs: &Matrix) -> Matrix {
+        self.zip(rhs, |a, b| a - b)
+    }
+    pub fn hadamard(&self, rhs: &Matrix) -> Matrix {
+        self.zip(rhs, |a, b| a * b)
+    }
+    pub fn scale(&self, s: f32) -> Matrix {
+        self.map(|a| a * s)
+    }
+
+    pub fn add_assign(&mut self, rhs: &Matrix) {
+        assert_eq!(self.shape(), rhs.shape());
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+    }
+
+    /// self += s * rhs (axpy).
+    pub fn axpy(&mut self, s: f32, rhs: &Matrix) {
+        assert_eq!(self.shape(), rhs.shape());
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    fn zip(&self, rhs: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!(
+            self.shape(),
+            rhs.shape(),
+            "elementwise shape mismatch: {:?} vs {:?}",
+            self.shape(),
+            rhs.shape()
+        );
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&rhs.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    // ---- reductions ---------------------------------------------------------
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.frob_norm_sq().sqrt()
+    }
+
+    /// Frobenius inner product <self, rhs>.
+    pub fn dot(&self, rhs: &Matrix) -> f64 {
+        assert_eq!(self.shape(), rhs.shape());
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Max |a-b| against another matrix (test helper).
+    pub fn max_abs_diff(&self, rhs: &Matrix) -> f32 {
+        assert_eq!(self.shape(), rhs.shape());
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::glorot(5, 5, &mut rng);
+        let eye = Matrix::from_fn(5, 5, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert!(a.matmul(&eye).max_abs_diff(&a) < 1e-7);
+        assert!(eye.matmul(&a).max_abs_diff(&a) < 1e-7);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::glorot(17, 33, &mut rng);
+        assert!(a.transpose().transpose().max_abs_diff(&a) == 0.0);
+        assert_eq!(a.transpose().shape(), (33, 17));
+    }
+
+    #[test]
+    fn transpose_matmul_property() {
+        // (AB)^T == B^T A^T
+        let mut rng = Rng::new(3);
+        let a = Matrix::glorot(7, 11, &mut rng);
+        let b = Matrix::glorot(11, 5, &mut rng);
+        let lhs = a.matmul(&b).transpose();
+        let rhs = b.transpose().matmul(&a.transpose());
+        assert!(lhs.max_abs_diff(&rhs) < 1e-5);
+    }
+
+    #[test]
+    fn elementwise_and_norms() {
+        let a = Matrix::from_vec(2, 2, vec![1., -2., 3., -4.]);
+        let b = Matrix::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(a.add(&b).data(), &[1.5, -1.5, 3.5, -3.5]);
+        assert_eq!(a.hadamard(&b).data(), &[0.5, -1.0, 1.5, -2.0]);
+        assert_eq!(a.frob_norm_sq(), 30.0);
+        assert_eq!(a.abs_max(), 4.0);
+        assert!((a.dot(&b) - (0.5 - 1.0 + 1.5 - 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_gather_pad() {
+        let a = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let g = a.gather_rows(&[3, 1]);
+        assert_eq!(g.row(0), &[9., 10., 11.]);
+        assert_eq!(g.row(1), &[3., 4., 5.]);
+        let p = g.pad_rows(4);
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p.row(2), &[0., 0., 0.]);
+        let s = a.slice_rows(1, 3);
+        assert_eq!(s.row(0), &[3., 4., 5.]);
+        assert_eq!(s.rows(), 2);
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::glorot(100, 50, &mut rng);
+        let limit = (6.0f64 / 150.0).sqrt() as f32 + 1e-6;
+        assert!(w.data().iter().all(|&x| x.abs() <= limit));
+        // Not degenerate:
+        assert!(w.frob_norm() > 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

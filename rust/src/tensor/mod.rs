@@ -1,0 +1,13 @@
+//! Host-side dense f32 matrices.
+//!
+//! The training hot path runs dense math inside AOT-compiled XLA artifacts;
+//! this module provides the host-side complement: optimizer state, weight
+//! init, message buffers, accuracy evaluation, and a reference matmul used
+//! to cross-check artifact outputs in tests. Row-major, f32 — matching the
+//! layout the runtime hands to PJRT literals, so conversions are memcpys.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{argmax_rows, masked_cross_entropy, relu, relu_mask, softmax_rows};

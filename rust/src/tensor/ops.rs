@@ -1,0 +1,167 @@
+//! Activation / classification helpers over [`Matrix`].
+//!
+//! These are host-side reference implementations: the artifact-compiled
+//! versions (L1 Pallas kernels) are the hot path, and tests assert the two
+//! agree. ReLU'(0) is defined as 0 everywhere (matching `ref.py`), which is
+//! what makes zero-padded community rows provably inert (DESIGN.md §4).
+
+use super::Matrix;
+
+/// Elementwise ReLU.
+pub fn relu(m: &Matrix) -> Matrix {
+    m.map(|x| x.max(0.0))
+}
+
+/// ReLU derivative mask: 1 where x > 0 else 0 (subgradient 0 at 0).
+pub fn relu_mask(m: &Matrix) -> Matrix {
+    m.map(|x| if x > 0.0 { 1.0 } else { 0.0 })
+}
+
+/// Numerically-stabilised row softmax.
+pub fn softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(m.rows(), m.cols());
+    for r in 0..m.rows() {
+        let row = m.row(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        let orow = out.row_mut(r);
+        for (o, &x) in orow.iter_mut().zip(row) {
+            let e = (x - max).exp();
+            *o = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Row-wise argmax (predicted class per node).
+pub fn argmax_rows(m: &Matrix) -> Vec<usize> {
+    (0..m.rows())
+        .map(|r| {
+            let row = m.row(r);
+            let mut best = 0;
+            for (c, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Masked mean softmax cross-entropy: `mask` selects the labeled training
+/// rows; `labels[r]` is the class index. Returns (loss, gradient wrt logits)
+/// where the gradient is `(softmax - onehot) * mask / mask_count` — the same
+/// normalisation the `softmax_xent` Pallas kernel uses.
+pub fn masked_cross_entropy(logits: &Matrix, labels: &[usize], mask: &[f32]) -> (f64, Matrix) {
+    assert_eq!(logits.rows(), labels.len());
+    assert_eq!(logits.rows(), mask.len());
+    let p = softmax_rows(logits);
+    let count: f32 = mask.iter().sum();
+    let denom = if count > 0.0 { count } else { 1.0 };
+    let mut grad = Matrix::zeros(logits.rows(), logits.cols());
+    let mut loss = 0.0f64;
+    for r in 0..logits.rows() {
+        if mask[r] == 0.0 {
+            continue;
+        }
+        let y = labels[r];
+        loss += -(p.at(r, y).max(1e-30) as f64).ln() * mask[r] as f64;
+        let grow = grad.row_mut(r);
+        for (c, g) in grow.iter_mut().enumerate() {
+            let onehot = if c == y { 1.0 } else { 0.0 };
+            *g = (p.at(r, c) - onehot) * mask[r] / denom;
+        }
+    }
+    (loss / denom as f64, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn relu_and_mask() {
+        let m = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -0.5]);
+        assert_eq!(relu(&m).data(), &[0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(relu_mask(&m).data(), &[0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_shift_invariant() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::glorot(6, 9, &mut rng).scale(10.0);
+        let s = softmax_rows(&m);
+        for r in 0..6 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+        }
+        let shifted = m.map(|x| x + 123.0);
+        assert!(softmax_rows(&shifted).max_abs_diff(&s) < 1e-5);
+    }
+
+    #[test]
+    fn argmax_simple() {
+        let m = Matrix::from_vec(2, 3, vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_loss_small() {
+        // Strong correct logits => small loss, small gradient.
+        let logits = Matrix::from_vec(2, 2, vec![10.0, -10.0, -10.0, 10.0]);
+        let (loss, grad) = masked_cross_entropy(&logits, &[0, 1], &[1.0, 1.0]);
+        assert!(loss < 1e-6, "loss={loss}");
+        assert!(grad.abs_max() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_c() {
+        let logits = Matrix::zeros(3, 4);
+        let (loss, _) = masked_cross_entropy(&logits, &[0, 1, 2], &[1.0, 1.0, 1.0]);
+        assert!((loss - (4.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_respects_mask() {
+        let mut rng = Rng::new(6);
+        let logits = Matrix::glorot(4, 3, &mut rng);
+        let labels = [0, 1, 2, 0];
+        let (_, grad) = masked_cross_entropy(&logits, &labels, &[1.0, 0.0, 1.0, 0.0]);
+        assert!(grad.row(1).iter().all(|&g| g == 0.0));
+        assert!(grad.row(3).iter().all(|&g| g == 0.0));
+        assert!(grad.row(0).iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn cross_entropy_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(7);
+        let logits = Matrix::glorot(3, 4, &mut rng);
+        let labels = [2, 0, 3];
+        let mask = [1.0, 1.0, 0.0];
+        let (_, grad) = masked_cross_entropy(&logits, &labels, &mask);
+        let eps = 1e-3f32;
+        for r in 0..3 {
+            for c in 0..4 {
+                let mut plus = logits.clone();
+                plus.set(r, c, logits.at(r, c) + eps);
+                let mut minus = logits.clone();
+                minus.set(r, c, logits.at(r, c) - eps);
+                let (lp, _) = masked_cross_entropy(&plus, &labels, &mask);
+                let (lm, _) = masked_cross_entropy(&minus, &labels, &mask);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (fd - grad.at(r, c)).abs() < 1e-3,
+                    "fd mismatch at ({r},{c}): fd={fd} grad={}",
+                    grad.at(r, c)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (first positional), typed getters with defaults, and an
+//! auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative argument parser.
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}\n\n{1}")]
+    Unknown(String, String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    Invalid {
+        key: String,
+        value: String,
+        why: String,
+    },
+    #[error("{0}")]
+    Help(String),
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &str) -> Self {
+        ArgSpec {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "{head:<28} {}{default}", o.help);
+        }
+        s
+    }
+
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.usage()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone(), self.usage()))?;
+                if spec.is_flag {
+                    let v = match inline_val.as_deref() {
+                        None => true,
+                        Some("true") => true,
+                        Some("false") => false,
+                        Some(other) => {
+                            return Err(CliError::Invalid {
+                                key,
+                                value: other.to_string(),
+                                why: "flags take true/false".into(),
+                            })
+                        }
+                    };
+                    args.flags.insert(key, v);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it.next().ok_or(CliError::MissingValue(key.clone()))?,
+                    };
+                    args.values.insert(key, v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); print help & exit on -h.
+    pub fn parse_env(&self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(CliError::Help(h)) => {
+                println!("{h}");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn get_str(&self, key: &str) -> String {
+        self.values
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| panic!("option --{key} not declared / has no default"))
+    }
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.typed(key)
+    }
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.typed(key)
+    }
+    pub fn get_f32(&self, key: &str) -> f32 {
+        self.typed(key)
+    }
+    pub fn get_f64(&self, key: &str) -> f64 {
+        self.typed(key)
+    }
+    pub fn get_flag(&self, key: &str) -> bool {
+        *self
+            .flags
+            .get(key)
+            .unwrap_or_else(|| panic!("flag --{key} not declared"))
+    }
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+    /// First positional argument — conventionally the subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn typed<T: std::str::FromStr>(&self, key: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get_str(key);
+        raw.parse::<T>().unwrap_or_else(|e| {
+            eprintln!("error: invalid value for --{key}: {raw:?} ({e})");
+            std::process::exit(2);
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("epochs", Some("50"), "number of epochs")
+            .opt("dataset", Some("synth-computers"), "dataset name")
+            .opt("rho", Some("0.001"), "ADMM rho")
+            .flag("verbose", "chatty output")
+    }
+
+    fn parse(toks: &[&str]) -> Args {
+        spec()
+            .parse(toks.iter().map(|s| s.to_string()))
+            .expect("parse")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("epochs"), 50);
+        assert_eq!(a.get_str("dataset"), "synth-computers");
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = parse(&["train", "--epochs", "10", "--rho=0.1", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_usize("epochs"), 10);
+        assert!((a.get_f32("rho") - 0.1).abs() < 1e-6);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = spec().parse(vec!["--nope".to_string()]);
+        assert!(matches!(r, Err(CliError::Unknown(..))));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = spec().parse(vec!["--epochs".to_string()]);
+        assert!(matches!(r, Err(CliError::MissingValue(..))));
+    }
+
+    #[test]
+    fn help_is_generated() {
+        let r = spec().parse(vec!["--help".to_string()]);
+        match r {
+            Err(CliError::Help(h)) => {
+                assert!(h.contains("--epochs"));
+                assert!(h.contains("default: 50"));
+            }
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Minimal `log` facade backend (env_logger is unavailable offline).
+//!
+//! Level is controlled by `CGCN_LOG` (error|warn|info|debug|trace, default
+//! info). Output goes to stderr with elapsed-time prefixes so training logs
+//! double as coarse timing traces.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct Logger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Install the logger (idempotent). Call early in main / test setup.
+pub fn init() {
+    let level = match std::env::var("CGCN_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| Logger {
+        start: Instant::now(),
+        level,
+    });
+    // set_logger fails if already set (e.g. repeated test init) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(logger.level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

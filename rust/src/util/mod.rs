@@ -1,0 +1,14 @@
+//! In-house utility substrates.
+//!
+//! The offline crate registry only contains the `xla` dependency closure,
+//! so the usual ecosystem crates (serde, clap, rand, proptest, criterion)
+//! are unavailable; each submodule here is a small, tested replacement for
+//! the slice of functionality this project needs.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod proplite;
+pub mod rng;
+pub mod stats;
+pub mod wire;

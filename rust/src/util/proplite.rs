@@ -1,0 +1,167 @@
+//! Property-based testing micro-framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded RNG wrapper with sized
+//! generators). `check` runs it for N seeds and, on failure, retries the
+//! failing seed with progressively smaller size budgets — a coarse
+//! equivalent of shrinking that in practice yields near-minimal graphs /
+//! matrices for debugging. Failures print the seed so a case can be
+//! replayed exactly with [`check_seed`].
+
+use crate::util::rng::Rng;
+
+/// Generation context handed to properties: a deterministic RNG plus a
+/// size budget that generators should respect.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// A usize in `[lo, hi]`, biased to respect the size budget.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo).min(self.size.max(1));
+        lo + self.rng.gen_range(span + 1)
+    }
+
+    /// f32 in [-scale, scale].
+    pub fn f32_in(&mut self, scale: f32) -> f32 {
+        (self.rng.gen_f32() * 2.0 - 1.0) * scale
+    }
+
+    /// Vector of f32s in [-scale, scale].
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(scale)).collect()
+    }
+
+    /// Random undirected edge list over n nodes with expected density p
+    /// (no self loops, no duplicates).
+    pub fn edges(&mut self, n: usize, p: f64) -> Vec<(usize, usize)> {
+        let mut es = Vec::new();
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if self.rng.gen_bool(p) {
+                    es.push((u, v));
+                }
+            }
+        }
+        es
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` across `cases` seeds (derived from `base_seed`). On failure,
+/// attempts smaller sizes for the failing seed and panics with the smallest
+/// reproduction found.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let max_size = 24;
+    for i in 0..cases {
+        let seed = base_seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 2 + (i * max_size) / cases.max(1);
+        if let Err(msg) = run_one(&prop, seed, size) {
+            // "Shrink": same seed, smaller size budgets.
+            let mut best = Failure {
+                seed,
+                size,
+                message: msg,
+            };
+            for s in (1..size).rev() {
+                if let Err(msg) = run_one(&prop, seed, s) {
+                    best = Failure {
+                        seed,
+                        size: s,
+                        message: msg,
+                    };
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={}, size={}): {}\n  replay: proplite::check_seed(\"{name}\", {}, {}, prop)",
+                best.seed, best.size, best.message, best.seed, best.size
+            );
+        }
+    }
+}
+
+/// Replay a single (seed, size) case — used to debug failures.
+pub fn check_seed<F>(name: &str, seed: u64, size: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    if let Err(msg) = run_one(&prop, seed, size) {
+        panic!("property '{name}' failed on replay (seed={seed}, size={size}): {msg}");
+    }
+}
+
+fn run_one<F>(prop: &F, seed: u64, size: usize) -> Result<(), String>
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::new(seed, size);
+    prop(&mut g)
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-twice", 50, 42, |g| {
+            let len = g.usize_in(0, 30);
+            let v = g.vec_f32(len, 10.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "reverse twice changed the vector");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 1, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn edges_are_simple() {
+        check("gen-edges-simple", 30, 7, |g| {
+            let n = g.usize_in(2, 20);
+            let es = g.edges(n, 0.3);
+            let mut seen = std::collections::HashSet::new();
+            for &(u, v) in &es {
+                prop_assert!(u < v, "edge not canonical: ({u},{v})");
+                prop_assert!(v < n, "edge endpoint out of range");
+                prop_assert!(seen.insert((u, v)), "duplicate edge ({u},{v})");
+            }
+            Ok(())
+        });
+    }
+}

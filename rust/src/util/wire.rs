@@ -1,0 +1,239 @@
+//! Binary wire format: length-prefixed little-endian encoding used by the
+//! multi-process transport, the `.cgnp` dataset format and metric dumps.
+//!
+//! The encoding is deliberately boring: fixed-width LE integers, f32 slices
+//! as raw bytes, strings as u32-length + UTF-8. Every message that crosses
+//! an agent boundary goes through this module, which is also where
+//! communication-volume accounting happens (the byte counts reported in the
+//! Table-3 reproduction are measured here, not estimated).
+
+use std::io::{self, Read, Write};
+
+/// Append-only encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Enc {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+    /// f32 slice: u64 length then raw LE bytes (bulk-copied).
+    pub fn f32s(&mut self, xs: &[f32]) -> &mut Self {
+        self.u64(xs.len() as u64);
+        // Safe bulk copy: f32 -> 4 LE bytes each. On little-endian targets
+        // this is a straight memcpy.
+        self.buf.reserve(xs.len() * 4);
+        for chunk in xs.chunks(4096) {
+            for &x in chunk {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        self
+    }
+    pub fn u32s(&mut self, xs: &[u32]) -> &mut Self {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Cursor-based decoder over a byte slice.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("wire decode error at byte {at}: {what}")]
+pub struct DecodeError {
+    pub at: usize,
+    pub what: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], DecodeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError { at: self.pos, what });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1, "u8")?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4, "u32")?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8, "u64")?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4, "f32")?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8, "f64")?.try_into().unwrap()))
+    }
+    pub fn str(&mut self) -> Result<String, DecodeError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n, "str body")?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError {
+            at: self.pos,
+            what: "invalid utf-8",
+        })
+    }
+    pub fn f32s(&mut self) -> Result<Vec<f32>, DecodeError> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n * 4, "f32s body")?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+    pub fn u32s(&mut self) -> Result<Vec<u32>, DecodeError> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n * 4, "u32s body")?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// Write a `[u32 length][payload]` frame to a stream (TCP transport).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one `[u32 length][payload]` frame. Returns `None` on clean EOF.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7).u32(0xDEADBEEF).u64(1 << 40).f32(3.5).f64(-2.25).str("héllo");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f32().unwrap(), 3.5);
+        assert_eq!(d.f64().unwrap(), -2.25);
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert!(d.done());
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let idx: Vec<u32> = (0..64).map(|i| i * 3).collect();
+        let mut e = Enc::new();
+        e.f32s(&xs).u32s(&idx);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.f32s().unwrap(), xs);
+        assert_eq!(d.u32s().unwrap(), idx);
+        assert!(d.done());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.f32s(&[1.0, 2.0, 3.0]);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..bytes.len() - 2]);
+        assert!(d.f32s().is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_over_buffer() {
+        let mut pipe: Vec<u8> = Vec::new();
+        write_frame(&mut pipe, b"first").unwrap();
+        write_frame(&mut pipe, b"").unwrap();
+        write_frame(&mut pipe, &[9u8; 300]).unwrap();
+        let mut cur = std::io::Cursor::new(pipe);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"first");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), vec![9u8; 300]);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+}

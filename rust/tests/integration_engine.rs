@@ -1,0 +1,212 @@
+//! Engine integration tests: AOT artifacts vs host-side reference math.
+//!
+//! These need `make artifacts`; they skip (with a notice) when the
+//! artifacts directory is absent so a bare `cargo test` still passes.
+
+use cgcn::runtime::{Engine, In};
+use cgcn::tensor::{self, Matrix};
+use cgcn::util::rng::Rng;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    if !Engine::available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::load(&Engine::default_dir()).unwrap()))
+}
+
+/// fig1 artifact shapes: n=128, dims 4 -> 8 -> 3.
+const N: usize = 128;
+const A: usize = 4;
+const B: usize = 8;
+const C: usize = 3;
+
+fn mats(rng: &mut Rng) -> (Matrix, Matrix) {
+    (Matrix::glorot(N, A, rng), Matrix::glorot(A, B, rng))
+}
+
+#[test]
+fn mm_primitives_match_host_matmul() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let (x, w) = mats(&mut rng);
+    let y = Matrix::glorot(N, B, &mut rng);
+
+    let got = engine
+        .exec(&format!("mm_nn__n{N}_a{A}_b{B}"), &[In::Mat(&x), In::Mat(&w)])
+        .unwrap()
+        .remove(0)
+        .into_mat();
+    assert!(got.max_abs_diff(&x.matmul(&w)) < 1e-4);
+
+    let got = engine
+        .exec(&format!("mm_tn__n{N}_a{A}_b{B}"), &[In::Mat(&x), In::Mat(&y)])
+        .unwrap()
+        .remove(0)
+        .into_mat();
+    assert!(got.max_abs_diff(&x.transpose().matmul(&y)) < 1e-4);
+
+    let got = engine
+        .exec(&format!("mm_bt__n{N}_a{A}_b{B}"), &[In::Mat(&y), In::Mat(&w)])
+        .unwrap()
+        .remove(0)
+        .into_mat();
+    assert!(got.max_abs_diff(&y.matmul(&w.transpose())) < 1e-4);
+}
+
+#[test]
+fn prepared_literals_give_identical_results() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let (x, w) = mats(&mut rng);
+    let sig = format!("mm_nn__n{N}_a{A}_b{B}");
+    let plain = engine
+        .exec(&sig, &[In::Mat(&x), In::Mat(&w)])
+        .unwrap()
+        .remove(0)
+        .into_mat();
+    let prep = engine.prepare(&x).unwrap();
+    let prepped = engine
+        .exec(&sig, &[In::Prep(&prep), In::Mat(&w)])
+        .unwrap()
+        .remove(0)
+        .into_mat();
+    assert_eq!(plain.data(), prepped.data());
+}
+
+#[test]
+fn fwd_relu_matches_and_keeps_padding_inert() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let (mut x, w) = mats(&mut rng);
+    // Zero the tail rows — padded communities look exactly like this.
+    for r in 100..N {
+        x.row_mut(r).fill(0.0);
+    }
+    let got = engine
+        .exec(&format!("fwd_relu__n{N}_a{A}_b{B}"), &[In::Mat(&x), In::Mat(&w)])
+        .unwrap()
+        .remove(0)
+        .into_mat();
+    let want = tensor::relu(&x.matmul(&w));
+    assert!(got.max_abs_diff(&want) < 1e-4);
+    for r in 100..N {
+        assert!(got.row(r).iter().all(|&v| v == 0.0), "padding row {r} leaked");
+    }
+}
+
+#[test]
+fn residual_entries_match_host_formulas() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let pre = Matrix::glorot(N, B, &mut rng);
+    let zt = Matrix::glorot(N, B, &mut rng);
+    let nu = 0.37f32;
+
+    let outs = engine
+        .exec(
+            &format!("hidden_residual__n{N}_c{B}"),
+            &[In::Mat(&pre), In::Mat(&zt), In::Scalar(nu)],
+        )
+        .unwrap();
+    let val = outs[0].scalar();
+    let r = match &outs[1] {
+        cgcn::runtime::Out::Mat(m) => m.clone(),
+        _ => panic!(),
+    };
+    let act = tensor::relu(&pre);
+    let d = act.sub(&zt);
+    assert!((val - 0.5 * nu * d.frob_norm_sq() as f32).abs() < 1e-3 * val.abs().max(1.0));
+    let want_r = d.hadamard(&tensor::relu_mask(&pre)).scale(nu);
+    assert!(r.max_abs_diff(&want_r) < 1e-5);
+
+    // out_residual: val = <U, Zt-pre> + rho/2 ||Zt-pre||²; R = -(U + rho d).
+    let u = Matrix::glorot(N, C, &mut rng);
+    let pre_c = Matrix::glorot(N, C, &mut rng);
+    let zt_c = Matrix::glorot(N, C, &mut rng);
+    let rho = 0.05f32;
+    let outs = engine
+        .exec(
+            &format!("out_residual__n{N}_c{C}"),
+            &[In::Mat(&pre_c), In::Mat(&zt_c), In::Mat(&u), In::Scalar(rho)],
+        )
+        .unwrap();
+    let val = outs[0].scalar();
+    let d = zt_c.sub(&pre_c);
+    let want_val = u.dot(&d) as f32 + 0.5 * rho * d.frob_norm_sq() as f32;
+    assert!((val - want_val).abs() < 1e-3 * want_val.abs().max(1.0));
+}
+
+#[test]
+fn xent_loss_matches_host_cross_entropy() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let logits = Matrix::glorot(N, C, &mut rng).scale(3.0);
+    let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
+    let mut y = Matrix::zeros(N, C);
+    let mut mask = vec![0.0f32; N];
+    for i in 0..N {
+        y.set(i, labels[i], 1.0);
+        if rng.gen_bool(0.5) {
+            mask[i] = 1.0;
+        }
+    }
+    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+    let got = engine
+        .exec(
+            &format!("xent_loss__n{N}_c{C}"),
+            &[In::Mat(&logits), In::Mat(&y), In::Vec(&mask), In::Scalar(denom)],
+        )
+        .unwrap()
+        .remove(0)
+        .scalar();
+    let (want, _) = tensor::masked_cross_entropy(&logits, &labels, &mask);
+    assert!(
+        (got as f64 - want).abs() < 1e-4 * want.abs().max(1.0),
+        "artifact {got} vs host {want}"
+    );
+}
+
+#[test]
+fn zl_fista_decreases_its_objective() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(6);
+    let q = Matrix::glorot(N, C, &mut rng);
+    let u = Matrix::glorot(N, C, &mut rng).scale(0.05);
+    let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
+    let mut y = Matrix::zeros(N, C);
+    let mask = vec![1.0f32; N];
+    for i in 0..N {
+        y.set(i, labels[i], 1.0);
+    }
+    let denom = N as f32;
+    let rho = 0.1f32;
+    let objective = |z: &Matrix| -> f64 {
+        let (ce, _) = tensor::masked_cross_entropy(z, &labels, &mask);
+        let d = z.sub(&q);
+        ce + u.dot(&d) + 0.5 * rho as f64 * d.frob_norm_sq()
+    };
+    let outs = engine
+        .exec(
+            &format!("zl_fista__n{N}_c{C}_steps10"),
+            &[
+                In::Mat(&q),
+                In::Mat(&u),
+                In::Mat(&y),
+                In::Vec(&mask),
+                In::Mat(&q), // warm start at Q
+                In::Scalar(rho),
+                In::Scalar(denom),
+            ],
+        )
+        .unwrap();
+    let z_new = match &outs[0] {
+        cgcn::runtime::Out::Mat(m) => m.clone(),
+        _ => panic!(),
+    };
+    assert!(
+        objective(&z_new) < objective(&q) - 1e-6,
+        "FISTA failed to decrease the eq.-7 objective"
+    );
+}

@@ -1,0 +1,83 @@
+//! TCP multi-process runtime integration: a real leader + 3 worker
+//! processes must reproduce the in-process trainer's numbers exactly.
+
+use cgcn::util::cli::ArgSpec;
+
+fn artifacts_available() -> bool {
+    cgcn::runtime::Engine::available()
+}
+
+fn train_args(extra: &[&str]) -> cgcn::util::cli::Args {
+    let base = [
+        "train",
+        "--dataset",
+        "fig1",
+        "--communities",
+        "3",
+        "--epochs",
+        "3",
+        "--hidden",
+        "8",
+    ];
+    // Mirror main.rs's declared options (subset used by setup).
+    let spec = ArgSpec::new("t", "test")
+        .opt("dataset", Some("fig1"), "")
+        .opt("scale", Some("0.25"), "")
+        .opt("hidden", Some("8"), "")
+        .opt("layers", Some("2"), "")
+        .opt("epochs", Some("3"), "")
+        .opt("communities", Some("3"), "")
+        .opt("method", Some("admm"), "")
+        .opt("partition", Some("metis"), "")
+        .opt("rho", Some("auto"), "")
+        .opt("nu", Some("auto"), "")
+        .opt("lr", Some("auto"), "")
+        .opt("seed", Some("17"), "")
+        .opt("out", Some(""), "")
+        .opt("transport", Some("local"), "")
+        .opt("link-mbps", Some("10000"), "")
+        .opt("link-lat-us", Some("100"), "")
+        .opt("listen", Some(""), "")
+        .opt("worker-idx", Some("0"), "")
+        .flag("parallel-layers", "")
+        .flag("csv", "");
+    let toks: Vec<String> = base
+        .iter()
+        .chain(extra.iter())
+        .map(|s| s.to_string())
+        .collect();
+    spec.parse(toks).unwrap()
+}
+
+#[test]
+fn tcp_training_matches_local_training() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    // Workers are spawned from the real cgcn binary.
+    std::env::set_var("CGCN_WORKER_EXE", env!("CARGO_BIN_EXE_cgcn"));
+
+    let local_args = train_args(&[]);
+    let local_setup = cgcn::coordinator::setup_from_args(&local_args).unwrap();
+    let local = cgcn::coordinator::run_training(&local_setup, &local_args).unwrap();
+
+    let tcp_args = train_args(&["--transport", "tcp"]);
+    let tcp_setup = cgcn::coordinator::setup_from_args(&tcp_args).unwrap();
+    let tcp = cgcn::coordinator::run_training(&tcp_setup, &tcp_args).unwrap();
+
+    assert_eq!(local.epochs.len(), tcp.epochs.len());
+    for (a, b) in local.epochs.iter().zip(&tcp.epochs) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4 * a.loss.abs().max(1.0),
+            "epoch {}: local loss {} vs tcp {}",
+            a.epoch,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.train_acc, b.train_acc, "epoch {} train acc", a.epoch);
+        assert_eq!(a.test_acc, b.test_acc, "epoch {} test acc", a.epoch);
+    }
+    // Real bytes actually moved through the sockets.
+    assert!(tcp.total_bytes() > 10_000, "tcp bytes {}", tcp.total_bytes());
+}
