@@ -11,7 +11,7 @@ use cgcn::config::HyperParams;
 use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::data::synth;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -23,13 +23,10 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
 
 fn main() -> anyhow::Result<()> {
     cgcn::util::logger::init();
-    if !Engine::available() {
-        eprintln!("ablation_partition: artifacts not found — run `make artifacts` first");
-        return Ok(());
-    }
     let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 25);
     let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let backend = default_backend();
+    eprintln!("ablation_partition: backend = {}", backend.name());
 
     let ds = synth::generate(&synth::AMAZON_PHOTO, scale, 17);
     let mut hp = HyperParams::for_dataset("synth-photo");
@@ -46,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     for method in [Method::Metis, Method::Bfs, Method::Random] {
         let ws = Arc::new(Workspace::build(&ds, &hp, method)?);
         let edgecut = ws.edgecut;
-        let mut t = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(3))?;
+        let mut t = AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(3))?;
         let rep = t.train(epochs, method.name())?;
         println!(
             "{:<10} {:>9} {:>8.1}% {:>12.2} {:>10.2} {:>10.2} {:>10.2} {:>10.3}",

@@ -14,7 +14,7 @@ use cgcn::config::HyperParams;
 use cgcn::coordinator::{AdmmOptions, AdmmTrainer, LinkModel, Workspace};
 use cgcn::data::synth;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -26,13 +26,10 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
 
 fn main() -> anyhow::Result<()> {
     cgcn::util::logger::init();
-    if !Engine::available() {
-        eprintln!("ablation_sweep: artifacts not found — run `make artifacts` first");
-        return Ok(());
-    }
     let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 25);
     let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let backend = default_backend();
+    eprintln!("ablation_sweep: backend = {}", backend.name());
     let ds = synth::generate(&synth::AMAZON_PHOTO, scale, 17);
     let hp = HyperParams::for_dataset("synth-photo");
 
@@ -42,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         let mut hp_s = hp.clone();
         hp_s.communities = 1;
         let ws = Arc::new(Workspace::build(&ds, &hp_s, Method::Metis)?);
-        AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(1))?.train(epochs, "serial")?
+        AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(1))?.train(epochs, "serial")?
     };
     println!(
         "{:<12} {:>10} {:>10} {:>10} {:>9}",
@@ -58,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         let ws = Arc::new(Workspace::build(&ds, &hp_p, Method::Metis)?);
         let mut opts = AdmmOptions::for_mode(3);
         opts.link = LinkModel::new(mbps, 100.0);
-        let rep = AdmmTrainer::new(ws, engine.clone(), opts)?.train(epochs, "parallel")?;
+        let rep = AdmmTrainer::new(ws, backend.clone(), opts)?.train(epochs, "parallel")?;
         println!(
             "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>8.2}x",
             format!("{}M", mbps as u64),
@@ -78,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         hp_r.rho = rho;
         hp_r.nu = rho;
         let ws = Arc::new(Workspace::build(&ds, &hp_r, Method::Metis)?);
-        let rep = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(1))?
+        let rep = AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(1))?
             .train(epochs, "admm")?;
         let last = rep.epochs.last().unwrap();
         println!(
@@ -104,7 +101,7 @@ fn main() -> anyhow::Result<()> {
         let ws = Arc::new(Workspace::build(&ds, &hp_p, Method::Metis)?);
         let mut opts = AdmmOptions::for_mode(3);
         tweak(&mut opts);
-        let rep = AdmmTrainer::new(ws, engine.clone(), opts)?.train(epochs, name)?;
+        let rep = AdmmTrainer::new(ws, backend.clone(), opts)?.train(epochs, name)?;
         let last = rep.epochs.last().unwrap();
         println!(
             "{:<26} {:>10.2} {:>10.2} {:>10.3} {:>10.4}",

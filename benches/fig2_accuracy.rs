@@ -16,7 +16,7 @@ use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::data::synth;
 use cgcn::metrics::RunReport;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -28,13 +28,10 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
 
 fn main() -> anyhow::Result<()> {
     cgcn::util::logger::init();
-    if !Engine::available() {
-        eprintln!("fig2_accuracy: artifacts not found — run `make artifacts` first");
-        return Ok(());
-    }
     let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 50);
     let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let backend = default_backend();
+    eprintln!("fig2_accuracy: backend = {}", backend.name());
     std::fs::create_dir_all("results")?;
 
     for spec in [synth::AMAZON_COMPUTERS, synth::AMAZON_PHOTO] {
@@ -46,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             let mut hp_m = hp.clone();
             hp_m.communities = m;
             let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
-            let mut t = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(m))?;
+            let mut t = AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(m))?;
             let label = if m == 1 { "admm-serial" } else { "admm-parallel" };
             log::info!("[{}] {label}", ds.name);
             let mut rep = t.train(epochs, label)?;
@@ -59,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         for name in ["adam", "adagrad", "gd", "adadelta"] {
             log::info!("[{}] {name}", ds.name);
             let opt = Optimizer::parse(name, None)?;
-            let mut t = BaselineTrainer::new(ws.clone(), engine.clone(), opt)?;
+            let mut t = BaselineTrainer::new(ws.clone(), backend.clone(), opt)?;
             let mut rep = t.train(epochs)?;
             rep.dataset = ds.name.clone();
             reports.push(rep);

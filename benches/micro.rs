@@ -1,22 +1,25 @@
 //! Micro-benchmarks of the substrate hot paths: CSR SpMM (the L3 sparse
-//! half of every subproblem), artifact dispatch overhead, wire
-//! serialisation, gather/scatter, and the partitioner itself.
+//! half of every subproblem), serial-vs-pooled SpMM/matmul scaling across
+//! thread counts, backend dispatch overhead, wire serialisation,
+//! gather/scatter, and the partitioner itself.
 //!
-//! These feed the EXPERIMENTS.md §Perf roofline discussion: SpMM should be
-//! memory-bound (≈ 2 flops/4 bytes of X per nonzero), artifact dispatch
-//! should sit well under one percent of a realistic matmul.
+//! The 1/2/4/8-thread section writes `BENCH_parallel.json` so the perf
+//! trajectory records *real* (wall-clock) parallel speedups, not just the
+//! virtual-time model. These feed the EXPERIMENTS.md §Perf roofline
+//! discussion: SpMM should be memory-bound (≈ 2 flops/4 bytes of X per
+//! nonzero), dispatch should sit well under one percent of a realistic
+//! matmul.
 
 use cgcn::bench::{bench, fmt_secs, gflops, report_row, section, BenchOpts};
 use cgcn::config::HyperParams;
 use cgcn::coordinator::Workspace;
 use cgcn::data::synth;
-use cgcn::graph::Csr;
 use cgcn::partition::{partition, Method};
-use cgcn::runtime::{Engine, In};
+use cgcn::runtime::{default_backend, ComputeBackend, NativeBackend};
 use cgcn::tensor::Matrix;
+use cgcn::util::json::Json;
 use cgcn::util::rng::Rng;
 use cgcn::util::wire::{Dec, Enc};
-use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     cgcn::util::logger::init();
@@ -38,6 +41,59 @@ fn main() -> anyhow::Result<()> {
             (a.nnz() * cols * 4) as f64 / s.p50 / 1e9
         );
     }
+
+    // ---- serial vs pooled scaling -------------------------------------------
+    section("parallel scaling (native backend, grain forced)");
+    let threads_sweep = [1usize, 2, 4, 8];
+    let spmm_x = Matrix::glorot(a.ncols(), 256, &mut rng);
+    let mm_x = Matrix::glorot(1024, 745, &mut rng);
+    let mm_w = Matrix::glorot(745, 256, &mut rng);
+    let mut spmm_rows_json = Vec::new();
+    let mut mm_rows_json = Vec::new();
+    let mut spmm_serial_p50 = 0.0f64;
+    let mut mm_serial_p50 = 0.0f64;
+    for &t in &threads_sweep {
+        let be = NativeBackend::with_grain(t, 0);
+        let s_spmm = bench(opts, || be.spmm(&a, &spmm_x));
+        let s_mm = bench(opts, || be.mm_nn(&mm_x, &mm_w).unwrap());
+        if t == 1 {
+            spmm_serial_p50 = s_spmm.p50;
+            mm_serial_p50 = s_mm.p50;
+        }
+        println!(
+            "threads={t}:  spmm(256 cols) {:>10}/iter ({:>5.2}x)   mm_nn 1024x745x256 {:>10}/iter ({:>5.2}x)",
+            fmt_secs(s_spmm.p50),
+            spmm_serial_p50 / s_spmm.p50,
+            fmt_secs(s_mm.p50),
+            mm_serial_p50 / s_mm.p50
+        );
+        spmm_rows_json.push(Json::obj(vec![
+            ("threads", Json::num(t as f64)),
+            ("cols", Json::num(256.0)),
+            ("p50_s", Json::num(s_spmm.p50)),
+            ("mean_s", Json::num(s_spmm.mean)),
+            ("speedup", Json::num(spmm_serial_p50 / s_spmm.p50)),
+        ]));
+        mm_rows_json.push(Json::obj(vec![
+            ("threads", Json::num(t as f64)),
+            ("shape", Json::str("1024x745x256")),
+            ("p50_s", Json::num(s_mm.p50)),
+            ("mean_s", Json::num(s_mm.mean)),
+            ("speedup", Json::num(mm_serial_p50 / s_mm.p50)),
+        ]));
+    }
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let parallel_json = Json::obj(vec![
+        ("bench", Json::str("micro_parallel")),
+        ("host_threads", Json::num(host_threads as f64)),
+        ("spmm_nnz", Json::num(a.nnz() as f64)),
+        ("spmm", Json::arr(spmm_rows_json)),
+        ("matmul", Json::arr(mm_rows_json)),
+    ]);
+    std::fs::write("BENCH_parallel.json", parallel_json.to_pretty() + "\n")?;
+    println!("(wrote BENCH_parallel.json; host has {host_threads} hardware threads)");
 
     // ---- SpMM transpose & blocks ----------------------------------------------
     section("CSR ops");
@@ -74,14 +130,10 @@ fn main() -> anyhow::Result<()> {
         &bench(opts, || Dec::new(&bytes).f32s().unwrap()),
     );
 
-    if !Engine::available() {
-        eprintln!("\n(artifacts missing — skipping runtime micro-benches)");
-        return Ok(());
-    }
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
-
-    // ---- artifact dispatch ---------------------------------------------------
-    section("artifact execution (n=768 shapes)");
+    // ---- backend dispatch ------------------------------------------------------
+    let backend = default_backend();
+    section("backend kernel dispatch (n=768 shapes)");
+    println!("backend: {}", backend.name());
     let hp = HyperParams::for_dataset("synth-photo");
     let hp3 = HyperParams {
         communities: 3,
@@ -90,38 +142,19 @@ fn main() -> anyhow::Result<()> {
     let ws = Workspace::build(&ds, &hp3, Method::Metis)?;
     let x = Matrix::glorot(768, 745, &mut rng);
     let w = Matrix::glorot(745, 256, &mut rng);
-    let sig = ws.sig_nab("mm_nn", 768, 745, 256);
-    engine.warmup(&[sig.clone()])?;
-    let s = bench(opts, || {
-        engine.exec(&sig, &[In::Mat(&x), In::Mat(&w)]).unwrap()
-    });
+    backend.warmup(&[ws.sig_nab("mm_nn", 768, 745, 256)])?;
+    let s = bench(opts, || backend.mm_nn(&x, &w).unwrap());
     let flops = 2.0 * 768.0 * 745.0 * 256.0;
     println!(
-        "mm_nn 768x745x256   {:>10}/call  {:>7.2} GFLOP/s (incl. marshal)",
+        "mm_nn 768x745x256   {:>10}/call  {:>7.2} GFLOP/s (incl. dispatch)",
         fmt_secs(s.p50),
         gflops(flops, s.p50)
     );
-    // Prepared-literal variant (no per-call marshal of the big operand).
-    let prep = engine.prepare(&x)?;
-    let s2 = bench(opts, || {
-        engine.exec(&sig, &[In::Prep(&prep), In::Mat(&w)]).unwrap()
-    });
-    println!(
-        "  + prepared lhs    {:>10}/call  {:>7.2} GFLOP/s",
-        fmt_secs(s2.p50),
-        gflops(flops, s2.p50)
-    );
-    // Dispatch floor: smallest artifact in the plan.
-    let small_sig = ws.sig_nc("out_phi", 768, 8);
-    engine.warmup(&[small_sig.clone()])?;
+    // Dispatch floor: smallest kernel in the plan.
+    backend.warmup(&[ws.sig_nc("out_phi", 768, 8)])?;
     let z8 = Matrix::zeros(768, 8);
     let s3 = bench(opts, || {
-        engine
-            .exec(
-                &small_sig,
-                &[In::Mat(&z8), In::Mat(&z8), In::Mat(&z8), In::Scalar(1.0)],
-            )
-            .unwrap()
+        backend.out_phi(&z8, &z8, &z8, 1.0).unwrap()
     });
     report_row("dispatch floor (out_phi 768x8)", &s3);
 
@@ -133,12 +166,10 @@ fn main() -> anyhow::Result<()> {
     report_row("scatter", &bench(opts, || ws.scatter(&glob)));
 
     // ---- roofline note ----------------------------------------------------------
-    let c = Csr::from_triplets(4, 4, &[(0, 0, 1.0)]);
-    let _ = c;
     println!(
         "\nroofline context: single-core DRAM stream ≈ 10-20 GB/s ⇒ SpMM at\n\
-         2 flops per 4 streamed bytes tops out near 5-10 GFLOP/s; dense MXU-\n\
-         style matmul through XLA reaches 60-90 GFLOP/s on this core."
+         2 flops per 4 streamed bytes tops out near 5-10 GFLOP/s; the pooled\n\
+         row-block kernels scale that with cores until the memory bus saturates."
     );
     Ok(())
 }

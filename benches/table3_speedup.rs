@@ -15,7 +15,7 @@ use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::data::synth;
 use cgcn::metrics::RunReport;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -27,13 +27,10 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
 
 fn main() -> anyhow::Result<()> {
     cgcn::util::logger::init();
-    if !Engine::available() {
-        eprintln!("table3_speedup: artifacts not found — run `make artifacts` first");
-        return Ok(());
-    }
     let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 50);
     let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let backend = default_backend();
+    eprintln!("table3_speedup: backend = {}", backend.name());
 
     println!("Table 3 — Serial vs Parallel ADMM ({epochs} epochs, scale {scale}, virtual time)");
     println!(
@@ -48,7 +45,7 @@ fn main() -> anyhow::Result<()> {
             let mut hp_m = hp.clone();
             hp_m.communities = m;
             let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
-            let mut t = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(m))?;
+            let mut t = AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(m))?;
             t.train(epochs, if m == 1 { "serial" } else { "parallel" })
         };
         let serial = run(1)?;

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI gate for the default (no-xla) feature set. Everything here must run
+# offline: the only dependencies are the in-tree shims under rust/shims/.
+#
+#   ./ci.sh          # fmt + clippy + tests
+#   ./ci.sh fast     # tests only
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [[ "${1:-}" != "fast" ]]; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+
+    echo "==> cargo clippy (deny warnings)"
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "CI OK"

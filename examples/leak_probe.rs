@@ -1,16 +1,21 @@
 //! Memory probe: repeatedly execute one artifact and report RSS growth.
 //! (Found and now guards against the `execute`-path literal leak — see
 //! runtime/engine.rs BufRef docs. Expect a flat RSS after warmup.)
-use cgcn::runtime::{Engine, In};
-use cgcn::tensor::Matrix;
-use cgcn::util::rng::Rng;
+//!
+//! XLA-only: requires `--features xla` + `make artifacts`; the native
+//! backend allocates nothing persistent per call.
 
-fn rss_kb() -> usize {
-    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
-    s.split_whitespace().nth(1).unwrap().parse::<usize>().unwrap() * 4
-}
-
+#[cfg(feature = "xla")]
 fn main() -> anyhow::Result<()> {
+    use cgcn::runtime::{Engine, In};
+    use cgcn::tensor::Matrix;
+    use cgcn::util::rng::Rng;
+
+    fn rss_kb() -> usize {
+        let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+        s.split_whitespace().nth(1).unwrap().parse::<usize>().unwrap() * 4
+    }
+
     let engine = Engine::load(&Engine::default_dir())?;
     let mut rng = Rng::new(1);
     let x = Matrix::glorot(768, 745, &mut rng);
@@ -21,8 +26,17 @@ fn main() -> anyhow::Result<()> {
     for i in 0..200 {
         engine.exec(sig, &[In::Mat(&x), In::Mat(&w)])?;
         if i % 50 == 49 {
-            println!("iter {i}: rss {} KB (delta {} KB)", rss_kb(), rss_kb().saturating_sub(r0));
+            println!(
+                "iter {i}: rss {} KB (delta {} KB)",
+                rss_kb(),
+                rss_kb().saturating_sub(r0)
+            );
         }
     }
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("leak_probe probes the PJRT engine — rebuild with --features xla");
 }

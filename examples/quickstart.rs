@@ -2,14 +2,17 @@
 //! community-based parallel ADMM, and print the per-epoch trajectory.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Runs on the native backend out of the box; picks up the XLA artifact
+//! engine instead when built with `--features xla` after `make artifacts`.
 
 use cgcn::config::HyperParams;
 use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::data::fixtures;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -33,12 +36,14 @@ fn main() -> anyhow::Result<()> {
         ws.communities.iter().map(|c| c.neighbors.clone()).collect::<Vec<_>>()
     );
 
-    // 4. Load the AOT artifacts (python ran once at `make artifacts`).
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    // 4. Pick a compute backend (XLA artifacts when available, else the
+    // pure-Rust native backend).
+    let backend = default_backend();
+    println!("backend: {}", backend.name());
 
     // 5. Train with community-parallel ADMM.
     let opts = AdmmOptions::for_mode(hp.communities);
-    let mut trainer = AdmmTrainer::new(ws, engine, opts)?;
+    let mut trainer = AdmmTrainer::new(ws, backend, opts)?;
     println!("\n{:>5} {:>10} {:>10} {:>10}", "epoch", "loss", "train", "test");
     for epoch in 0..30 {
         trainer.epoch()?;

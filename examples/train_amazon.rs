@@ -15,7 +15,7 @@ use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::data::synth;
 use cgcn::metrics::RunReport;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -34,7 +34,8 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}\n", ds.stats_row());
 
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
+    let backend = default_backend();
+    log::info!("backend: {}", backend.name());
     let hp = HyperParams::for_dataset(dataset);
     let mut reports: Vec<RunReport> = Vec::new();
 
@@ -45,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         hp_m.communities = m;
         let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
         let mut trainer =
-            AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(m))?;
+            AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(m))?;
         log::info!("training {label} ({epochs} epochs)");
         let mut rep = trainer.train(epochs, label)?;
         rep.dataset = ds.name.clone();
@@ -58,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     let ws = Arc::new(Workspace::build(&ds, &hp_b, Method::Metis)?);
     for name in ["adam", "adagrad", "gd", "adadelta"] {
         let opt = Optimizer::parse(name, None)?;
-        let mut trainer = BaselineTrainer::new(ws.clone(), engine.clone(), opt)?;
+        let mut trainer = BaselineTrainer::new(ws.clone(), backend.clone(), opt)?;
         log::info!("training {name} ({epochs} epochs)");
         let mut rep = trainer.train(epochs)?;
         rep.dataset = ds.name.clone();

@@ -2,11 +2,11 @@
 //! Adagrad and Adadelta — the four comparison methods of the paper's
 //! Figure 2.
 //!
-//! Gradients flow through the same AOT artifacts + Rust SpMM pipeline as
-//! the ADMM trainer (see python/compile/model.py `bp_*` entries); the
-//! optimizers themselves run host-side (they're O(params), off the
-//! roofline). Paper learning rates: 1e-3 for Adam/Adagrad/Adadelta, 1e-1
-//! for GD.
+//! Gradients flow through the same [`ComputeBackend`] kernels + SpMM
+//! pipeline as the ADMM trainer (see python/compile/model.py `bp_*`
+//! entries for the kernel spec); the optimizers themselves run host-side
+//! (they're O(params), off the roofline). Paper learning rates: 1e-3 for
+//! Adam/Adagrad/Adadelta, 1e-1 for GD.
 
 mod optim;
 
@@ -15,7 +15,7 @@ pub use optim::{OptState, Optimizer};
 use crate::coordinator::clock::timed;
 use crate::coordinator::{evaluate_forward, Workspace};
 use crate::metrics::{EpochRecord, RunReport};
-use crate::runtime::{Engine, In};
+use crate::runtime::ComputeBackend;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
@@ -27,14 +27,18 @@ use std::time::Instant;
 /// the paper's experiments).
 pub struct BaselineTrainer {
     ws: Arc<Workspace>,
-    engine: Arc<Engine>,
+    backend: Arc<dyn ComputeBackend>,
     opt: Optimizer,
     w: Vec<Matrix>,
     opt_state: Vec<OptState>,
 }
 
 impl BaselineTrainer {
-    pub fn new(ws: Arc<Workspace>, engine: Arc<Engine>, opt: Optimizer) -> Result<BaselineTrainer> {
+    pub fn new(
+        ws: Arc<Workspace>,
+        backend: Arc<dyn ComputeBackend>,
+        opt: Optimizer,
+    ) -> Result<BaselineTrainer> {
         ensure!(
             ws.layers == 2,
             "baseline trainer supports the paper's 2-layer GCN (got L={})",
@@ -48,7 +52,7 @@ impl BaselineTrainer {
         let opt_state = w.iter().map(|wl| OptState::new(wl.shape())).collect();
         Ok(BaselineTrainer {
             ws,
-            engine,
+            backend,
             opt,
             w,
             opt_state,
@@ -58,54 +62,27 @@ impl BaselineTrainer {
     /// One full-batch training step; returns the loss.
     pub fn step(&mut self) -> Result<f64> {
         let ws = &self.ws;
-        let n = ws.n_glob;
-        let (c0, c1, c2) = (ws.dims[0], ws.dims[1], ws.dims[2]);
+        let backend = &*self.backend;
 
         // Forward: Z1 = f(H0 W1); H1 = Ã Z1.
-        let z1 = self
-            .engine
-            .exec(
-                &ws.sig_nab("fwd_relu", n, c0, c1),
-                &[In::Mat(&ws.h0_glob), In::Mat(&self.w[0])],
-            )?
-            .remove(0)
-            .into_mat();
-        let h1 = ws.a_glob.spmm(&z1);
+        let z1 = backend.fwd_relu(&ws.h0_glob, &self.w[0])?;
+        let h1 = backend.spmm(&ws.a_glob, &z1);
 
         // Head: loss + dW2 + dH1.
-        let outs = self.engine.exec(
-            &ws.sig_nab("bp_out_grads", n, c1, c2),
-            &[
-                In::Mat(&h1),
-                In::Mat(&self.w[1]),
-                In::Mat(&ws.y_glob),
-                In::Vec(&ws.train_mask_glob),
-                In::Scalar(ws.denom),
-            ],
-        )?;
-        let mut it = outs.into_iter();
-        let loss = it.next().unwrap().scalar() as f64;
-        let dw2 = it.next().unwrap().into_mat();
-        let dh1 = it.next().unwrap().into_mat();
+        let (loss, dw2, dh1) =
+            backend.bp_out_grads(&h1, &self.w[1], &ws.y_glob, &ws.train_mask_glob, ws.denom)?;
 
         // dZ1 = Ãᵀ dH1 = Ã dH1 (symmetric), then the hidden tail.
-        let dz1 = ws.a_glob.spmm(&dh1);
-        let dw1 = self
-            .engine
-            .exec(
-                &ws.sig_nab("bp_hidden_grads", n, c0, c1),
-                &[In::Mat(&ws.h0_glob), In::Mat(&self.w[0]), In::Mat(&dz1)],
-            )?
-            .remove(0)
-            .into_mat();
+        let dz1 = backend.spmm(&ws.a_glob, &dh1);
+        let dw1 = backend.bp_hidden_grads(&ws.h0_glob, &self.w[0], &dz1)?;
 
         self.opt.apply(&mut self.w[0], &dw1, &mut self.opt_state[0]);
         self.opt.apply(&mut self.w[1], &dw2, &mut self.opt_state[1]);
-        Ok(loss)
+        Ok(loss as f64)
     }
 
     pub fn evaluate(&self) -> Result<(f64, f64, f64)> {
-        evaluate_forward(&self.ws, &self.engine, &self.w)
+        evaluate_forward(&self.ws, &*self.backend, &self.w)
     }
 
     pub fn train(&mut self, epochs: usize) -> Result<RunReport> {

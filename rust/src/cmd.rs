@@ -73,7 +73,8 @@ pub fn cmd_data(args: &Args) -> i32 {
     0
 }
 
-/// `cgcn artifacts` — list and compile-check artifacts.
+/// `cgcn artifacts` — list and compile-check artifacts (XLA backend only).
+#[cfg(feature = "xla")]
 pub fn cmd_artifacts(_args: &Args) -> i32 {
     let dir = crate::runtime::Engine::default_dir();
     let engine = match crate::runtime::Engine::load(&dir) {
@@ -84,6 +85,14 @@ pub fn cmd_artifacts(_args: &Args) -> i32 {
         }
     };
     println!("{} artifacts indexed in {}", engine.len(), dir.display());
+    0
+}
+
+/// `cgcn artifacts` without the `xla` feature: nothing to index — the
+/// native backend needs no artifacts.
+#[cfg(not(feature = "xla"))]
+pub fn cmd_artifacts(_args: &Args) -> i32 {
+    println!("built without the `xla` feature — the native backend uses no artifacts");
     0
 }
 

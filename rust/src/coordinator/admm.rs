@@ -14,10 +14,22 @@
 //! 6. communities: dual update U_m (eq. 3)
 //! ```
 //!
-//! Serial mode (M = 1) runs the same code with an empty message graph; in
-//! parallel mode, cross-community terms are strictly Jacobi (k-indexed) so
-//! phases 4–6 run embarrassingly parallel across communities, while each
-//! agent's *own-block* Z_L anchor uses its freshly updated Z_{L-1,m}
+//! Phases 4–6 are owned by [`CommunityAgent`]s and scheduled by an
+//! executor chosen with [`ExecMode`]:
+//!
+//! - [`ExecMode::Serial`] runs the agents in a loop on the caller's
+//!   thread, pricing "parallel" phases in virtual time at the critical
+//!   path over agents (see [`super::clock`]) — the seed's 1-core model.
+//! - [`ExecMode::Threads`] runs each agent as a real task on the in-house
+//!   worker pool with the p/s message phase exchanged through `mpsc`
+//!   channels, so multi-core hosts observe the speedup in *wall clock*
+//!   too. Message folds are order-canonicalised, so both modes produce
+//!   bitwise-identical state; the virtual accounting is computed the same
+//!   way (per-agent task seconds, max over agents per phase).
+//!
+//! Cross-community terms are strictly Jacobi (k-indexed) so the agents are
+//! embarrassingly parallel within an epoch, while each agent's *own-block*
+//! Z_L anchor uses its freshly updated Z_{L-1,m}
 //! (`AdmmOptions::gauss_seidel`; the pure-Jacobi variant is an ablation).
 //!
 //! Deviation notes vs the paper's literal text (DESIGN.md §6):
@@ -29,20 +41,43 @@
 //!   (`update_w_distributed`) rather than the centralised agent-(M+1)
 //!   gather; `AdmmOptions::central_w` restores the paper-literal schedule.
 
+use super::agent::{AgentCtx, CommunityAgent, PMsg, SMsg, BT_EPS, BT_MAX_DOUBLINGS, STEP_MIN};
 use super::clock::{timed, EpochClock, LinkModel};
 use super::workspace::Workspace;
 use crate::metrics::{EpochRecord, RunReport};
-use crate::runtime::{Engine, In};
+use crate::runtime::ComputeBackend;
 use crate::tensor::{argmax_rows, Matrix};
+use crate::util::pool::{resolve_threads, scoped_map, Pool};
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// Backtracking safety margin and bounds.
-const BT_EPS: f32 = 1e-6;
-const BT_MAX_DOUBLINGS: usize = 40;
-const STEP_MIN: f32 = 1e-8;
+/// How the community agents execute within one process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One thread, virtual-time accounting only (seed behaviour).
+    Serial,
+    /// Real shared-memory parallelism on the worker pool.
+    Threads,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "serial" => Some(ExecMode::Serial),
+            "threads" => Some(ExecMode::Threads),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Serial => "serial",
+            ExecMode::Threads => "threads",
+        }
+    }
+}
 
 /// Mutable ADMM state.
 pub struct AdmmState {
@@ -72,6 +107,10 @@ pub struct AdmmOptions {
     /// blocks — same math, communication- and compute-parallel.
     pub central_w: bool,
     pub link: LinkModel,
+    /// Agent executor (serial loop vs worker pool).
+    pub exec: ExecMode,
+    /// Worker threads for `exec == Threads` (0 = all available cores).
+    pub threads: usize,
 }
 
 impl AdmmOptions {
@@ -90,26 +129,36 @@ impl AdmmOptions {
             gauss_seidel: true,
             central_w: false,
             link: LinkModel::new(10_000.0, 100.0),
+            exec: ExecMode::Serial,
+            threads: 0,
         }
     }
 }
 
 pub struct AdmmTrainer {
     pub ws: Arc<Workspace>,
-    pub engine: Arc<Engine>,
+    pub backend: Arc<dyn ComputeBackend>,
     pub opts: AdmmOptions,
     pub state: AdmmState,
+    /// Worker pool for `ExecMode::Threads` (one task per community agent).
+    pool: Option<Pool>,
+    /// Resolved thread count (1 in serial mode).
+    threads: usize,
 }
 
 impl AdmmTrainer {
     /// Initialise: Glorot weights, Z by a forward pass (dlADMM-style warm
     /// start), U = 0.
-    pub fn new(ws: Arc<Workspace>, engine: Arc<Engine>, opts: AdmmOptions) -> Result<AdmmTrainer> {
-        // Compile every artifact this run will touch up front — XLA
+    pub fn new(
+        ws: Arc<Workspace>,
+        backend: Arc<dyn ComputeBackend>,
+        opts: AdmmOptions,
+    ) -> Result<AdmmTrainer> {
+        // Pre-compile every artifact this run will touch up front — XLA
         // compilation is a startup cost in any real deployment and must not
-        // pollute the per-epoch timings.
+        // pollute the per-epoch timings (no-op on the native backend).
         let sigs = training_sigs(&ws);
-        engine.warmup(&sigs)?;
+        backend.warmup(&sigs)?;
 
         let mut rng = Rng::new(ws.hp.seed);
         let l = ws.layers;
@@ -123,26 +172,16 @@ impl AdmmTrainer {
         let mut z_glob: Vec<Matrix> = Vec::with_capacity(l);
         let mut h = ws.h0_glob.clone(); // Ã X
         for li in 1..=l {
-            let (a, b) = (dims[li - 1], dims[li]);
-            let n = ws.n_glob;
             let zl = if li < l {
                 // f(H W) — H already aggregated.
-                exec1(
-                    &engine,
-                    &ws.sig_nab("fwd_relu", n, a, b),
-                    &[In::Mat(&h), In::Mat(&w[li - 1])],
-                )?
+                backend.fwd_relu(&h, &w[li - 1])?
             } else {
                 // Output layer is linear: Ã Z W — V then SpMM.
-                let v = exec1(
-                    &engine,
-                    &ws.sig_nab("mm_nn", n, a, b),
-                    &[In::Mat(&z_glob[li - 2]), In::Mat(&w[li - 1])],
-                )?;
-                ws.a_glob.spmm(&v)
+                let v = backend.mm_nn(&z_glob[li - 2], &w[li - 1])?;
+                backend.spmm(&ws.a_glob, &v)
             };
             if li < l {
-                h = ws.a_glob.spmm(&zl);
+                h = backend.spmm(&ws.a_glob, &zl);
             }
             z_glob.push(zl);
         }
@@ -150,6 +189,25 @@ impl AdmmTrainer {
         let u = (0..ws.m)
             .map(|_| Matrix::zeros(ws.n_pad, dims[l]))
             .collect();
+
+        // Agent executor resources.
+        let threads = match opts.exec {
+            ExecMode::Serial => 1,
+            ExecMode::Threads => resolve_threads(opts.threads),
+        };
+        let pool = if opts.exec == ExecMode::Threads {
+            Some(Pool::new(threads.min(ws.m.max(1))))
+        } else {
+            None
+        };
+        if opts.exec == ExecMode::Threads {
+            log::info!(
+                "agent runtime: {} communities on {} pool threads (backend={})",
+                ws.m,
+                threads.min(ws.m.max(1)),
+                backend.name()
+            );
+        }
 
         // τ/θ start conservatively at 1.0 and adapt both ways: backtracking
         // doubles them when the quadratic majoriser is violated, and the
@@ -165,92 +223,19 @@ impl AdmmTrainer {
                 theta: vec![vec![1.0; ws.m]; l.saturating_sub(1)],
             },
             ws,
-            engine,
+            backend,
             opts,
+            pool,
+            threads,
         })
     }
 
-    // ---- artifact helpers -------------------------------------------------
-
-    fn mm_nn(&self, n: usize, a: usize, b: usize, x: &Matrix, w: &Matrix) -> Result<Matrix> {
-        exec1(
-            &self.engine,
-            &self.ws.sig_nab("mm_nn", n, a, b),
-            &[In::Mat(x), In::Mat(w)],
-        )
-    }
-
-    fn mm_tn(&self, n: usize, a: usize, b: usize, x: &Matrix, y: &Matrix) -> Result<Matrix> {
-        exec1(
-            &self.engine,
-            &self.ws.sig_nab("mm_tn", n, a, b),
-            &[In::Mat(x), In::Mat(y)],
-        )
-    }
-
-    fn mm_bt(&self, n: usize, a: usize, b: usize, x: &Matrix, w: &Matrix) -> Result<Matrix> {
-        exec1(
-            &self.engine,
-            &self.ws.sig_nab("mm_bt", n, a, b),
-            &[In::Mat(x), In::Mat(w)],
-        )
-    }
-
-    fn hidden_residual(&self, n: usize, c: usize, pre: &Matrix, zt: &Matrix) -> Result<(f32, Matrix)> {
-        let outs = self.engine.exec(
-            &self.ws.sig_nc("hidden_residual", n, c),
-            &[In::Mat(pre), In::Mat(zt), In::Scalar(self.ws.hp.nu)],
-        )?;
-        let mut it = outs.into_iter();
-        Ok((it.next().unwrap().scalar(), it.next().unwrap().into_mat()))
-    }
-
-    fn out_residual(
-        &self,
-        n: usize,
-        c: usize,
-        pre: &Matrix,
-        zt: &Matrix,
-        u: &Matrix,
-    ) -> Result<(f32, Matrix)> {
-        let outs = self.engine.exec(
-            &self.ws.sig_nc("out_residual", n, c),
-            &[
-                In::Mat(pre),
-                In::Mat(zt),
-                In::Mat(u),
-                In::Scalar(self.ws.hp.rho),
-            ],
-        )?;
-        let mut it = outs.into_iter();
-        Ok((it.next().unwrap().scalar(), it.next().unwrap().into_mat()))
-    }
-
-    fn hidden_phi(&self, n: usize, c: usize, pre: &Matrix, zt: &Matrix) -> Result<f32> {
-        Ok(self
-            .engine
-            .exec(
-                &self.ws.sig_nc("hidden_phi", n, c),
-                &[In::Mat(pre), In::Mat(zt), In::Scalar(self.ws.hp.nu)],
-            )?
-            .remove(0)
-            .scalar())
-    }
-
-    fn out_phi(&self, n: usize, c: usize, pre: &Matrix, zt: &Matrix, u: &Matrix) -> Result<f32> {
-        Ok(self
-            .engine
-            .exec(
-                &self.ws.sig_nc("out_phi", n, c),
-                &[
-                    In::Mat(pre),
-                    In::Mat(zt),
-                    In::Mat(u),
-                    In::Scalar(self.ws.hp.rho),
-                ],
-            )?
-            .remove(0)
-            .scalar())
+    /// Worker threads available to data-parallel phases (1 in serial mode).
+    fn exec_threads(&self) -> usize {
+        match self.opts.exec {
+            ExecMode::Serial => 1,
+            ExecMode::Threads => self.threads,
+        }
     }
 
     // ---- W subproblem (§3.1) ----------------------------------------------
@@ -258,37 +243,34 @@ impl AdmmTrainer {
     /// Update W_l (1-based l) given gathered global Z^k / U^k. Returns the
     /// subproblem value after the accepted step.
     fn update_w(&mut self, l: usize, z_glob: &[Matrix], u_glob: &Matrix) -> Result<f32> {
-        let ws = &self.ws;
-        let n = ws.n_glob;
-        let (a, b) = (ws.dims[l - 1], ws.dims[l]);
+        let ws = self.ws.clone();
+        let backend = &*self.backend;
         let last = l == ws.layers;
         let zprev = if l == 1 { &ws.x_glob } else { &z_glob[l - 2] };
         let zl = &z_glob[l - 1];
+        let (nu, rho) = (ws.hp.nu, ws.hp.rho);
 
-        let phi_at = |w: &Matrix| -> Result<(f32, Matrix)> {
+        let phi_at = |w: &Matrix| -> Result<f32> {
             // pre = Ã (Z_{l-1} W) — SpMM over the projected width.
-            let v = self.mm_nn(n, a, b, zprev, w)?;
-            let pre = ws.a_glob.spmm(&v);
-            Ok((
-                if last {
-                    self.out_phi(n, b, &pre, zl, u_glob)?
-                } else {
-                    self.hidden_phi(n, b, &pre, zl)?
-                },
-                pre,
-            ))
+            let v = backend.mm_nn(zprev, w)?;
+            let pre = backend.spmm(&ws.a_glob, &v);
+            if last {
+                backend.out_phi(&pre, zl, u_glob, rho)
+            } else {
+                backend.hidden_phi(&pre, zl, nu)
+            }
         };
 
         // Value + residual + gradient at W^k.
-        let v = self.mm_nn(n, a, b, zprev, &self.state.w[l - 1])?;
-        let pre = ws.a_glob.spmm(&v);
+        let v = backend.mm_nn(zprev, &self.state.w[l - 1])?;
+        let pre = backend.spmm(&ws.a_glob, &v);
         let (phi0, r) = if last {
-            self.out_residual(n, b, &pre, zl, u_glob)?
+            backend.out_residual(&pre, zl, u_glob, rho)?
         } else {
-            self.hidden_residual(n, b, &pre, zl)?
+            backend.hidden_residual(&pre, zl, nu)?
         };
-        let ar = ws.a_glob.spmm(&r);
-        let gw = self.mm_tn(n, a, b, zprev, &ar)?;
+        let ar = backend.spmm(&ws.a_glob, &r);
+        let gw = backend.mm_tn(zprev, &ar)?;
         let gsq = gw.frob_norm_sq() as f32;
 
         // Backtracking on τ: accept W⁺ = W − g/τ once
@@ -298,7 +280,7 @@ impl AdmmTrainer {
         for _ in 0..BT_MAX_DOUBLINGS {
             let mut cand = self.state.w[l - 1].clone();
             cand.axpy(-1.0 / tau, &gw);
-            let (phi_c, _) = phi_at(&cand)?;
+            let phi_c = phi_at(&cand)?;
             if phi_c <= phi0 - gsq / (2.0 * tau) + BT_EPS * phi0.abs().max(1.0) {
                 accepted = Some((cand, phi_c));
                 break;
@@ -321,70 +303,74 @@ impl AdmmTrainer {
     /// ∇φ_l(W) = Σ_m S_mᵀ R_m         where S_m = Σ_r Ã_{m,r} Z_{l-1,r},
     /// ```
     ///
-    /// so each community computes its partial from local + boundary rows,
-    /// the leader reduces, and τ backtracking only re-evaluates the cheap
-    /// `pre_m = S_m W_c` products (S_m is fixed across trials). This is the
-    /// "update W_l for different l in parallel" of Algorithm 1 with the
-    /// row-block reduction any multi-machine deployment would use; the
-    /// paper-literal centralised variant (gather Z at agent M+1) is kept
-    /// behind `AdmmOptions::central_w` as an ablation.
+    /// so each community computes its partial from local + boundary rows
+    /// and the leader reduces. Per-community partials are independent, so
+    /// in `--exec threads` mode they run on scoped workers; the reduction
+    /// always folds in community order, keeping results bitwise identical
+    /// to the serial schedule. τ backtracking only re-evaluates the cheap
+    /// `pre_m = S_m W_c` products (S_m is fixed across trials).
     ///
-    /// Returns per-community compute seconds and the number of trials
-    /// (for broadcast byte accounting).
+    /// Returns the number of trials (for broadcast byte accounting) and
+    /// accumulates per-community compute seconds.
     fn update_w_distributed(&mut self, l: usize, per_comm_secs: &mut [f64]) -> Result<usize> {
         let ws = self.ws.clone();
         let n = ws.n_pad;
         let (a, b) = (ws.dims[l - 1], ws.dims[l]);
         let last = l == ws.layers;
+        let (nu, rho) = (ws.hp.nu, ws.hp.rho);
+        let backend = self.backend.clone();
+        let par = self.exec_threads();
 
         // S_m = Σ_r Ã_{m,r} Z_{l-1,r} — one sparse aggregate per community,
         // reused by every backtracking trial. For l = 1 it equals the
         // *static* per-community H0 rows (X never changes), so no SpMM at
-        // all. Marshalled once into a Prepared literal — the trial loop
-        // re-sends only the small W candidate.
-        let mut s_per: Vec<crate::runtime::Prepared> = Vec::with_capacity(ws.m);
-        for (mi, comm) in ws.communities.iter().enumerate() {
+        // all.
+        let state_z = &self.state.z;
+        let s_results: Vec<(Option<Matrix>, f64)> = scoped_map(par, ws.m, |mi| {
+            if l == 1 {
+                return (None, 0.0);
+            }
             let t0 = Instant::now();
-            let s = if l == 1 {
-                self.engine.prepare(&ws.h0_comm[mi])?
-            } else {
-                let mut s = Matrix::zeros(n, a);
-                for r in comm.neighbors.iter().copied().chain([mi]) {
-                    if let Some(blk) = comm.blocks.get(&r) {
-                        s.add_assign(&blk.spmm(&self.state.z[l - 2][r]));
-                    }
+            let comm = &ws.communities[mi];
+            let mut s = Matrix::zeros(n, a);
+            for r in comm.neighbors.iter().copied().chain([mi]) {
+                if let Some(blk) = comm.blocks.get(&r) {
+                    s.add_assign(&backend.spmm(blk, &state_z[l - 2][r]));
                 }
-                self.engine.prepare(&s)?
-            };
-            per_comm_secs[mi] += t0.elapsed().as_secs_f64();
-            s_per.push(s);
+            }
+            (Some(s), t0.elapsed().as_secs_f64())
+        });
+        let mut s_own: Vec<Option<Matrix>> = Vec::with_capacity(ws.m);
+        for (mi, (s, secs)) in s_results.into_iter().enumerate() {
+            per_comm_secs[mi] += secs;
+            s_own.push(s);
         }
-        let mm_nn_sig = ws.sig_nab("mm_nn", n, a, b);
-        let mm_tn_sig = ws.sig_nab("mm_tn", n, a, b);
+        let s_refs: Vec<&Matrix> = (0..ws.m)
+            .map(|mi| s_own[mi].as_ref().unwrap_or(&ws.h0_comm[mi]))
+            .collect();
 
-        // Partial values/gradients at W^k; leader reduces.
+        // Partial values/gradients at W^k; leader reduces in m order.
+        let w_k = &self.state.w[l - 1];
+        let zl = &self.state.z[l - 1];
+        let u = &self.state.u;
+        let partials: Vec<Result<(f32, Matrix, f64)>> = scoped_map(par, ws.m, |mi| {
+            let t0 = Instant::now();
+            let pre = backend.mm_nn(s_refs[mi], w_k)?;
+            let (phi_m, r_m) = if last {
+                backend.out_residual(&pre, &zl[mi], &u[mi], rho)?
+            } else {
+                backend.hidden_residual(&pre, &zl[mi], nu)?
+            };
+            let g_m = backend.mm_tn(s_refs[mi], &r_m)?;
+            Ok((phi_m, g_m, t0.elapsed().as_secs_f64()))
+        });
         let mut phi0 = 0.0f32;
         let mut gw = Matrix::zeros(a, b);
-        for mi in 0..ws.m {
-            let t0 = Instant::now();
-            let pre = exec1(
-                &self.engine,
-                &mm_nn_sig,
-                &[In::Prep(&s_per[mi]), In::Mat(&self.state.w[l - 1])],
-            )?;
-            let (phi_m, r_m) = if last {
-                self.out_residual(n, b, &pre, &self.state.z[l - 1][mi], &self.state.u[mi])?
-            } else {
-                self.hidden_residual(n, b, &pre, &self.state.z[l - 1][mi])?
-            };
-            let g_m = exec1(
-                &self.engine,
-                &mm_tn_sig,
-                &[In::Prep(&s_per[mi]), In::Mat(&r_m)],
-            )?;
+        for (mi, res) in partials.into_iter().enumerate() {
+            let (phi_m, g_m, secs) = res?;
             phi0 += phi_m;
             gw.add_assign(&g_m);
-            per_comm_secs[mi] += t0.elapsed().as_secs_f64();
+            per_comm_secs[mi] += secs;
         }
         let gsq = gw.frob_norm_sq() as f32;
 
@@ -397,20 +383,22 @@ impl AdmmTrainer {
             trials += 1;
             let mut cand = self.state.w[l - 1].clone();
             cand.axpy(-1.0 / tau, &gw);
-            let mut phi_c = 0.0f32;
-            for mi in 0..ws.m {
+            let cand_ref = &cand;
+            let trial: Vec<Result<(f32, f64)>> = scoped_map(par, ws.m, |mi| {
                 let t0 = Instant::now();
-                let pre = exec1(
-                    &self.engine,
-                    &mm_nn_sig,
-                    &[In::Prep(&s_per[mi]), In::Mat(&cand)],
-                )?;
-                phi_c += if last {
-                    self.out_phi(n, b, &pre, &self.state.z[l - 1][mi], &self.state.u[mi])?
+                let pre = backend.mm_nn(s_refs[mi], cand_ref)?;
+                let phi = if last {
+                    backend.out_phi(&pre, &zl[mi], &u[mi], rho)?
                 } else {
-                    self.hidden_phi(n, b, &pre, &self.state.z[l - 1][mi])?
+                    backend.hidden_phi(&pre, &zl[mi], nu)?
                 };
-                per_comm_secs[mi] += t0.elapsed().as_secs_f64();
+                Ok((phi, t0.elapsed().as_secs_f64()))
+            });
+            let mut phi_c = 0.0f32;
+            for (mi, res) in trial.into_iter().enumerate() {
+                let (phi, secs) = res?;
+                phi_c += phi;
+                per_comm_secs[mi] += secs;
             }
             if phi_c <= phi0 - gsq / (2.0 * tau) + BT_EPS * phi0.abs().max(1.0) {
                 accepted = Some(cand);
@@ -435,102 +423,324 @@ impl AdmmTrainer {
         Ok(trials)
     }
 
-    // ---- message phase (Appendix A eq. 4) -----------------------------------
+    // ---- agent phases (4–6) -------------------------------------------------
 
-    /// Per-community first/second-order message computation for epoch k.
-    ///
-    /// First order (eq. 4 top): `v = Z_{l,m} W_{l+1}`, diag `Ã_mm v`, and
-    /// outgoing `p_{l,m→r} = Ã_{r,m} v`. Second order (eq. 4 bottom),
-    /// computed at the *sender* r from its received-p sums — exactly how a
-    /// distributed deployment forwards two-hop information through one-hop
-    /// links. Returns `MessagePhase` plus per-community compute seconds.
-    fn message_phase(&self) -> Result<(MessagePhase, Vec<f64>)> {
-        let ws = &self.ws;
-        let l_total = ws.layers;
-        let n = ws.n_pad;
-        let mut ph = MessagePhase {
-            p_full: vec![Vec::new(); l_total],
-            p_cross: vec![Vec::new(); l_total],
-            p_out: vec![vec![Vec::new(); ws.m]; l_total],
-            s_in: vec![vec![Vec::new(); ws.m]; l_total],
+    /// Move per-community state out into [`CommunityAgent`]s, run phases
+    /// 4–6 on the configured executor, and write the state back. Returns
+    /// per-agent (message, z-update) compute seconds plus per-sender byte
+    /// lists for the p and s exchanges.
+    #[allow(clippy::type_complexity)]
+    fn run_agent_phases(&mut self) -> Result<(Vec<f64>, Vec<f64>, Vec<Vec<u64>>, Vec<Vec<u64>>)> {
+        let m = self.ws.m;
+        let mut agents: Vec<CommunityAgent> = (0..m).map(|mi| self.take_agent(mi)).collect();
+
+        // State is always written back — even on error — so a failed epoch
+        // leaves the trainer with its agents' last consistent state rather
+        // than 0×0 placeholders. (A panicked pool task can still lose its
+        // agent; the error is propagated either way.)
+        match self.opts.exec {
+            ExecMode::Serial => {
+                let result = self.agents_serial(&mut agents);
+                for ag in agents {
+                    self.put_agent(ag);
+                }
+                result
+            }
+            ExecMode::Threads => {
+                let (recovered, result) = self.agents_threaded(agents);
+                for ag in recovered {
+                    self.put_agent(ag);
+                }
+                result
+            }
+        }
+    }
+
+    /// Serial executor: the agents run in a loop on this thread; messages
+    /// move through plain vectors, received p by reference (zero-copy, as
+    /// the seed's fold did). Virtual time still prices each phase at the
+    /// critical path over agents.
+    #[allow(clippy::type_complexity)]
+    fn agents_serial(
+        &self,
+        agents: &mut [CommunityAgent],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<Vec<u64>>, Vec<Vec<u64>>)> {
+        let ws = &*self.ws;
+        let ctx = AgentCtx {
+            ws,
+            backend: &*self.backend,
+            w: &self.state.w,
+            gauss_seidel: self.opts.gauss_seidel,
         };
-        let mut secs = vec![0.0f64; ws.m];
+        let m = ws.m;
+        let mut msg_secs = vec![0.0f64; m];
+        let mut z_secs = vec![0.0f64; m];
 
-        // Stage 1: every community computes its projections and products.
-        let mut p_own: Vec<Vec<Matrix>> = vec![Vec::new(); l_total];
-        for mi in 0..ws.m {
+        // Phase A: first-order products.
+        let mut p_owns: Vec<Vec<Matrix>> = Vec::with_capacity(m);
+        let mut p_outs: Vec<Vec<PMsg>> = Vec::with_capacity(m);
+        for ag in agents.iter() {
             let t0 = Instant::now();
-            let comm = &ws.communities[mi];
-            for l in 0..l_total {
-                let (a, b) = (ws.dims[l], ws.dims[l + 1]);
-                let zsrc = if l == 0 {
-                    &comm.x
-                } else {
-                    &self.state.z[l - 1][mi]
+            let (own, out) = ag.p_products(&ctx)?;
+            msg_secs[ag.mi] += t0.elapsed().as_secs_f64();
+            p_owns.push(own);
+            p_outs.push(out);
+        }
+        let p_bytes = p_byte_lists(ws, &p_outs);
+
+        // Route p by reference — senders keep ownership for phase C.
+        let mut p_ins: Vec<Vec<&PMsg>> = (0..m).map(|_| Vec::new()).collect();
+        for out in &p_outs {
+            for msg in out {
+                p_ins[msg.dst].push(msg);
+            }
+        }
+
+        // Phase B: fold + second-order messages.
+        let mut fulls: Vec<Vec<Matrix>> = Vec::with_capacity(m);
+        let mut crosses: Vec<Vec<Matrix>> = Vec::with_capacity(m);
+        let mut s_outs: Vec<Vec<SMsg>> = Vec::with_capacity(m);
+        for (i, ag) in agents.iter().enumerate() {
+            let t0 = Instant::now();
+            let (full, cross) = ag.fold_p(&ctx, &p_owns[i], &mut p_ins[i]);
+            let s = ag.s_messages(&ctx, &full, &p_ins[i])?;
+            msg_secs[ag.mi] += t0.elapsed().as_secs_f64();
+            fulls.push(full);
+            crosses.push(cross);
+            s_outs.push(s);
+        }
+        let s_bytes = s_byte_lists(ws, &s_outs);
+
+        // Route s (moves — senders are done with them).
+        let mut s_ins: Vec<Vec<SMsg>> = (0..m).map(|_| Vec::new()).collect();
+        for out in s_outs {
+            for msg in out {
+                s_ins[msg.dst].push(msg);
+            }
+        }
+
+        // Phase C: Z/U updates.
+        for (i, ag) in agents.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            ag.update_z_u(&ctx, &fulls[i], &crosses[i], &p_outs[i], &mut s_ins[i])?;
+            z_secs[i] += t0.elapsed().as_secs_f64();
+        }
+        Ok((msg_secs, z_secs, p_bytes, s_bytes))
+    }
+
+    /// Threaded executor: one pool task per agent per phase, with the p/s
+    /// messages exchanged through per-community `mpsc` mailboxes. Stage
+    /// barriers (collect-all between phases) give every receiver its full
+    /// inbox; sorting inside the agent makes fold order — and therefore
+    /// the result — identical to the serial executor, bit for bit.
+    ///
+    /// Always returns the agents it could recover (so the caller can
+    /// restore trainer state even when the epoch errors); an agent inside
+    /// a task that panicked is lost.
+    #[allow(clippy::type_complexity)]
+    fn agents_threaded(
+        &self,
+        agents: Vec<CommunityAgent>,
+    ) -> (
+        Vec<CommunityAgent>,
+        Result<(Vec<f64>, Vec<f64>, Vec<Vec<u64>>, Vec<Vec<u64>>)>,
+    ) {
+        let pool = self.pool.as_ref().expect("threads mode without a pool");
+        let ws = self.ws.clone();
+        let backend = self.backend.clone();
+        let w = Arc::new(self.state.w.clone());
+        let gs = self.opts.gauss_seidel;
+        let m = ws.m;
+        let mut msg_secs = vec![0.0f64; m];
+        let mut z_secs = vec![0.0f64; m];
+
+        // Per-community p mailboxes.
+        let mut p_txs = Vec::with_capacity(m);
+        let mut p_rxs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = mpsc::channel::<PMsg>();
+            p_txs.push(tx);
+            p_rxs.push(rx);
+        }
+
+        // ---- Phase A ------------------------------------------------------
+        let (done_tx, done_rx) = mpsc::channel();
+        for ag in agents {
+            let ws = ws.clone();
+            let backend = backend.clone();
+            let w = w.clone();
+            let p_txs = p_txs.clone();
+            let done_tx = done_tx.clone();
+            pool.execute(move || {
+                let t0 = Instant::now();
+                let ctx = AgentCtx {
+                    ws: &ws,
+                    backend: &*backend,
+                    w: &w,
+                    gauss_seidel: gs,
                 };
-                let v = self.mm_nn(n, a, b, zsrc, &self.state.w[l])?;
-                p_own[l].push(comm.blocks[&mi].spmm(&v));
-                for &r in &comm.neighbors {
-                    // Ã_{r,m} v — the rows live on r; this is message m→r.
-                    ph.p_out[l][mi].push((r, comm.blocks_t[&r].spmm(&v)));
+                let res = ag.p_products(&ctx).map(|(own, out)| {
+                    for msg in &out {
+                        let _ = p_txs[msg.dst].send(msg.clone());
+                    }
+                    (own, out)
+                });
+                let secs = t0.elapsed().as_secs_f64();
+                let _ = done_tx.send((ag, res, secs));
+            });
+        }
+        drop(done_tx);
+        drop(p_txs);
+        let mut slots_a: Vec<Option<(CommunityAgent, Vec<Matrix>, Vec<PMsg>)>> =
+            (0..m).map(|_| None).collect();
+        let mut failed: Vec<CommunityAgent> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..m {
+            let Ok((ag, res, secs)) = done_rx.recv() else {
+                first_err = first_err.or(Some(anyhow::anyhow!("agent task panicked in phase A")));
+                break;
+            };
+            let mi = ag.mi;
+            msg_secs[mi] += secs;
+            match res {
+                Ok((own, out)) => slots_a[mi] = Some((ag, own, out)),
+                Err(e) => {
+                    first_err = first_err.or(Some(e));
+                    failed.push(ag);
                 }
             }
-            secs[mi] += t0.elapsed().as_secs_f64();
+        }
+        if let Some(e) = first_err {
+            failed.extend(slots_a.into_iter().flatten().map(|(ag, _, _)| ag));
+            return (failed, Err(e));
+        }
+        let p_bytes: Vec<Vec<u64>> = slots_a
+            .iter()
+            .map(|s| p_bytes_for(&ws, &s.as_ref().expect("missing agent").2))
+            .collect();
+
+        // ---- Phase B ------------------------------------------------------
+        let mut s_txs = Vec::with_capacity(m);
+        let mut s_rxs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = mpsc::channel::<SMsg>();
+            s_txs.push(tx);
+            s_rxs.push(rx);
+        }
+        let (done_tx, done_rx) = mpsc::channel();
+        for (slot, p_rx) in slots_a.into_iter().zip(p_rxs) {
+            let (ag, p_own, p_out) = slot.expect("missing agent result");
+            let ws = ws.clone();
+            let backend = backend.clone();
+            let w = w.clone();
+            let s_txs = s_txs.clone();
+            let done_tx = done_tx.clone();
+            pool.execute(move || {
+                let t0 = Instant::now();
+                let ctx = AgentCtx {
+                    ws: &ws,
+                    backend: &*backend,
+                    w: &w,
+                    gauss_seidel: gs,
+                };
+                let mut p_in_owned: Vec<PMsg> = Vec::new();
+                while let Ok(msg) = p_rx.try_recv() {
+                    p_in_owned.push(msg);
+                }
+                let mut p_in: Vec<&PMsg> = p_in_owned.iter().collect();
+                let (full, cross) = ag.fold_p(&ctx, &p_own, &mut p_in);
+                let res = ag.s_messages(&ctx, &full, &p_in).map(|s_out| {
+                    // Byte-account before the matrices move into mailboxes.
+                    let bytes = s_bytes_for(&ws, &s_out);
+                    for msg in s_out {
+                        let _ = s_txs[msg.dst].send(msg);
+                    }
+                    (full, cross, p_out, bytes)
+                });
+                let secs = t0.elapsed().as_secs_f64();
+                let _ = done_tx.send((ag, res, secs));
+            });
+        }
+        drop(done_tx);
+        drop(s_txs);
+        #[allow(clippy::type_complexity)]
+        let mut slots_b: Vec<Option<(CommunityAgent, Vec<Matrix>, Vec<Matrix>, Vec<PMsg>)>> =
+            (0..m).map(|_| None).collect();
+        let mut s_bytes: Vec<Vec<u64>> = (0..m).map(|_| Vec::new()).collect();
+        for _ in 0..m {
+            let Ok((ag, res, secs)) = done_rx.recv() else {
+                first_err = first_err.or(Some(anyhow::anyhow!("agent task panicked in phase B")));
+                break;
+            };
+            let mi = ag.mi;
+            msg_secs[mi] += secs;
+            match res {
+                Ok((full, cross, p_out, bytes)) => {
+                    s_bytes[mi] = bytes;
+                    slots_b[mi] = Some((ag, full, cross, p_out))
+                }
+                Err(e) => {
+                    first_err = first_err.or(Some(e));
+                    failed.push(ag);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            failed.extend(slots_b.into_iter().flatten().map(|(ag, _, _, _)| ag));
+            return (failed, Err(e));
         }
 
-        // Stage 2: receivers fold incoming p messages (attributed to the
-        // receiver's clock).
-        for mi in 0..ws.m {
-            let t0 = Instant::now();
-            for l in 0..l_total {
-                let mut cross = Matrix::zeros(n, ws.dims[l + 1]);
-                for (src, msgs) in ph.p_out[l].iter().enumerate() {
-                    if src == mi {
-                        continue;
-                    }
-                    for (dst, mat) in msgs {
-                        if *dst == mi {
-                            cross.add_assign(mat);
-                        }
-                    }
+        // ---- Phase C ------------------------------------------------------
+        let (done_tx, done_rx) = mpsc::channel();
+        for (slot, s_rx) in slots_b.into_iter().zip(s_rxs) {
+            let (mut ag, full, cross, p_out) = slot.expect("missing agent result");
+            let ws = ws.clone();
+            let backend = backend.clone();
+            let w = w.clone();
+            let done_tx = done_tx.clone();
+            pool.execute(move || {
+                let t0 = Instant::now();
+                let ctx = AgentCtx {
+                    ws: &ws,
+                    backend: &*backend,
+                    w: &w,
+                    gauss_seidel: gs,
+                };
+                let mut s_in: Vec<SMsg> = Vec::new();
+                while let Ok(msg) = s_rx.try_recv() {
+                    s_in.push(msg);
                 }
-                let mut full = p_own[l][mi].clone();
-                full.add_assign(&cross);
-                ph.p_cross[l].push(cross);
-                ph.p_full[l].push(full);
-            }
-            secs[mi] += t0.elapsed().as_secs_f64();
+                let res = ag.update_z_u(&ctx, &full, &cross, &p_out, &mut s_in);
+                let secs = t0.elapsed().as_secs_f64();
+                let _ = done_tx.send((ag, res, secs));
+            });
         }
-
-        // Stage 3: senders assemble second-order messages s_{l,r→m} from
-        // their p sums (eq. 4) — local to r, then shipped to m. Only layers
-        // whose Z is a variable need them (l ≥ 1: Z_0 = X is fixed, so no
-        // eq.-5/6 subproblem consumes s at l = 0).
-        for r in 0..ws.m {
-            let t0 = Instant::now();
-            for &m in &ws.communities[r].neighbors {
-                for l in 1..l_total {
-                    // Σ_{r'∈N_r∪{r}\{m}} p_{l,r'→r} = P_full − p_{l,m→r}.
-                    let p_m_to_r = ph.p_out[l][m]
-                        .iter()
-                        .find(|(dst, _)| *dst == r)
-                        .map(|(_, mat)| mat)
-                        .expect("neighbor without p message");
-                    let mut sum = ph.p_full[l][r].clone();
-                    sum.axpy(-1.0, p_m_to_r);
-                    let (s1, s2) = if l + 1 < l_total {
-                        (self.state.z[l][r].clone(), sum)
-                    } else {
-                        let mut s1 = self.state.z[l_total - 1][r].clone();
-                        s1.axpy(-1.0, &sum);
-                        (s1, self.state.u[r].clone())
-                    };
-                    ph.s_in[l][m].push((r, s1, s2));
+        drop(done_tx);
+        let mut out_agents: Vec<Option<CommunityAgent>> = (0..m).map(|_| None).collect();
+        for _ in 0..m {
+            let Ok((ag, res, secs)) = done_rx.recv() else {
+                first_err = first_err.or(Some(anyhow::anyhow!("agent task panicked in phase C")));
+                break;
+            };
+            let mi = ag.mi;
+            z_secs[mi] += secs;
+            match res {
+                Ok(()) => out_agents[mi] = Some(ag),
+                Err(e) => {
+                    first_err = first_err.or(Some(e));
+                    failed.push(ag);
                 }
             }
-            secs[r] += t0.elapsed().as_secs_f64();
         }
-        Ok((ph, secs))
+        let recovered: Vec<CommunityAgent> = out_agents
+            .into_iter()
+            .flatten()
+            .chain(failed)
+            .collect();
+        if let Some(e) = first_err {
+            return (recovered, Err(e));
+        }
+        (recovered, Ok((msg_secs, z_secs, p_bytes, s_bytes)))
     }
 
     // ---- one ADMM epoch ------------------------------------------------------
@@ -539,9 +749,8 @@ impl AdmmTrainer {
         let ws = self.ws.clone();
         let mut clock = EpochClock::default();
         let l_total = ws.layers;
-        let n_pad = ws.n_pad;
 
-        // ---- 1. gather Z^k, U^k (star) -----------------------------------
+        // ---- 1–3. W update ------------------------------------------------
         if self.opts.central_w {
             // Paper-literal agent-(M+1) W update: gather Z^k/U^k, update
             // centrally (layer-parallel), broadcast W^{k+1}.
@@ -613,270 +822,74 @@ impl AdmmTrainer {
                 clock.star(&self.opts.link, &vec![per_w; ws.m]); // g down
             }
         }
+        let t_after_w = clock.train;
 
-        // ---- 4. p/s message phase ------------------------------------------
-        let (ph, msg_secs) = self.message_phase()?;
+        // ---- 4–6. agent phases (p/s messages, Z updates, dual) ------------
+        let (msg_secs, z_secs, p_bytes, s_bytes) = self.run_agent_phases()?;
         clock.parallel_phase(&msg_secs);
         if ws.m > 1 {
             // p messages m→r: nonzero only at r's boundary rows toward m
-            // (the nonzero rows of Ã_{r,m}), so only those ship.
-            let mut per_sender: Vec<Vec<u64>> = Vec::with_capacity(ws.m);
-            for mi in 0..ws.m {
-                let mut msgs = Vec::new();
-                for l in 0..l_total {
-                    for (r, _) in &ph.p_out[l][mi] {
-                        let rows = ws.communities[mi].boundary_from[r];
-                        msgs.push(ws.msg_bytes(rows, ws.dims[l + 1]));
-                    }
-                }
-                per_sender.push(msgs);
-            }
-            clock.exchange(&self.opts.link, &per_sender);
-            // s messages r→m: two dense (n_r × C_{l+1}) halves per edge,
-            // layers l ≥ 1 only.
-            let mut per_sender_s: Vec<Vec<u64>> = Vec::with_capacity(ws.m);
-            for r in 0..ws.m {
-                let mut msgs = Vec::new();
-                for l in 1..l_total {
-                    for _m in &ws.communities[r].neighbors {
-                        msgs.push(2 * ws.msg_bytes(ws.communities[r].size, ws.dims[l + 1]));
-                    }
-                }
-                per_sender_s.push(msgs);
-            }
-            clock.exchange(&self.opts.link, &per_sender_s);
+            // (the nonzero rows of Ã_{r,m}), so only those ship. s messages
+            // r→m: two dense (n_r × C_{l+1}) halves per edge, l ≥ 1 only.
+            clock.exchange(&self.opts.link, &p_bytes);
+            clock.exchange(&self.opts.link, &s_bytes);
         }
-
-        // ---- 5+6. Z updates + dual, per community ---------------------------
-        let t_before_z = clock.train;
-        let mut comm_secs = vec![0.0f64; ws.m];
-        // Snapshot Z^k for Jacobi targets.
-        let z_prev: Vec<Vec<Matrix>> = self.state.z.clone();
-        for mi in 0..ws.m {
-            let t0 = Instant::now();
-            self.update_community(mi, &z_prev, &ph)?;
-            comm_secs[mi] = t0.elapsed().as_secs_f64();
-        }
-        clock.parallel_phase(&comm_secs);
+        clock.parallel_phase(&z_secs);
         log::trace!(
-            "epoch phases: W+msg {:.1}ms, Z {:.1}ms, comm {:.1}ms",
-            t_before_z * 1e3,
-            (clock.train - t_before_z) * 1e3,
+            "epoch phases: W {:.1}ms, msg+Z {:.1}ms, comm {:.1}ms",
+            t_after_w * 1e3,
+            (clock.train - t_after_w) * 1e3,
             clock.comm * 1e3
         );
-        let _ = n_pad;
         Ok(clock)
-    }
-
-    /// Z_{l,m} for l = 1..L−1, then Z_{L,m} (FISTA), then U_m. Consumes only
-    /// community-local state plus *received* messages — the same inputs a
-    /// remote worker gets over the wire.
-    fn update_community(&mut self, mi: usize, z_prev: &[Vec<Matrix>], ph: &MessagePhase) -> Result<()> {
-        let ws = self.ws.clone();
-        let n = ws.n_pad;
-        let l_total = ws.layers;
-        let comm = &ws.communities[mi];
-        let nu = ws.hp.nu;
-        let rho = ws.hp.rho;
-
-        // ---- hidden Z updates (eq. 5/6 via eq. 8/10) ------------------------
-        for l in 1..l_total {
-            let c_l = ws.dims[l];
-            let c_next = ws.dims[l + 1];
-            let out_layer = l + 1 == l_total; // coupling into the linear head?
-            let pin = &ph.p_full[l - 1][mi];
-            let zk = &z_prev[l - 1][mi];
-
-            // Own coupling: pre = Ã_mm Z_l W_{l+1} + Σ_cross p = P_full[l][m].
-            let pre_own = &ph.p_full[l][mi];
-            let (mut psi0, r_own) = if out_layer {
-                self.out_residual(n, c_next, pre_own, &z_prev[l][mi], &self.state.u[mi])?
-            } else {
-                self.hidden_residual(n, c_next, pre_own, &z_prev[l][mi])?
-            };
-            let mut g_acc = comm.blocks[&mi].spmm(&r_own);
-
-            // Neighbor couplings (the second-order terms, from received s).
-            let mut s_cache: Vec<(usize, &Matrix, &Matrix)> = Vec::new();
-            for (r, s1, s2) in &ph.s_in[l][mi] {
-                let p_sent = ph.p_out[l][mi]
-                    .iter()
-                    .find(|(dst, _)| dst == r)
-                    .map(|(_, mat)| mat)
-                    .unwrap();
-                let (val, rr) = if out_layer {
-                    // pre = Ã_rm Z W_L (no bias), dual s2 = U_r.
-                    self.out_residual(n, c_next, p_sent, s1, s2)?
-                } else {
-                    let mut pre = p_sent.clone();
-                    pre.add_assign(s2);
-                    self.hidden_residual(n, c_next, &pre, s1)?
-                };
-                psi0 += val;
-                // Ã_{r,m}ᵀ R = Ã_{m,r} R — the block m already holds.
-                g_acc.add_assign(&comm.blocks[r].spmm(&rr));
-                s_cache.push((*r, s1, s2));
-            }
-            let gsum = self.mm_bt(n, c_l, c_next, &g_acc, &self.state.w[l])?;
-
-            // ψ at a candidate Z (for θ backtracking).
-            let psi_at = |z: &Matrix| -> Result<f32> {
-                let mut val = self
-                    .engine
-                    .exec(
-                        &ws.sig_nc("z_prox_val", n, c_l),
-                        &[In::Mat(z), In::Mat(pin), In::Scalar(nu)],
-                    )?
-                    .remove(0)
-                    .scalar();
-                let v = self.mm_nn(n, c_l, c_next, z, &self.state.w[l])?;
-                let mut pre = comm.blocks[&mi].spmm(&v);
-                pre.add_assign(&ph.p_cross[l][mi]);
-                val += if out_layer {
-                    self.out_phi(n, c_next, &pre, &z_prev[l][mi], &self.state.u[mi])?
-                } else {
-                    self.hidden_phi(n, c_next, &pre, &z_prev[l][mi])?
-                };
-                for (r, s1, s2) in &s_cache {
-                    let mut pre_r = comm.blocks_t[r].spmm(&v);
-                    val += if out_layer {
-                        self.out_phi(n, c_next, &pre_r, s1, s2)?
-                    } else {
-                        pre_r.add_assign(s2);
-                        self.hidden_phi(n, c_next, &pre_r, s1)?
-                    };
-                }
-                Ok(val)
-            };
-
-            // θ backtracking on the combined step.
-            let mut theta = self.state.theta[l - 1][mi].max(STEP_MIN);
-            let mut accepted: Option<Matrix> = None;
-            let mut trials = 0usize;
-            for _ in 0..BT_MAX_DOUBLINGS {
-                trials += 1;
-                let outs = self.engine.exec(
-                    &ws.sig_nc("z_combine", n, c_l),
-                    &[
-                        In::Mat(zk),
-                        In::Mat(pin),
-                        In::Mat(&gsum),
-                        In::Scalar(nu),
-                        In::Scalar(theta),
-                    ],
-                )?;
-                let mut it = outs.into_iter();
-                let znew = it.next().unwrap().into_mat();
-                let prox0 = it.next().unwrap().scalar();
-                let gsq = it.next().unwrap().scalar();
-                let bound = psi0 + prox0 - gsq / (2.0 * theta)
-                    + BT_EPS * (psi0 + prox0).abs().max(1.0);
-                if psi_at(&znew)? <= bound {
-                    accepted = Some(znew);
-                    break;
-                }
-                theta *= 2.0;
-            }
-            if let Some(znew) = accepted {
-                self.state.z[l - 1][mi] = znew;
-            }
-            if trials > 4 {
-                log::trace!(
-                    "z backtracking: comm {mi} layer {l} took {trials} trials (theta={theta:.3e})"
-                );
-            }
-            // Same adaptive persistence as τ (see update_w_distributed).
-            self.state.theta[l - 1][mi] = if trials == 1 {
-                (theta * 0.5).max(STEP_MIN)
-            } else {
-                theta
-            };
-        }
-
-        // ---- Z_L via FISTA (eq. 7) ------------------------------------------
-        let classes = ws.dims[l_total];
-        let q = if self.opts.gauss_seidel {
-            // Serial mode: Q from the freshly updated Z_{L-1,m}.
-            let v = self.mm_nn(
-                n,
-                ws.dims[l_total - 1],
-                classes,
-                &self.state.z[l_total - 2][mi],
-                &self.state.w[l_total - 1],
-            )?;
-            let mut q = comm.blocks[&mi].spmm(&v);
-            q.add_assign(&ph.p_cross[l_total - 1][mi]);
-            q
-        } else {
-            ph.p_full[l_total - 1][mi].clone()
-        };
-        let outs = self.engine.exec(
-            &ws.sig_fista(n),
-            &[
-                In::Mat(&q),
-                In::Mat(&self.state.u[mi]),
-                In::Mat(&comm.y),
-                In::Vec(&comm.train_mask),
-                In::Mat(&z_prev[l_total - 1][mi]),
-                In::Scalar(rho),
-                In::Scalar(ws.denom),
-            ],
-        )?;
-        let mut it = outs.into_iter();
-        let z_l_new = it.next().unwrap().into_mat();
-        let _risk = it.next().unwrap().scalar();
-
-        // ---- dual update (eq. 3, residual against the solved Q) -------------
-        let mut resid = z_l_new.clone();
-        resid.axpy(-1.0, &q);
-        self.state.u[mi].axpy(rho, &resid);
-        self.state.z[l_total - 1][mi] = z_l_new;
-        Ok(())
     }
 
     // ---- transport hooks (the TCP worker/leader drive phases directly) ------
 
-    /// W update for one layer — leader side of the TCP runtime.
-    pub fn update_w_public(&mut self, l: usize, z_glob: &[Matrix], u_glob: &Matrix) -> Result<f32> {
-        self.update_w(l, z_glob, u_glob)
-    }
-
-    /// Community Z/U update from received messages — worker side.
-    pub fn update_community_public(
+    /// Distributed W update for one layer — leader side of the TCP runtime
+    /// (identical math to the local default schedule).
+    pub fn update_w_distributed_public(
         &mut self,
-        mi: usize,
-        z_prev: &[Vec<Matrix>],
-        ph: &MessagePhase,
-    ) -> Result<()> {
-        self.update_community(mi, z_prev, ph)
+        l: usize,
+        per_comm_secs: &mut [f64],
+    ) -> Result<usize> {
+        self.update_w_distributed(l, per_comm_secs)
     }
 
-    /// First-order products for one community only (worker side):
-    /// returns (p_own[l], p_out[l] = (dst, matrix)).
-    #[allow(clippy::type_complexity)]
-    pub fn local_p_products(
-        &self,
-        mi: usize,
-    ) -> Result<(Vec<Matrix>, Vec<Vec<(usize, Matrix)>>)> {
-        let ws = &self.ws;
-        let n = ws.n_pad;
-        let comm = &ws.communities[mi];
-        let mut p_own = Vec::with_capacity(ws.layers);
-        let mut p_out = vec![Vec::new(); ws.layers];
-        for l in 0..ws.layers {
-            let (a, b) = (ws.dims[l], ws.dims[l + 1]);
-            let zsrc = if l == 0 {
-                &comm.x
-            } else {
-                &self.state.z[l - 1][mi]
-            };
-            let v = self.mm_nn(n, a, b, zsrc, &self.state.w[l])?;
-            p_own.push(comm.blocks[&mi].spmm(&v));
-            for &r in &comm.neighbors {
-                p_out[l].push((r, comm.blocks_t[&r].spmm(&v)));
-            }
+    /// Move one community's state out as an agent (TCP worker side).
+    pub fn take_agent(&mut self, mi: usize) -> CommunityAgent {
+        let l_total = self.ws.layers;
+        CommunityAgent {
+            mi,
+            z: (0..l_total)
+                .map(|li| std::mem::replace(&mut self.state.z[li][mi], Matrix::zeros(0, 0)))
+                .collect(),
+            u: std::mem::replace(&mut self.state.u[mi], Matrix::zeros(0, 0)),
+            theta: (0..l_total - 1).map(|li| self.state.theta[li][mi]).collect(),
         }
-        Ok((p_own, p_out))
+    }
+
+    /// Write an agent's state back into the trainer.
+    pub fn put_agent(&mut self, agent: CommunityAgent) {
+        let mi = agent.mi;
+        for (li, z) in agent.z.into_iter().enumerate() {
+            self.state.z[li][mi] = z;
+        }
+        self.state.u[mi] = agent.u;
+        for (li, th) in agent.theta.into_iter().enumerate() {
+            self.state.theta[li][mi] = th;
+        }
+    }
+
+    /// Read-only per-epoch context for driving [`CommunityAgent`] phases
+    /// externally (TCP worker side).
+    pub fn agent_ctx(&self) -> AgentCtx<'_> {
+        AgentCtx {
+            ws: &self.ws,
+            backend: &*self.backend,
+            w: &self.state.w,
+            gauss_seidel: self.opts.gauss_seidel,
+        }
     }
 
     // ---- evaluation (untimed, leader-side forward pass) ---------------------
@@ -884,7 +897,7 @@ impl AdmmTrainer {
     /// Forward pass with current weights; returns (train_acc, test_acc,
     /// train loss).
     pub fn evaluate(&self) -> Result<(f64, f64, f64)> {
-        evaluate_forward(&self.ws, &self.engine, &self.state.w)
+        evaluate_forward(&self.ws, &*self.backend, &self.state.w)
     }
 
     /// Run a full training: `epochs` ADMM iterations with per-epoch eval.
@@ -916,49 +929,56 @@ impl AdmmTrainer {
     }
 }
 
+/// One sender's byte list for the p exchange: only the receiver's boundary
+/// rows toward the sender are nonzero, so only those ship.
+fn p_bytes_for(ws: &Workspace, msgs: &[PMsg]) -> Vec<u64> {
+    msgs.iter()
+        .map(|m| {
+            let rows = ws.communities[m.src].boundary_from[&m.dst];
+            ws.msg_bytes(rows, ws.dims[m.layer + 1])
+        })
+        .collect()
+}
+
+/// One sender's byte list for the s exchange: two dense halves per message.
+fn s_bytes_for(ws: &Workspace, msgs: &[SMsg]) -> Vec<u64> {
+    msgs.iter()
+        .map(|m| 2 * ws.msg_bytes(ws.communities[m.src].size, ws.dims[m.layer + 1]))
+        .collect()
+}
+
+/// Per-sender byte lists for the p exchange.
+fn p_byte_lists(ws: &Workspace, p_outs: &[Vec<PMsg>]) -> Vec<Vec<u64>> {
+    p_outs.iter().map(|msgs| p_bytes_for(ws, msgs)).collect()
+}
+
+/// Per-sender byte lists for the s exchange.
+fn s_byte_lists(ws: &Workspace, s_outs: &[Vec<SMsg>]) -> Vec<Vec<u64>> {
+    s_outs.iter().map(|msgs| s_bytes_for(ws, msgs)).collect()
+}
+
 /// Forward-pass evaluation shared with the baselines: accuracy on train and
 /// test masks plus the training loss, computed at the (padded) global view.
 pub fn evaluate_forward(
     ws: &Workspace,
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     w: &[Matrix],
 ) -> Result<(f64, f64, f64)> {
-    let n = ws.n_glob;
     let l_total = ws.layers;
     let mut h = ws.h0_glob.clone();
     let mut z = None;
     for l in 1..=l_total {
-        let (a, b) = (ws.dims[l - 1], ws.dims[l]);
         if l < l_total {
-            let zl = exec1(
-                engine,
-                &ws.sig_nab("fwd_relu", n, a, b),
-                &[In::Mat(&h), In::Mat(&w[l - 1])],
-            )?;
-            h = ws.a_glob.spmm(&zl);
+            let zl = backend.fwd_relu(&h, &w[l - 1])?;
+            h = backend.spmm(&ws.a_glob, &zl);
             z = Some(zl);
         } else {
             let src = z.as_ref().map(|_| &h).unwrap_or(&ws.h0_glob);
-            let logits_pre = exec1(
-                engine,
-                &ws.sig_nab("mm_nn", n, a, b),
-                &[In::Mat(src), In::Mat(&w[l - 1])],
-            )?;
             // logits = Ã Z_{L-1} W_L — but h is already Ã Z_{L-1}, so the
             // product IS the logits; no extra SpMM.
-            let logits = logits_pre;
-            let loss = engine
-                .exec(
-                    &ws.sig_nc("xent_loss", n, ws.dims[l_total]),
-                    &[
-                        In::Mat(&logits),
-                        In::Mat(&ws.y_glob),
-                        In::Vec(&ws.train_mask_glob),
-                        In::Scalar(ws.denom),
-                    ],
-                )?
-                .remove(0)
-                .scalar() as f64;
+            let logits = backend.mm_nn(src, &w[l - 1])?;
+            let loss = backend.xent_loss(&logits, &ws.y_glob, &ws.train_mask_glob, ws.denom)?
+                as f64;
             let preds = argmax_rows(&logits);
             let (mut tr_c, mut tr_t, mut te_c, mut te_t) = (0usize, 0usize, 0usize, 0usize);
             for i in 0..ws.n {
@@ -989,7 +1009,8 @@ pub(super) fn dataset_label(ws: &Workspace) -> String {
     format!("n{}", ws.n)
 }
 
-/// Every artifact signature an ADMM run touches (warmup list).
+/// Every artifact signature an ADMM run touches (warmup list for the XLA
+/// backend; the native backend ignores it).
 pub fn training_sigs(ws: &Workspace) -> Vec<String> {
     let l_total = ws.layers;
     let mut sigs = Vec::new();
@@ -1018,21 +1039,4 @@ pub fn training_sigs(ws: &Workspace) -> Vec<String> {
     sigs.sort();
     sigs.dedup();
     sigs
-}
-
-fn exec1(engine: &Engine, sig: &str, inputs: &[In]) -> Result<Matrix> {
-    Ok(engine.exec(sig, inputs)?.remove(0).into_mat())
-}
-
-/// The per-epoch message-phase outputs (what actually crosses agent
-/// boundaries, plus receiver-side aggregates).
-pub struct MessagePhase {
-    /// [l][m] = Σ_{r∈N_m∪{m}} p_{l,r→m} (diag + received).
-    pub p_full: Vec<Vec<Matrix>>,
-    /// [l][m] = Σ_{r∈N_m} p_{l,r→m} (received only).
-    pub p_cross: Vec<Vec<Matrix>>,
-    /// [l][m] = outgoing (dst, p_{l,m→dst}).
-    pub p_out: Vec<Vec<Vec<(usize, Matrix)>>>,
-    /// [l][m] = incoming (src, s1, s2) second-order messages.
-    pub s_in: Vec<Vec<Vec<(usize, Matrix, Matrix)>>>,
 }

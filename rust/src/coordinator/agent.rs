@@ -1,0 +1,417 @@
+//! The community agent: one community's Z/U state plus the per-epoch
+//! subproblems it runs against *received messages only*.
+//!
+//! This is the unit the parallel runtime schedules. Every function here
+//! consumes community-local state (`z`, `u`, `θ`), static workspace blocks
+//! and the messages that crossed the agent boundary — exactly the inputs a
+//! remote worker gets over the wire, which is why the TCP transport and
+//! the in-process serial/threaded executors all drive the same code:
+//!
+//! ```text
+//! phase A  p_products   →  outgoing p_{l,m→r}            (eq. 4 top)
+//! phase B  fold_p + s_messages → p_full/p_cross, s_{l,r→m} (eq. 4 bottom)
+//! phase C  update_z_u   →  Z_{l,m} (eq. 5/6), Z_{L,m} (eq. 7), U_m (eq. 3)
+//! ```
+//!
+//! Determinism: incoming message vectors are sorted by `(layer, src)`
+//! before folding, so sums are accumulated in the same order regardless of
+//! arrival order — threaded runs are bitwise identical to serial ones.
+
+use super::workspace::Workspace;
+use crate::runtime::ComputeBackend;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Backtracking safety margin and bounds (shared with the W subproblem).
+pub(crate) const BT_EPS: f32 = 1e-6;
+pub(crate) const BT_MAX_DOUBLINGS: usize = 40;
+pub(crate) const STEP_MIN: f32 = 1e-8;
+
+/// First-order message `p_{layer, src→dst}` (eq. 4 top).
+#[derive(Clone)]
+pub struct PMsg {
+    /// 0-based layer index l (projection through W_{l+1}).
+    pub layer: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub mat: Matrix,
+}
+
+/// Second-order message `s_{layer, src→dst}` (eq. 4 bottom): two dense
+/// halves, (coupling target, pre-activation complement) at hidden layers
+/// or (anchor, dual) at the output layer.
+#[derive(Clone)]
+pub struct SMsg {
+    pub layer: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub s1: Matrix,
+    pub s2: Matrix,
+}
+
+/// Read-only context shared by every agent in one epoch.
+pub struct AgentCtx<'a> {
+    pub ws: &'a Workspace,
+    pub backend: &'a dyn ComputeBackend,
+    /// Weights W_1..W_L for this epoch (already updated by the W phase).
+    pub w: &'a [Matrix],
+    /// Own-block Gauss-Seidel anchoring for the Z_L solve.
+    pub gauss_seidel: bool,
+}
+
+/// One community's mutable ADMM state.
+pub struct CommunityAgent {
+    pub mi: usize,
+    /// z[l-1] = Z_{l,mi} (n_pad × C_l), l = 1..=L.
+    pub z: Vec<Matrix>,
+    /// Dual U_mi (n_pad × C_L).
+    pub u: Matrix,
+    /// θ step per hidden layer (persisted across epochs).
+    pub theta: Vec<f32>,
+}
+
+impl CommunityAgent {
+    /// Phase A — first-order products: for every layer l, project the own
+    /// Z through W_{l+1} and split through the adjacency blocks into the
+    /// diagonal part `p_own[l] = Ã_mm v` and one outgoing message
+    /// `p_{l,m→r} = Ã_{r,m} v` per neighbor r.
+    pub fn p_products(&self, ctx: &AgentCtx) -> Result<(Vec<Matrix>, Vec<PMsg>)> {
+        let ws = ctx.ws;
+        let comm = &ws.communities[self.mi];
+        let l_total = ws.layers;
+        let mut p_own = Vec::with_capacity(l_total);
+        let mut out = Vec::new();
+        for l in 0..l_total {
+            let zsrc = if l == 0 { &comm.x } else { &self.z[l - 1] };
+            let v = ctx.backend.mm_nn(zsrc, &ctx.w[l])?;
+            p_own.push(ctx.backend.spmm(&comm.blocks[&self.mi], &v));
+            for &r in &comm.neighbors {
+                // Ã_{r,m} v — the rows live on r; this is message m→r.
+                out.push(PMsg {
+                    layer: l,
+                    src: self.mi,
+                    dst: r,
+                    mat: ctx.backend.spmm(&comm.blocks_t[&r], &v),
+                });
+            }
+        }
+        Ok((p_own, out))
+    }
+
+    /// Phase B (fold) — sort incoming p by `(layer, src)` and fold into
+    /// per-layer sums: `p_cross[l] = Σ_received`, `p_full[l] = p_own[l] +
+    /// p_cross[l]`. Takes message *references* so the serial executor can
+    /// route without copying dense matrices.
+    pub fn fold_p(
+        &self,
+        ctx: &AgentCtx,
+        p_own: &[Matrix],
+        p_in: &mut Vec<&PMsg>,
+    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        let ws = ctx.ws;
+        p_in.sort_by_key(|m| (m.layer, m.src));
+        let mut p_cross: Vec<Matrix> = (0..ws.layers)
+            .map(|l| Matrix::zeros(ws.n_pad, ws.dims[l + 1]))
+            .collect();
+        for m in p_in.iter() {
+            debug_assert_eq!(m.dst, self.mi);
+            p_cross[m.layer].add_assign(&m.mat);
+        }
+        let p_full: Vec<Matrix> = p_own
+            .iter()
+            .zip(&p_cross)
+            .map(|(own, cross)| {
+                let mut f = own.clone();
+                f.add_assign(cross);
+                f
+            })
+            .collect();
+        (p_full, p_cross)
+    }
+
+    /// Phase B (send) — assemble second-order messages `s_{l,m→dst}` from
+    /// the folded p sums (eq. 4 bottom). Only layers whose Z is a variable
+    /// need them (l ≥ 1: Z_0 = X is fixed).
+    pub fn s_messages(
+        &self,
+        ctx: &AgentCtx,
+        p_full: &[Matrix],
+        p_in: &[&PMsg],
+    ) -> Result<Vec<SMsg>> {
+        let ws = ctx.ws;
+        let l_total = ws.layers;
+        let mut out = Vec::new();
+        for &dst in &ws.communities[self.mi].neighbors {
+            for l in 1..l_total {
+                // Σ_{r'∈N_m∪{m}\{dst}} p_{l,r'→m} = p_full − p_{l,dst→m}.
+                let p_from_dst = p_in
+                    .iter()
+                    .find(|m| m.layer == l && m.src == dst)
+                    .map(|m| &m.mat)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("community {} missing p from neighbor {dst}", self.mi)
+                    })?;
+                let mut sum = p_full[l].clone();
+                sum.axpy(-1.0, p_from_dst);
+                let (s1, s2) = if l + 1 < l_total {
+                    (self.z[l].clone(), sum)
+                } else {
+                    let mut s1 = self.z[l_total - 1].clone();
+                    s1.axpy(-1.0, &sum);
+                    (s1, self.u.clone())
+                };
+                out.push(SMsg {
+                    layer: l,
+                    src: self.mi,
+                    dst,
+                    s1,
+                    s2,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Phase C — Z_{l,m} for l = 1..L−1 (eq. 5/6 via the eq. 8/10 prox
+    /// step with θ backtracking), then Z_{L,m} via FISTA (eq. 7), then the
+    /// dual U_m (eq. 3, residual against the solved Q). `p_out` is this
+    /// agent's own phase-A output (needed for the neighbor couplings);
+    /// `s_in` is sorted in place by `(layer, src)`.
+    pub fn update_z_u(
+        &mut self,
+        ctx: &AgentCtx,
+        p_full: &[Matrix],
+        p_cross: &[Matrix],
+        p_out: &[PMsg],
+        s_in: &mut [SMsg],
+    ) -> Result<()> {
+        let ws = ctx.ws;
+        let backend = ctx.backend;
+        let l_total = ws.layers;
+        let comm = &ws.communities[self.mi];
+        let nu = ws.hp.nu;
+        let rho = ws.hp.rho;
+        s_in.sort_by_key(|m| (m.layer, m.src));
+
+        // Jacobi targets: the state this agent entered the epoch with (the
+        // same Z the phase-A products were computed from).
+        let z_prev: Vec<Matrix> = self.z.clone();
+
+        // ---- hidden Z updates (eq. 5/6 via eq. 8/10) ----------------------
+        for l in 1..l_total {
+            let out_layer = l + 1 == l_total; // coupling into the linear head?
+            let pin = &p_full[l - 1];
+            let zk = &z_prev[l - 1];
+
+            // Own coupling: pre = Ã_mm Z_l W_{l+1} + Σ_cross p = p_full[l].
+            let pre_own = &p_full[l];
+            let (mut psi0, r_own) = if out_layer {
+                backend.out_residual(pre_own, &z_prev[l], &self.u, rho)?
+            } else {
+                backend.hidden_residual(pre_own, &z_prev[l], nu)?
+            };
+            let mut g_acc = backend.spmm(&comm.blocks[&self.mi], &r_own);
+
+            // Neighbor couplings (second-order terms, from received s).
+            let mut s_cache: Vec<(usize, &Matrix, &Matrix)> = Vec::new();
+            for sm in s_in.iter().filter(|m| m.layer == l) {
+                let r = sm.src;
+                let p_sent = p_out
+                    .iter()
+                    .find(|p| p.layer == l && p.dst == r)
+                    .map(|p| &p.mat)
+                    .expect("neighbor without own p message");
+                let (val, rr) = if out_layer {
+                    // pre = Ã_rm Z W_L (no complement), dual s2 = U_r.
+                    backend.out_residual(p_sent, &sm.s1, &sm.s2, rho)?
+                } else {
+                    let mut pre = p_sent.clone();
+                    pre.add_assign(&sm.s2);
+                    backend.hidden_residual(&pre, &sm.s1, nu)?
+                };
+                psi0 += val;
+                // Ã_{r,m}ᵀ R = Ã_{m,r} R — the block m already holds.
+                g_acc.add_assign(&backend.spmm(&comm.blocks[&r], &rr));
+                s_cache.push((r, &sm.s1, &sm.s2));
+            }
+            let gsum = backend.mm_bt(&g_acc, &ctx.w[l])?;
+
+            // ψ at a candidate Z (for θ backtracking).
+            let u_ref = &self.u;
+            let psi_at = |z: &Matrix| -> Result<f32> {
+                let mut val = backend.z_prox_val(z, pin, nu)?;
+                let v = backend.mm_nn(z, &ctx.w[l])?;
+                let mut pre = backend.spmm(&comm.blocks[&self.mi], &v);
+                pre.add_assign(&p_cross[l]);
+                val += if out_layer {
+                    backend.out_phi(&pre, &z_prev[l], u_ref, rho)?
+                } else {
+                    backend.hidden_phi(&pre, &z_prev[l], nu)?
+                };
+                for (r, s1, s2) in &s_cache {
+                    let mut pre_r = backend.spmm(&comm.blocks_t[r], &v);
+                    val += if out_layer {
+                        backend.out_phi(&pre_r, s1, s2, rho)?
+                    } else {
+                        pre_r.add_assign(s2);
+                        backend.hidden_phi(&pre_r, s1, nu)?
+                    };
+                }
+                Ok(val)
+            };
+
+            // θ backtracking on the combined step.
+            let mut theta = self.theta[l - 1].max(STEP_MIN);
+            let mut accepted: Option<Matrix> = None;
+            let mut trials = 0usize;
+            for _ in 0..BT_MAX_DOUBLINGS {
+                trials += 1;
+                let (znew, prox0, gsq) = backend.z_combine(zk, pin, &gsum, nu, theta)?;
+                let bound = psi0 + prox0 - gsq / (2.0 * theta)
+                    + BT_EPS * (psi0 + prox0).abs().max(1.0);
+                if psi_at(&znew)? <= bound {
+                    accepted = Some(znew);
+                    break;
+                }
+                theta *= 2.0;
+            }
+            if let Some(znew) = accepted {
+                self.z[l - 1] = znew;
+            }
+            if trials > 4 {
+                log::trace!(
+                    "z backtracking: comm {} layer {l} took {trials} trials (theta={theta:.3e})",
+                    self.mi
+                );
+            }
+            // Adaptive step persistence: only probe a smaller θ after an
+            // epoch that accepted on the first trial (see the W subproblem).
+            self.theta[l - 1] = if trials == 1 {
+                (theta * 0.5).max(STEP_MIN)
+            } else {
+                theta
+            };
+        }
+
+        // ---- Z_L via FISTA (eq. 7) ----------------------------------------
+        let q = if ctx.gauss_seidel {
+            // Own-block anchor from the freshly updated Z_{L-1,m};
+            // cross-community terms stay at k (p_cross).
+            let v = backend.mm_nn(&self.z[l_total - 2], &ctx.w[l_total - 1])?;
+            let mut q = backend.spmm(&comm.blocks[&self.mi], &v);
+            q.add_assign(&p_cross[l_total - 1]);
+            q
+        } else {
+            p_full[l_total - 1].clone()
+        };
+        let (z_l_new, _risk) = backend.zl_fista(
+            &q,
+            &self.u,
+            &comm.y,
+            &comm.train_mask,
+            &z_prev[l_total - 1],
+            rho,
+            ws.denom,
+            ws.hp.fista_steps,
+        )?;
+
+        // ---- dual update (eq. 3, residual against the solved Q) -----------
+        let mut resid = z_l_new.clone();
+        resid.axpy(-1.0, &q);
+        self.u.axpy(rho, &resid);
+        self.z[l_total - 1] = z_l_new;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HyperParams;
+    use crate::partition::Method;
+    use crate::runtime::NativeBackend;
+    use std::sync::Arc;
+
+    fn ws(m: usize) -> Workspace {
+        let ds = crate::data::fixtures::caveman(24, 3);
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = m;
+        hp.hidden = 8;
+        Workspace::build(&ds, &hp, Method::Metis).unwrap()
+    }
+
+    fn agents_for(ws: &Workspace) -> Vec<CommunityAgent> {
+        let mut rng = crate::util::rng::Rng::new(9);
+        (0..ws.m)
+            .map(|mi| CommunityAgent {
+                mi,
+                z: (1..=ws.layers)
+                    .map(|l| Matrix::glorot(ws.n_pad, ws.dims[l], &mut rng))
+                    .collect(),
+                u: Matrix::zeros(ws.n_pad, ws.dims[ws.layers]),
+                theta: vec![1.0; ws.layers - 1],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn p_products_cover_every_neighbor_and_layer() {
+        let ws = ws(3);
+        let backend = Arc::new(NativeBackend::new());
+        let mut rng = crate::util::rng::Rng::new(4);
+        let w: Vec<Matrix> = (1..=ws.layers)
+            .map(|l| Matrix::glorot(ws.dims[l - 1], ws.dims[l], &mut rng))
+            .collect();
+        let ctx = AgentCtx {
+            ws: &ws,
+            backend: &*backend,
+            w: &w,
+            gauss_seidel: true,
+        };
+        for ag in agents_for(&ws) {
+            let (p_own, out) = ag.p_products(&ctx).unwrap();
+            assert_eq!(p_own.len(), ws.layers);
+            let expect = ws.communities[ag.mi].neighbors.len() * ws.layers;
+            assert_eq!(out.len(), expect);
+            for m in &out {
+                assert_eq!(m.src, ag.mi);
+                assert!(ws.communities[ag.mi].neighbors.contains(&m.dst));
+                assert_eq!(m.mat.shape(), (ws.n_pad, ws.dims[m.layer + 1]));
+            }
+        }
+    }
+
+    #[test]
+    fn fold_is_order_independent() {
+        let ws = ws(3);
+        let backend = Arc::new(NativeBackend::new());
+        let mut rng = crate::util::rng::Rng::new(4);
+        let w: Vec<Matrix> = (1..=ws.layers)
+            .map(|l| Matrix::glorot(ws.dims[l - 1], ws.dims[l], &mut rng))
+            .collect();
+        let ctx = AgentCtx {
+            ws: &ws,
+            backend: &*backend,
+            w: &w,
+            gauss_seidel: true,
+        };
+        let agents = agents_for(&ws);
+        // Collect everything destined to community 0.
+        let mut inbox: Vec<PMsg> = Vec::new();
+        for ag in &agents[1..] {
+            let (_, out) = ag.p_products(&ctx).unwrap();
+            inbox.extend(out.into_iter().filter(|m| m.dst == 0));
+        }
+        let (p_own, _) = agents[0].p_products(&ctx).unwrap();
+        let mut fwd: Vec<&PMsg> = inbox.iter().collect();
+        let (full_a, cross_a) = agents[0].fold_p(&ctx, &p_own, &mut fwd);
+        let mut rev: Vec<&PMsg> = inbox.iter().rev().collect();
+        let (full_b, cross_b) = agents[0].fold_p(&ctx, &p_own, &mut rev);
+        for (a, b) in full_a.iter().zip(&full_b) {
+            assert_eq!(a.data(), b.data());
+        }
+        for (a, b) in cross_a.iter().zip(&cross_b) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+}

@@ -2,23 +2,28 @@
 //! ADMM training of GCNs.
 //!
 //! - [`workspace`] — partition, padded `Ã` blocks, per-community tensors.
-//! - [`admm`] — Algorithm 1 (W/Z/U subproblems, p/s message protocol).
+//! - [`agent`] — one community's Z/U state + its per-epoch subproblems,
+//!   driven entirely by received messages (the schedulable unit).
+//! - [`admm`] — Algorithm 1 (W subproblem, epoch loop) plus the serial and
+//!   pool-threaded agent executors.
 //! - [`clock`] — virtual-time accounting + link model (1-core testbed).
 //! - [`transport`] — the multi-process TCP runtime (leader + workers).
 
 pub mod admm;
+pub mod agent;
 pub mod clock;
 pub mod transport;
 pub mod workspace;
 
-pub use admm::{evaluate_forward, AdmmOptions, AdmmTrainer};
+pub use admm::{evaluate_forward, AdmmOptions, AdmmTrainer, ExecMode};
+pub use agent::{AgentCtx, CommunityAgent, PMsg, SMsg};
 pub use clock::{EpochClock, LinkModel};
 pub use workspace::{Community, Workspace};
 
 use crate::baselines;
 use crate::config::HyperParams;
 use crate::metrics::RunReport;
-use crate::runtime::Engine;
+use crate::runtime::{select_backend, BackendChoice, ComputeBackend};
 use crate::util::cli::Args;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -26,14 +31,16 @@ use std::sync::Arc;
 /// Everything `cgcn train` needs, resolved from CLI arguments.
 pub struct TrainSetup {
     pub ws: Arc<Workspace>,
-    pub engine: Arc<Engine>,
+    pub backend: Arc<dyn ComputeBackend>,
     pub hp: HyperParams,
     pub method: String,
     pub link: LinkModel,
     pub epochs: usize,
+    pub exec: ExecMode,
+    pub threads: usize,
 }
 
-/// Resolve CLI args into a workspace + engine (shared by train and bench).
+/// Resolve CLI args into a workspace + backend (shared by train and bench).
 pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
     let dataset = args.get_str("dataset");
     let scale = args.get_f64("scale");
@@ -60,18 +67,29 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
         }
     }
 
+    let exec = ExecMode::parse(&args.get_str("exec"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --exec value (serial|threads)"))?;
+    let threads = args.get_usize("threads");
+    let choice = BackendChoice::parse(&args.get_str("backend"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
+    // With a threaded agent executor the parallelism budget goes to the
+    // agents; keep native backend ops serial to avoid oversubscription.
+    let op_threads = if exec == ExecMode::Threads { 1 } else { threads.max(1) };
+    let backend = select_backend(choice, op_threads)?;
+
     let ds = crate::cmd::load_dataset(&dataset, scale, seed)?;
     let pmethod = crate::cmd::parse_method(&args.get_str("partition"))?;
     let ws = Arc::new(Workspace::build(&ds, &hp, pmethod)?);
-    let engine = Arc::new(Engine::load(&Engine::default_dir())?);
     let link = LinkModel::new(args.get_f64("link-mbps"), args.get_f64("link-lat-us"));
     Ok(TrainSetup {
         ws,
-        engine,
+        backend,
         hp: hp.clone(),
         method,
         link,
         epochs: hp.epochs,
+        exec,
+        threads,
     })
 }
 
@@ -94,10 +112,12 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
             }
             let mut opts = AdmmOptions::for_mode(setup.ws.m);
             opts.link = setup.link;
+            opts.exec = setup.exec;
+            opts.threads = setup.threads;
             if args.get_flag("parallel-layers") {
                 opts.parallel_layers = true;
             }
-            let mut trainer = AdmmTrainer::new(setup.ws.clone(), setup.engine.clone(), opts)?;
+            let mut trainer = AdmmTrainer::new(setup.ws.clone(), setup.backend.clone(), opts)?;
             let mut report = trainer.train(setup.epochs, &label)?;
             report.dataset = args.get_str("dataset");
             Ok(report)
@@ -105,7 +125,7 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
         "gd" | "adam" | "adagrad" | "adadelta" => {
             let opt = baselines::Optimizer::parse(&setup.method, args.get("lr"))?;
             let mut trainer =
-                baselines::BaselineTrainer::new(setup.ws.clone(), setup.engine.clone(), opt)?;
+                baselines::BaselineTrainer::new(setup.ws.clone(), setup.backend.clone(), opt)?;
             let mut report = trainer.train(setup.epochs)?;
             report.dataset = args.get_str("dataset");
             Ok(report)
@@ -118,25 +138,18 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
 pub fn run_from_args(args: &Args) -> Result<()> {
     let setup = setup_from_args(args)?;
     log::info!(
-        "train: dataset={} n={} m={} method={} hidden={} layers={} epochs={}",
+        "train: dataset={} n={} m={} method={} backend={} exec={} hidden={} layers={} epochs={}",
         args.get_str("dataset"),
         setup.ws.n,
         setup.ws.m,
         setup.method,
+        setup.backend.name(),
+        setup.exec.name(),
         setup.hp.hidden,
         setup.hp.layers,
         setup.epochs
     );
     let report = run_training(&setup, args)?;
-    if std::env::var("CGCN_PROFILE").is_ok() {
-        eprintln!("--- engine stats (top 15 by exec time) ---");
-        for (sig, s) in setup.engine.stats().into_iter().take(15) {
-            eprintln!(
-                "{sig:<44} calls {:>6}  exec {:>8.3}s  marshal {:>8.3}s  compile {:>6.3}s",
-                s.calls, s.exec_secs, s.marshal_secs, s.compile_secs
-            );
-        }
-    }
     if args.get_flag("csv") {
         print!("{}", report.to_csv());
     } else {

@@ -2,15 +2,16 @@
 //! community, speaking a length-framed binary protocol over TCP.
 //!
 //! This is the deployment shape the paper describes (1 agent = 1 machine):
-//! the leader owns the W subproblem (agent M+1) and message routing (star
-//! topology); each worker owns one community's Z/U state and subproblems.
-//! Workers rebuild the deterministic workspace from the run config on their
-//! command line (dataset synthesis, partitioning and init are all seeded),
-//! so only *state deltas* cross the wire: W broadcasts, p/s messages and
-//! Z/U reports — exactly the traffic the virtual link model prices in
-//! local mode. On this 1-core container the processes time-slice a single
-//! CPU, so TCP mode demonstrates correctness + real byte counts, not
-//! speedup (DESIGN.md §2).
+//! the leader owns the W reduction and message routing (star topology);
+//! each worker owns one community's Z/U state and drives the same
+//! [`CommunityAgent`] phases the in-process executors run, against
+//! messages received over the wire. Workers rebuild the deterministic
+//! workspace from the run config on their command line (dataset synthesis,
+//! partitioning and init are all seeded), so only *state deltas* cross the
+//! wire: W broadcasts, p/s messages and Z/U reports — exactly the traffic
+//! the virtual link model prices in local mode. The leader mirrors worker
+//! state from reports and runs the identical distributed W update, so a
+//! TCP run reproduces a local serial run bit for bit.
 //!
 //! Protocol frames (all little-endian, via [`crate::util::wire`]):
 //!
@@ -25,17 +26,16 @@
 //! | 8   | worker→leader  | ZReport { Z_1..Z_L, U, compute seconds }    |
 //! | 9   | leader→worker  | Shutdown                                    |
 
-use super::admm::{AdmmOptions, AdmmTrainer, MessagePhase};
+use super::agent::{PMsg, SMsg};
+use super::admm::{AdmmOptions, AdmmTrainer};
 use super::TrainSetup;
 use crate::metrics::{EpochRecord, RunReport};
-use crate::runtime::Engine;
 use crate::tensor::Matrix;
 use crate::util::cli::Args;
 use crate::util::wire::{read_frame, write_frame, Dec, Enc};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
 use std::time::Instant;
 
 const TAG_HELLO: u8 = 1;
@@ -152,6 +152,8 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
                 &args.get_str("partition"),
                 "--epochs",
                 &args.get_str("epochs"),
+                "--backend",
+                &args.get_str("backend"),
             ])
             .spawn()
             .context("spawning worker process")?;
@@ -171,10 +173,11 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
     }
     let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
 
-    // Leader-side trainer: W updates + evaluation + state mirror.
+    // Leader-side trainer: W updates + evaluation + state mirror. Runs the
+    // same distributed W reduction as local mode, over the mirrored state.
     let mut opts = AdmmOptions::for_mode(ws.m);
     opts.link = setup.link;
-    let mut trainer = AdmmTrainer::new(ws.clone(), setup.engine.clone(), opts)?;
+    let mut trainer = AdmmTrainer::new(ws.clone(), setup.backend.clone(), opts)?;
 
     let mut report = RunReport::new(
         &format!("admm-tcp-m{}", ws.m),
@@ -186,14 +189,11 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
         let wall0 = Instant::now();
         let bytes0: u64 = conns.iter().map(|c| c.bytes).sum();
 
-        // 1. W update at the leader (gather is implicit: state mirrored).
-        let z_glob: Vec<Matrix> = (0..l_total).map(|li| ws.gather(&trainer.state.z[li])).collect();
-        let u_glob = ws.gather(&trainer.state.u);
-        let mut w_secs = Vec::new();
+        // 1. W update at the leader over the mirrored state (identical math
+        // to local mode's distributed reduction).
+        let mut w_secs = vec![0.0f64; ws.m];
         for l in 1..=l_total {
-            let t0 = Instant::now();
-            trainer.update_w_public(l, &z_glob, &u_glob)?;
-            w_secs.push(t0.elapsed().as_secs_f64());
+            trainer.update_w_distributed_public(l, &mut w_secs)?;
         }
 
         // 2. Broadcast W.
@@ -272,8 +272,8 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
         let wall = wall0.elapsed().as_secs_f64();
         let bytes: u64 = conns.iter().map(|c| c.bytes).sum::<u64>() - bytes0;
         let (train_acc, test_acc, loss) = trainer.evaluate()?;
-        // Virtual accounting mirrors local mode: W layers at critical path,
-        // worker compute at critical path, comm from *measured* bytes.
+        // Virtual accounting mirrors local mode: W partials at critical
+        // path, worker compute at critical path, comm from *measured* bytes.
         let t_train = w_secs.iter().copied().fold(0.0, f64::max)
             + z_secs.iter().copied().fold(0.0, f64::max);
         let t_comm = setup.link.msg_secs(bytes / ws.m as u64) * ws.m as f64;
@@ -309,7 +309,8 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
 // ---------------------------------------------------------------------------
 
 /// Worker process entry (`cgcn worker --listen <leader addr> --worker-idx i
-/// <run config>`): owns one community's Z/U state.
+/// <run config>`): owns one community's Z/U state and drives the
+/// [`super::agent::CommunityAgent`] phases against wire messages.
 pub fn worker_main(args: &Args) -> Result<()> {
     let addr = args.get_str("listen");
     if addr.is_empty() {
@@ -324,9 +325,10 @@ pub fn worker_main(args: &Args) -> Result<()> {
     anyhow::ensure!(mi < ws.m, "worker index {mi} out of range");
     let mut trainer = AdmmTrainer::new(
         ws.clone(),
-        Arc::new(Engine::load(&Engine::default_dir())?),
+        setup.backend.clone(),
         AdmmOptions::for_mode(ws.m),
     )?;
+    let mut agent = trainer.take_agent(mi);
 
     let mut conn = Conn::new(TcpStream::connect(&addr)?)?;
     let mut enc = Enc::new();
@@ -349,72 +351,45 @@ pub fn worker_main(args: &Args) -> Result<()> {
         for li in 0..count {
             trainer.state.w[li] = dec_matrix(&mut d)?;
         }
+        let ctx = trainer.agent_ctx();
 
-        // Local p products.
-        let (p_own, p_out) = trainer.local_p_products(mi)?;
-
-        // Ship outgoing p.
+        // Phase A: local p products; ship outgoing p.
+        let (p_own, p_out) = agent.p_products(&ctx)?;
         let mut enc = Enc::new();
-        let total: usize = p_out.iter().map(|v| v.len()).sum();
-        enc.u8(TAG_P_MSGS).u32(total as u32);
-        for (l, msgs) in p_out.iter().enumerate() {
-            for (dst, mat) in msgs {
-                enc.u32(l as u32).u32(*dst as u32);
-                enc_matrix(&mut enc, mat);
-            }
+        enc.u8(TAG_P_MSGS).u32(p_out.len() as u32);
+        for msg in &p_out {
+            enc.u32(msg.layer as u32).u32(msg.dst as u32);
+            enc_matrix(&mut enc, &msg.mat);
         }
         conn.send(&enc.into_bytes())?;
 
-        // Receive incoming p; fold into full/cross sums.
+        // Receive incoming p.
         let frame = conn.expect(TAG_P_DELIVER)?;
         let mut d = Dec::new(&frame[1..]);
         let count = d.u32()?;
-        let mut p_cross: Vec<Matrix> = (0..l_total)
-            .map(|l| Matrix::zeros(ws.n_pad, ws.dims[l + 1]))
-            .collect();
-        let mut p_in: Vec<Vec<(usize, Matrix)>> = vec![Vec::new(); l_total];
+        let mut p_in_owned: Vec<PMsg> = Vec::with_capacity(count as usize);
         for _ in 0..count {
-            let l = d.u32()? as usize;
+            let layer = d.u32()? as usize;
             let src = d.u32()? as usize;
             let mat = dec_matrix(&mut d)?;
-            p_cross[l].add_assign(&mat);
-            p_in[l].push((src, mat));
+            p_in_owned.push(PMsg {
+                layer,
+                src,
+                dst: mi,
+                mat,
+            });
         }
-        let p_full: Vec<Matrix> = (0..l_total)
-            .map(|l| {
-                let mut f = p_own[l].clone();
-                f.add_assign(&p_cross[l]);
-                f
-            })
-            .collect();
 
-        // Second-order messages for each neighbor (eq. 4, local data only).
+        // Phase B: fold + second-order messages; ship outgoing s.
+        let mut p_in: Vec<&PMsg> = p_in_owned.iter().collect();
+        let (p_full, p_cross) = agent.fold_p(&ctx, &p_own, &mut p_in);
+        let s_out = agent.s_messages(&ctx, &p_full, &p_in)?;
         let mut enc = Enc::new();
-        let mut s_msgs: Vec<(usize, usize, Matrix, Matrix)> = Vec::new();
-        for &dst in &ws.communities[mi].neighbors {
-            for l in 0..l_total {
-                let p_from_dst = p_in[l]
-                    .iter()
-                    .find(|(src, _)| *src == dst)
-                    .map(|(_, m)| m)
-                    .ok_or_else(|| anyhow::anyhow!("missing p from neighbor {dst}"))?;
-                let mut sum = p_full[l].clone();
-                sum.axpy(-1.0, p_from_dst);
-                let (s1, s2) = if l + 1 < l_total {
-                    (trainer.state.z[l][mi].clone(), sum)
-                } else {
-                    let mut s1 = trainer.state.z[l_total - 1][mi].clone();
-                    s1.axpy(-1.0, &sum);
-                    (s1, trainer.state.u[mi].clone())
-                };
-                s_msgs.push((l, dst, s1, s2));
-            }
-        }
-        enc.u8(TAG_S_MSGS).u32(s_msgs.len() as u32);
-        for (l, dst, s1, s2) in &s_msgs {
-            enc.u32(*l as u32).u32(*dst as u32);
-            enc_matrix(&mut enc, s1);
-            enc_matrix(&mut enc, s2);
+        enc.u8(TAG_S_MSGS).u32(s_out.len() as u32);
+        for msg in &s_out {
+            enc.u32(msg.layer as u32).u32(msg.dst as u32);
+            enc_matrix(&mut enc, &msg.s1);
+            enc_matrix(&mut enc, &msg.s2);
         }
         conn.send(&enc.into_bytes())?;
 
@@ -422,54 +397,36 @@ pub fn worker_main(args: &Args) -> Result<()> {
         let frame = conn.expect(TAG_S_DELIVER)?;
         let mut d = Dec::new(&frame[1..]);
         let count = d.u32()?;
-        let mut s_in: Vec<Vec<(usize, Matrix, Matrix)>> = vec![Vec::new(); l_total];
+        let mut s_in: Vec<SMsg> = Vec::with_capacity(count as usize);
         for _ in 0..count {
-            let l = d.u32()? as usize;
+            let layer = d.u32()? as usize;
             let src = d.u32()? as usize;
             let s1 = dec_matrix(&mut d)?;
             let s2 = dec_matrix(&mut d)?;
-            s_in[l].push((src, s1, s2));
+            s_in.push(SMsg {
+                layer,
+                src,
+                dst: mi,
+                s1,
+                s2,
+            });
         }
 
-        // Assemble a MessagePhase view with only column `mi` populated.
-        let mut ph = MessagePhase {
-            p_full: vec![Vec::new(); l_total],
-            p_cross: vec![Vec::new(); l_total],
-            p_out: vec![vec![Vec::new(); ws.m]; l_total],
-            s_in: vec![vec![Vec::new(); ws.m]; l_total],
-        };
-        for l in 0..l_total {
-            for other in 0..ws.m {
-                ph.p_full[l].push(if other == mi {
-                    p_full[l].clone()
-                } else {
-                    Matrix::zeros(0, 0)
-                });
-                ph.p_cross[l].push(if other == mi {
-                    p_cross[l].clone()
-                } else {
-                    Matrix::zeros(0, 0)
-                });
-            }
-            ph.p_out[l][mi] = p_out[l].clone();
-            ph.s_in[l][mi] = s_in[l].clone();
-        }
-
-        // Z + U updates for this community only.
-        let z_prev: Vec<Vec<Matrix>> = trainer.state.z.clone();
-        trainer.update_community_public(mi, &z_prev, &ph)?;
+        // Phase C: Z + U updates for this community only.
+        agent.update_z_u(&ctx, &p_full, &p_cross, &p_out, &mut s_in)?;
         let secs = t0.elapsed().as_secs_f64();
 
         // Report fresh state.
         let mut enc = Enc::new();
         enc.u8(TAG_Z_REPORT).u32(l_total as u32);
         for li in 0..l_total {
-            enc_matrix(&mut enc, &trainer.state.z[li][mi]);
+            enc_matrix(&mut enc, &agent.z[li]);
         }
-        enc_matrix(&mut enc, &trainer.state.u[mi]);
+        enc_matrix(&mut enc, &agent.u);
         enc.f64(secs);
         conn.send(&enc.into_bytes())?;
     }
+    trainer.put_agent(agent);
     log::info!("worker {mi} shutting down");
     Ok(())
 }

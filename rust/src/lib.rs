@@ -1,32 +1,41 @@
 //! # CGCN — Community-based Layerwise Distributed Training of GCNs
 //!
-//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
-//! *"Community-based Layerwise Distributed Training of Graph Convolutional
-//! Networks"* (Li et al., 2021).
+//! A reproduction of *"Community-based Layerwise Distributed Training of
+//! Graph Convolutional Networks"* (Li et al., 2021) with two execution
+//! backends: a pure-Rust, pool-parallel [`runtime::NativeBackend`] (always
+//! available) and a PJRT/XLA artifact engine (`--features xla`, AOT via
+//! the Python/Pallas layer under `python/`).
 //!
 //! The crate is organised bottom-up:
 //!
 //! - [`util`] — in-house substrates (RNG, JSON, CLI, logging, wire format,
-//!   stats, property-testing) — the offline registry only carries the `xla`
-//!   crate closure, so these are built from scratch.
+//!   stats, property-testing, the worker pool) — the offline registry has
+//!   no ecosystem crates, so these are built from scratch.
 //! - [`tensor`] — host-side dense f32 matrices.
 //! - [`graph`] — CSR graphs, symmetric GCN normalisation, block extraction
 //!   and the SpMM hot path.
 //! - [`data`] — synthetic Amazon-like SBM datasets (Table 2 statistics) and
 //!   a binary dataset format.
 //! - [`partition`] — METIS-style multilevel partitioner plus baselines.
-//! - [`runtime`] — PJRT bridge: loads AOT-compiled HLO-text artifacts and
-//!   executes them from the training hot path (Python never runs here).
+//! - [`runtime`] — the [`runtime::ComputeBackend`] trait with the native
+//!   and (feature-gated) XLA implementations; every dense training kernel
+//!   dispatches through it.
 //! - [`coordinator`] — the paper's contribution: the community-based
 //!   layerwise ADMM trainer (Algorithm 1) with the first/second-order
-//!   message protocol (eq. 4), serial and parallel schedules, and
-//!   virtual-time accounting.
+//!   message protocol (eq. 4) factored into per-community agents
+//!   ([`coordinator::CommunityAgent`]); executors run the agents serially
+//!   with virtual-time accounting or as real pool tasks exchanging
+//!   messages over channels (`--exec serial|threads`), plus the
+//!   multi-process TCP transport.
 //! - [`baselines`] — full-batch backprop GCN with GD/Adam/Adagrad/Adadelta.
 //! - [`metrics`] — timers, counters and CSV emission for the paper's
 //!   tables/figures.
 //! - [`config`] — experiment configuration mirroring the paper's settings.
 //! - [`bench`] — the micro/macro benchmark harness (criterion is not
 //!   available offline).
+//!
+//! See `DESIGN.md` for how the backend trait, the worker pool and the
+//! virtual-time clock compose.
 
 pub mod bench;
 pub mod cmd;

@@ -30,6 +30,9 @@ fn main() {
     .opt("seed", Some("17"), "random seed")
     .opt("out", Some(""), "output path (plan json / csv / cgnp)")
     .opt("transport", Some("local"), "agent transport: local|tcp")
+    .opt("exec", Some("serial"), "agent execution: serial|threads (threads = real shared-memory parallelism)")
+    .opt("threads", Some("0"), "worker threads for --exec threads (0 = all cores); with --exec serial, sets native backend op threads (0 = 1, the deterministic single-thread baseline)")
+    .opt("backend", Some("auto"), "compute backend: auto|native|xla")
     .opt("link-mbps", Some("10000"), "simulated link bandwidth (Mbit/s; default models the paper's same-machine agents)")
     .opt("link-lat-us", Some("100"), "simulated link latency (microseconds)")
     .opt("listen", Some(""), "worker: leader address to connect to")

@@ -1,0 +1,1074 @@
+//! The `ComputeBackend` trait — every dense kernel the trainers need,
+//! decoupled from how it executes.
+//!
+//! Two implementations:
+//!
+//! - [`NativeBackend`] — pure Rust, always available. Hot paths (dense
+//!   matmul variants, [`Csr::spmm`]) are row-block parallelised through
+//!   [`crate::util::pool`] when constructed with > 1 thread; every output
+//!   row is produced by the same scalar loop the serial path runs, so
+//!   results are bitwise identical at any thread count.
+//! - `XlaBackend` (behind `--features xla`) — wraps the PJRT [`Engine`] and
+//!   dispatches each call to the AOT-compiled artifact with the matching
+//!   shape signature, exactly as the seed trainers did directly.
+//!
+//! The kernel *semantics* are specified by `python/compile/kernels/ref.py`
+//! and `python/compile/model.py`; the native implementations transcribe
+//! those definitions (f = ReLU with f'(0) := 0, masked-mean softmax
+//! cross-entropy with an explicit global denominator, FISTA with the
+//! static 1/(ρ + ½) step). `rust/tests/integration_engine.rs` asserts both
+//! backends agree with the host reference ops in [`crate::tensor`].
+
+use crate::graph::Csr;
+use crate::tensor::Matrix;
+use crate::util::pool::{parallel_row_chunks, resolve_threads};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Dense-kernel execution interface shared by the ADMM trainer, the
+/// backprop baselines, evaluation, the TCP transport workers and the
+/// benches.
+pub trait ComputeBackend: Send + Sync {
+    /// Short human-readable backend name for logs.
+    fn name(&self) -> &'static str;
+
+    /// `X @ W` — projections `V = Z W`, logits, Q assembly.
+    fn mm_nn(&self, x: &Matrix, w: &Matrix) -> Result<Matrix>;
+
+    /// `Xᵀ @ Y` — weight gradients `gW = Z_{l-1}ᵀ (Ã R)`.
+    fn mm_tn(&self, x: &Matrix, y: &Matrix) -> Result<Matrix>;
+
+    /// `Y @ Wᵀ` — Z-gradient back-projection `(Ã R) Wᵀ`.
+    fn mm_bt(&self, y: &Matrix, w: &Matrix) -> Result<Matrix>;
+
+    /// `ReLU(H @ W)` — forward hidden layer (eval, init, baselines).
+    fn fwd_relu(&self, h: &Matrix, w: &Matrix) -> Result<Matrix>;
+
+    /// ν-coupling at a ReLU layer: returns
+    /// `(ν/2 ‖f(pre) − Zt‖², ν (f(pre) − Zt) ⊙ f'(pre))`.
+    fn hidden_residual(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<(f32, Matrix)>;
+
+    /// Value-only hidden coupling (τ/θ backtracking).
+    fn hidden_phi(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<f32>;
+
+    /// Augmented-Lagrangian coupling at the linear output layer: returns
+    /// `(⟨U, Zt − pre⟩ + ρ/2 ‖Zt − pre‖², −(U + ρ(Zt − pre)))`.
+    fn out_residual(&self, pre: &Matrix, zt: &Matrix, u: &Matrix, rho: f32)
+        -> Result<(f32, Matrix)>;
+
+    /// Value-only output coupling (τ/θ backtracking).
+    fn out_phi(&self, pre: &Matrix, zt: &Matrix, u: &Matrix, rho: f32) -> Result<f32>;
+
+    /// Value-only proximal term `ν/2 ‖Z − f(Pin)‖²` (θ backtracking).
+    fn z_prox_val(&self, z: &Matrix, pin: &Matrix, nu: f32) -> Result<f32>;
+
+    /// Proximal-gradient combine step (eq. 8/10):
+    /// `g = ν(Z − f(Pin)) + Gsum; Z⁺ = Z − g/θ`. Returns
+    /// `(Z⁺, ν/2 ‖Z − f(Pin)‖², ‖g‖²)`.
+    fn z_combine(
+        &self,
+        z: &Matrix,
+        pin: &Matrix,
+        gsum: &Matrix,
+        nu: f32,
+        theta: f32,
+    ) -> Result<(Matrix, f32, f32)>;
+
+    /// Z_L subproblem (eq. 7): `steps` FISTA iterations on
+    /// `R(Z, Y) + ⟨U, Z − Q⟩ + ρ/2 ‖Z − Q‖²` from warm start `z0`, with
+    /// the static step `1/(ρ + ½)`. Returns `(Z⁺, risk at Z⁺)`.
+    #[allow(clippy::too_many_arguments)]
+    fn zl_fista(
+        &self,
+        q: &Matrix,
+        u: &Matrix,
+        y: &Matrix,
+        mask: &[f32],
+        z0: &Matrix,
+        rho: f32,
+        denom: f32,
+        steps: usize,
+    ) -> Result<(Matrix, f32)>;
+
+    /// Masked mean softmax cross-entropy loss (global `denom`).
+    fn xent_loss(&self, logits: &Matrix, y: &Matrix, mask: &[f32], denom: f32) -> Result<f32>;
+
+    /// Baseline loss head: `logits = H1 W2`; returns
+    /// `(loss, dW2 = H1ᵀ dL, dH1 = dL W2ᵀ)`.
+    fn bp_out_grads(
+        &self,
+        h1: &Matrix,
+        w2: &Matrix,
+        y: &Matrix,
+        mask: &[f32],
+        denom: f32,
+    ) -> Result<(f32, Matrix, Matrix)>;
+
+    /// Baseline hidden tail: `dW1 = H0ᵀ (dZ1 ⊙ f'(H0 W1))`.
+    fn bp_hidden_grads(&self, h0: &Matrix, w1: &Matrix, dz1: &Matrix) -> Result<Matrix>;
+
+    /// Sparse × dense (the Ã-product hot path). Backends may parallelise;
+    /// the default is the serial CSR kernel.
+    fn spmm(&self, a: &Csr, x: &Matrix) -> Matrix {
+        a.spmm(x)
+    }
+
+    /// Pre-compile the given artifact signatures (startup, off the timed
+    /// path). No-op for backends that compile nothing.
+    fn warmup(&self, _sigs: &[String]) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NativeBackend
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust backend. `threads > 1` row-block parallelises matmul/SpMM via
+/// scoped workers once an op's flop count crosses `min_par_flops`
+/// (bitwise-identical results either way — see [`crate::util::pool`]).
+pub struct NativeBackend {
+    threads: usize,
+    min_par_flops: usize,
+}
+
+/// Below this many flops a dense op runs serially even on a multi-thread
+/// backend — thread fork/join (~tens of µs) would dominate.
+const MIN_PAR_FLOPS: usize = 1 << 21;
+
+impl NativeBackend {
+    /// Single-threaded backend (the deterministic baseline).
+    pub fn new() -> NativeBackend {
+        NativeBackend {
+            threads: 1,
+            min_par_flops: MIN_PAR_FLOPS,
+        }
+    }
+
+    /// Backend with op-level row parallelism on up to `threads` workers
+    /// (0 = all available cores).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend {
+            threads: resolve_threads(threads),
+            min_par_flops: MIN_PAR_FLOPS,
+        }
+    }
+
+    /// Like [`NativeBackend::with_threads`] but with an explicit
+    /// parallelism grain (tests/benches use 0 to force the parallel path
+    /// on tiny shapes).
+    pub fn with_grain(threads: usize, min_par_flops: usize) -> NativeBackend {
+        NativeBackend {
+            threads: resolve_threads(threads),
+            min_par_flops,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Threads to use for an op costing `flops`.
+    fn par(&self, flops: usize) -> usize {
+        if self.threads > 1 && flops >= self.min_par_flops {
+            self.threads
+        } else {
+            1
+        }
+    }
+
+    fn matmul(&self, x: &Matrix, w: &Matrix, relu: bool) -> Matrix {
+        assert_eq!(
+            x.cols(),
+            w.rows(),
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            x.rows(),
+            x.cols(),
+            w.rows(),
+            w.cols()
+        );
+        let (rows, inner, cols) = (x.rows(), x.cols(), w.cols());
+        let mut out = Matrix::zeros(rows, cols);
+        let t = self.par(2 * rows * inner * cols);
+        parallel_row_chunks(t, rows, cols, out.data_mut(), |lo, hi, chunk| {
+            mm_nn_rows(x, w, relu, lo, hi, chunk)
+        });
+        out
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+/// Rows `lo..hi` of `X @ W` (optionally ReLU'd) into `chunk` — the same
+/// ikj loop as [`Matrix::matmul`], so results match it bitwise.
+fn mm_nn_rows(x: &Matrix, w: &Matrix, relu: bool, lo: usize, hi: usize, chunk: &mut [f32]) {
+    let inner = x.cols();
+    let n = w.cols();
+    let xd = x.data();
+    let wd = w.data();
+    for (ri, i) in (lo..hi).enumerate() {
+        let orow = &mut chunk[ri * n..(ri + 1) * n];
+        for k in 0..inner {
+            let a = xd[i * inner + k];
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &wd[k * n..(k + 1) * n];
+            for (o, &b) in orow.iter_mut().zip(wrow) {
+                *o += a * b;
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Rows `lo..hi` of `Xᵀ @ Y` into `chunk` (output is `x.cols() × y.cols()`;
+/// bitwise-matches `x.transpose().matmul(&y)`).
+fn mm_tn_rows(x: &Matrix, y: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+    let a = x.cols();
+    let n = y.cols();
+    let xd = x.data();
+    let yd = y.data();
+    for (ri, i) in (lo..hi).enumerate() {
+        let orow = &mut chunk[ri * n..(ri + 1) * n];
+        for k in 0..x.rows() {
+            let v = xd[k * a + i];
+            if v == 0.0 {
+                continue;
+            }
+            let yrow = &yd[k * n..(k + 1) * n];
+            for (o, &b) in orow.iter_mut().zip(yrow) {
+                *o += v * b;
+            }
+        }
+    }
+}
+
+/// Rows `lo..hi` of `Y @ Wᵀ` into `chunk` (output is `y.rows() × w.rows()`).
+fn mm_bt_rows(y: &Matrix, w: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+    let k = y.cols();
+    let a = w.rows();
+    for (ri, i) in (lo..hi).enumerate() {
+        let yrow = y.row(i);
+        let orow = &mut chunk[ri * a..(ri + 1) * a];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wrow = w.row(j);
+            let mut acc = 0.0f32;
+            for idx in 0..k {
+                acc += yrow[idx] * wrow[idx];
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Rows `lo..hi` of `A @ X` (CSR × dense) into `chunk` — same inner loop
+/// as [`Csr::spmm`].
+fn spmm_rows(a: &Csr, x: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+    let k = x.cols();
+    let xd = x.data();
+    for (ri, r) in (lo..hi).enumerate() {
+        let (cols, vals) = a.row(r);
+        let orow = &mut chunk[ri * k..(ri + 1) * k];
+        for (&c, &v) in cols.iter().zip(vals) {
+            let xrow = &xd[c as usize * k..(c as usize + 1) * k];
+            for (o, &xv) in orow.iter_mut().zip(xrow) {
+                *o += v * xv;
+            }
+        }
+    }
+}
+
+/// Masked mean softmax cross-entropy per `kernels/ref.py::softmax_xent_ref`:
+/// `loss = Σ_r mask_r (lse_r − ⟨y_r, logits_r⟩) / denom`,
+/// `grad = (softmax(logits) − Y) ⊙ mask / denom` (computed only when
+/// `grad_out` is given). Loss accumulates in f64 for stability.
+fn softmax_xent(
+    logits: &Matrix,
+    y: &Matrix,
+    mask: &[f32],
+    denom: f32,
+    mut grad_out: Option<&mut Matrix>,
+) -> f32 {
+    assert_eq!(logits.shape(), y.shape());
+    assert_eq!(logits.rows(), mask.len());
+    let c = logits.cols();
+    let mut loss = 0.0f64;
+    let mut p_row = vec![0.0f32; c];
+    for r in 0..logits.rows() {
+        let row = logits.row(r);
+        let mut max = f32::NEG_INFINITY;
+        for &x in row {
+            if x > max {
+                max = x;
+            }
+        }
+        let mut sum = 0.0f32;
+        for (pc, &x) in p_row.iter_mut().zip(row) {
+            let e = (x - max).exp();
+            *pc = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        let lse = sum.ln() + max;
+        let m = mask[r];
+        if m != 0.0 {
+            let mut picked = 0.0f32;
+            for (ci, &x) in row.iter().enumerate() {
+                picked += y.at(r, ci) * x;
+            }
+            loss += ((lse - picked) * m) as f64;
+        }
+        if let Some(g) = grad_out.as_mut() {
+            let grow = g.row_mut(r);
+            for (ci, gc) in grow.iter_mut().enumerate() {
+                *gc = (p_row[ci] * inv - y.at(r, ci)) * m / denom;
+            }
+        }
+    }
+    (loss / denom as f64) as f32
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn mm_nn(&self, x: &Matrix, w: &Matrix) -> Result<Matrix> {
+        Ok(self.matmul(x, w, false))
+    }
+
+    fn mm_tn(&self, x: &Matrix, y: &Matrix) -> Result<Matrix> {
+        assert_eq!(x.rows(), y.rows(), "mm_tn row mismatch");
+        let (rows, cols) = (x.cols(), y.cols());
+        let mut out = Matrix::zeros(rows, cols);
+        let t = self.par(2 * rows * cols * x.rows());
+        parallel_row_chunks(t, rows, cols, out.data_mut(), |lo, hi, chunk| {
+            mm_tn_rows(x, y, lo, hi, chunk)
+        });
+        Ok(out)
+    }
+
+    fn mm_bt(&self, y: &Matrix, w: &Matrix) -> Result<Matrix> {
+        assert_eq!(y.cols(), w.cols(), "mm_bt col mismatch");
+        let (rows, cols) = (y.rows(), w.rows());
+        let mut out = Matrix::zeros(rows, cols);
+        let t = self.par(2 * rows * cols * y.cols());
+        parallel_row_chunks(t, rows, cols, out.data_mut(), |lo, hi, chunk| {
+            mm_bt_rows(y, w, lo, hi, chunk)
+        });
+        Ok(out)
+    }
+
+    fn fwd_relu(&self, h: &Matrix, w: &Matrix) -> Result<Matrix> {
+        Ok(self.matmul(h, w, true))
+    }
+
+    fn hidden_residual(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<(f32, Matrix)> {
+        assert_eq!(pre.shape(), zt.shape());
+        let mut r = Matrix::zeros(pre.rows(), pre.cols());
+        let mut val = 0.0f64;
+        let rd = r.data_mut();
+        for (i, (&p, &z)) in pre.data().iter().zip(zt.data()).enumerate() {
+            let act = p.max(0.0);
+            let d = act - z;
+            val += (d as f64) * (d as f64);
+            rd[i] = if p > 0.0 { nu * d } else { 0.0 };
+        }
+        Ok(((0.5 * nu as f64 * val) as f32, r))
+    }
+
+    fn hidden_phi(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<f32> {
+        assert_eq!(pre.shape(), zt.shape());
+        let mut val = 0.0f64;
+        for (&p, &z) in pre.data().iter().zip(zt.data()) {
+            let d = p.max(0.0) - z;
+            val += (d as f64) * (d as f64);
+        }
+        Ok((0.5 * nu as f64 * val) as f32)
+    }
+
+    fn out_residual(
+        &self,
+        pre: &Matrix,
+        zt: &Matrix,
+        u: &Matrix,
+        rho: f32,
+    ) -> Result<(f32, Matrix)> {
+        assert_eq!(pre.shape(), zt.shape());
+        assert_eq!(pre.shape(), u.shape());
+        let mut r = Matrix::zeros(pre.rows(), pre.cols());
+        let rd = r.data_mut();
+        let mut lin = 0.0f64;
+        let mut quad = 0.0f64;
+        for (i, ((&p, &z), &uu)) in pre
+            .data()
+            .iter()
+            .zip(zt.data())
+            .zip(u.data())
+            .enumerate()
+        {
+            let d = z - p;
+            lin += (uu as f64) * (d as f64);
+            quad += (d as f64) * (d as f64);
+            rd[i] = -(uu + rho * d);
+        }
+        Ok(((lin + 0.5 * rho as f64 * quad) as f32, r))
+    }
+
+    fn out_phi(&self, pre: &Matrix, zt: &Matrix, u: &Matrix, rho: f32) -> Result<f32> {
+        assert_eq!(pre.shape(), zt.shape());
+        assert_eq!(pre.shape(), u.shape());
+        let mut lin = 0.0f64;
+        let mut quad = 0.0f64;
+        for ((&p, &z), &uu) in pre.data().iter().zip(zt.data()).zip(u.data()) {
+            let d = z - p;
+            lin += (uu as f64) * (d as f64);
+            quad += (d as f64) * (d as f64);
+        }
+        Ok((lin + 0.5 * rho as f64 * quad) as f32)
+    }
+
+    fn z_prox_val(&self, z: &Matrix, pin: &Matrix, nu: f32) -> Result<f32> {
+        assert_eq!(z.shape(), pin.shape());
+        let mut val = 0.0f64;
+        for (&zz, &p) in z.data().iter().zip(pin.data()) {
+            let d = zz - p.max(0.0);
+            val += (d as f64) * (d as f64);
+        }
+        Ok((0.5 * nu as f64 * val) as f32)
+    }
+
+    fn z_combine(
+        &self,
+        z: &Matrix,
+        pin: &Matrix,
+        gsum: &Matrix,
+        nu: f32,
+        theta: f32,
+    ) -> Result<(Matrix, f32, f32)> {
+        assert_eq!(z.shape(), pin.shape());
+        assert_eq!(z.shape(), gsum.shape());
+        let mut znew = Matrix::zeros(z.rows(), z.cols());
+        let zd = znew.data_mut();
+        let mut prox = 0.0f64;
+        let mut gsq = 0.0f64;
+        let inv_theta = 1.0 / theta;
+        for (i, ((&zz, &p), &gs)) in z
+            .data()
+            .iter()
+            .zip(pin.data())
+            .zip(gsum.data())
+            .enumerate()
+        {
+            let d = zz - p.max(0.0);
+            prox += (d as f64) * (d as f64);
+            let g = nu * d + gs;
+            gsq += (g as f64) * (g as f64);
+            zd[i] = zz - g * inv_theta;
+        }
+        Ok((znew, (0.5 * nu as f64 * prox) as f32, gsq as f32))
+    }
+
+    fn zl_fista(
+        &self,
+        q: &Matrix,
+        u: &Matrix,
+        y: &Matrix,
+        mask: &[f32],
+        z0: &Matrix,
+        rho: f32,
+        denom: f32,
+        steps: usize,
+    ) -> Result<(Matrix, f32)> {
+        assert_eq!(q.shape(), u.shape());
+        assert_eq!(q.shape(), y.shape());
+        assert_eq!(q.shape(), z0.shape());
+        let step = 1.0f32 / (rho + 0.5);
+        let mut z = z0.clone();
+        let mut v = z0.clone();
+        let mut t = 1.0f32;
+        let mut g = Matrix::zeros(q.rows(), q.cols());
+        for _ in 0..steps {
+            softmax_xent(&v, y, mask, denom, Some(&mut g));
+            // g += U + ρ(v − Q); z_next = v − step * g.
+            let mut z_next = v.clone();
+            {
+                let gd = g.data_mut();
+                let zn = z_next.data_mut();
+                for (i, ((&uu, &qq), &vv)) in
+                    u.data().iter().zip(q.data()).zip(v.data()).enumerate()
+                {
+                    let gi = gd[i] + uu + rho * (vv - qq);
+                    zn[i] = vv - step * gi;
+                }
+            }
+            let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+            let momentum = (t - 1.0) / t_next;
+            // v = z_next + momentum * (z_next − z)
+            let mut v_new = z_next.clone();
+            {
+                let vd = v_new.data_mut();
+                for (i, &zold) in z.data().iter().enumerate() {
+                    vd[i] += momentum * (vd[i] - zold);
+                }
+            }
+            z = z_next;
+            v = v_new;
+            t = t_next;
+        }
+        let loss = softmax_xent(&z, y, mask, denom, None);
+        Ok((z, loss))
+    }
+
+    fn xent_loss(&self, logits: &Matrix, y: &Matrix, mask: &[f32], denom: f32) -> Result<f32> {
+        Ok(softmax_xent(logits, y, mask, denom, None))
+    }
+
+    fn bp_out_grads(
+        &self,
+        h1: &Matrix,
+        w2: &Matrix,
+        y: &Matrix,
+        mask: &[f32],
+        denom: f32,
+    ) -> Result<(f32, Matrix, Matrix)> {
+        let logits = self.matmul(h1, w2, false);
+        let mut dl = Matrix::zeros(logits.rows(), logits.cols());
+        let loss = softmax_xent(&logits, y, mask, denom, Some(&mut dl));
+        let dw2 = self.mm_tn(h1, &dl)?;
+        let dh1 = self.mm_bt(&dl, w2)?;
+        Ok((loss, dw2, dh1))
+    }
+
+    fn bp_hidden_grads(&self, h0: &Matrix, w1: &Matrix, dz1: &Matrix) -> Result<Matrix> {
+        let pre = self.matmul(h0, w1, false);
+        assert_eq!(pre.shape(), dz1.shape());
+        let mut r = Matrix::zeros(pre.rows(), pre.cols());
+        let rd = r.data_mut();
+        for (i, (&p, &d)) in pre.data().iter().zip(dz1.data()).enumerate() {
+            rd[i] = if p > 0.0 { d } else { 0.0 };
+        }
+        self.mm_tn(h0, &r)
+    }
+
+    fn spmm(&self, a: &Csr, x: &Matrix) -> Matrix {
+        assert_eq!(
+            a.ncols(),
+            x.rows(),
+            "spmm shape mismatch: {}x{} @ {}x{}",
+            a.nrows(),
+            a.ncols(),
+            x.rows(),
+            x.cols()
+        );
+        let k = x.cols();
+        let mut out = Matrix::zeros(a.nrows(), k);
+        let t = self.par(2 * a.nnz() * k);
+        parallel_row_chunks(t, a.nrows(), k, out.data_mut(), |lo, hi, chunk| {
+            spmm_rows(a, x, lo, hi, chunk)
+        });
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XlaBackend (feature-gated)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;
+
+#[cfg(feature = "xla")]
+mod xla_backend {
+    use super::ComputeBackend;
+    use crate::graph::Csr;
+    use crate::runtime::{Engine, In};
+    use crate::tensor::Matrix;
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// PJRT artifact backend: maps each typed kernel call to the artifact
+    /// signature for its shapes and executes it on the [`Engine`].
+    pub struct XlaBackend {
+        engine: Engine,
+    }
+
+    impl XlaBackend {
+        pub fn load(dir: &Path) -> Result<XlaBackend> {
+            Ok(XlaBackend {
+                engine: Engine::load(dir)?,
+            })
+        }
+
+        pub fn from_engine(engine: Engine) -> XlaBackend {
+            XlaBackend { engine }
+        }
+
+        pub fn engine(&self) -> &Engine {
+            &self.engine
+        }
+
+        fn exec1(&self, sig: &str, inputs: &[In]) -> Result<Matrix> {
+            Ok(self.engine.exec(sig, inputs)?.remove(0).into_mat())
+        }
+
+        fn nab(entry: &str, n: usize, a: usize, b: usize) -> String {
+            format!("{entry}__n{n}_a{a}_b{b}")
+        }
+
+        fn nc(entry: &str, n: usize, c: usize) -> String {
+            format!("{entry}__n{n}_c{c}")
+        }
+    }
+
+    impl ComputeBackend for XlaBackend {
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+
+        fn mm_nn(&self, x: &Matrix, w: &Matrix) -> Result<Matrix> {
+            let sig = Self::nab("mm_nn", x.rows(), x.cols(), w.cols());
+            self.exec1(&sig, &[In::Mat(x), In::Mat(w)])
+        }
+
+        fn mm_tn(&self, x: &Matrix, y: &Matrix) -> Result<Matrix> {
+            let sig = Self::nab("mm_tn", x.rows(), x.cols(), y.cols());
+            self.exec1(&sig, &[In::Mat(x), In::Mat(y)])
+        }
+
+        fn mm_bt(&self, y: &Matrix, w: &Matrix) -> Result<Matrix> {
+            let sig = Self::nab("mm_bt", y.rows(), w.rows(), w.cols());
+            self.exec1(&sig, &[In::Mat(y), In::Mat(w)])
+        }
+
+        fn fwd_relu(&self, h: &Matrix, w: &Matrix) -> Result<Matrix> {
+            let sig = Self::nab("fwd_relu", h.rows(), h.cols(), w.cols());
+            self.exec1(&sig, &[In::Mat(h), In::Mat(w)])
+        }
+
+        fn hidden_residual(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<(f32, Matrix)> {
+            let sig = Self::nc("hidden_residual", pre.rows(), pre.cols());
+            let outs = self
+                .engine
+                .exec(&sig, &[In::Mat(pre), In::Mat(zt), In::Scalar(nu)])?;
+            let mut it = outs.into_iter();
+            Ok((it.next().unwrap().scalar(), it.next().unwrap().into_mat()))
+        }
+
+        fn hidden_phi(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<f32> {
+            let sig = Self::nc("hidden_phi", pre.rows(), pre.cols());
+            Ok(self
+                .engine
+                .exec(&sig, &[In::Mat(pre), In::Mat(zt), In::Scalar(nu)])?
+                .remove(0)
+                .scalar())
+        }
+
+        fn out_residual(
+            &self,
+            pre: &Matrix,
+            zt: &Matrix,
+            u: &Matrix,
+            rho: f32,
+        ) -> Result<(f32, Matrix)> {
+            let sig = Self::nc("out_residual", pre.rows(), pre.cols());
+            let outs = self.engine.exec(
+                &sig,
+                &[In::Mat(pre), In::Mat(zt), In::Mat(u), In::Scalar(rho)],
+            )?;
+            let mut it = outs.into_iter();
+            Ok((it.next().unwrap().scalar(), it.next().unwrap().into_mat()))
+        }
+
+        fn out_phi(&self, pre: &Matrix, zt: &Matrix, u: &Matrix, rho: f32) -> Result<f32> {
+            let sig = Self::nc("out_phi", pre.rows(), pre.cols());
+            Ok(self
+                .engine
+                .exec(
+                    &sig,
+                    &[In::Mat(pre), In::Mat(zt), In::Mat(u), In::Scalar(rho)],
+                )?
+                .remove(0)
+                .scalar())
+        }
+
+        fn z_prox_val(&self, z: &Matrix, pin: &Matrix, nu: f32) -> Result<f32> {
+            let sig = Self::nc("z_prox_val", z.rows(), z.cols());
+            Ok(self
+                .engine
+                .exec(&sig, &[In::Mat(z), In::Mat(pin), In::Scalar(nu)])?
+                .remove(0)
+                .scalar())
+        }
+
+        fn z_combine(
+            &self,
+            z: &Matrix,
+            pin: &Matrix,
+            gsum: &Matrix,
+            nu: f32,
+            theta: f32,
+        ) -> Result<(Matrix, f32, f32)> {
+            let sig = Self::nc("z_combine", z.rows(), z.cols());
+            let outs = self.engine.exec(
+                &sig,
+                &[
+                    In::Mat(z),
+                    In::Mat(pin),
+                    In::Mat(gsum),
+                    In::Scalar(nu),
+                    In::Scalar(theta),
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            Ok((
+                it.next().unwrap().into_mat(),
+                it.next().unwrap().scalar(),
+                it.next().unwrap().scalar(),
+            ))
+        }
+
+        fn zl_fista(
+            &self,
+            q: &Matrix,
+            u: &Matrix,
+            y: &Matrix,
+            mask: &[f32],
+            z0: &Matrix,
+            rho: f32,
+            denom: f32,
+            steps: usize,
+        ) -> Result<(Matrix, f32)> {
+            let sig = format!("zl_fista__n{}_c{}_steps{}", q.rows(), q.cols(), steps);
+            let outs = self.engine.exec(
+                &sig,
+                &[
+                    In::Mat(q),
+                    In::Mat(u),
+                    In::Mat(y),
+                    In::Vec(mask),
+                    In::Mat(z0),
+                    In::Scalar(rho),
+                    In::Scalar(denom),
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            Ok((it.next().unwrap().into_mat(), it.next().unwrap().scalar()))
+        }
+
+        fn xent_loss(&self, logits: &Matrix, y: &Matrix, mask: &[f32], denom: f32) -> Result<f32> {
+            let sig = Self::nc("xent_loss", logits.rows(), logits.cols());
+            Ok(self
+                .engine
+                .exec(
+                    &sig,
+                    &[
+                        In::Mat(logits),
+                        In::Mat(y),
+                        In::Vec(mask),
+                        In::Scalar(denom),
+                    ],
+                )?
+                .remove(0)
+                .scalar())
+        }
+
+        fn bp_out_grads(
+            &self,
+            h1: &Matrix,
+            w2: &Matrix,
+            y: &Matrix,
+            mask: &[f32],
+            denom: f32,
+        ) -> Result<(f32, Matrix, Matrix)> {
+            let sig = Self::nab("bp_out_grads", h1.rows(), h1.cols(), w2.cols());
+            let outs = self.engine.exec(
+                &sig,
+                &[
+                    In::Mat(h1),
+                    In::Mat(w2),
+                    In::Mat(y),
+                    In::Vec(mask),
+                    In::Scalar(denom),
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            Ok((
+                it.next().unwrap().scalar(),
+                it.next().unwrap().into_mat(),
+                it.next().unwrap().into_mat(),
+            ))
+        }
+
+        fn bp_hidden_grads(&self, h0: &Matrix, w1: &Matrix, dz1: &Matrix) -> Result<Matrix> {
+            let sig = Self::nab("bp_hidden_grads", h0.rows(), h0.cols(), w1.cols());
+            self.exec1(&sig, &[In::Mat(h0), In::Mat(w1), In::Mat(dz1)])
+        }
+
+        fn spmm(&self, a: &Csr, x: &Matrix) -> Matrix {
+            a.spmm(x)
+        }
+
+        fn warmup(&self, sigs: &[String]) -> Result<()> {
+            self.engine.warmup(sigs)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Requested backend kind (CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// XLA artifacts when compiled in *and* present, otherwise native.
+    Auto,
+    Native,
+    Xla,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Option<BackendChoice> {
+        match s {
+            "auto" => Some(BackendChoice::Auto),
+            "native" => Some(BackendChoice::Native),
+            "xla" => Some(BackendChoice::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// True if the XLA artifact directory is usable (always false without the
+/// `xla` feature).
+#[cfg(feature = "xla")]
+pub fn xla_available() -> bool {
+    crate::runtime::Engine::available()
+}
+
+/// True if the XLA artifact directory is usable (always false without the
+/// `xla` feature).
+#[cfg(not(feature = "xla"))]
+pub fn xla_available() -> bool {
+    false
+}
+
+#[cfg(feature = "xla")]
+fn load_xla_backend() -> Result<Arc<dyn ComputeBackend>> {
+    let dir = crate::runtime::Engine::default_dir();
+    Ok(Arc::new(XlaBackend::load(&dir)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn load_xla_backend() -> Result<Arc<dyn ComputeBackend>> {
+    anyhow::bail!("built without the `xla` feature — rebuild with --features xla or use --backend native")
+}
+
+/// Resolve a backend. `op_threads` sets the native backend's op-level row
+/// parallelism (1 = fully serial ops; ignored by the XLA backend).
+pub fn select_backend(choice: BackendChoice, op_threads: usize) -> Result<Arc<dyn ComputeBackend>> {
+    match choice {
+        BackendChoice::Native => Ok(Arc::new(NativeBackend::with_threads(op_threads.max(1)))),
+        BackendChoice::Xla => load_xla_backend(),
+        BackendChoice::Auto => {
+            if xla_available() {
+                load_xla_backend()
+            } else {
+                select_backend(BackendChoice::Native, op_threads)
+            }
+        }
+    }
+}
+
+/// The default backend: XLA when available, else single-threaded native.
+/// Never fails (falls back to native on any XLA load error).
+pub fn default_backend() -> Arc<dyn ComputeBackend> {
+    select_backend(BackendChoice::Auto, 1)
+        .unwrap_or_else(|_| Arc::new(NativeBackend::new()) as Arc<dyn ComputeBackend>)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_variants_match_host_reference() {
+        let mut rng = Rng::new(21);
+        let be = NativeBackend::new();
+        let x = Matrix::glorot(13, 7, &mut rng);
+        let w = Matrix::glorot(7, 5, &mut rng);
+        let y = Matrix::glorot(13, 5, &mut rng);
+        assert_eq!(be.mm_nn(&x, &w).unwrap().data(), x.matmul(&w).data());
+        assert_eq!(
+            be.mm_tn(&x, &y).unwrap().data(),
+            x.transpose().matmul(&y).data()
+        );
+        let bt = be.mm_bt(&y, &w).unwrap();
+        let want = y.matmul(&w.transpose());
+        assert!(bt.max_abs_diff(&want) < 1e-5);
+        let fr = be.fwd_relu(&x, &w).unwrap();
+        assert_eq!(fr.data(), crate::tensor::relu(&x.matmul(&w)).data());
+    }
+
+    #[test]
+    fn parallel_ops_are_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(22);
+        let serial = NativeBackend::new();
+        let x = Matrix::glorot(64, 33, &mut rng);
+        let w = Matrix::glorot(33, 17, &mut rng);
+        let mut trips = Vec::new();
+        for r in 0..64 {
+            for c in 0..64 {
+                if rng.gen_bool(0.1) {
+                    trips.push((r, c, rng.gen_f32()));
+                }
+            }
+        }
+        let a = Csr::from_triplets(64, 64, &trips);
+        let xs = Matrix::glorot(64, 17, &mut rng);
+        for t in [2usize, 4, 8] {
+            let par = NativeBackend::with_grain(t, 0); // force parallel path
+            assert_eq!(
+                par.mm_nn(&x, &w).unwrap().data(),
+                serial.mm_nn(&x, &w).unwrap().data(),
+                "mm_nn t={t}"
+            );
+            assert_eq!(
+                par.mm_tn(&x, &x).unwrap().data(),
+                serial.mm_tn(&x, &x).unwrap().data(),
+                "mm_tn t={t}"
+            );
+            assert_eq!(
+                par.mm_bt(&x, &Matrix::glorot(9, 33, &mut Rng::new(5)))
+                    .unwrap()
+                    .data(),
+                serial
+                    .mm_bt(&x, &Matrix::glorot(9, 33, &mut Rng::new(5)))
+                    .unwrap()
+                    .data(),
+                "mm_bt t={t}"
+            );
+            assert_eq!(
+                par.spmm(&a, &xs).data(),
+                serial.spmm(&a, &xs).data(),
+                "spmm t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_formulas() {
+        let mut rng = Rng::new(23);
+        let be = NativeBackend::new();
+        let pre = Matrix::glorot(6, 4, &mut rng);
+        let zt = Matrix::glorot(6, 4, &mut rng);
+        let nu = 0.37f32;
+        let (val, r) = be.hidden_residual(&pre, &zt, nu).unwrap();
+        let act = crate::tensor::relu(&pre);
+        let d = act.sub(&zt);
+        let want_val = 0.5 * nu * d.frob_norm_sq() as f32;
+        assert!((val - want_val).abs() < 1e-5 * want_val.abs().max(1.0));
+        let want_r = d
+            .hadamard(&crate::tensor::relu_mask(&pre))
+            .scale(nu);
+        assert!(r.max_abs_diff(&want_r) < 1e-6);
+        assert_eq!(be.hidden_phi(&pre, &zt, nu).unwrap(), val);
+
+        let u = Matrix::glorot(6, 4, &mut rng);
+        let rho = 0.05f32;
+        let (oval, orr) = be.out_residual(&pre, &zt, &u, rho).unwrap();
+        let dz = zt.sub(&pre);
+        let want = u.dot(&dz) as f32 + 0.5 * rho * dz.frob_norm_sq() as f32;
+        assert!((oval - want).abs() < 1e-5 * want.abs().max(1.0));
+        let mut want_r = u.clone();
+        want_r.axpy(rho, &dz);
+        assert!(orr.max_abs_diff(&want_r.scale(-1.0)) < 1e-6);
+        assert_eq!(be.out_phi(&pre, &zt, &u, rho).unwrap(), oval);
+    }
+
+    #[test]
+    fn z_combine_matches_manual() {
+        let mut rng = Rng::new(24);
+        let be = NativeBackend::new();
+        let z = Matrix::glorot(5, 3, &mut rng);
+        let pin = Matrix::glorot(5, 3, &mut rng);
+        let gsum = Matrix::glorot(5, 3, &mut rng);
+        let (nu, theta) = (0.2f32, 1.5f32);
+        let (znew, prox, gsq) = be.z_combine(&z, &pin, &gsum, nu, theta).unwrap();
+        let fpin = crate::tensor::relu(&pin);
+        let d = z.sub(&fpin);
+        let g = d.scale(nu).add(&gsum);
+        let want_z = z.sub(&g.scale(1.0 / theta));
+        assert!(znew.max_abs_diff(&want_z) < 1e-6);
+        assert!((prox - 0.5 * nu * d.frob_norm_sq() as f32).abs() < 1e-5);
+        assert!((gsq - g.frob_norm_sq() as f32).abs() < 1e-4 * gsq.abs().max(1.0));
+        assert_eq!(be.z_prox_val(&z, &pin, nu).unwrap(), prox);
+    }
+
+    #[test]
+    fn xent_matches_host_cross_entropy() {
+        let mut rng = Rng::new(25);
+        let be = NativeBackend::new();
+        let n = 12;
+        let c = 4;
+        let logits = Matrix::glorot(n, c, &mut rng).scale(3.0);
+        let labels: Vec<usize> = (0..n).map(|_| rng.gen_range(c)).collect();
+        let mut y = Matrix::zeros(n, c);
+        let mut mask = vec![0.0f32; n];
+        for i in 0..n {
+            y.set(i, labels[i], 1.0);
+            if rng.gen_bool(0.6) {
+                mask[i] = 1.0;
+            }
+        }
+        let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+        let got = be.xent_loss(&logits, &y, &mask, denom).unwrap();
+        let (want, _) = crate::tensor::masked_cross_entropy(&logits, &labels, &mask);
+        assert!(
+            (got as f64 - want).abs() < 1e-5 * want.abs().max(1.0),
+            "native {got} vs host {want}"
+        );
+    }
+
+    #[test]
+    fn fista_decreases_objective() {
+        let mut rng = Rng::new(26);
+        let be = NativeBackend::new();
+        let n = 16;
+        let c = 3;
+        let q = Matrix::glorot(n, c, &mut rng);
+        let u = Matrix::glorot(n, c, &mut rng).scale(0.05);
+        let labels: Vec<usize> = (0..n).map(|_| rng.gen_range(c)).collect();
+        let mut y = Matrix::zeros(n, c);
+        let mask = vec![1.0f32; n];
+        for i in 0..n {
+            y.set(i, labels[i], 1.0);
+        }
+        let denom = n as f32;
+        let rho = 0.1f32;
+        let objective = |z: &Matrix| -> f64 {
+            let (ce, _) = crate::tensor::masked_cross_entropy(z, &labels, &mask);
+            let d = z.sub(&q);
+            ce + u.dot(&d) + 0.5 * rho as f64 * d.frob_norm_sq()
+        };
+        let (z_new, _risk) = be
+            .zl_fista(&q, &u, &y, &mask, &q, rho, denom, 10)
+            .unwrap();
+        assert!(
+            objective(&z_new) < objective(&q) - 1e-6,
+            "FISTA failed to decrease the eq.-7 objective"
+        );
+    }
+}

@@ -1,17 +1,32 @@
-//! PJRT runtime bridge — loads the AOT-compiled HLO-text artifacts and
-//! executes them from the training hot path.
+//! Execution backends for the dense training kernels.
 //!
-//! Python runs only at build time (`make artifacts`); this module is how
-//! the Rust coordinator reaches the L2/L1 compute graphs afterwards:
+//! The trainers talk to a [`ComputeBackend`] trait object; the concrete
+//! implementation is chosen at startup:
 //!
 //! ```text
-//! manifest.json ─► ArtifactMeta ─► (lazy) PjRtClient::compile ─► execute
+//!                ┌──────────────────────────────┐
+//!  AdmmTrainer   │ ComputeBackend               │   NativeBackend (always)
+//!  baselines  ──►│  mm_nn/tn/bt · fwd_relu      │──► pure Rust, pool-
+//!  transport     │  *_residual/phi · z_combine  │    parallel matmul/SpMM
+//!  bench/eval    │  zl_fista · xent · bp_* ·    │
+//!                │  spmm · warmup               │   XlaBackend (--features
+//!                └──────────────────────────────┘──► xla): PJRT artifacts
 //! ```
 //!
-//! Executables are compiled once per artifact signature and cached;
-//! per-call timing is accumulated so the benchmark harness can separate
-//! "XLA compute" from coordinator overhead.
+//! With `--features xla`, [`Engine`] loads AOT-compiled HLO-text artifacts
+//! (`make artifacts`; Python runs only at build time) and `XlaBackend`
+//! maps each typed kernel call onto the artifact with the matching shape
+//! signature. Without the feature the crate builds and trains with the
+//! native backend alone — no artifacts, no registry, no Python.
 
+mod backend;
+#[cfg(feature = "xla")]
 mod engine;
 
+pub use backend::{
+    default_backend, select_backend, xla_available, BackendChoice, ComputeBackend, NativeBackend,
+};
+#[cfg(feature = "xla")]
+pub use backend::XlaBackend;
+#[cfg(feature = "xla")]
 pub use engine::{Engine, ExecStats, In, Out, Prepared};

@@ -31,21 +31,32 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}\n\n{1}")]
     Unknown(String, String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({why})")]
     Invalid {
         key: String,
         value: String,
         why: String,
     },
-    #[error("{0}")]
     Help(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(key, usage) => write!(f, "unknown option --{key}\n\n{usage}"),
+            CliError::MissingValue(key) => write!(f, "option --{key} expects a value"),
+            CliError::Invalid { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value:?} ({why})")
+            }
+            CliError::Help(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl ArgSpec {
     pub fn new(program: &str, about: &str) -> Self {

@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod json;
 pub mod logger;
+pub mod pool;
 pub mod proplite;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,231 @@
+//! In-house worker pool + scoped data-parallel helpers (rayon is not
+//! available offline).
+//!
+//! Two execution primitives, matching the two shapes of parallelism in the
+//! trainer:
+//!
+//! - [`Pool`] — a persistent thread pool for `'static` jobs. The parallel
+//!   agent runtime ([`crate::coordinator`]) moves each community agent's
+//!   state into a job and exchanges p/s messages over `mpsc` channels, so
+//!   jobs own everything they touch and no scoped lifetimes are needed.
+//! - [`scoped_map`] / [`parallel_row_chunks`] — fork-join helpers built on
+//!   `std::thread::scope` for data-parallel loops over *borrowed* data
+//!   (dense matmul / SpMM row blocks, per-community W partials). Scoped
+//!   threads let the closures borrow matrices without `Arc`-ing the world;
+//!   the spawn cost (~tens of µs) only matters below the grain sizes the
+//!   callers already guard against.
+//!
+//! Determinism: both helpers partition work by index and every output
+//! element is written by exactly one thread with the same scalar math the
+//! serial path uses, so parallel results are bitwise identical to serial
+//! ones. Reductions are always folded on the caller's thread in index
+//! order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Resolve a user-facing thread count: 0 means "all available cores",
+/// with a floor of 1.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// A small persistent worker pool for `'static` jobs.
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `threads` workers (at least 1).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("cgcn-pool-{i}"))
+                    .spawn(move || loop {
+                        // Take the lock only to dequeue; run unlocked.
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job. Jobs must not panic the pool away: a panicking job
+    /// kills its worker thread but the queue and remaining workers live on.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool worker channel closed");
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` on up to `threads` scoped worker threads and
+/// return the results in index order. `threads <= 1` or `n <= 1` degrades
+/// to a plain serial map (no threads spawned). Work is distributed by an
+/// atomic counter so uneven item costs balance out.
+pub fn scoped_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let t = threads.min(n);
+    let counter = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let fr = &f;
+    let cr = &counter;
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    thread::scope(|s| {
+        for _ in 0..t {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = cr.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, fr(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+    });
+    out.into_iter()
+        .map(|o| o.expect("scoped_map worker panicked"))
+        .collect()
+}
+
+/// Split a row-major `rows × cols` output buffer into contiguous row
+/// chunks, one per thread, and run `f(row_lo, row_hi, chunk)` on scoped
+/// threads. With `threads <= 1` the single chunk runs on the caller's
+/// thread. Each output row is written by exactly one invocation, so the
+/// result is bitwise identical to the serial run of the same `f`.
+pub fn parallel_row_chunks<F>(threads: usize, rows: usize, cols: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * cols, "output buffer shape mismatch");
+    if threads <= 1 || rows <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    let t = threads.min(rows);
+    let chunk_rows = rows.div_ceil(t);
+    let fr = &f;
+    thread::scope(|s| {
+        let mut rest = out;
+        let mut lo = 0usize;
+        while lo < rows {
+            let hi = (lo + chunk_rows).min(rows);
+            let (head, tail) = rest.split_at_mut((hi - lo) * cols);
+            rest = tail;
+            s.spawn(move || fr(lo, hi, head));
+            lo = hi;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs_and_shuts_down() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let hits = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for i in 0..32u64 {
+            let hits = hits.clone();
+            let tx = tx.clone();
+            pool.execute(move || {
+                hits.fetch_add(i, Ordering::Relaxed);
+                tx.send(()).unwrap();
+            });
+        }
+        drop(tx);
+        for _ in 0..32 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), (0..32).sum::<u64>());
+        drop(pool); // joins workers
+    }
+
+    #[test]
+    fn scoped_map_is_ordered_and_complete() {
+        for threads in [1usize, 2, 4, 8] {
+            let got = scoped_map(threads, 37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(scoped_map(4, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn parallel_row_chunks_matches_serial() {
+        let rows = 57;
+        let cols = 13;
+        let fill = |lo: usize, hi: usize, chunk: &mut [f32]| {
+            for (ri, r) in (lo..hi).enumerate() {
+                for c in 0..cols {
+                    chunk[ri * cols + c] = (r * cols + c) as f32 * 0.5;
+                }
+            }
+        };
+        let mut serial = vec![0.0f32; rows * cols];
+        fill(0, rows, &mut serial);
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut par = vec![0.0f32; rows * cols];
+            parallel_row_chunks(threads, rows, cols, &mut par, fill);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+}

@@ -92,12 +92,19 @@ pub struct Dec<'a> {
     pos: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("wire decode error at byte {at}: {what}")]
+#[derive(Debug)]
 pub struct DecodeError {
     pub at: usize,
     pub what: &'static str,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error at byte {}: {}", self.at, self.what)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 impl<'a> Dec<'a> {
     pub fn new(buf: &'a [u8]) -> Self {

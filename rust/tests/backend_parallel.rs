@@ -1,0 +1,207 @@
+//! Backend-equivalence property tests and the serial-vs-threads executor
+//! determinism guarantee.
+//!
+//! Two claims under test (DESIGN.md):
+//! 1. `NativeBackend` ops at any thread count are *bitwise* identical to
+//!    the serial host reference ops in `cgcn::tensor` — row-block
+//!    parallelism never reorders a single accumulation.
+//! 2. `--exec threads` produces bitwise-identical epoch metrics and final
+//!    state to `--exec serial` for a fixed seed: the channel-based message
+//!    exchange canonicalises fold order.
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, ExecMode, Workspace};
+use cgcn::data::fixtures;
+use cgcn::graph::Csr;
+use cgcn::partition::Method;
+use cgcn::runtime::{ComputeBackend, NativeBackend};
+use cgcn::tensor::{masked_cross_entropy, Matrix};
+use cgcn::prop_assert;
+use cgcn::util::proplite;
+use std::sync::Arc;
+
+fn gen_matrix(g: &mut proplite::Gen, rows: usize, cols: usize) -> Matrix {
+    let data = g.vec_f32(rows * cols, 2.0);
+    Matrix::from_vec(rows, cols, data)
+}
+
+#[test]
+fn prop_matmul_variants_match_reference_at_all_thread_counts() {
+    proplite::check("matmul-thread-equiv", 40, 0xBEEF, |g| {
+        let n = g.usize_in(1, 24);
+        let a = g.usize_in(1, 16);
+        let b = g.usize_in(1, 12);
+        let x = gen_matrix(g, n, a);
+        let w = gen_matrix(g, a, b);
+        let y = gen_matrix(g, n, b);
+        let want_nn = x.matmul(&w);
+        let want_tn = x.transpose().matmul(&y);
+        for threads in [1usize, 2, 4, 8] {
+            // Grain 0 forces the parallel path even on tiny shapes.
+            let be = NativeBackend::with_grain(threads, 0);
+            let got = be.mm_nn(&x, &w).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.data() == want_nn.data(),
+                "mm_nn differs at {threads} threads ({n}x{a}x{b})"
+            );
+            let got = be.mm_tn(&x, &y).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.data() == want_tn.data(),
+                "mm_tn differs at {threads} threads ({n}x{a}x{b})"
+            );
+            let got = be.mm_bt(&y, &w).map_err(|e| e.to_string())?;
+            let serial = NativeBackend::new().mm_bt(&y, &w).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.data() == serial.data(),
+                "mm_bt differs at {threads} threads ({n}x{a}x{b})"
+            );
+            let got = be.fwd_relu(&x, &w).map_err(|e| e.to_string())?;
+            let want_relu = cgcn::tensor::relu(&want_nn);
+            prop_assert!(
+                got.data() == want_relu.data(),
+                "fwd_relu differs at {threads} threads"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_matches_reference_at_all_thread_counts() {
+    proplite::check("spmm-thread-equiv", 40, 0xF00D, |g| {
+        let n = g.usize_in(1, 24);
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 8);
+        let mut trips = Vec::new();
+        for r in 0..n {
+            for c in 0..m {
+                if g.rng.gen_bool(0.25) {
+                    trips.push((r, c, g.f32_in(1.5)));
+                }
+            }
+        }
+        let a = Csr::from_triplets(n, m, &trips);
+        let x = gen_matrix(g, m, k);
+        let want = a.spmm(&x);
+        for threads in [1usize, 2, 4, 8] {
+            let be = NativeBackend::with_grain(threads, 0);
+            let got = be.spmm(&a, &x);
+            prop_assert!(
+                got.data() == want.data(),
+                "spmm differs at {threads} threads (nnz={})",
+                a.nnz()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_xent_matches_host_reference() {
+    proplite::check("xent-host-equiv", 40, 0xCAFE, |g| {
+        let n = g.usize_in(1, 24);
+        let c = g.usize_in(2, 8);
+        let logits = gen_matrix(g, n, c).scale(3.0);
+        let labels: Vec<usize> = (0..n).map(|_| g.rng.gen_range(c)).collect();
+        let mut y = Matrix::zeros(n, c);
+        let mut mask = vec![0.0f32; n];
+        let mut any = false;
+        for i in 0..n {
+            y.set(i, labels[i], 1.0);
+            if g.rng.gen_bool(0.7) {
+                mask[i] = 1.0;
+                any = true;
+            }
+        }
+        if !any {
+            mask[0] = 1.0;
+        }
+        let denom: f32 = mask.iter().sum();
+        let be = NativeBackend::new();
+        let got = be
+            .xent_loss(&logits, &y, &mask, denom)
+            .map_err(|e| e.to_string())? as f64;
+        let (want, _) = masked_cross_entropy(&logits, &labels, &mask);
+        prop_assert!(
+            (got - want).abs() < 1e-4 * want.abs().max(1.0),
+            "xent mismatch: backend {got} vs host {want} (n={n} c={c})"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Executor determinism
+// ---------------------------------------------------------------------------
+
+fn caveman_ws(m: usize) -> Arc<Workspace> {
+    let ds = fixtures::caveman(24, 3);
+    let mut hp = HyperParams::for_dataset("caveman");
+    hp.hidden = 8;
+    hp.communities = m;
+    Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap())
+}
+
+#[test]
+fn threads_exec_is_bitwise_identical_to_serial() {
+    let ws = caveman_ws(3);
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+
+    let mut serial =
+        AdmmTrainer::new(ws.clone(), backend.clone(), AdmmOptions::for_mode(3)).unwrap();
+    let mut threaded = {
+        let mut o = AdmmOptions::for_mode(3);
+        o.exec = ExecMode::Threads;
+        o.threads = 4;
+        AdmmTrainer::new(ws, backend, o).unwrap()
+    };
+
+    let rs = serial.train(3, "serial-exec").unwrap();
+    let rt = threaded.train(3, "threads-exec").unwrap();
+
+    assert_eq!(rs.epochs.len(), rt.epochs.len());
+    for (a, b) in rs.epochs.iter().zip(&rt.epochs) {
+        assert_eq!(a.loss, b.loss, "epoch {} loss differs", a.epoch);
+        assert_eq!(a.train_acc, b.train_acc, "epoch {} train acc", a.epoch);
+        assert_eq!(a.test_acc, b.test_acc, "epoch {} test acc", a.epoch);
+        assert_eq!(a.bytes, b.bytes, "epoch {} bytes", a.epoch);
+    }
+
+    // Full final state, bit for bit.
+    for (ws_, wt) in serial.state.w.iter().zip(&threaded.state.w) {
+        assert_eq!(ws_.data(), wt.data(), "weights diverged");
+    }
+    for (zl_s, zl_t) in serial.state.z.iter().zip(&threaded.state.z) {
+        for (zs, zt) in zl_s.iter().zip(zl_t) {
+            assert_eq!(zs.data(), zt.data(), "Z diverged");
+        }
+    }
+    for (us, ut) in serial.state.u.iter().zip(&threaded.state.u) {
+        assert_eq!(us.data(), ut.data(), "U diverged");
+    }
+}
+
+#[test]
+fn threads_exec_learns_fig1_like_serial() {
+    let ds = fixtures::fig1();
+    let mut hp = HyperParams::for_dataset("fig1");
+    hp.hidden = 8;
+    hp.communities = 3;
+    let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+    let mut o = AdmmOptions::for_mode(3);
+    o.exec = ExecMode::Threads;
+    o.threads = 3;
+    let mut t = AdmmTrainer::new(ws, backend, o).unwrap();
+    let rep = t.train(40, "threads").unwrap();
+    assert!(rep.best_test_acc() >= 0.7, "best test {}", rep.best_test_acc());
+    assert!(rep.total_bytes() > 0);
+}
+
+#[test]
+fn exec_mode_parses() {
+    assert_eq!(ExecMode::parse("serial"), Some(ExecMode::Serial));
+    assert_eq!(ExecMode::parse("threads"), Some(ExecMode::Threads));
+    assert_eq!(ExecMode::parse("gpu"), None);
+    assert_eq!(ExecMode::Threads.name(), "threads");
+}

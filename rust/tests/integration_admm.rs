@@ -1,20 +1,19 @@
 //! End-to-end ADMM / baseline integration tests on the fixture datasets.
-//! Skip gracefully before `make artifacts`.
+//!
+//! These run on the always-available native backend (and automatically
+//! pick up the XLA artifact backend instead when the crate is built with
+//! `--features xla` and `make artifacts` has been run).
 
 use cgcn::baselines::{BaselineTrainer, Optimizer};
 use cgcn::config::HyperParams;
 use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::data::fixtures;
 use cgcn::partition::Method;
-use cgcn::runtime::Engine;
+use cgcn::runtime::{default_backend, ComputeBackend};
 use std::sync::Arc;
 
-fn engine() -> Option<Arc<Engine>> {
-    if !Engine::available() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Engine::load(&Engine::default_dir()).unwrap()))
+fn backend() -> Arc<dyn ComputeBackend> {
+    default_backend()
 }
 
 fn fig1_hp(m: usize) -> HyperParams {
@@ -26,10 +25,10 @@ fn fig1_hp(m: usize) -> HyperParams {
 
 #[test]
 fn serial_admm_learns_fig1() {
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::fig1();
     let ws = Arc::new(Workspace::build(&ds, &fig1_hp(1), Method::Metis).unwrap());
-    let mut t = AdmmTrainer::new(ws, engine, AdmmOptions::for_mode(1)).unwrap();
+    let mut t = AdmmTrainer::new(ws, backend, AdmmOptions::for_mode(1)).unwrap();
     let rep = t.train(40, "serial").unwrap();
     assert!(
         rep.final_train_acc() >= 0.6 && rep.best_test_acc() >= 0.75,
@@ -45,10 +44,10 @@ fn serial_admm_learns_fig1() {
 
 #[test]
 fn parallel_admm_learns_fig1_and_communicates() {
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::fig1();
     let ws = Arc::new(Workspace::build(&ds, &fig1_hp(3), Method::Metis).unwrap());
-    let mut t = AdmmTrainer::new(ws, engine, AdmmOptions::for_mode(3)).unwrap();
+    let mut t = AdmmTrainer::new(ws, backend, AdmmOptions::for_mode(3)).unwrap();
     let rep = t.train(40, "parallel").unwrap();
     assert!(rep.best_test_acc() >= 0.7, "best test {}", rep.best_test_acc());
     assert!(rep.total_bytes() > 0, "parallel mode shipped no bytes");
@@ -59,12 +58,12 @@ fn parallel_admm_learns_fig1_and_communicates() {
 fn serial_and_parallel_start_from_identical_state() {
     // Same seed => same init => identical epoch-0 loss (the init forward
     // pass is global in both modes).
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::fig1();
     let ws1 = Arc::new(Workspace::build(&ds, &fig1_hp(1), Method::Metis).unwrap());
     let ws3 = Arc::new(Workspace::build(&ds, &fig1_hp(3), Method::Metis).unwrap());
-    let t1 = AdmmTrainer::new(ws1, engine.clone(), AdmmOptions::for_mode(1)).unwrap();
-    let t3 = AdmmTrainer::new(ws3, engine, AdmmOptions::for_mode(3)).unwrap();
+    let t1 = AdmmTrainer::new(ws1, backend.clone(), AdmmOptions::for_mode(1)).unwrap();
+    let t3 = AdmmTrainer::new(ws3, backend, AdmmOptions::for_mode(3)).unwrap();
     let (tr1, te1, l1) = t1.evaluate().unwrap();
     let (tr3, te3, l3) = t3.evaluate().unwrap();
     assert_eq!(tr1, tr3);
@@ -74,21 +73,21 @@ fn serial_and_parallel_start_from_identical_state() {
 
 #[test]
 fn three_layer_admm_runs_and_learns() {
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::caveman(24, 17);
     let mut hp = HyperParams::for_dataset("caveman-l3");
     hp.hidden = 8;
     hp.layers = 3;
     hp.communities = 3;
     let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
-    let mut t = AdmmTrainer::new(ws, engine, AdmmOptions::for_mode(3)).unwrap();
+    let mut t = AdmmTrainer::new(ws, backend, AdmmOptions::for_mode(3)).unwrap();
     let rep = t.train(25, "l3").unwrap();
     assert!(rep.best_test_acc() >= 0.7, "best test {}", rep.best_test_acc());
 }
 
 #[test]
 fn all_baselines_run_and_gd_decreases_loss() {
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::caveman(24, 3);
     let mut hp = HyperParams::for_dataset("caveman");
     hp.hidden = 8;
@@ -96,7 +95,7 @@ fn all_baselines_run_and_gd_decreases_loss() {
     let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
     for name in ["gd", "adam", "adagrad", "adadelta"] {
         let opt = Optimizer::parse(name, Some("0.05")).unwrap();
-        let mut t = BaselineTrainer::new(ws.clone(), engine.clone(), opt).unwrap();
+        let mut t = BaselineTrainer::new(ws.clone(), backend.clone(), opt).unwrap();
         let rep = t.train(25).unwrap();
         let first = rep.epochs.first().unwrap().loss;
         let last = rep.epochs.last().unwrap().loss;
@@ -109,14 +108,14 @@ fn all_baselines_run_and_gd_decreases_loss() {
 
 #[test]
 fn partition_method_does_not_break_training() {
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::caveman(24, 5);
     for method in [Method::Metis, Method::Random, Method::Bfs] {
         let mut hp = HyperParams::for_dataset("caveman");
         hp.hidden = 8;
         hp.communities = 3;
         let ws = Arc::new(Workspace::build(&ds, &hp, method).unwrap());
-        let mut t = AdmmTrainer::new(ws, engine.clone(), AdmmOptions::for_mode(3)).unwrap();
+        let mut t = AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(3)).unwrap();
         let rep = t.train(15, method.name()).unwrap();
         assert!(rep.epochs.iter().all(|e| e.loss.is_finite()));
     }
@@ -124,10 +123,10 @@ fn partition_method_does_not_break_training() {
 
 #[test]
 fn admm_epoch_timings_are_sane() {
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::fig1();
     let ws = Arc::new(Workspace::build(&ds, &fig1_hp(3), Method::Metis).unwrap());
-    let mut t = AdmmTrainer::new(ws, engine, AdmmOptions::for_mode(3)).unwrap();
+    let mut t = AdmmTrainer::new(ws, backend, AdmmOptions::for_mode(3)).unwrap();
     let rep = t.train(5, "timing").unwrap();
     for e in &rep.epochs {
         assert!(e.t_train > 0.0 && e.t_train.is_finite());
@@ -143,17 +142,18 @@ fn admm_epoch_timings_are_sane() {
 fn central_w_ablation_matches_distributed_w_math() {
     // Both W-update schedules optimise the same subproblem; from the same
     // init, one epoch should land at nearly the same training loss.
-    let Some(engine) = engine() else { return };
+    let backend = backend();
     let ds = fixtures::caveman(24, 3);
     let mut hp = HyperParams::for_dataset("caveman");
     hp.hidden = 8;
     hp.communities = 3;
     let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
-    let mut dist = AdmmTrainer::new(ws.clone(), engine.clone(), AdmmOptions::for_mode(3)).unwrap();
+    let mut dist =
+        AdmmTrainer::new(ws.clone(), backend.clone(), AdmmOptions::for_mode(3)).unwrap();
     let mut central = {
         let mut o = AdmmOptions::for_mode(3);
         o.central_w = true;
-        AdmmTrainer::new(ws, engine, o).unwrap()
+        AdmmTrainer::new(ws, backend, o).unwrap()
     };
     let rd = dist.train(3, "dist").unwrap();
     let rc = central.train(3, "central").unwrap();

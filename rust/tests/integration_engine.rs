@@ -1,20 +1,14 @@
-//! Engine integration tests: AOT artifacts vs host-side reference math.
+//! Backend integration tests: every [`ComputeBackend`] implementation vs
+//! the host-side reference math in `cgcn::tensor`.
 //!
-//! These need `make artifacts`; they skip (with a notice) when the
-//! artifacts directory is absent so a bare `cargo test` still passes.
+//! The native backend (serial and pool-parallel) always runs; the XLA
+//! artifact backend joins in when the crate is built with `--features
+//! xla` and `make artifacts` has produced the fig1 shapes.
 
-use cgcn::runtime::{Engine, In};
+use cgcn::runtime::{ComputeBackend, NativeBackend};
 use cgcn::tensor::{self, Matrix};
 use cgcn::util::rng::Rng;
 use std::sync::Arc;
-
-fn engine() -> Option<Arc<Engine>> {
-    if !Engine::available() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Engine::load(&Engine::default_dir()).unwrap()))
-}
 
 /// fig1 artifact shapes: n=128, dims 4 -> 8 -> 3.
 const N: usize = 128;
@@ -22,191 +16,271 @@ const A: usize = 4;
 const B: usize = 8;
 const C: usize = 3;
 
+fn backends() -> Vec<(String, Arc<dyn ComputeBackend>)> {
+    let mut v: Vec<(String, Arc<dyn ComputeBackend>)> = vec![
+        ("native-1".into(), Arc::new(NativeBackend::new())),
+        // Grain 0 forces the row-parallel path even on these small shapes.
+        ("native-4".into(), Arc::new(NativeBackend::with_grain(4, 0))),
+    ];
+    #[cfg(feature = "xla")]
+    {
+        if cgcn::runtime::Engine::available() {
+            let dir = cgcn::runtime::Engine::default_dir();
+            v.push((
+                "xla".into(),
+                Arc::new(cgcn::runtime::XlaBackend::load(&dir).unwrap()),
+            ));
+        } else {
+            eprintln!("note: artifacts not built — xla backend not exercised");
+        }
+    }
+    v
+}
+
 fn mats(rng: &mut Rng) -> (Matrix, Matrix) {
     (Matrix::glorot(N, A, rng), Matrix::glorot(A, B, rng))
 }
 
 #[test]
 fn mm_primitives_match_host_matmul() {
-    let Some(engine) = engine() else { return };
-    let mut rng = Rng::new(1);
-    let (x, w) = mats(&mut rng);
-    let y = Matrix::glorot(N, B, &mut rng);
+    for (name, be) in backends() {
+        let mut rng = Rng::new(1);
+        let (x, w) = mats(&mut rng);
+        let y = Matrix::glorot(N, B, &mut rng);
 
-    let got = engine
-        .exec(&format!("mm_nn__n{N}_a{A}_b{B}"), &[In::Mat(&x), In::Mat(&w)])
-        .unwrap()
-        .remove(0)
-        .into_mat();
-    assert!(got.max_abs_diff(&x.matmul(&w)) < 1e-4);
+        let got = be.mm_nn(&x, &w).unwrap();
+        assert!(got.max_abs_diff(&x.matmul(&w)) < 1e-4, "{name} mm_nn");
 
-    let got = engine
-        .exec(&format!("mm_tn__n{N}_a{A}_b{B}"), &[In::Mat(&x), In::Mat(&y)])
-        .unwrap()
-        .remove(0)
-        .into_mat();
-    assert!(got.max_abs_diff(&x.transpose().matmul(&y)) < 1e-4);
+        let got = be.mm_tn(&x, &y).unwrap();
+        assert!(
+            got.max_abs_diff(&x.transpose().matmul(&y)) < 1e-4,
+            "{name} mm_tn"
+        );
 
-    let got = engine
-        .exec(&format!("mm_bt__n{N}_a{A}_b{B}"), &[In::Mat(&y), In::Mat(&w)])
-        .unwrap()
-        .remove(0)
-        .into_mat();
-    assert!(got.max_abs_diff(&y.matmul(&w.transpose())) < 1e-4);
-}
-
-#[test]
-fn prepared_literals_give_identical_results() {
-    let Some(engine) = engine() else { return };
-    let mut rng = Rng::new(2);
-    let (x, w) = mats(&mut rng);
-    let sig = format!("mm_nn__n{N}_a{A}_b{B}");
-    let plain = engine
-        .exec(&sig, &[In::Mat(&x), In::Mat(&w)])
-        .unwrap()
-        .remove(0)
-        .into_mat();
-    let prep = engine.prepare(&x).unwrap();
-    let prepped = engine
-        .exec(&sig, &[In::Prep(&prep), In::Mat(&w)])
-        .unwrap()
-        .remove(0)
-        .into_mat();
-    assert_eq!(plain.data(), prepped.data());
+        let got = be.mm_bt(&y, &w).unwrap();
+        assert!(
+            got.max_abs_diff(&y.matmul(&w.transpose())) < 1e-4,
+            "{name} mm_bt"
+        );
+    }
 }
 
 #[test]
 fn fwd_relu_matches_and_keeps_padding_inert() {
-    let Some(engine) = engine() else { return };
-    let mut rng = Rng::new(3);
-    let (mut x, w) = mats(&mut rng);
-    // Zero the tail rows — padded communities look exactly like this.
-    for r in 100..N {
-        x.row_mut(r).fill(0.0);
-    }
-    let got = engine
-        .exec(&format!("fwd_relu__n{N}_a{A}_b{B}"), &[In::Mat(&x), In::Mat(&w)])
-        .unwrap()
-        .remove(0)
-        .into_mat();
-    let want = tensor::relu(&x.matmul(&w));
-    assert!(got.max_abs_diff(&want) < 1e-4);
-    for r in 100..N {
-        assert!(got.row(r).iter().all(|&v| v == 0.0), "padding row {r} leaked");
+    for (name, be) in backends() {
+        let mut rng = Rng::new(3);
+        let (mut x, w) = mats(&mut rng);
+        // Zero the tail rows — padded communities look exactly like this.
+        for r in 100..N {
+            x.row_mut(r).fill(0.0);
+        }
+        let got = be.fwd_relu(&x, &w).unwrap();
+        let want = tensor::relu(&x.matmul(&w));
+        assert!(got.max_abs_diff(&want) < 1e-4, "{name} fwd_relu");
+        for r in 100..N {
+            assert!(
+                got.row(r).iter().all(|&v| v == 0.0),
+                "{name}: padding row {r} leaked"
+            );
+        }
     }
 }
 
 #[test]
 fn residual_entries_match_host_formulas() {
-    let Some(engine) = engine() else { return };
-    let mut rng = Rng::new(4);
-    let pre = Matrix::glorot(N, B, &mut rng);
-    let zt = Matrix::glorot(N, B, &mut rng);
-    let nu = 0.37f32;
+    for (name, be) in backends() {
+        let mut rng = Rng::new(4);
+        let pre = Matrix::glorot(N, B, &mut rng);
+        let zt = Matrix::glorot(N, B, &mut rng);
+        let nu = 0.37f32;
 
-    let outs = engine
-        .exec(
-            &format!("hidden_residual__n{N}_c{B}"),
-            &[In::Mat(&pre), In::Mat(&zt), In::Scalar(nu)],
-        )
-        .unwrap();
-    let val = outs[0].scalar();
-    let r = match &outs[1] {
-        cgcn::runtime::Out::Mat(m) => m.clone(),
-        _ => panic!(),
-    };
-    let act = tensor::relu(&pre);
-    let d = act.sub(&zt);
-    assert!((val - 0.5 * nu * d.frob_norm_sq() as f32).abs() < 1e-3 * val.abs().max(1.0));
-    let want_r = d.hadamard(&tensor::relu_mask(&pre)).scale(nu);
-    assert!(r.max_abs_diff(&want_r) < 1e-5);
+        let (val, r) = be.hidden_residual(&pre, &zt, nu).unwrap();
+        let act = tensor::relu(&pre);
+        let d = act.sub(&zt);
+        assert!(
+            (val - 0.5 * nu * d.frob_norm_sq() as f32).abs() < 1e-3 * val.abs().max(1.0),
+            "{name} hidden_residual value"
+        );
+        let want_r = d.hadamard(&tensor::relu_mask(&pre)).scale(nu);
+        assert!(r.max_abs_diff(&want_r) < 1e-5, "{name} hidden_residual R");
 
-    // out_residual: val = <U, Zt-pre> + rho/2 ||Zt-pre||²; R = -(U + rho d).
-    let u = Matrix::glorot(N, C, &mut rng);
-    let pre_c = Matrix::glorot(N, C, &mut rng);
-    let zt_c = Matrix::glorot(N, C, &mut rng);
-    let rho = 0.05f32;
-    let outs = engine
-        .exec(
-            &format!("out_residual__n{N}_c{C}"),
-            &[In::Mat(&pre_c), In::Mat(&zt_c), In::Mat(&u), In::Scalar(rho)],
-        )
-        .unwrap();
-    let val = outs[0].scalar();
-    let d = zt_c.sub(&pre_c);
-    let want_val = u.dot(&d) as f32 + 0.5 * rho * d.frob_norm_sq() as f32;
-    assert!((val - want_val).abs() < 1e-3 * want_val.abs().max(1.0));
+        // out_residual: val = <U, Zt-pre> + rho/2 ||Zt-pre||²; R = -(U + rho d).
+        let u = Matrix::glorot(N, C, &mut rng);
+        let pre_c = Matrix::glorot(N, C, &mut rng);
+        let zt_c = Matrix::glorot(N, C, &mut rng);
+        let rho = 0.05f32;
+        let (val, r) = be.out_residual(&pre_c, &zt_c, &u, rho).unwrap();
+        let d = zt_c.sub(&pre_c);
+        let want_val = u.dot(&d) as f32 + 0.5 * rho * d.frob_norm_sq() as f32;
+        assert!(
+            (val - want_val).abs() < 1e-3 * want_val.abs().max(1.0),
+            "{name} out_residual value"
+        );
+        let mut want_r = u.clone();
+        want_r.axpy(rho, &d);
+        assert!(
+            r.max_abs_diff(&want_r.scale(-1.0)) < 1e-5,
+            "{name} out_residual R"
+        );
+
+        // Value-only entries agree with their residual twins.
+        let phi = be.hidden_phi(&pre, &zt, nu).unwrap();
+        let (v2, _) = be.hidden_residual(&pre, &zt, nu).unwrap();
+        assert!((phi - v2).abs() < 1e-4 * v2.abs().max(1.0), "{name} hidden_phi");
+        let ophi = be.out_phi(&pre_c, &zt_c, &u, rho).unwrap();
+        assert!(
+            (ophi - val).abs() < 1e-4 * val.abs().max(1.0),
+            "{name} out_phi"
+        );
+    }
+}
+
+#[test]
+fn z_combine_and_prox_val_are_consistent() {
+    for (name, be) in backends() {
+        let mut rng = Rng::new(7);
+        let z = Matrix::glorot(N, B, &mut rng);
+        let pin = Matrix::glorot(N, B, &mut rng);
+        let gsum = Matrix::glorot(N, B, &mut rng);
+        let (nu, theta) = (0.21f32, 2.0f32);
+        let (znew, prox, gsq) = be.z_combine(&z, &pin, &gsum, nu, theta).unwrap();
+        let fpin = tensor::relu(&pin);
+        let d = z.sub(&fpin);
+        let g = d.scale(nu).add(&gsum);
+        let want_z = z.sub(&g.scale(1.0 / theta));
+        assert!(znew.max_abs_diff(&want_z) < 1e-5, "{name} z_combine step");
+        assert!(
+            (prox - 0.5 * nu * d.frob_norm_sq() as f32).abs() < 1e-3 * prox.abs().max(1.0),
+            "{name} z_combine prox"
+        );
+        assert!(
+            (gsq - g.frob_norm_sq() as f32).abs() < 1e-3 * gsq.abs().max(1.0),
+            "{name} z_combine gsq"
+        );
+        let pv = be.z_prox_val(&z, &pin, nu).unwrap();
+        assert!((pv - prox).abs() < 1e-4 * prox.abs().max(1.0), "{name} z_prox_val");
+    }
 }
 
 #[test]
 fn xent_loss_matches_host_cross_entropy() {
-    let Some(engine) = engine() else { return };
-    let mut rng = Rng::new(5);
-    let logits = Matrix::glorot(N, C, &mut rng).scale(3.0);
-    let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
-    let mut y = Matrix::zeros(N, C);
-    let mut mask = vec![0.0f32; N];
-    for i in 0..N {
-        y.set(i, labels[i], 1.0);
-        if rng.gen_bool(0.5) {
-            mask[i] = 1.0;
+    for (name, be) in backends() {
+        let mut rng = Rng::new(5);
+        let logits = Matrix::glorot(N, C, &mut rng).scale(3.0);
+        let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
+        let mut y = Matrix::zeros(N, C);
+        let mut mask = vec![0.0f32; N];
+        for i in 0..N {
+            y.set(i, labels[i], 1.0);
+            if rng.gen_bool(0.5) {
+                mask[i] = 1.0;
+            }
         }
+        let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+        let got = be.xent_loss(&logits, &y, &mask, denom).unwrap();
+        let (want, _) = tensor::masked_cross_entropy(&logits, &labels, &mask);
+        assert!(
+            (got as f64 - want).abs() < 1e-4 * want.abs().max(1.0),
+            "{name}: backend {got} vs host {want}"
+        );
     }
-    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
-    let got = engine
-        .exec(
-            &format!("xent_loss__n{N}_c{C}"),
-            &[In::Mat(&logits), In::Mat(&y), In::Vec(&mask), In::Scalar(denom)],
-        )
-        .unwrap()
-        .remove(0)
-        .scalar();
-    let (want, _) = tensor::masked_cross_entropy(&logits, &labels, &mask);
-    assert!(
-        (got as f64 - want).abs() < 1e-4 * want.abs().max(1.0),
-        "artifact {got} vs host {want}"
-    );
+}
+
+#[test]
+fn bp_grads_match_finite_reference() {
+    for (name, be) in backends() {
+        let mut rng = Rng::new(6);
+        let h1 = Matrix::glorot(N, B, &mut rng);
+        let w2 = Matrix::glorot(B, C, &mut rng);
+        let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
+        let mut y = Matrix::zeros(N, C);
+        let mask = vec![1.0f32; N];
+        for i in 0..N {
+            y.set(i, labels[i], 1.0);
+        }
+        let denom = N as f32;
+        let (loss, dw2, dh1) = be.bp_out_grads(&h1, &w2, &y, &mask, denom).unwrap();
+        // Host reference: logits, CE grad, chain rule.
+        let logits = h1.matmul(&w2);
+        let (want_loss, dl) = tensor::masked_cross_entropy(&logits, &labels, &mask);
+        assert!(
+            (loss as f64 - want_loss).abs() < 1e-4 * want_loss.abs().max(1.0),
+            "{name} bp loss"
+        );
+        let want_dw2 = h1.transpose().matmul(&dl);
+        let want_dh1 = dl.matmul(&w2.transpose());
+        assert!(dw2.max_abs_diff(&want_dw2) < 1e-5, "{name} dW2");
+        assert!(dh1.max_abs_diff(&want_dh1) < 1e-5, "{name} dH1");
+
+        // Hidden tail.
+        let h0 = Matrix::glorot(N, A, &mut rng);
+        let w1 = Matrix::glorot(A, B, &mut rng);
+        let dz1 = Matrix::glorot(N, B, &mut rng);
+        let dw1 = be.bp_hidden_grads(&h0, &w1, &dz1).unwrap();
+        let pre = h0.matmul(&w1);
+        let r = dz1.hadamard(&tensor::relu_mask(&pre));
+        let want_dw1 = h0.transpose().matmul(&r);
+        assert!(dw1.max_abs_diff(&want_dw1) < 1e-5, "{name} dW1");
+    }
 }
 
 #[test]
 fn zl_fista_decreases_its_objective() {
-    let Some(engine) = engine() else { return };
-    let mut rng = Rng::new(6);
-    let q = Matrix::glorot(N, C, &mut rng);
-    let u = Matrix::glorot(N, C, &mut rng).scale(0.05);
-    let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
-    let mut y = Matrix::zeros(N, C);
-    let mask = vec![1.0f32; N];
-    for i in 0..N {
-        y.set(i, labels[i], 1.0);
+    for (name, be) in backends() {
+        let mut rng = Rng::new(6);
+        let q = Matrix::glorot(N, C, &mut rng);
+        let u = Matrix::glorot(N, C, &mut rng).scale(0.05);
+        let labels: Vec<usize> = (0..N).map(|_| rng.gen_range(C)).collect();
+        let mut y = Matrix::zeros(N, C);
+        let mask = vec![1.0f32; N];
+        for i in 0..N {
+            y.set(i, labels[i], 1.0);
+        }
+        let denom = N as f32;
+        let rho = 0.1f32;
+        let objective = |z: &Matrix| -> f64 {
+            let (ce, _) = tensor::masked_cross_entropy(z, &labels, &mask);
+            let d = z.sub(&q);
+            ce + u.dot(&d) + 0.5 * rho as f64 * d.frob_norm_sq()
+        };
+        let (z_new, _risk) = be
+            .zl_fista(&q, &u, &y, &mask, &q, rho, denom, 10)
+            .unwrap();
+        assert!(
+            objective(&z_new) < objective(&q) - 1e-6,
+            "{name}: FISTA failed to decrease the eq.-7 objective"
+        );
     }
-    let denom = N as f32;
-    let rho = 0.1f32;
-    let objective = |z: &Matrix| -> f64 {
-        let (ce, _) = tensor::masked_cross_entropy(z, &labels, &mask);
-        let d = z.sub(&q);
-        ce + u.dot(&d) + 0.5 * rho as f64 * d.frob_norm_sq()
-    };
-    let outs = engine
-        .exec(
-            &format!("zl_fista__n{N}_c{C}_steps10"),
-            &[
-                In::Mat(&q),
-                In::Mat(&u),
-                In::Mat(&y),
-                In::Vec(&mask),
-                In::Mat(&q), // warm start at Q
-                In::Scalar(rho),
-                In::Scalar(denom),
-            ],
-        )
-        .unwrap();
-    let z_new = match &outs[0] {
-        cgcn::runtime::Out::Mat(m) => m.clone(),
-        _ => panic!(),
-    };
-    assert!(
-        objective(&z_new) < objective(&q) - 1e-6,
-        "FISTA failed to decrease the eq.-7 objective"
-    );
+}
+
+#[cfg(feature = "xla")]
+mod xla_only {
+    use cgcn::runtime::{Engine, In};
+    use cgcn::tensor::Matrix;
+    use cgcn::util::rng::Rng;
+
+    #[test]
+    fn prepared_literals_give_identical_results() {
+        if !Engine::available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::load(&Engine::default_dir()).unwrap();
+        let mut rng = Rng::new(2);
+        let x = Matrix::glorot(super::N, super::A, &mut rng);
+        let w = Matrix::glorot(super::A, super::B, &mut rng);
+        let sig = format!("mm_nn__n{}_a{}_b{}", super::N, super::A, super::B);
+        let plain = engine
+            .exec(&sig, &[In::Mat(&x), In::Mat(&w)])
+            .unwrap()
+            .remove(0)
+            .into_mat();
+        let prep = engine.prepare(&x).unwrap();
+        let prepped = engine
+            .exec(&sig, &[In::Prep(&prep), In::Mat(&w)])
+            .unwrap()
+            .remove(0)
+            .into_mat();
+        assert_eq!(plain.data(), prepped.data());
+    }
 }

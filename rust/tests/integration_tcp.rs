@@ -1,11 +1,10 @@
 //! TCP multi-process runtime integration: a real leader + 3 worker
-//! processes must reproduce the in-process trainer's numbers exactly.
+//! processes must reproduce the in-process trainer's numbers (the leader
+//! mirrors worker state and runs the identical distributed W reduction).
+//!
+//! Runs on the native backend — no artifacts required.
 
 use cgcn::util::cli::ArgSpec;
-
-fn artifacts_available() -> bool {
-    cgcn::runtime::Engine::available()
-}
 
 fn train_args(extra: &[&str]) -> cgcn::util::cli::Args {
     let base = [
@@ -35,6 +34,9 @@ fn train_args(extra: &[&str]) -> cgcn::util::cli::Args {
         .opt("seed", Some("17"), "")
         .opt("out", Some(""), "")
         .opt("transport", Some("local"), "")
+        .opt("exec", Some("serial"), "")
+        .opt("threads", Some("0"), "")
+        .opt("backend", Some("auto"), "")
         .opt("link-mbps", Some("10000"), "")
         .opt("link-lat-us", Some("100"), "")
         .opt("listen", Some(""), "")
@@ -51,10 +53,6 @@ fn train_args(extra: &[&str]) -> cgcn::util::cli::Args {
 
 #[test]
 fn tcp_training_matches_local_training() {
-    if !artifacts_available() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return;
-    }
     // Workers are spawned from the real cgcn binary.
     std::env::set_var("CGCN_WORKER_EXE", env!("CARGO_BIN_EXE_cgcn"));
 
