@@ -1,0 +1,127 @@
+//! Serving-throughput bench: sweeps server handler threads × micro-batch
+//! window against a closed-loop load generator (clients = threads) and
+//! records qps + p50/p99 latency to `BENCH_serve.json` — the perf
+//! trajectory for the inference half of the system.
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput
+//! ```
+//!
+//! What to expect: qps grows with handler threads (each client is
+//! closed-loop, so concurrency is the offered load) while the batcher
+//! stays a single thread — micro-batching coalesces the concurrent
+//! queries into one backend batch per window, so the compute cost per
+//! query *falls* as load rises. Latency p50 sits near the batch window;
+//! window 0 shows the un-batched floor.
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::Workspace;
+use cgcn::data::synth;
+use cgcn::partition::Method;
+use cgcn::runtime::NativeBackend;
+use cgcn::serve::{loadgen, serve, InferenceSession, LoadgenOpts, ServeOptions};
+use cgcn::tensor::Matrix;
+use cgcn::util::json::Json;
+use cgcn::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+
+    // Amazon-Photo-like graph at the bench scale (n=1913, F=745), 3
+    // communities; weights are Glorot — serving cost is independent of
+    // the values, so no training in the loop.
+    let ds = synth::generate(&synth::AMAZON_PHOTO, 0.25, 17);
+    let hp = HyperParams {
+        communities: 3,
+        ..HyperParams::for_dataset("synth-photo")
+    };
+    let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis)?);
+    let mut rng = Rng::new(7);
+    let w: Vec<Matrix> = (1..=ws.layers)
+        .map(|l| Matrix::glorot(ws.dims[l - 1], ws.dims[l], &mut rng))
+        .collect();
+
+    let threads_sweep = [1usize, 2, 4, 8];
+    let window_sweep_us = [0u64, 200, 1000];
+    let requests_per_client = 150usize;
+    let nodes_per_query = 4usize;
+
+    println!(
+        "{:>7} {:>9} {:>7} {:>9} {:>9} {:>9} {:>8} {:>9}",
+        "threads", "window", "clients", "qps", "p50", "p99", "batches", "req/batch"
+    );
+    let mut rows_json = Vec::new();
+    let mut qps_1thread = vec![0.0f64; window_sweep_us.len()];
+    for &t in &threads_sweep {
+        for (wi, &window_us) in window_sweep_us.iter().enumerate() {
+            let mut session =
+                InferenceSession::new(ws.clone(), Arc::new(NativeBackend::new()), w.clone())?;
+            session.warm_all()?;
+            let handle = serve(
+                session,
+                &ServeOptions {
+                    addr: "127.0.0.1:0".to_string(),
+                    threads: t,
+                    batch_window_us: window_us,
+                    max_batch: 256,
+                },
+            )?;
+            let addr = handle.addr().to_string();
+            let report = loadgen::run(
+                &addr,
+                ws.n,
+                &LoadgenOpts {
+                    clients: t,
+                    requests_per_client,
+                    nodes_per_query,
+                    seed: 17,
+                },
+            )?;
+            let (requests, _nodes, batches) = handle.counters();
+            handle.stop();
+            if t == 1 {
+                qps_1thread[wi] = report.qps;
+            }
+            let req_per_batch = requests as f64 / (batches.max(1)) as f64;
+            println!(
+                "{:>7} {:>7}us {:>7} {:>9.0} {:>7.2}ms {:>7.2}ms {:>8} {:>9.2}",
+                t,
+                window_us,
+                t,
+                report.qps,
+                report.latency.p50 * 1e3,
+                report.latency.p99 * 1e3,
+                batches,
+                req_per_batch
+            );
+            rows_json.push(Json::obj(vec![
+                ("threads", Json::num(t as f64)),
+                ("window_us", Json::num(window_us as f64)),
+                ("clients", Json::num(t as f64)),
+                ("requests", Json::num(report.requests as f64)),
+                ("nodes_per_query", Json::num(nodes_per_query as f64)),
+                ("qps", Json::num(report.qps)),
+                ("p50_ms", Json::num(report.latency.p50 * 1e3)),
+                ("p99_ms", Json::num(report.latency.p99 * 1e3)),
+                ("mean_ms", Json::num(report.latency.mean * 1e3)),
+                ("batches", Json::num(batches as f64)),
+                ("requests_per_batch", Json::num(req_per_batch)),
+                ("qps_speedup_vs_1thread", Json::num(report.qps / qps_1thread[wi].max(1e-9))),
+            ]));
+        }
+    }
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("dataset", Json::str(&format!("synth-photo n={}", ws.n))),
+        ("host_threads", Json::num(host_threads as f64)),
+        ("requests_per_client", Json::num(requests_per_client as f64)),
+        ("rows", Json::arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_serve.json", out.to_pretty() + "\n")?;
+    println!("(wrote BENCH_serve.json; host has {host_threads} hardware threads)");
+    Ok(())
+}

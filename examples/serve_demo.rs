@@ -1,0 +1,84 @@
+//! Serve demo: the full train → snapshot → serve → query loop in one
+//! process, on the paper's Figure-1 toy graph.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::partition::Method;
+use cgcn::runtime::default_backend;
+use cgcn::serve::{load_model, serve, InferenceSession, ServeClient, ServeOptions, SnapshotMeta};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+
+    // 1. Train a small model (see examples/quickstart.rs for the
+    // training walkthrough).
+    let ds = cgcn::cmd::load_dataset("fig1", 1.0, 17)?;
+    let mut hp = HyperParams::for_dataset("fig1");
+    hp.hidden = 8;
+    hp.communities = 3;
+    hp.seed = 17;
+    let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis)?);
+    let backend = default_backend();
+    let mut trainer = AdmmTrainer::new(ws.clone(), backend.clone(), AdmmOptions::for_mode(3))?;
+    trainer.train(30, "demo")?;
+    let (train_acc, test_acc, _) = trainer.evaluate()?;
+    println!("trained: train acc {train_acc:.3}, test acc {test_acc:.3}");
+
+    // 2. Snapshot to .cgnm and load it back — the file is all a server
+    // needs (the workspace rebuilds deterministically from metadata).
+    let path = std::env::temp_dir().join("cgcn_serve_demo.cgnm");
+    trainer.save_model(
+        &path,
+        SnapshotMeta {
+            label: "demo".into(),
+            dataset: "fig1".into(),
+            scale: 1.0,
+            seed: 17,
+            partition: "metis".into(),
+            communities: 3,
+            hidden: 8,
+            layers: ws.layers,
+        },
+    )?;
+    let snap = load_model(&path)?;
+    println!("snapshot: {} bytes at {}", snap.to_bytes().len(), path.display());
+
+    // 3. Serve it and query over TCP.
+    let mut session = InferenceSession::from_snapshot(&snap, backend)?;
+    session.warm_all()?;
+    let handle = serve(
+        session,
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            threads: 2,
+            batch_window_us: 200,
+            max_batch: 64,
+        },
+    )?;
+    let addr = handle.addr().to_string();
+    println!("serving on {addr}");
+
+    let mut client = ServeClient::connect(&addr)?;
+    let info = client.info()?;
+    let nodes: Vec<usize> = (0..info.n).collect();
+    let rows = client.query(&nodes)?;
+    println!("\n{:>5} {:>6} {:>6}", "node", "label", "pred");
+    for (row, &id) in rows.iter().zip(&nodes) {
+        let pred = cgcn::tensor::argmax(row);
+        println!("{id:>5} {:>6} {pred:>6}", ds.labels[id]);
+    }
+    let stats = client.stats()?;
+    println!(
+        "\nserver counters: {} requests, {} nodes, {} batches",
+        stats.requests, stats.nodes, stats.batches
+    );
+    drop(client);
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -16,6 +16,7 @@ use crate::coordinator::clock::timed;
 use crate::coordinator::{evaluate_forward, Workspace};
 use crate::metrics::{EpochRecord, RunReport};
 use crate::runtime::ComputeBackend;
+use crate::serve::{ModelSnapshot, SnapshotMeta};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
@@ -113,5 +114,12 @@ impl BaselineTrainer {
 
     pub fn weights(&self) -> &[Matrix] {
         &self.w
+    }
+
+    /// Snapshot the current weights to a `.cgnm` file (`train --save`);
+    /// reload with [`crate::serve::load_model`] and serve with
+    /// [`crate::serve::InferenceSession`].
+    pub fn save_model(&self, path: &std::path::Path, meta: SnapshotMeta) -> Result<()> {
+        ModelSnapshot::capture(meta, &self.ws, &self.w)?.save(path)
     }
 }

@@ -1,23 +1,13 @@
 //! CLI subcommand implementations (wired from `main.rs`).
 
 use crate::config;
-use crate::data::{self, synth, Dataset};
+use crate::data::{self, Dataset};
 use crate::partition::Method;
 use crate::util::cli::Args;
 
-/// Resolve a dataset by name: synthetic spec, fixture, or `.cgnp` path.
+/// Resolve a dataset by name — thin alias for [`data::load_by_name`].
 pub fn load_dataset(name: &str, scale: f64, seed: u64) -> anyhow::Result<Dataset> {
-    if let Some(spec) = synth::spec_by_name(name) {
-        return Ok(synth::generate(&spec, scale, seed));
-    }
-    match name {
-        "fig1" => Ok(data::fixtures::fig1()),
-        "caveman" | "caveman-l3" => Ok(data::fixtures::caveman(24, seed)),
-        path if path.ends_with(".cgnp") => data::format::load(std::path::Path::new(path)),
-        other => anyhow::bail!(
-            "unknown dataset '{other}' (try synth-computers, synth-photo, fig1, caveman, or a .cgnp path)"
-        ),
-    }
+    data::load_by_name(name, scale, seed)
 }
 
 /// `cgcn plan` — write configs/artifacts.json from the canonical shape plan.
@@ -121,4 +111,210 @@ pub fn cmd_worker(args: &Args) -> i32 {
 /// Parse the partition method CLI value.
 pub fn parse_method(s: &str) -> anyhow::Result<Method> {
     Method::parse(s).ok_or_else(|| anyhow::anyhow!("unknown partition method '{s}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Serving subcommands
+// ---------------------------------------------------------------------------
+
+/// Load `--model`, rebuild its workspace, and bind an inference session
+/// on the requested backend (`--backend`, `--op-threads`).
+fn open_session(args: &Args) -> anyhow::Result<crate::serve::InferenceSession> {
+    let model = args.get_str("model");
+    anyhow::ensure!(!model.is_empty(), "need --model <path.cgnm>");
+    let snap = crate::serve::load_model(std::path::Path::new(&model))?;
+    let choice = crate::runtime::BackendChoice::parse(&args.get_str("backend"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
+    let backend = crate::runtime::select_backend(choice, args.get_usize("op-threads").max(1))?;
+    log::info!(
+        "model '{}' ({}, dims {:?}) on backend {}",
+        model,
+        snap.meta.label,
+        snap.dims,
+        backend.name()
+    );
+    crate::serve::InferenceSession::from_snapshot(&snap, backend)
+}
+
+/// The `--addr` a client subcommand should connect to; rejects the serve
+/// bind default (an ephemeral port can't be guessed).
+fn client_addr(args: &Args) -> anyhow::Result<String> {
+    let addr = args.get_str("addr");
+    anyhow::ensure!(
+        !addr.is_empty() && !addr.ends_with(":0"),
+        "need --addr <host:port> (the address the server printed)"
+    );
+    Ok(addr)
+}
+
+/// `cgcn serve` — load a model snapshot and run the batched inference
+/// server until a client sends Shutdown.
+pub fn cmd_serve(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let mut session = open_session(args)?;
+        // Warm the whole activation cache up front so first-query latency
+        // matches steady state.
+        session.warm_all()?;
+        let opts = crate::serve::ServeOptions {
+            addr: args.get_str("addr"),
+            threads: args.get_usize("threads"),
+            batch_window_us: args.get_u64("batch-window-us"),
+            max_batch: args.get_usize("max-batch"),
+        };
+        let n = session.n();
+        let handle = crate::serve::serve(session, &opts)?;
+        println!(
+            "serving {} ({} nodes) on {} (window {}us, max batch {})",
+            args.get_str("model"),
+            n,
+            handle.addr(),
+            opts.batch_window_us,
+            opts.max_batch
+        );
+        if let Some(path) = args.get("addr-file").filter(|s| !s.is_empty()) {
+            std::fs::write(path, handle.addr().to_string())?;
+        }
+        handle.wait();
+        println!("server stopped");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve error: {e:#}");
+            1
+        }
+    }
+}
+
+/// `cgcn query` — query a running server (`--nodes`), bitwise-verify it
+/// against an in-process forward pass (`--verify`), or stop it
+/// (`--shutdown-server`).
+pub fn cmd_query(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let addr = client_addr(args)?;
+        if args.get_flag("shutdown-server") {
+            let mut client = crate::serve::ServeClient::connect(&addr)?;
+            client.shutdown()?;
+            println!("server at {addr} acknowledged shutdown");
+            return Ok(());
+        }
+        if args.get_flag("verify") {
+            // Do the slow local work (workspace rebuild + full forward)
+            // *before* connecting — an open-but-silent socket would trip
+            // the server's idle timeout on large models.
+            let mut session = open_session(args)?;
+            let full = session.full_logits()?;
+            let mut client = crate::serve::ServeClient::connect(&addr)?;
+            let info = client.info()?;
+            anyhow::ensure!(
+                info.n == session.n(),
+                "server has {} nodes, local model has {}",
+                info.n,
+                session.n()
+            );
+            let ids: Vec<usize> = (0..info.n).collect();
+            for chunk in ids.chunks(256) {
+                let rows = client.query(chunk)?;
+                anyhow::ensure!(
+                    rows.len() == chunk.len(),
+                    "short response: {} rows for {} nodes",
+                    rows.len(),
+                    chunk.len()
+                );
+                for (row, &id) in rows.iter().zip(chunk) {
+                    // Compare representations, not values: the guarantee
+                    // is bitwise identity, and f32 `==` would reject
+                    // byte-identical NaNs (and accept 0.0 vs -0.0).
+                    let local = full.row(id);
+                    let bits_eq = row.len() == local.len()
+                        && row.iter().zip(local).all(|(a, b)| a.to_bits() == b.to_bits());
+                    anyhow::ensure!(
+                        bits_eq,
+                        "logits mismatch at node {id}: served {:?} != local {:?}",
+                        row,
+                        local
+                    );
+                }
+            }
+            println!(
+                "verify OK: {} nodes, served logits bitwise-identical to the in-process forward pass",
+                info.n
+            );
+            return Ok(());
+        }
+        let nodes = args.get_list_usize("nodes");
+        anyhow::ensure!(
+            !nodes.is_empty(),
+            "query needs --nodes <id,id,...> (or --verify / --shutdown-server)"
+        );
+        let mut client = crate::serve::ServeClient::connect(&addr)?;
+        let rows = client.query(&nodes)?;
+        anyhow::ensure!(
+            rows.len() == nodes.len(),
+            "short response: {} rows for {} nodes",
+            rows.len(),
+            nodes.len()
+        );
+        println!("{:>8} {:>6}  logits", "node", "class");
+        for (row, &id) in rows.iter().zip(&nodes) {
+            let class = crate::tensor::argmax(row);
+            let logits: Vec<String> = row.iter().map(|v| format!("{v:.4}")).collect();
+            println!("{id:>8} {class:>6}  [{}]", logits.join(", "));
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("query error: {e:#}");
+            1
+        }
+    }
+}
+
+/// `cgcn loadgen` — closed-loop load against a running server; prints
+/// qps + latency percentiles, optional JSON to `--out`.
+pub fn cmd_loadgen(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let addr = client_addr(args)?;
+        let info = crate::serve::ServeClient::connect(&addr)?.info()?;
+        let opts = crate::serve::LoadgenOpts {
+            clients: args.get_usize("clients"),
+            requests_per_client: args.get_usize("requests"),
+            nodes_per_query: args.get_usize("nodes-per-query"),
+            seed: args.get_u64("seed"),
+        };
+        let r = crate::serve::loadgen::run(&addr, info.n, &opts)?;
+        println!(
+            "{} clients x {} reqs ({} nodes/query) against {} ({} nodes)",
+            r.clients, opts.requests_per_client, opts.nodes_per_query, addr, info.n
+        );
+        println!(
+            "qps {:.0}  latency p50 {:.3}ms  p99 {:.3}ms  mean {:.3}ms  wall {:.2}s",
+            r.qps,
+            r.latency.p50 * 1e3,
+            r.latency.p99 * 1e3,
+            r.latency.mean * 1e3,
+            r.wall_secs
+        );
+        if let Some(out) = args.get("out").filter(|s| !s.is_empty()) {
+            let json = crate::util::json::Json::obj(vec![
+                ("clients", crate::util::json::Json::num(r.clients as f64)),
+                ("requests", crate::util::json::Json::num(r.requests as f64)),
+                ("qps", crate::util::json::Json::num(r.qps)),
+                ("p50_ms", crate::util::json::Json::num(r.latency.p50 * 1e3)),
+                ("p99_ms", crate::util::json::Json::num(r.latency.p99 * 1e3)),
+            ]);
+            std::fs::write(out, json.to_pretty() + "\n")?;
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("loadgen error: {e:#}");
+            1
+        }
+    }
 }

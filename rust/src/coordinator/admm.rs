@@ -32,7 +32,7 @@
 //! Z_L anchor uses its freshly updated Z_{L-1,m}
 //! (`AdmmOptions::gauss_seidel`; the pure-Jacobi variant is an ablation).
 //!
-//! Deviation notes vs the paper's literal text (DESIGN.md §6):
+//! Deviation notes vs the paper's literal text:
 //! - eq. 3 updates the dual with `p^k` messages; we use the residual
 //!   against the exact `Q` the Z_L subproblem just solved
 //!   (`U += ρ(Z_L^{k+1} − Q)`), the standard prox-linearised-ADMM ordering
@@ -46,6 +46,7 @@ use super::clock::{timed, EpochClock, LinkModel};
 use super::workspace::Workspace;
 use crate::metrics::{EpochRecord, RunReport};
 use crate::runtime::ComputeBackend;
+use crate::serve::{ModelSnapshot, SnapshotMeta};
 use crate::tensor::{argmax_rows, Matrix};
 use crate::util::pool::{resolve_threads, scoped_map, Pool};
 use crate::util::rng::Rng;
@@ -898,6 +899,13 @@ impl AdmmTrainer {
     /// train loss).
     pub fn evaluate(&self) -> Result<(f64, f64, f64)> {
         evaluate_forward(&self.ws, &*self.backend, &self.state.w)
+    }
+
+    /// Snapshot the current weights to a `.cgnm` file (`train --save`);
+    /// reload with [`crate::serve::load_model`] and serve with
+    /// [`crate::serve::InferenceSession`].
+    pub fn save_model(&self, path: &std::path::Path, meta: SnapshotMeta) -> Result<()> {
+        ModelSnapshot::capture(meta, &self.ws, &self.state.w)?.save(path)
     }
 
     /// Run a full training: `epochs` ADMM iterations with per-epoch eval.

@@ -24,6 +24,7 @@ use crate::baselines;
 use crate::config::HyperParams;
 use crate::metrics::RunReport;
 use crate::runtime::{select_backend, BackendChoice, ComputeBackend};
+use crate::serve::SnapshotMeta;
 use crate::util::cli::Args;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -93,6 +94,33 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
     })
 }
 
+/// `train --save <path>`: snapshot `w` to the requested path (no-op
+/// without the flag). The metadata records the *resolved* run config
+/// (post fixture overrides), so `rebuild_workspace` replays it verbatim.
+pub(crate) fn maybe_save_model(
+    args: &Args,
+    ws: &Workspace,
+    label: &str,
+    w: &[crate::tensor::Matrix],
+) -> Result<()> {
+    let Some(path) = args.get("save").filter(|s| !s.is_empty()) else {
+        return Ok(());
+    };
+    let meta = SnapshotMeta {
+        label: label.to_string(),
+        dataset: args.get_str("dataset"),
+        scale: args.get_f64("scale"),
+        seed: ws.hp.seed,
+        partition: args.get_str("partition"),
+        communities: ws.hp.communities,
+        hidden: ws.hp.hidden,
+        layers: ws.layers,
+    };
+    crate::serve::ModelSnapshot::capture(meta, ws, w)?.save(std::path::Path::new(path))?;
+    log::info!("saved model snapshot to {path}");
+    Ok(())
+}
+
 /// Run one training configuration (ADMM or a baseline optimizer).
 pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
     let label = match setup.method.as_str() {
@@ -120,6 +148,7 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
             let mut trainer = AdmmTrainer::new(setup.ws.clone(), setup.backend.clone(), opts)?;
             let mut report = trainer.train(setup.epochs, &label)?;
             report.dataset = args.get_str("dataset");
+            maybe_save_model(args, &setup.ws, &label, &trainer.state.w)?;
             Ok(report)
         }
         "gd" | "adam" | "adagrad" | "adadelta" => {
@@ -128,6 +157,7 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
                 baselines::BaselineTrainer::new(setup.ws.clone(), setup.backend.clone(), opt)?;
             let mut report = trainer.train(setup.epochs)?;
             report.dataset = args.get_str("dataset");
+            maybe_save_model(args, &setup.ws, &label, trainer.weights())?;
             Ok(report)
         }
         other => bail!("unknown method '{other}' (admm|gd|adam|adagrad|adadelta)"),

@@ -301,6 +301,9 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
     for mut child in children {
         child.wait().ok();
     }
+    // Save only after the workers are shut down gracefully — a failed
+    // --save must not leave orphaned worker processes behind.
+    super::maybe_save_model(args, &ws, &report.method, &trainer.state.w)?;
     Ok(report)
 }
 

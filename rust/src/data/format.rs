@@ -131,6 +131,29 @@ mod tests {
     }
 
     #[test]
+    fn rejects_version_mismatch() {
+        let ds = fixtures::fig1();
+        let mut bytes = to_bytes(&ds);
+        bytes[4..8].copy_from_slice(&999u32.to_le_bytes());
+        let err = from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn truncation_anywhere_errors_not_panics() {
+        let bytes = to_bytes(&fixtures::fig1());
+        for cut in [0, 3, 4, 8, 12, bytes.len() / 3, bytes.len() - 1] {
+            assert!(
+                from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} did not error"
+            );
+        }
+        let mut trailing = bytes.clone();
+        trailing.push(7);
+        assert!(from_bytes(&trailing).is_err(), "trailing bytes accepted");
+    }
+
+    #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("cgcn_test_format");
         std::fs::create_dir_all(&dir).unwrap();

@@ -15,6 +15,23 @@ pub mod synth;
 use crate::graph::Graph;
 use crate::tensor::Matrix;
 
+/// Resolve a dataset by name: synthetic spec, fixture, or `.cgnp` path.
+/// The single entry point shared by the CLI, the trainers' setup and
+/// model-snapshot workspace rebuilds.
+pub fn load_by_name(name: &str, scale: f64, seed: u64) -> anyhow::Result<Dataset> {
+    if let Some(spec) = synth::spec_by_name(name) {
+        return Ok(synth::generate(&spec, scale, seed));
+    }
+    match name {
+        "fig1" => Ok(fixtures::fig1()),
+        "caveman" | "caveman-l3" => Ok(fixtures::caveman(24, seed)),
+        path if path.ends_with(".cgnp") => format::load(std::path::Path::new(path)),
+        other => anyhow::bail!(
+            "unknown dataset '{other}' (try synth-computers, synth-photo, fig1, caveman, or a .cgnp path)"
+        ),
+    }
+}
+
 /// A node-classification dataset (full-batch, transductive — the paper's
 /// setting).
 #[derive(Clone, Debug)]

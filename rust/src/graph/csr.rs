@@ -185,6 +185,24 @@ impl Csr {
         (&self.col_idx[lo..hi], &self.vals[lo..hi])
     }
 
+    /// The row range `lo..hi` as its own CSR (same `ncols`). Each kept
+    /// row's (cols, vals) slices are copied verbatim, so any per-row
+    /// kernel (SpMM in particular) produces bitwise-identical values for
+    /// the sliced rows — the property the inference activation cache
+    /// relies on to warm one community at a time.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.nrows, "slice_rows out of range");
+        let plo = self.row_ptr[lo] as usize;
+        let phi = self.row_ptr[hi] as usize;
+        Csr {
+            nrows: hi - lo,
+            ncols: self.ncols,
+            row_ptr: self.row_ptr[lo..=hi].iter().map(|&p| p - plo as u32).collect(),
+            col_idx: self.col_idx[plo..phi].to_vec(),
+            vals: self.vals[plo..phi].to_vec(),
+        }
+    }
+
     pub fn get(&self, r: usize, c: usize) -> f32 {
         let (cols, vals) = self.row(r);
         match cols.binary_search(&(c as u32)) {
@@ -348,6 +366,29 @@ mod tests {
         assert!((a.get(0, 1) - 1.0 / (2.0f32 * 3.0).sqrt()).abs() < 1e-6);
         assert_eq!(a.get(0, 2), 0.0);
         assert!(a.is_symmetric(1e-7));
+    }
+
+    #[test]
+    fn slice_rows_matches_full_spmm_rows() {
+        let mut rng = Rng::new(11);
+        let mut trips = Vec::new();
+        for r in 0..20 {
+            for c in 0..20 {
+                if rng.gen_bool(0.2) {
+                    trips.push((r, c, rng.gen_f32()));
+                }
+            }
+        }
+        let a = Csr::from_triplets(20, 20, &trips);
+        let x = Matrix::glorot(20, 7, &mut rng);
+        let full = a.spmm(&x);
+        for (lo, hi) in [(0, 20), (3, 9), (9, 9), (19, 20)] {
+            let s = a.slice_rows(lo, hi);
+            assert_eq!(s.nrows(), hi - lo);
+            assert_eq!(s.ncols(), 20);
+            let got = s.spmm(&x);
+            assert_eq!(got.data(), full.slice_rows(lo, hi).data(), "{lo}..{hi}");
+        }
     }
 
     #[test]

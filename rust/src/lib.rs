@@ -28,6 +28,10 @@
 //!   messages over channels (`--exec serial|threads`), plus the
 //!   multi-process TCP transport.
 //! - [`baselines`] — full-batch backprop GCN with GD/Adam/Adagrad/Adadelta.
+//! - [`serve`] — the serving half: the `.cgnm` model-snapshot codec, the
+//!   community-sharded [`serve::InferenceSession`] activation cache, the
+//!   micro-batching multi-threaded TCP inference server, and the load
+//!   generator (`train --save` → `serve` → `query`/`loadgen`).
 //! - [`metrics`] — timers, counters and CSV emission for the paper's
 //!   tables/figures.
 //! - [`config`] — experiment configuration mirroring the paper's settings.
@@ -47,5 +51,6 @@ pub mod graph;
 pub mod metrics;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -1,20 +1,66 @@
 //! `cgcn` — the CLI entry point / launcher.
 //!
-//! Subcommands:
-//!   plan        write configs/artifacts.json (shape source of truth)
-//!   data        dataset utilities (stats / generate / export)
-//!   train       train with ADMM (serial or parallel) or a baseline
-//!   eval        evaluate saved predictions / quick forward pass
-//!   worker      internal: community worker process (TCP transport)
-//!   artifacts   list indexed artifacts and compile-check them
+//! Subcommands are declared once in [`SUBCOMMANDS`]; both the dispatch
+//! and the error/help text are driven from that table, so they cannot
+//! drift apart.
 
-use cgcn::util::cli::ArgSpec;
+use cgcn::util::cli::{ArgSpec, Args};
+
+struct Subcommand {
+    name: &'static str,
+    help: &'static str,
+    run: fn(&Args) -> i32,
+}
+
+/// The single source of truth for subcommand dispatch *and* help text.
+const SUBCOMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "plan",
+        help: "write configs/artifacts.json (shape source of truth)",
+        run: cgcn::cmd::cmd_plan,
+    },
+    Subcommand {
+        name: "data",
+        help: "dataset utilities (stats / generate / export)",
+        run: cgcn::cmd::cmd_data,
+    },
+    Subcommand {
+        name: "train",
+        help: "train with ADMM (serial or parallel) or a baseline; --save snapshots the model",
+        run: cgcn::cmd::cmd_train,
+    },
+    Subcommand {
+        name: "serve",
+        help: "run the batched multi-threaded inference server on a saved model",
+        run: cgcn::cmd::cmd_serve,
+    },
+    Subcommand {
+        name: "query",
+        help: "query a running inference server (--nodes / --verify / --shutdown-server)",
+        run: cgcn::cmd::cmd_query,
+    },
+    Subcommand {
+        name: "loadgen",
+        help: "generate closed-loop query load against a running server",
+        run: cgcn::cmd::cmd_loadgen,
+    },
+    Subcommand {
+        name: "artifacts",
+        help: "list indexed artifacts and compile-check them",
+        run: cgcn::cmd::cmd_artifacts,
+    },
+    Subcommand {
+        name: "worker",
+        help: "internal: community worker process (TCP transport)",
+        run: cgcn::cmd::cmd_worker,
+    },
+];
 
 fn main() {
     cgcn::util::logger::init();
     let spec = ArgSpec::new(
         "cgcn",
-        "community-based layerwise distributed GCN training (ADMM)",
+        "community-based layerwise distributed GCN training (ADMM) + inference serving",
     )
     .opt("dataset", Some("synth-computers"), "dataset name or .cgnp path")
     .opt("scale", Some("0.25"), "synthetic dataset node-count scale (0,1]")
@@ -28,34 +74,47 @@ fn main() {
     .opt("nu", Some("auto"), "ADMM nu (auto = paper default per dataset)")
     .opt("lr", Some("auto"), "baseline learning rate (auto = paper default)")
     .opt("seed", Some("17"), "random seed")
-    .opt("out", Some(""), "output path (plan json / csv / cgnp)")
+    .opt("out", Some(""), "output path (plan json / csv / cgnp / loadgen json)")
     .opt("transport", Some("local"), "agent transport: local|tcp")
     .opt("exec", Some("serial"), "agent execution: serial|threads (threads = real shared-memory parallelism)")
-    .opt("threads", Some("0"), "worker threads for --exec threads (0 = all cores); with --exec serial, sets native backend op threads (0 = 1, the deterministic single-thread baseline)")
+    .opt("threads", Some("0"), "worker threads: train --exec threads agent pool, serve connection pool (0 = all cores); with --exec serial, sets native backend op threads (0 = 1, the deterministic single-thread baseline)")
     .opt("backend", Some("auto"), "compute backend: auto|native|xla")
     .opt("link-mbps", Some("10000"), "simulated link bandwidth (Mbit/s; default models the paper's same-machine agents)")
     .opt("link-lat-us", Some("100"), "simulated link latency (microseconds)")
     .opt("listen", Some(""), "worker: leader address to connect to")
     .opt("worker-idx", Some("0"), "worker: community index owned by this process")
+    .opt("save", Some(""), "train: save the trained weights to a .cgnm model snapshot")
+    .opt("model", Some(""), "serve/query --verify: model snapshot (.cgnm) path")
+    .opt("addr", Some("127.0.0.1:0"), "serve: bind address (port 0 = ephemeral); query/loadgen: server address")
+    .opt("addr-file", Some(""), "serve: write the bound address to this file once ready")
+    .opt("batch-window-us", Some("200"), "serve: micro-batch collection window in microseconds")
+    .opt("max-batch", Some("256"), "serve: max queries coalesced into one backend batch")
+    .opt("op-threads", Some("1"), "serve/query: native backend op threads for inference")
+    .opt("nodes", Some(""), "query: comma-separated node ids")
+    .opt("clients", Some("4"), "loadgen: concurrent client connections")
+    .opt("requests", Some("200"), "loadgen: queries per client")
+    .opt("nodes-per-query", Some("4"), "loadgen: node ids per query")
     .flag("parallel-layers", "ADMM: update W layers in parallel (paper Alg. 1)")
-    .flag("csv", "emit per-epoch CSV to stdout");
+    .flag("csv", "emit per-epoch CSV to stdout")
+    .flag("verify", "query: check served logits bitwise against an in-process forward pass of --model")
+    .flag("shutdown-server", "query: ask the server to stop");
     let args = spec.parse_env();
 
     let code = match args.subcommand() {
-        Some("plan") => cgcn::cmd::cmd_plan(&args),
-        Some("data") => cgcn::cmd::cmd_data(&args),
-        Some("train") => cgcn::cmd::cmd_train(&args),
-        Some("artifacts") => cgcn::cmd::cmd_artifacts(&args),
-        Some("worker") => cgcn::cmd::cmd_worker(&args),
-        other => {
-            eprintln!(
-                "unknown or missing subcommand {:?}\n\n{}",
-                other,
-                spec.usage()
-            );
-            eprintln!("subcommands: plan | data | train | artifacts | worker");
-            2
-        }
+        Some(name) => match SUBCOMMANDS.iter().find(|s| s.name == name) {
+            Some(sub) => (sub.run)(&args),
+            None => usage_error(Some(name), &spec),
+        },
+        None => usage_error(None, &spec),
     };
     std::process::exit(code);
+}
+
+fn usage_error(got: Option<&str>, spec: &ArgSpec) -> i32 {
+    eprintln!("unknown or missing subcommand {got:?}\n\nsubcommands:");
+    for sub in SUBCOMMANDS {
+        eprintln!("  {:<10} {}", sub.name, sub.help);
+    }
+    eprintln!("\n{}", spec.usage());
+    2
 }

@@ -1,0 +1,98 @@
+//! Closed-loop load generator for the inference server: N client threads
+//! each issue a fixed count of node queries back-to-back, and the
+//! per-request latencies are pooled into throughput + percentile stats.
+//! Used by `cgcn loadgen` and `benches/serve_throughput.rs`.
+
+use super::server::ServeClient;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Load shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenOpts {
+    /// Concurrent client connections. Keep ≤ the server's handler
+    /// threads — the pool bounds concurrent connections, so extra
+    /// clients would queue behind whole connections, not requests.
+    pub clients: usize,
+    /// Queries per client (closed loop: next query starts when the
+    /// previous response lands).
+    pub requests_per_client: usize,
+    /// Node ids per query (drawn uniformly, seeded per client).
+    pub nodes_per_query: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            clients: 4,
+            requests_per_client: 200,
+            nodes_per_query: 4,
+            seed: 17,
+        }
+    }
+}
+
+/// Pooled results of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub requests: usize,
+    pub wall_secs: f64,
+    /// Completed queries per second across all clients.
+    pub qps: f64,
+    /// Per-request latency stats in seconds (pooled over clients).
+    pub latency: Summary,
+}
+
+/// Run a closed-loop load against `addr`, querying nodes in `0..n_nodes`.
+pub fn run(addr: &str, n_nodes: usize, opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    anyhow::ensure!(n_nodes > 0, "loadgen needs a non-empty node range");
+    anyhow::ensure!(
+        opts.clients > 0 && opts.requests_per_client > 0 && opts.nodes_per_query > 0,
+        "loadgen needs clients, requests and nodes-per-query all > 0"
+    );
+    let t0 = Instant::now();
+    let results: Vec<Result<Vec<f64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|ci| {
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut rng = Rng::new(opts.seed).fork(ci as u64 + 1);
+                    let mut client = ServeClient::connect(addr)
+                        .with_context(|| format!("loadgen client {ci}"))?;
+                    let mut lats = Vec::with_capacity(opts.requests_per_client);
+                    let mut nodes = vec![0usize; opts.nodes_per_query];
+                    for _ in 0..opts.requests_per_client {
+                        for nd in nodes.iter_mut() {
+                            *nd = rng.gen_range(n_nodes);
+                        }
+                        let q0 = Instant::now();
+                        let rows = client.query(&nodes)?;
+                        lats.push(q0.elapsed().as_secs_f64());
+                        anyhow::ensure!(rows.len() == nodes.len(), "short response");
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen client panicked"))
+            .collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let mut lats = Vec::with_capacity(opts.clients * opts.requests_per_client);
+    for r in results {
+        lats.extend(r?);
+    }
+    let requests = lats.len();
+    Ok(LoadgenReport {
+        clients: opts.clients,
+        requests,
+        wall_secs,
+        qps: requests as f64 / wall_secs.max(1e-9),
+        latency: Summary::of(&lats),
+    })
+}

@@ -1,0 +1,35 @@
+//! The serving half of the system: train → **snapshot** → **serve**.
+//!
+//! The trainers ([`crate::coordinator::AdmmTrainer`],
+//! [`crate::baselines::BaselineTrainer`]) produce weights; everything
+//! after that lives here:
+//!
+//! - [`snapshot`] — the versioned `.cgnm` model-snapshot codec
+//!   (per-layer weights + layer dims + the run metadata that rebuilds
+//!   the deterministic workspace), with `save_model` exported from both
+//!   trainers and [`snapshot::load_model`] to read it back.
+//! - [`session`] — [`session::InferenceSession`]: forward-only GCN
+//!   inference over any [`crate::runtime::ComputeBackend`], full-graph
+//!   or node-subset, with a per-community hidden-activation cache
+//!   (explicit invalidation) so warm communities answer queries with a
+//!   row gather + one output matmul.
+//! - [`server`] — the multi-threaded TCP inference server: pool-threaded
+//!   connection handlers feeding a micro-batching queue, plus the
+//!   blocking [`server::ServeClient`].
+//! - [`loadgen`] — the closed-loop load generator behind `cgcn loadgen`
+//!   and `benches/serve_throughput.rs`.
+//!
+//! All paths — single query, coalesced batch, warm cache, cold cache,
+//! full forward — are bitwise identical to
+//! [`crate::coordinator::evaluate_forward`]; see DESIGN.md §6 for the
+//! argument and the invalidation rule.
+
+pub mod loadgen;
+pub mod server;
+pub mod session;
+pub mod snapshot;
+
+pub use loadgen::{LoadgenOpts, LoadgenReport};
+pub use server::{serve, ServeClient, ServeOptions, ServerHandle};
+pub use session::InferenceSession;
+pub use snapshot::{load_model, ModelSnapshot, SnapshotMeta};

@@ -1,0 +1,699 @@
+//! The multi-threaded TCP inference server and its client.
+//!
+//! Topology: an accept thread hands each connection to a job on the
+//! in-house worker pool ([`crate::util::pool::Pool`]) — the pool size
+//! bounds concurrently *served* connections, and the acceptor sheds
+//! load with an error frame beyond a small backlog multiple of it.
+//! Handlers parse length-framed requests
+//! ([`crate::util::wire`]) and push node queries into a shared
+//! **micro-batching queue**; a single batcher thread owns the
+//! [`InferenceSession`] and drains the queue once per batch window,
+//! coalescing all pending queries into one deduplicated backend batch.
+//! Responses fan back out over per-request `mpsc` channels.
+//!
+//! Batching trades a bounded latency floor (the window) for throughput:
+//! N concurrent single-node queries cost one row gather + one matmul
+//! instead of N. Because every backend kernel is row-independent, a
+//! node's logits are bitwise identical whether it was served alone, in a
+//! coalesced batch, or read out of a full-graph forward — so batching is
+//! purely a scheduling decision, never a numerics one (DESIGN.md §6).
+//!
+//! Protocol frames (`[u32 len][u8 tag][payload]`, little-endian):
+//!
+//! | tag | dir             | payload                                     |
+//! |-----|-----------------|---------------------------------------------|
+//! | 1   | client→server   | Info {}                                     |
+//! | 2   | server→client   | InfoR { label, n u64, classes u32, dims }   |
+//! | 3   | client→server   | Query { node ids u32s }                     |
+//! | 4   | server→client   | Logits { ids u32s, flat f32s (row-major) }  |
+//! | 5   | server→client   | Err { message str }                         |
+//! | 6   | client→server   | Stats {}                                    |
+//! | 7   | server→client   | StatsR { requests, nodes, batches, warms }  |
+//! | 8   | client→server   | Shutdown {}                                 |
+//! | 9   | server→client   | ShutdownR {}                                |
+
+use super::session::InferenceSession;
+use crate::util::pool::{resolve_threads, Pool};
+use crate::util::wire::{read_frame, read_frame_capped, write_frame, Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+pub const TAG_INFO: u8 = 1;
+pub const TAG_INFO_R: u8 = 2;
+pub const TAG_QUERY: u8 = 3;
+pub const TAG_LOGITS: u8 = 4;
+pub const TAG_ERR: u8 = 5;
+pub const TAG_STATS: u8 = 6;
+pub const TAG_STATS_R: u8 = 7;
+pub const TAG_SHUTDOWN: u8 = 8;
+pub const TAG_SHUTDOWN_R: u8 = 9;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks a free port (the handle reports it).
+    pub addr: String,
+    /// Connection-handler pool threads (0 = all cores). Bounds the number
+    /// of concurrently served connections.
+    pub threads: usize,
+    /// Micro-batch window in microseconds: after the first query of a
+    /// batch arrives, the batcher keeps collecting this long. 0 = drain
+    /// whatever is already queued (minimal batching, minimal latency).
+    pub batch_window_us: u64,
+    /// Hard cap on queries coalesced into one batch.
+    pub max_batch: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 0,
+            batch_window_us: 200,
+            max_batch: 256,
+        }
+    }
+}
+
+/// Server-side counters (all monotonic).
+#[derive(Default)]
+pub struct ServerStats {
+    /// Query frames answered.
+    pub requests: AtomicU64,
+    /// Node rows returned.
+    pub nodes: AtomicU64,
+    /// Backend batches executed.
+    pub batches: AtomicU64,
+}
+
+struct Pending {
+    nodes: Vec<usize>,
+    resp: mpsc::Sender<Result<Vec<f32>, String>>,
+}
+
+struct QueueInner {
+    pending: Vec<Pending>,
+    closed: bool,
+}
+
+/// The micro-batching queue: handlers push, the batcher pops a coalesced
+/// batch per window.
+struct BatchQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+impl BatchQueue {
+    fn new() -> BatchQueue {
+        BatchQueue {
+            inner: Mutex::new(QueueInner {
+                pending: Vec::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue; false if the server is shutting down.
+    fn push(&self, p: Pending) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.pending.push(p);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Block for the first query, then collect until the window closes,
+    /// `max` queries are pending, or the queue closes. `None` once closed
+    /// *and* drained. Entries already pending on entry (leftovers from an
+    /// overflowed batch) have had their window — they drain immediately
+    /// rather than paying a second one.
+    fn pop_batch(&self, window: Duration, max: usize) -> Option<Vec<Pending>> {
+        let mut g = self.inner.lock().unwrap();
+        let backlog = !g.pending.is_empty();
+        while g.pending.is_empty() && !g.closed {
+            g = self.cv.wait(g).unwrap();
+        }
+        if g.pending.is_empty() {
+            return None; // closed and drained
+        }
+        if !backlog {
+            let deadline = Instant::now() + window;
+            while g.pending.len() < max && !g.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (gg, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                g = gg;
+            }
+        }
+        let take = g.pending.len().min(max);
+        Some(g.pending.drain(..take).collect())
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Model facts handlers answer without touching the session.
+struct ServeShared {
+    label: String,
+    n: usize,
+    dims: Vec<usize>,
+    addr: SocketAddr,
+    queue: BatchQueue,
+    shutdown: AtomicBool,
+    stats: ServerStats,
+    /// Cache entries computed by the session (sampled at batch bounds).
+    warms: AtomicU64,
+    /// Clones of every live connection, keyed by a per-connection token,
+    /// so shutdown can force-close sockets whose handlers are blocked in
+    /// a read — without this an idle client would pin its pool worker
+    /// and hang the teardown joins forever. Handlers remove their own
+    /// entry on exit (the clone holds a dup'd fd, so leaving it behind
+    /// would leak one fd per historical connection).
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_token: AtomicU64,
+}
+
+impl ServeShared {
+    /// Unblock every registered connection's reader (idempotent; errors
+    /// on already-dead sockets are expected and ignored). Read-side only:
+    /// blocked `read_frame` calls return EOF so handlers exit, while
+    /// replies to queries already in the batch queue still flush — the
+    /// drain-on-close contract answers them before the batcher stops.
+    fn close_conns(&self) {
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(std::net::Shutdown::Read);
+        }
+    }
+
+    /// An address a local connect can actually reach, to wake the
+    /// blocking `accept()`: a wildcard bind (0.0.0.0 / ::) is not
+    /// connectable on every platform, so substitute loopback.
+    fn wake_addr(&self) -> SocketAddr {
+        let mut a = self.addr;
+        if a.ip().is_unspecified() {
+            a.set_ip(match a.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        a
+    }
+}
+
+/// A running server; stop with [`ServerHandle::stop`] or remotely via the
+/// Shutdown frame (then [`ServerHandle::wait`] returns).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<ServeShared>,
+    accept: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+/// Start serving `session` per `opts`. The session is warmed by the
+/// caller (or lazily by the first queries); ownership moves to the
+/// batcher thread.
+pub fn serve(session: InferenceSession, opts: &ServeOptions) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("binding inference server to {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    let ws = session.workspace();
+    let shared = Arc::new(ServeShared {
+        label: session.label().to_string(),
+        n: ws.n,
+        dims: ws.dims.clone(),
+        addr,
+        queue: BatchQueue::new(),
+        shutdown: AtomicBool::new(false),
+        stats: ServerStats::default(),
+        warms: AtomicU64::new(session.stats().warms),
+        conns: Mutex::new(HashMap::new()),
+        next_conn_token: AtomicU64::new(0),
+    });
+    let window = Duration::from_micros(opts.batch_window_us);
+    let max_batch = opts.max_batch.max(1);
+    let threads = resolve_threads(opts.threads);
+
+    let batcher = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("cgcn-serve-batcher".into())
+            .spawn(move || batcher_loop(session, shared, window, max_batch))?
+    };
+    let accept = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("cgcn-serve-accept".into())
+            .spawn(move || accept_loop(listener, shared, threads))?
+    };
+    log::info!("inference server on {addr} ({threads} handler threads, window {window:?})");
+    Ok(ServerHandle {
+        addr,
+        shared,
+        accept: Some(accept),
+        batcher: Some(batcher),
+    })
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// (requests, nodes, batches) served so far.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let s = &self.shared.stats;
+        (
+            s.requests.load(Ordering::Relaxed),
+            s.nodes.load(Ordering::Relaxed),
+            s.batches.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Block until the server stops (remote Shutdown frame). The
+    /// teardown backstop in `Drop` is a no-op once the joins finish.
+    pub fn wait(mut self) {
+        self.join_threads();
+    }
+
+    /// Stop from the owning process: close the queue, wake the acceptor,
+    /// join both threads (handlers drain as clients disconnect).
+    pub fn stop(self) {
+        // Drop runs shutdown_and_join.
+    }
+
+    fn join_threads(&mut self) {
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.batcher.take() {
+            let _ = j.join();
+        }
+    }
+
+    fn shutdown_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        self.shared.close_conns(); // unblock handlers mid-read
+        let _ = TcpStream::connect(self.shared.wake_addr()); // wake accept()
+        self.join_threads();
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>, threads: usize) {
+    let pool = Pool::new(threads);
+    // Live connections (running + queued for a handler) are bounded at a
+    // small multiple of the pool; beyond that the acceptor sheds load
+    // with an error frame instead of queueing fds without limit.
+    let max_conns = threads * 8;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                if shared.conns.lock().unwrap().len() >= max_conns {
+                    let _ = write_frame(
+                        &mut &stream,
+                        &err_frame("server saturated: too many connections"),
+                    );
+                    continue; // stream drops → connection closes
+                }
+                // Register the connection so shutdown can force-close it.
+                let token = shared.next_conn_token.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().insert(token, clone);
+                }
+                // Re-check after registering: if shutdown's close_conns
+                // drained the registry before our insert, the flag
+                // (stored before the drain) is now visible — close this
+                // socket ourselves so it can't pin a pool worker.
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                    break;
+                }
+                let shared = shared.clone();
+                pool.execute(move || {
+                    let result = handle_conn(stream, &shared);
+                    // Deregister (drops the dup'd fd — the registry must
+                    // not outlive the connection or fds leak per client).
+                    shared.conns.lock().unwrap().remove(&token);
+                    if let Err(e) = result {
+                        log::debug!("serve connection ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                log::warn!("accept error: {e}");
+                // Don't hot-spin on persistent failures (e.g. EMFILE).
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    // Pool drop joins the handlers; close_conns has already unblocked
+    // (or will unblock, via the shutdown paths) any blocked reads.
+}
+
+fn batcher_loop(
+    mut session: InferenceSession,
+    shared: Arc<ServeShared>,
+    window: Duration,
+    max_batch: usize,
+) {
+    while let Some(batch) = shared.queue.pop_batch(window, max_batch) {
+        // Coalesce: union of requested ids, one backend batch.
+        let mut ids: Vec<usize> = batch.iter().flat_map(|p| p.nodes.iter().copied()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        match session.logits_for(&ids) {
+            Ok(logits) => {
+                let cols = logits.cols();
+                for p in &batch {
+                    let mut flat = Vec::with_capacity(p.nodes.len() * cols);
+                    for &id in &p.nodes {
+                        let ri = ids.binary_search(&id).expect("coalesced id missing");
+                        flat.extend_from_slice(logits.row(ri));
+                    }
+                    let _ = p.resp.send(Ok(flat));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in &batch {
+                    let _ = p.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+        shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        shared
+            .warms
+            .store(session.stats().warms, Ordering::Relaxed);
+    }
+}
+
+fn err_frame(msg: &str) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(TAG_ERR).str(msg);
+    e.into_bytes()
+}
+
+/// Largest request frame a handler will read. Queries are u32 node ids
+/// (4 MiB of ids ≫ any real graph here); anything bigger is hostile.
+const MAX_REQUEST_FRAME: usize = 16 << 20;
+
+/// Drop a connection after this long without receiving a byte. The pool
+/// bounds concurrent connections, so without a timeout `--threads` idle
+/// sockets would pin every handler and starve later clients; with it,
+/// workers recycle. (A legitimately quiet client just reconnects.)
+const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn handle_conn(stream: TcpStream, shared: &ServeShared) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match read_frame_capped(&mut reader, MAX_REQUEST_FRAME) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean disconnect
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                log::debug!("closing idle serve connection");
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let Some(&tag) = frame.first() else {
+            write_frame(&mut writer, &err_frame("empty frame"))?;
+            continue;
+        };
+        match tag {
+            TAG_INFO => {
+                let mut e = Enc::new();
+                e.u8(TAG_INFO_R).str(&shared.label).u64(shared.n as u64);
+                e.u32(*shared.dims.last().unwrap() as u32);
+                e.u32s(&shared.dims.iter().map(|&d| d as u32).collect::<Vec<_>>());
+                write_frame(&mut writer, e.bytes())?;
+            }
+            TAG_QUERY => {
+                let mut d = Dec::new(&frame[1..]);
+                // A corrupt payload gets a diagnostic reply like every
+                // other bad-input path — not a dropped connection.
+                let ids32 = match d.u32s() {
+                    Ok(ids) => ids,
+                    Err(e) => {
+                        write_frame(&mut writer, &err_frame(&format!("malformed query: {e}")))?;
+                        continue;
+                    }
+                };
+                let nodes: Vec<usize> = ids32.iter().map(|&i| i as usize).collect();
+                if let Some(&bad) = nodes.iter().find(|&&i| i >= shared.n) {
+                    write_frame(
+                        &mut writer,
+                        &err_frame(&format!("node id {bad} out of range (n={})", shared.n)),
+                    )?;
+                    continue;
+                }
+                let n_nodes = nodes.len() as u64;
+                let (tx, rx) = mpsc::channel();
+                let accepted = shared.queue.push(Pending { nodes, resp: tx });
+                if !accepted {
+                    write_frame(&mut writer, &err_frame("server is shutting down"))?;
+                    continue;
+                }
+                match rx.recv() {
+                    Ok(Ok(flat)) => {
+                        // Count before the reply flushes: once a client
+                        // observes the response, the counters include it.
+                        shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.nodes.fetch_add(n_nodes, Ordering::Relaxed);
+                        let mut e = Enc::new();
+                        e.u8(TAG_LOGITS).u32s(&ids32);
+                        e.f32s(&flat);
+                        write_frame(&mut writer, e.bytes())?;
+                    }
+                    Ok(Err(msg)) => write_frame(&mut writer, &err_frame(&msg))?,
+                    Err(_) => write_frame(&mut writer, &err_frame("batcher stopped"))?,
+                }
+            }
+            TAG_STATS => {
+                let mut e = Enc::new();
+                e.u8(TAG_STATS_R)
+                    .u64(shared.stats.requests.load(Ordering::Relaxed))
+                    .u64(shared.stats.nodes.load(Ordering::Relaxed))
+                    .u64(shared.stats.batches.load(Ordering::Relaxed))
+                    .u64(shared.warms.load(Ordering::Relaxed));
+                write_frame(&mut writer, e.bytes())?;
+            }
+            TAG_SHUTDOWN => {
+                let mut e = Enc::new();
+                e.u8(TAG_SHUTDOWN_R);
+                write_frame(&mut writer, e.bytes())?;
+                shared.shutdown.store(true, Ordering::SeqCst);
+                shared.queue.close();
+                // Unblock every other handler (idle clients would pin
+                // their pool workers and hang the teardown joins), then
+                // wake the acceptor. The ack above is already flushed,
+                // so closing our own socket too is harmless.
+                shared.close_conns();
+                let _ = TcpStream::connect(shared.wake_addr()); // wake accept()
+                break;
+            }
+            other => write_frame(&mut writer, &err_frame(&format!("unknown tag {other}")))?,
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Model facts reported by the Info frame.
+#[derive(Clone, Debug)]
+pub struct ServerInfo {
+    pub label: String,
+    pub n: usize,
+    pub classes: usize,
+    pub dims: Vec<usize>,
+}
+
+/// Serving counters reported by the Stats frame.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerCounters {
+    pub requests: u64,
+    pub nodes: u64,
+    pub batches: u64,
+    pub warms: u64,
+}
+
+/// Blocking client for the inference protocol (used by `cgcn query`, the
+/// load generator, benches and tests).
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(ServeClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn roundtrip(&mut self, req: &[u8], want: u8) -> Result<Vec<u8>> {
+        write_frame(&mut self.writer, req)?;
+        let frame = read_frame(&mut self.reader)?
+            .ok_or_else(|| anyhow::anyhow!("server closed connection"))?;
+        match frame.first() {
+            Some(&t) if t == want => Ok(frame),
+            Some(&TAG_ERR) => {
+                let msg = Dec::new(&frame[1..]).str().unwrap_or_default();
+                bail!("server error: {msg}");
+            }
+            other => bail!("unexpected frame tag {other:?}"),
+        }
+    }
+
+    pub fn info(&mut self) -> Result<ServerInfo> {
+        let mut e = Enc::new();
+        e.u8(TAG_INFO);
+        let frame = self.roundtrip(e.bytes(), TAG_INFO_R)?;
+        let mut d = Dec::new(&frame[1..]);
+        let label = d.str()?;
+        let n = d.u64()? as usize;
+        let classes = d.u32()? as usize;
+        let dims = d.u32s()?.into_iter().map(|x| x as usize).collect();
+        Ok(ServerInfo {
+            label,
+            n,
+            classes,
+            dims,
+        })
+    }
+
+    /// Query logits for `nodes`; returns one row per node, request order.
+    pub fn query(&mut self, nodes: &[usize]) -> Result<Vec<Vec<f32>>> {
+        let ids: Vec<u32> = nodes.iter().map(|&i| i as u32).collect();
+        let mut e = Enc::new();
+        e.u8(TAG_QUERY).u32s(&ids);
+        let frame = self.roundtrip(e.bytes(), TAG_LOGITS)?;
+        let mut d = Dec::new(&frame[1..]);
+        let echo = d.u32s()?;
+        anyhow::ensure!(echo == ids, "response id echo mismatch");
+        let flat = d.f32s()?;
+        anyhow::ensure!(
+            nodes.is_empty() || flat.len() % nodes.len() == 0,
+            "ragged logits payload"
+        );
+        let cols = if nodes.is_empty() {
+            0
+        } else {
+            flat.len() / nodes.len()
+        };
+        Ok(flat.chunks(cols.max(1)).map(|c| c.to_vec()).collect())
+    }
+
+    pub fn stats(&mut self) -> Result<ServerCounters> {
+        let mut e = Enc::new();
+        e.u8(TAG_STATS);
+        let frame = self.roundtrip(e.bytes(), TAG_STATS_R)?;
+        let mut d = Dec::new(&frame[1..]);
+        Ok(ServerCounters {
+            requests: d.u64()?,
+            nodes: d.u64()?,
+            batches: d.u64()?,
+            warms: d.u64()?,
+        })
+    }
+
+    /// Ask the server to stop (acknowledged before it exits).
+    pub fn shutdown(&mut self) -> Result<()> {
+        let mut e = Enc::new();
+        e.u8(TAG_SHUTDOWN);
+        self.roundtrip(e.bytes(), TAG_SHUTDOWN_R)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_queue_coalesces_and_closes() {
+        let q = Arc::new(BatchQueue::new());
+        let (tx, _rx) = mpsc::channel();
+        for i in 0..3 {
+            assert!(q.push(Pending {
+                nodes: vec![i],
+                resp: tx.clone(),
+            }));
+        }
+        let batch = q.pop_batch(Duration::from_micros(0), 2).unwrap();
+        assert_eq!(batch.len(), 2);
+        let batch = q.pop_batch(Duration::from_micros(0), 16).unwrap();
+        assert_eq!(batch.len(), 1);
+        q.close();
+        assert!(!q.push(Pending {
+            nodes: vec![9],
+            resp: tx,
+        }));
+        assert!(q.pop_batch(Duration::from_millis(1), 16).is_none());
+    }
+
+    #[test]
+    fn pop_batch_waits_out_the_window() {
+        let q = Arc::new(BatchQueue::new());
+        let (tx, _rx) = mpsc::channel();
+        let q2 = q.clone();
+        let tx2 = tx.clone();
+        let t = std::thread::spawn(move || {
+            q2.push(Pending {
+                nodes: vec![1],
+                resp: tx2.clone(),
+            });
+            std::thread::sleep(Duration::from_millis(5));
+            q2.push(Pending {
+                nodes: vec![2],
+                resp: tx2,
+            });
+        });
+        // A generous window should see both pushes in one batch.
+        let batch = q.pop_batch(Duration::from_millis(500), 16).unwrap();
+        t.join().unwrap();
+        let total: usize = batch.len();
+        assert!(total >= 1, "first push must be in the batch");
+        if total == 2 {
+            assert_eq!(batch[1].nodes, vec![2]);
+        } else {
+            // Slow host: second push lands in the next batch.
+            let rest = q.pop_batch(Duration::from_millis(0), 16).unwrap();
+            assert_eq!(rest[0].nodes, vec![2]);
+        }
+    }
+}

@@ -1,0 +1,441 @@
+//! Forward-only GCN inference with a per-community activation cache.
+//!
+//! The community-layerwise split makes inference naturally shardable: the
+//! hidden state a query needs is `H_{L-1} = Ã Z_{L-1}`, and a row block of
+//! any `H_l` depends only on `Z_l` rows of the owning community and its
+//! partition neighbours (the nonzero columns of that community's `Ã`
+//! blocks — the Cluster-GCN subgraph-batching observation). The session
+//! exploits that with a cache of hidden activations at *per-community*
+//! granularity:
+//!
+//! - a **cold** community is warmed by computing exactly the rows a query
+//!   needs — its k-hop community neighbourhood, k = L−1 — via row-sliced
+//!   kernels ([`Csr::slice_rows`] + the row-independent backend ops);
+//! - a **warm** community answers node queries with a row gather plus one
+//!   small `|query| × C_{L-1} × C_L` matmul — no layer-1 SpMM, no hidden
+//!   matmuls at all;
+//! - invalidation is **explicit** ([`InferenceSession::invalidate`]):
+//!   dropping community `m` also drops every cache entry whose value
+//!   depends on `m`'s rows, i.e. the communities within L−1 hops of `m`
+//!   in the community adjacency. Weight swaps invalidate everything.
+//!
+//! Determinism: every kernel involved (dense matmul, SpMM, ReLU) computes
+//! each output row from its input row(s) with the same scalar loop
+//! regardless of which other rows are present (see
+//! [`crate::runtime::backend`]), so warm-path, cold-path, batched and
+//! single-node queries are all **bitwise identical** to the full-graph
+//! forward pass [`evaluate_forward`] runs — asserted by the tests here,
+//! by `rust/tests/serve_e2e.rs` and by the `query --verify` CI smoke
+//! test.
+
+use super::snapshot::ModelSnapshot;
+use crate::coordinator::Workspace;
+use crate::runtime::ComputeBackend;
+use crate::tensor::{argmax_rows, Matrix};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Cache/query counters (cheap, read out over the serve stats endpoint).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    /// Node-subset queries answered.
+    pub queries: u64,
+    /// Total nodes returned across queries.
+    pub nodes: u64,
+    /// Community cache entries computed (cold work).
+    pub warms: u64,
+    /// Queries answered entirely from warm communities.
+    pub warm_hits: u64,
+}
+
+/// A loaded model bound to a workspace and a backend, ready to answer
+/// forward-only queries.
+pub struct InferenceSession {
+    ws: Arc<Workspace>,
+    backend: Arc<dyn ComputeBackend>,
+    w: Vec<Matrix>,
+    /// Human-readable model label (the snapshot's run label when loaded
+    /// from one) — reported over the serve Info frame.
+    label: String,
+    /// Original dataset node id → permuted global row.
+    old_to_new: Vec<usize>,
+    /// Permuted global row → owning community (real rows only).
+    community_of: Vec<usize>,
+    /// `z_cache[l-1]` = Z_l rows (n_glob × C_l), valid per community.
+    z_cache: Vec<Matrix>,
+    /// `h_cache[l-1]` = (Ã Z_l) rows (n_glob × C_l), valid per community.
+    h_cache: Vec<Matrix>,
+    z_valid: Vec<Vec<bool>>,
+    h_valid: Vec<Vec<bool>>,
+    stats: SessionStats,
+}
+
+impl InferenceSession {
+    /// Bind weights to a workspace. Weight shapes must match the
+    /// workspace dims.
+    pub fn new(
+        ws: Arc<Workspace>,
+        backend: Arc<dyn ComputeBackend>,
+        w: Vec<Matrix>,
+    ) -> Result<InferenceSession> {
+        ensure!(
+            w.len() == ws.layers && ws.layers >= 1,
+            "session: {} weight matrices for {} layers",
+            w.len(),
+            ws.layers
+        );
+        for (li, wl) in w.iter().enumerate() {
+            ensure!(
+                wl.shape() == (ws.dims[li], ws.dims[li + 1]),
+                "session: W_{} shape {:?} != dims ({}, {})",
+                li + 1,
+                wl.shape(),
+                ws.dims[li],
+                ws.dims[li + 1]
+            );
+        }
+
+        let mut old_to_new = vec![0usize; ws.n];
+        let mut community_of = vec![0usize; ws.n];
+        for (ci, (c, members)) in ws
+            .communities
+            .iter()
+            .zip(&ws.partition.members)
+            .enumerate()
+        {
+            for (li, &old) in members.iter().enumerate() {
+                old_to_new[old] = c.row_offset + li;
+                community_of[c.row_offset + li] = ci;
+            }
+        }
+
+        let hidden_layers = ws.layers - 1;
+        let z_cache = (1..=hidden_layers)
+            .map(|l| Matrix::zeros(ws.n_glob, ws.dims[l]))
+            .collect();
+        let h_cache = (1..=hidden_layers)
+            .map(|l| Matrix::zeros(ws.n_glob, ws.dims[l]))
+            .collect();
+        let z_valid = vec![vec![false; ws.m]; hidden_layers];
+        let h_valid = vec![vec![false; ws.m]; hidden_layers];
+        let label = format!("n{}", ws.n);
+        Ok(InferenceSession {
+            ws,
+            backend,
+            w,
+            label,
+            old_to_new,
+            community_of,
+            z_cache,
+            h_cache,
+            z_valid,
+            h_valid,
+            stats: SessionStats::default(),
+        })
+    }
+
+    /// Load a snapshot: rebuild its workspace and bind the weights.
+    pub fn from_snapshot(
+        snap: &ModelSnapshot,
+        backend: Arc<dyn ComputeBackend>,
+    ) -> Result<InferenceSession> {
+        let ws = snap.rebuild_workspace()?;
+        let mut session = InferenceSession::new(ws, backend, snap.w.clone())?;
+        session.label = snap.meta.label.clone();
+        Ok(session)
+    }
+
+    pub fn workspace(&self) -> &Arc<Workspace> {
+        &self.ws
+    }
+
+    /// Model label shown to clients (snapshot run label when available).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn weights(&self) -> &[Matrix] {
+        &self.w
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.stats
+    }
+
+    /// Number of real (queryable) nodes.
+    pub fn n(&self) -> usize {
+        self.ws.n
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.ws.dims[self.ws.layers]
+    }
+
+    // ---- cache maintenance -----------------------------------------------
+
+    /// Drop every cache entry that depends on community `m`'s rows: `m`
+    /// itself plus all communities within L−1 hops in the community
+    /// adjacency (each SpMM hop widens the dependency cone by one
+    /// neighbourhood). Conservative and cheap — validity bits only.
+    pub fn invalidate(&mut self, m: usize) {
+        assert!(m < self.ws.m, "invalidate: community {m} out of range");
+        let hops = self.ws.layers.saturating_sub(1);
+        let affected = self.community_hops(m, hops);
+        for (zv, hv) in self.z_valid.iter_mut().zip(self.h_valid.iter_mut()) {
+            for &c in &affected {
+                zv[c] = false;
+                hv[c] = false;
+            }
+        }
+    }
+
+    /// Drop the whole cache (weight swap, global feature refresh).
+    pub fn invalidate_all(&mut self) {
+        for v in self.z_valid.iter_mut().chain(self.h_valid.iter_mut()) {
+            v.iter_mut().for_each(|b| *b = false);
+        }
+    }
+
+    /// Communities within `hops` of `m` (inclusive), ascending.
+    fn community_hops(&self, m: usize, hops: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.ws.m];
+        seen[m] = true;
+        let mut frontier = vec![m];
+        for _ in 0..hops {
+            let mut next = Vec::new();
+            for &c in &frontier {
+                for &r in &self.ws.communities[c].neighbors {
+                    if !seen[r] {
+                        seen[r] = true;
+                        next.push(r);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        (0..self.ws.m).filter(|&c| seen[c]).collect()
+    }
+
+    /// Warm Z_l rows for each listed community (`l` is 1-based).
+    fn ensure_z(&mut self, l: usize, comms: &[usize]) -> Result<()> {
+        for &m in comms {
+            if self.z_valid[l - 1][m] {
+                continue;
+            }
+            if l > 1 {
+                self.ensure_h(l - 1, &[m])?;
+            }
+            let c = &self.ws.communities[m];
+            let (lo, hi) = (c.row_offset, c.row_offset + c.size);
+            let src = if l == 1 {
+                self.ws.h0_glob.slice_rows(lo, hi)
+            } else {
+                self.h_cache[l - 2].slice_rows(lo, hi)
+            };
+            let rows = self.backend.fwd_relu(&src, &self.w[l - 1])?;
+            self.z_cache[l - 1].copy_rows_from(&rows, lo);
+            self.z_valid[l - 1][m] = true;
+            self.stats.warms += 1;
+        }
+        Ok(())
+    }
+
+    /// Warm H_l = (Ã Z_l) rows for each listed community (`l` 1-based).
+    /// A community's H rows read Z rows of itself and its partition
+    /// neighbours — exactly the nonzero columns of its `Ã` row block.
+    fn ensure_h(&mut self, l: usize, comms: &[usize]) -> Result<()> {
+        for &m in comms {
+            if self.h_valid[l - 1][m] {
+                continue;
+            }
+            let mut needed: Vec<usize> = self.ws.communities[m]
+                .neighbors
+                .iter()
+                .copied()
+                .chain([m])
+                .collect();
+            needed.sort_unstable();
+            self.ensure_z(l, &needed)?;
+            let c = &self.ws.communities[m];
+            let (lo, hi) = (c.row_offset, c.row_offset + c.size);
+            let a_rows = self.ws.a_glob.slice_rows(lo, hi);
+            let rows = self.backend.spmm(&a_rows, &self.z_cache[l - 1]);
+            self.h_cache[l - 1].copy_rows_from(&rows, lo);
+            self.h_valid[l - 1][m] = true;
+            self.stats.warms += 1;
+        }
+        Ok(())
+    }
+
+    // ---- queries -----------------------------------------------------------
+
+    /// Logits for a set of nodes (original dataset ids; duplicates fine),
+    /// one row per requested node, in request order. Cold communities are
+    /// warmed on the way; warm ones are a row gather + one matmul.
+    pub fn logits_for(&mut self, nodes: &[usize]) -> Result<Matrix> {
+        let l_total = self.ws.layers;
+        let mut rows = Vec::with_capacity(nodes.len());
+        for &id in nodes {
+            ensure!(id < self.ws.n, "node id {id} out of range (n={})", self.ws.n);
+            rows.push(self.old_to_new[id]);
+        }
+
+        if l_total >= 2 {
+            let mut comms: Vec<usize> = rows.iter().map(|&r| self.community_of[r]).collect();
+            comms.sort_unstable();
+            comms.dedup();
+            let all_warm = comms.iter().all(|&m| self.h_valid[l_total - 2][m]);
+            self.ensure_h(l_total - 1, &comms)?;
+            if all_warm {
+                self.stats.warm_hits += 1;
+            }
+        }
+        let h_last = if l_total >= 2 {
+            &self.h_cache[l_total - 2]
+        } else {
+            &self.ws.h0_glob
+        };
+        let gathered = h_last.gather_rows(&rows);
+        let logits = self.backend.mm_nn(&gathered, &self.w[l_total - 1])?;
+        self.stats.queries += 1;
+        self.stats.nodes += nodes.len() as u64;
+        Ok(logits)
+    }
+
+    /// Predicted class per node (original ids, request order).
+    pub fn predict(&mut self, nodes: &[usize]) -> Result<Vec<usize>> {
+        Ok(argmax_rows(&self.logits_for(nodes)?))
+    }
+
+    /// Full-graph logits in **original** node order (n × C_L), via the
+    /// exact kernel sequence of [`evaluate_forward`]; fills the whole
+    /// cache as a side effect, so it doubles as the server's startup
+    /// warm. Subset queries return bitwise-identical rows of this.
+    ///
+    /// [`evaluate_forward`]: crate::coordinator::evaluate_forward
+    pub fn full_logits(&mut self) -> Result<Matrix> {
+        let ws = &self.ws;
+        let l_total = ws.layers;
+        let backend = &*self.backend;
+        let mut h = ws.h0_glob.clone();
+        for l in 1..l_total {
+            let zl = backend.fwd_relu(&h, &self.w[l - 1])?;
+            h = backend.spmm(&ws.a_glob, &zl);
+            self.z_cache[l - 1] = zl;
+            self.h_cache[l - 1] = h.clone();
+            self.z_valid[l - 1].iter_mut().for_each(|b| *b = true);
+            self.h_valid[l - 1].iter_mut().for_each(|b| *b = true);
+        }
+        let logits_glob = backend.mm_nn(&h, &self.w[l_total - 1])?;
+        self.stats.warms += 2 * (l_total - 1) as u64 * self.ws.m as u64;
+        Ok(logits_glob.gather_rows(&self.old_to_new))
+    }
+
+    /// Warm every community at every layer (server startup).
+    pub fn warm_all(&mut self) -> Result<()> {
+        self.full_logits().map(|_| ())
+    }
+
+    /// (train_acc, test_acc, train loss) with the bound weights — same
+    /// numbers the trainers report.
+    pub fn evaluate(&self) -> Result<(f64, f64, f64)> {
+        crate::coordinator::evaluate_forward(&self.ws, &*self.backend, &self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HyperParams;
+    use crate::partition::Method;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn session(m: usize, layers: usize) -> InferenceSession {
+        let ds = crate::data::fixtures::caveman(24, 3);
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = m;
+        hp.hidden = 8;
+        hp.layers = layers;
+        let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+        let mut rng = Rng::new(41);
+        let w: Vec<Matrix> = (1..=ws.layers)
+            .map(|l| Matrix::glorot(ws.dims[l - 1], ws.dims[l], &mut rng))
+            .collect();
+        InferenceSession::new(ws, Arc::new(NativeBackend::new()), w).unwrap()
+    }
+
+    #[test]
+    fn cold_subset_queries_match_full_logits_bitwise() {
+        for layers in [2usize, 3] {
+            let mut s = session(3, layers);
+            let full = {
+                let mut ref_s = session(3, layers);
+                ref_s.full_logits().unwrap()
+            };
+            // Cold path: per-community warming, node by node and batched.
+            let n = s.n();
+            let ids: Vec<usize> = (0..n).step_by(5).collect();
+            let batched = s.logits_for(&ids).unwrap();
+            for (qi, &id) in ids.iter().enumerate() {
+                assert_eq!(
+                    batched.row(qi),
+                    full.row(id),
+                    "layers={layers} node {id} batched vs full"
+                );
+                let single = s.logits_for(&[id]).unwrap();
+                assert_eq!(single.row(0), full.row(id), "single vs full");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_queries_skip_recompute_and_stay_identical() {
+        let mut s = session(3, 2);
+        let full = s.full_logits().unwrap(); // warms everything
+        let warms_after_full = s.stats().warms;
+        let got = s.logits_for(&[0, 7, 31]).unwrap();
+        assert_eq!(s.stats().warms, warms_after_full, "warm query recomputed");
+        assert_eq!(s.stats().warm_hits, 1);
+        for (qi, &id) in [0usize, 7, 31].iter().enumerate() {
+            assert_eq!(got.row(qi), full.row(id));
+        }
+    }
+
+    #[test]
+    fn invalidate_forces_recompute_to_same_values() {
+        let mut s = session(3, 2);
+        let full = s.full_logits().unwrap();
+        s.invalidate(1);
+        let warms_before = s.stats().warms;
+        let ids: Vec<usize> = (0..s.n()).collect();
+        let again = s.logits_for(&ids).unwrap();
+        assert!(s.stats().warms > warms_before, "invalidate was a no-op");
+        assert_eq!(again.data(), full.data());
+
+        s.invalidate_all();
+        let cold = s.logits_for(&ids).unwrap();
+        assert_eq!(cold.data(), full.data());
+    }
+
+    #[test]
+    fn duplicate_and_out_of_range_nodes() {
+        let mut s = session(2, 2);
+        let got = s.logits_for(&[5, 5, 2]).unwrap();
+        assert_eq!(got.row(0), got.row(1));
+        assert!(s.logits_for(&[s.n()]).is_err());
+    }
+
+    #[test]
+    fn evaluate_matches_trainer_eval_path() {
+        let s = session(3, 2);
+        let (tr, te, loss) = s.evaluate().unwrap();
+        let (tr2, te2, loss2) = crate::coordinator::evaluate_forward(
+            s.workspace(),
+            &NativeBackend::new(),
+            s.weights(),
+        )
+        .unwrap();
+        assert_eq!((tr, te, loss), (tr2, te2, loss2));
+    }
+}

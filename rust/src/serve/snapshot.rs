@@ -1,0 +1,338 @@
+//! `.cgnm` — the on-disk binary model-snapshot format.
+//!
+//! A snapshot is everything needed to stand an inference session back up
+//! without the trainer: per-layer weights, the layer dims they were
+//! trained at, and the run metadata (dataset spec, seed, partition) that
+//! rebuilds the deterministic [`Workspace`] — synthesis, partitioning and
+//! normalisation are all seeded, so only the weights have to persist.
+//!
+//! Layout (all little-endian, via [`crate::util::wire`], in the style of
+//! the `.cgnp` dataset format in [`crate::data::format`]):
+//!
+//! ```text
+//! magic "CGNM" | version u32 | label str
+//! dataset str | scale f64 | seed u64 | partition str | communities u32
+//! hidden u32 | layers u32 | dims u32s (len L+1)
+//! L × ( rows u64 | cols u64 | f32 data )
+//! ```
+
+use crate::config::HyperParams;
+use crate::coordinator::Workspace;
+use crate::tensor::Matrix;
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: &[u8; 4] = b"CGNM";
+const VERSION: u32 = 1;
+
+/// Run metadata persisted alongside the weights: everything needed to
+/// rebuild the training-time workspace (dataset, partition) plus a
+/// human-readable label for logs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotMeta {
+    /// Run label (e.g. `admm-parallel-m3`, `adam`).
+    pub label: String,
+    /// Dataset name or `.cgnp` path, as passed to `--dataset`.
+    pub dataset: String,
+    /// Synthetic dataset scale (ignored for fixtures / `.cgnp` paths).
+    pub scale: f64,
+    /// Seed for dataset synthesis, partitioning and init.
+    pub seed: u64,
+    /// Partitioner name (`metis|random|bfs`).
+    pub partition: String,
+    /// Community count the model was trained with (the serving cache
+    /// shards activations at the same granularity).
+    pub communities: usize,
+    /// Resolved hidden width (post fixture overrides).
+    pub hidden: usize,
+    /// Resolved layer count L.
+    pub layers: usize,
+}
+
+/// A saved model: metadata + layer dims + the trained weights W_1..W_L.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    pub meta: SnapshotMeta,
+    /// Layer dims C_0..C_L (length L+1) at train time.
+    pub dims: Vec<usize>,
+    /// Weights, `w[l-1]` is `C_{l-1} × C_l`.
+    pub w: Vec<Matrix>,
+}
+
+impl ModelSnapshot {
+    /// Capture a snapshot from a workspace + trained weights. Validates
+    /// that the weight shapes match the workspace dims.
+    pub fn capture(meta: SnapshotMeta, ws: &Workspace, w: &[Matrix]) -> Result<ModelSnapshot> {
+        ensure!(
+            w.len() == ws.layers,
+            "snapshot: {} weight matrices for {} layers",
+            w.len(),
+            ws.layers
+        );
+        for (li, wl) in w.iter().enumerate() {
+            ensure!(
+                wl.shape() == (ws.dims[li], ws.dims[li + 1]),
+                "snapshot: W_{} is {}x{}, workspace dims want {}x{}",
+                li + 1,
+                wl.rows(),
+                wl.cols(),
+                ws.dims[li],
+                ws.dims[li + 1]
+            );
+        }
+        Ok(ModelSnapshot {
+            meta,
+            dims: ws.dims.clone(),
+            w: w.to_vec(),
+        })
+    }
+
+    /// Serialise to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let wbytes: usize = self.w.iter().map(|m| m.data().len() * 4 + 32).sum();
+        let mut e = Enc::with_capacity(wbytes + 256);
+        e.u8(MAGIC[0]).u8(MAGIC[1]).u8(MAGIC[2]).u8(MAGIC[3]);
+        e.u32(VERSION);
+        e.str(&self.meta.label);
+        e.str(&self.meta.dataset);
+        e.f64(self.meta.scale);
+        e.u64(self.meta.seed);
+        e.str(&self.meta.partition);
+        e.u32(self.meta.communities as u32);
+        e.u32(self.meta.hidden as u32);
+        e.u32(self.meta.layers as u32);
+        e.u32s(&self.dims.iter().map(|&d| d as u32).collect::<Vec<_>>());
+        for m in &self.w {
+            e.u64(m.rows() as u64).u64(m.cols() as u64);
+            e.f32s(m.data());
+        }
+        e.into_bytes()
+    }
+
+    /// Parse from bytes. Corruption (bad magic, version skew, truncation,
+    /// shape mismatches, trailing garbage) is an error, never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelSnapshot> {
+        let mut d = Dec::new(bytes);
+        let magic = [d.u8()?, d.u8()?, d.u8()?, d.u8()?];
+        if &magic != MAGIC {
+            bail!("not a .cgnm model snapshot (bad magic)");
+        }
+        let version = d.u32()?;
+        if version != VERSION {
+            bail!("unsupported .cgnm version {version} (this build reads {VERSION})");
+        }
+        let label = d.str()?;
+        let dataset = d.str()?;
+        let scale = d.f64()?;
+        let seed = d.u64()?;
+        let partition = d.str()?;
+        let communities = d.u32()? as usize;
+        let hidden = d.u32()? as usize;
+        let layers = d.u32()? as usize;
+        let dims: Vec<usize> = d.u32s()?.into_iter().map(|x| x as usize).collect();
+        ensure!(
+            layers >= 1 && dims.len() == layers + 1,
+            "dims length {} does not match layers {}",
+            dims.len(),
+            layers
+        );
+        let mut w = Vec::with_capacity(layers);
+        for li in 0..layers {
+            let rows = d.u64()? as usize;
+            let cols = d.u64()? as usize;
+            // Validate the shape against dims (u32-bounded) *before*
+            // multiplying — corrupt u64 fields must error, not overflow.
+            ensure!(
+                (rows, cols) == (dims[li], dims[li + 1]),
+                "W_{} is {rows}x{cols}, dims want {}x{}",
+                li + 1,
+                dims[li],
+                dims[li + 1]
+            );
+            let data = d.f32s()?;
+            ensure!(
+                data.len() == rows * cols,
+                "W_{} payload size mismatch",
+                li + 1
+            );
+            w.push(Matrix::from_vec(rows, cols, data));
+        }
+        if !d.done() {
+            bail!("trailing bytes in .cgnm snapshot");
+        }
+        Ok(ModelSnapshot {
+            meta: SnapshotMeta {
+                label,
+                dataset,
+                scale,
+                seed,
+                partition,
+                communities,
+                hidden,
+                layers,
+            },
+            dims,
+            w,
+        })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Rebuild the training-time workspace from the snapshot metadata:
+    /// same dataset, same seed, same partition — deterministic end to
+    /// end. Fails if the rebuilt dims no longer match the saved ones
+    /// (dataset drift would silently corrupt inference otherwise).
+    pub fn rebuild_workspace(&self) -> Result<Arc<Workspace>> {
+        let m = &self.meta;
+        let ds = crate::data::load_by_name(&m.dataset, m.scale, m.seed)
+            .with_context(|| format!("rebuilding dataset '{}'", m.dataset))?;
+        let mut hp = HyperParams::for_dataset(&m.dataset);
+        hp.hidden = m.hidden;
+        hp.layers = m.layers;
+        hp.communities = m.communities;
+        hp.seed = m.seed;
+        let method = crate::partition::Method::parse(&m.partition)
+            .ok_or_else(|| anyhow::anyhow!("unknown partition method '{}'", m.partition))?;
+        let ws = Workspace::build(&ds, &hp, method)?;
+        ensure!(
+            ws.dims == self.dims,
+            "rebuilt workspace dims {:?} != snapshot dims {:?} (dataset drift?)",
+            ws.dims,
+            self.dims
+        );
+        Ok(Arc::new(ws))
+    }
+}
+
+/// Load a `.cgnm` snapshot from a file.
+pub fn load_model(path: &Path) -> Result<ModelSnapshot> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ModelSnapshot::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Method;
+    use crate::util::rng::Rng;
+
+    fn fixture_snapshot() -> (ModelSnapshot, Arc<Workspace>) {
+        let ds = crate::data::fixtures::caveman(24, 3);
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = 3;
+        hp.hidden = 8;
+        hp.seed = 3;
+        let ws = Workspace::build(&ds, &hp, Method::Metis).unwrap();
+        let mut rng = Rng::new(9);
+        let w: Vec<Matrix> = (1..=ws.layers)
+            .map(|l| Matrix::glorot(ws.dims[l - 1], ws.dims[l], &mut rng))
+            .collect();
+        let meta = SnapshotMeta {
+            label: "test".into(),
+            dataset: "caveman".into(),
+            scale: 1.0,
+            seed: 3,
+            partition: "metis".into(),
+            communities: 3,
+            hidden: 8,
+            layers: ws.layers,
+        };
+        let snap = ModelSnapshot::capture(meta, &ws, &w).unwrap();
+        (snap, Arc::new(ws))
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_everything() {
+        let (snap, _) = fixture_snapshot();
+        let back = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.meta, snap.meta);
+        assert_eq!(back.dims, snap.dims);
+        assert_eq!(back.w.len(), snap.w.len());
+        for (a, b) in back.w.iter().zip(&snap.w) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn corrupt_inputs_error_not_panic() {
+        let (snap, _) = fixture_snapshot();
+        let bytes = snap.to_bytes();
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(ModelSnapshot::from_bytes(&bad).is_err());
+
+        // Version mismatch.
+        let mut bad = bytes.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = ModelSnapshot::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // Truncation anywhere must be a clean error.
+        for cut in [5, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                ModelSnapshot::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} did not error"
+            );
+        }
+
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(ModelSnapshot::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn huge_weight_shape_errors_not_panics() {
+        let (snap, _) = fixture_snapshot();
+        // Hand-build a snapshot whose first weight block claims an absurd
+        // shape: must be a clean error, not a multiply overflow.
+        let mut e = Enc::new();
+        e.u8(b'C').u8(b'G').u8(b'N').u8(b'M');
+        e.u32(VERSION);
+        e.str("x");
+        e.str("caveman");
+        e.f64(1.0);
+        e.u64(3);
+        e.str("metis");
+        e.u32(3);
+        e.u32(8);
+        e.u32(snap.meta.layers as u32);
+        e.u32s(&snap.dims.iter().map(|&d| d as u32).collect::<Vec<_>>());
+        e.u64(u64::MAX).u64(2);
+        e.f32s(&[0.0]);
+        assert!(ModelSnapshot::from_bytes(&e.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_rebuild() {
+        let (snap, ws) = fixture_snapshot();
+        let dir = std::env::temp_dir().join("cgcn_test_snapshot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.cgnm");
+        snap.save(&path).unwrap();
+        let back = load_model(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let rebuilt = back.rebuild_workspace().unwrap();
+        assert_eq!(rebuilt.dims, ws.dims);
+        assert_eq!(rebuilt.n, ws.n);
+        assert_eq!(rebuilt.m, ws.m);
+    }
+
+    #[test]
+    fn capture_rejects_shape_mismatch() {
+        let (snap, ws) = fixture_snapshot();
+        let mut w = snap.w.clone();
+        w[0] = Matrix::zeros(1, 1);
+        assert!(ModelSnapshot::capture(snap.meta.clone(), &ws, &w).is_err());
+        w.truncate(1);
+        assert!(ModelSnapshot::capture(snap.meta, &ws, &w).is_err());
+    }
+}

@@ -10,4 +10,4 @@ mod matrix;
 mod ops;
 
 pub use matrix::Matrix;
-pub use ops::{argmax_rows, masked_cross_entropy, relu, relu_mask, softmax_rows};
+pub use ops::{argmax, argmax_rows, masked_cross_entropy, relu, relu_mask, softmax_rows};

@@ -38,20 +38,21 @@ pub fn softmax_rows(m: &Matrix) -> Matrix {
     out
 }
 
+/// Argmax of one row: first index of the maximum (NaN-safe — `>` never
+/// holds for NaN, so NaN entries are skipped rather than panicking).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (c, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = c;
+        }
+    }
+    best
+}
+
 /// Row-wise argmax (predicted class per node).
 pub fn argmax_rows(m: &Matrix) -> Vec<usize> {
-    (0..m.rows())
-        .map(|r| {
-            let row = m.row(r);
-            let mut best = 0;
-            for (c, &x) in row.iter().enumerate() {
-                if x > row[best] {
-                    best = c;
-                }
-            }
-            best
-        })
-        .collect()
+    (0..m.rows()).map(|r| argmax(m.row(r))).collect()
 }
 
 /// Masked mean softmax cross-entropy: `mask` selects the labeled training

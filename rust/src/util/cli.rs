@@ -207,6 +207,23 @@ impl Args {
             .get(key)
             .unwrap_or_else(|| panic!("flag --{key} not declared"))
     }
+    /// Parse a comma-separated `usize` list (`--nodes 0,5,17`); empty
+    /// value → empty list. Exits with a CLI error on a malformed entry,
+    /// like the other typed getters.
+    pub fn get_list_usize(&self, key: &str) -> Vec<usize> {
+        let raw = self.get_str(key);
+        raw.split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>().unwrap_or_else(|e| {
+                    eprintln!("error: invalid value for --{key}: {raw:?} ({e})");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -260,6 +277,17 @@ mod tests {
         assert_eq!(a.get_usize("epochs"), 10);
         assert!((a.get_f32("rho") - 0.1).abs() < 1e-6);
         assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn usize_lists_parse() {
+        let spec = ArgSpec::new("t", "test").opt("nodes", Some(""), "node list");
+        let a = spec
+            .parse(vec!["--nodes".to_string(), "0, 5,17".to_string()])
+            .unwrap();
+        assert_eq!(a.get_list_usize("nodes"), vec![0, 5, 17]);
+        let empty = spec.parse(Vec::new()).unwrap();
+        assert!(empty.get_list_usize("nodes").is_empty());
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Summary {
@@ -33,6 +34,7 @@ impl Summary {
             max: sorted[n - 1],
             p50: percentile(&sorted, 0.50),
             p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
         }
     }
 }
@@ -96,6 +98,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]

@@ -143,9 +143,19 @@ impl<'a> Dec<'a> {
             what: "invalid utf-8",
         })
     }
+    /// Validate an untrusted element count against the bytes actually
+    /// remaining, so a corrupted length field is a decode error — never
+    /// a multiply overflow or a huge `Vec::with_capacity` panic.
+    fn slice_len(&self, n: usize, what: &'static str) -> Result<usize, DecodeError> {
+        n.checked_mul(4)
+            .filter(|&bytes| bytes <= self.remaining())
+            .ok_or(DecodeError { at: self.pos, what })
+    }
+
     pub fn f32s(&mut self) -> Result<Vec<f32>, DecodeError> {
         let n = self.u64()? as usize;
-        let bytes = self.take(n * 4, "f32s body")?;
+        let nbytes = self.slice_len(n, "f32s length")?;
+        let bytes = self.take(nbytes, "f32s body")?;
         let mut out = Vec::with_capacity(n);
         for c in bytes.chunks_exact(4) {
             out.push(f32::from_le_bytes(c.try_into().unwrap()));
@@ -154,7 +164,8 @@ impl<'a> Dec<'a> {
     }
     pub fn u32s(&mut self) -> Result<Vec<u32>, DecodeError> {
         let n = self.u64()? as usize;
-        let bytes = self.take(n * 4, "u32s body")?;
+        let nbytes = self.slice_len(n, "u32s length")?;
+        let bytes = self.take(nbytes, "u32s body")?;
         let mut out = Vec::with_capacity(n);
         for c in bytes.chunks_exact(4) {
             out.push(u32::from_le_bytes(c.try_into().unwrap()));
@@ -178,6 +189,14 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
 
 /// Read one `[u32 length][payload]` frame. Returns `None` on clean EOF.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    read_frame_capped(r, u32::MAX as usize)
+}
+
+/// [`read_frame`] with a payload-size cap: a length prefix above
+/// `max_len` is an `InvalidData` error *before* any allocation. Servers
+/// reading from untrusted sockets must use this — a bare 4-byte
+/// `0xFFFFFFFF` would otherwise make every handler allocate 4 GiB.
+pub fn read_frame_capped<R: Read>(r: &mut R, max_len: usize) -> io::Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -185,6 +204,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
         Err(e) => return Err(e),
     }
     let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max_len {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {max_len}"),
+        ));
+    }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     Ok(Some(payload))
@@ -229,6 +254,30 @@ mod tests {
         let bytes = e.into_bytes();
         let mut d = Dec::new(&bytes[..bytes.len() - 2]);
         assert!(d.f32s().is_err());
+    }
+
+    #[test]
+    fn corrupted_length_fields_error_not_panic() {
+        // A length prefix far beyond the buffer (or overflowing n*4) must
+        // be a decode error before any allocation happens.
+        for n in [u64::MAX, u64::MAX / 4 + 1, 1 << 40] {
+            let mut e = Enc::new();
+            e.u64(n);
+            let bytes = e.into_bytes();
+            assert!(Dec::new(&bytes).f32s().is_err(), "f32s len {n}");
+            assert!(Dec::new(&bytes).u32s().is_err(), "u32s len {n}");
+        }
+    }
+
+    #[test]
+    fn capped_frame_read_rejects_oversized_lengths() {
+        let mut pipe: Vec<u8> = Vec::new();
+        write_frame(&mut pipe, b"ok").unwrap();
+        pipe.extend_from_slice(&u32::MAX.to_le_bytes()); // huge frame, no body
+        let mut cur = std::io::Cursor::new(pipe);
+        assert_eq!(read_frame_capped(&mut cur, 1024).unwrap().unwrap(), b"ok");
+        let err = read_frame_capped(&mut cur, 1024).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! End-to-end serving: train → `save_model` → `load_model` → an
+//! [`InferenceSession`] behind the batched multi-threaded TCP server,
+//! with concurrent clients asserting that served logits are bitwise
+//! identical to the in-process forward pass (the acceptance bar for the
+//! serving subsystem — batching and threading must be pure scheduling,
+//! never numerics).
+
+use cgcn::baselines::{BaselineTrainer, Optimizer};
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::partition::Method;
+use cgcn::runtime::NativeBackend;
+use cgcn::serve::{load_model, serve, InferenceSession, ServeClient, ServeOptions, SnapshotMeta};
+use cgcn::tensor::Matrix;
+use cgcn::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SEED: u64 = 5;
+
+fn caveman_workspace(m: usize) -> Arc<Workspace> {
+    // Through the same loader the snapshot rebuild uses, so the
+    // roundtrip replays an identical workspace.
+    let ds = cgcn::cmd::load_dataset("caveman", 1.0, SEED).unwrap();
+    let mut hp = HyperParams::for_dataset("caveman");
+    hp.communities = m;
+    hp.hidden = 8;
+    hp.seed = SEED;
+    Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap())
+}
+
+fn meta(label: &str, ws: &Workspace) -> SnapshotMeta {
+    SnapshotMeta {
+        label: label.to_string(),
+        dataset: "caveman".to_string(),
+        scale: 1.0,
+        seed: SEED,
+        partition: "metis".to_string(),
+        communities: ws.m,
+        hidden: ws.hp.hidden,
+        layers: ws.layers,
+    }
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("cgcn_serve_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn admm_snapshot_roundtrips_and_serves_bitwise_identical() {
+    let ws = caveman_workspace(3);
+    let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+    let mut trainer =
+        AdmmTrainer::new(ws.clone(), backend.clone(), AdmmOptions::for_mode(ws.m)).unwrap();
+    trainer.train(5, "e2e").unwrap();
+    let trained_eval = trainer.evaluate().unwrap();
+
+    // Save → load → rebuild: same weights, same evaluation.
+    let path = temp_path("admm.cgnm");
+    trainer.save_model(&path, meta("e2e", &ws)).unwrap();
+    let snap = load_model(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for (a, b) in snap.w.iter().zip(&trainer.state.w) {
+        assert_eq!(a.data(), b.data(), "weights drifted through the codec");
+    }
+    let mut session = InferenceSession::from_snapshot(&snap, backend.clone()).unwrap();
+    assert_eq!(session.evaluate().unwrap(), trained_eval);
+
+    // Reference logits from the exact evaluate_forward kernel sequence.
+    let full = session.full_logits().unwrap();
+    let n = session.n();
+
+    // Serve it: 4 handler threads, a wide batch window so concurrent
+    // queries coalesce.
+    let handle = serve(
+        session,
+        &ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 4,
+            batch_window_us: 2_000,
+            max_batch: 64,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // Concurrent clients with overlapping random node subsets; every
+    // response row must equal the reference bitwise.
+    let full_ref = &full;
+    let addr_ref = &addr;
+    let per_client = 12usize;
+    std::thread::scope(|s| {
+        for ci in 0..4u64 {
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + ci);
+                let mut client = ServeClient::connect(addr_ref).unwrap();
+                let info = client.info().unwrap();
+                assert_eq!(info.n, n);
+                for _ in 0..per_client {
+                    let k = 1 + rng.gen_range(6);
+                    let nodes: Vec<usize> = (0..k).map(|_| rng.gen_range(n)).collect();
+                    let rows = client.query(&nodes).unwrap();
+                    assert_eq!(rows.len(), nodes.len());
+                    for (row, &id) in rows.iter().zip(&nodes) {
+                        assert_eq!(
+                            row.as_slice(),
+                            full_ref.row(id),
+                            "served logits differ from evaluate_forward at node {id}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // Counters: every request answered; batching means batches ≤ requests.
+    let (requests, nodes, batches) = handle.counters();
+    assert_eq!(requests, 4 * per_client as u64);
+    assert!(nodes >= requests, "every query carries ≥ 1 node");
+    assert!(batches >= 1 && batches <= requests);
+
+    // Remote shutdown: the ack arrives before the server exits, and
+    // wait() returns even though an idle client is still connected
+    // (shutdown force-closes registered sockets so no handler can pin
+    // its pool worker).
+    let idle = ServeClient::connect(&addr).unwrap();
+    let mut closer = ServeClient::connect(&addr).unwrap();
+    closer.shutdown().unwrap();
+    drop(closer);
+    handle.wait();
+    drop(idle);
+}
+
+#[test]
+fn baseline_snapshot_serves_too() {
+    let ws = caveman_workspace(2);
+    let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+    let opt = Optimizer::parse("adam", None).unwrap();
+    let mut trainer = BaselineTrainer::new(ws.clone(), backend.clone(), opt).unwrap();
+    trainer.train(3).unwrap();
+    let path = temp_path("adam.cgnm");
+    trainer.save_model(&path, meta("adam", &ws)).unwrap();
+    let snap = load_model(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let mut session = InferenceSession::from_snapshot(&snap, backend).unwrap();
+    assert_eq!(session.evaluate().unwrap(), trainer.evaluate().unwrap());
+
+    // Subset queries (cold cache) match the full pass bitwise.
+    let full = session.full_logits().unwrap();
+    let mut cold = InferenceSession::from_snapshot(&snap, Arc::new(NativeBackend::new())).unwrap();
+    let ids: Vec<usize> = (0..cold.n()).step_by(3).collect();
+    let got = cold.logits_for(&ids).unwrap();
+    for (qi, &id) in ids.iter().enumerate() {
+        assert_eq!(got.row(qi), full.row(id));
+    }
+}
+
+#[test]
+fn multithreaded_op_backend_serves_identically() {
+    // The batcher may run a pooled backend; results must not change.
+    let ws = caveman_workspace(3);
+    let mut rng = Rng::new(77);
+    let w: Vec<Matrix> = (1..=ws.layers)
+        .map(|l| Matrix::glorot(ws.dims[l - 1], ws.dims[l], &mut rng))
+        .collect();
+    let mut serial =
+        InferenceSession::new(ws.clone(), Arc::new(NativeBackend::new()), w.clone()).unwrap();
+    let mut pooled =
+        InferenceSession::new(ws.clone(), Arc::new(NativeBackend::with_grain(4, 0)), w).unwrap();
+    let full = serial.full_logits().unwrap();
+    let ids: Vec<usize> = (0..ws.n).collect();
+    let got = pooled.logits_for(&ids).unwrap();
+    assert_eq!(got.data(), full.data());
+}
