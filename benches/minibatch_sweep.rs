@@ -1,0 +1,170 @@
+//! Mini-batch (Cluster-GCN) vs full-batch sweep: epoch time and peak
+//! dense-activation rows for each (clusters, batch-clusters) point, with
+//! the accuracy trajectory against the full-batch Adam GCN baseline and
+//! parallel ADMM.
+//!
+//! Writes `BENCH_minibatch.json`. Claims under test:
+//!
+//! - per-step dense activations are bounded by the batch's node count
+//!   (≈ q/c · n·(1+ε)), decoupling training memory from graph size —
+//!   `peak_activation_rows` is measured, not derived;
+//! - the mini-batch path lands within ~2 accuracy points of full-batch
+//!   Adam at the same epoch budget (Cluster-GCN's empirical claim).
+//!
+//! Env knobs: CGCN_BENCH_EPOCHS (default 40), CGCN_BENCH_SCALE (0.25).
+
+use cgcn::baselines::{BaselineTrainer, ClusterGcnOptions, ClusterGcnTrainer, Optimizer};
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::data::synth;
+use cgcn::metrics::RunReport;
+use cgcn::partition::Method;
+use cgcn::runtime::{default_backend, ComputeBackend};
+use cgcn::util::json::Json;
+use std::sync::Arc;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Mean per-epoch training time (excludes evaluation).
+fn mean_epoch_s(rep: &RunReport) -> f64 {
+    rep.total_train() / rep.epochs.len().max(1) as f64
+}
+
+/// Test-accuracy trajectory, thinned to every 5th epoch (plus the last).
+fn trajectory(rep: &RunReport) -> Json {
+    let last = rep.epochs.len().saturating_sub(1);
+    Json::arr(
+        rep.epochs
+            .iter()
+            .filter(|e| e.epoch % 5 == 0 || e.epoch == last)
+            .map(|e| {
+                Json::obj(vec![
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("test_acc", Json::num(e.test_acc)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+    let epochs: usize = env_or("CGCN_BENCH_EPOCHS", 40);
+    let scale: f64 = env_or("CGCN_BENCH_SCALE", 0.25);
+    let backend = default_backend();
+    eprintln!("minibatch_sweep: backend = {}", backend.name());
+
+    let spec = synth::AMAZON_COMPUTERS;
+    let ds = Arc::new(synth::generate(&spec, scale, 17));
+    let hp = HyperParams::for_dataset(spec.name);
+    let n = ds.n();
+
+    // Full-batch Adam baseline (every dense activation spans the padded
+    // global row count — the memory floor mini-batching removes).
+    let mut hp_fb = hp.clone();
+    hp_fb.communities = 1;
+    let ws_fb = Arc::new(Workspace::build(&ds, &hp_fb, Method::Metis)?);
+    let full_rows = ws_fb.n_glob;
+    let mut adam = BaselineTrainer::new(ws_fb, backend.clone(), Optimizer::parse("adam", None)?)?;
+    let adam_rep = adam.train(epochs)?;
+    println!(
+        "full-batch adam:   {:>7} act rows  {:>9.4}s/epoch  final test {:.3}  best {:.3}",
+        full_rows,
+        mean_epoch_s(&adam_rep),
+        adam_rep.final_test_acc(),
+        adam_rep.best_test_acc()
+    );
+
+    // Parallel ADMM reference trajectory (paper's method, m = 3).
+    let mut hp_admm = hp.clone();
+    hp_admm.communities = 3;
+    let ws_admm = Arc::new(Workspace::build(&ds, &hp_admm, Method::Metis)?);
+    let mut admm = AdmmTrainer::new(ws_admm, backend.clone(), AdmmOptions::for_mode(3))?;
+    let admm_rep = admm.train(epochs, "admm-parallel")?;
+    println!(
+        "admm m=3:          {:>7} act rows  {:>9.4}s/epoch  final test {:.3}  best {:.3}",
+        full_rows,
+        mean_epoch_s(&admm_rep),
+        admm_rep.final_test_acc(),
+        admm_rep.best_test_acc()
+    );
+
+    // Mini-batch sweep: c fine clusters, q grouped per step. The serve
+    // workspace (hp.communities) is reused for evaluation only.
+    let mut hp_mb = hp.clone();
+    hp_mb.communities = 3;
+    let ws_mb = Arc::new(Workspace::build(&ds, &hp_mb, Method::Metis)?);
+    let mut rows_json = Vec::new();
+    for (clusters, batch_clusters) in [(8usize, 2usize), (16, 4), (32, 4), (32, 8)] {
+        let opts = ClusterGcnOptions {
+            clusters,
+            batch_clusters,
+            method: Method::Metis,
+        };
+        let mut t = ClusterGcnTrainer::new(
+            ds.clone(),
+            ws_mb.clone(),
+            backend.clone(),
+            Optimizer::parse("adam", None)?,
+            opts,
+        )?;
+        let rep = t.train(epochs)?;
+        let peak = t.peak_batch_nodes();
+        let gap = adam_rep.final_test_acc() - rep.final_test_acc();
+        println!(
+            "cluster-gcn c={clusters:<3} q={batch_clusters}: {:>7} act rows  {:>9.4}s/epoch  final test {:.3}  best {:.3}  gap vs adam {:+.3}",
+            peak,
+            mean_epoch_s(&rep),
+            rep.final_test_acc(),
+            rep.best_test_acc(),
+            gap
+        );
+        rows_json.push(Json::obj(vec![
+            ("clusters", Json::num(clusters as f64)),
+            ("batch_clusters", Json::num(batch_clusters as f64)),
+            ("peak_activation_rows", Json::num(peak as f64)),
+            ("epoch_s_mean", Json::num(mean_epoch_s(&rep))),
+            ("final_test_acc", Json::num(rep.final_test_acc())),
+            ("best_test_acc", Json::num(rep.best_test_acc())),
+            ("final_train_acc", Json::num(rep.final_train_acc())),
+            ("acc_gap_vs_full_batch", Json::num(gap)),
+            ("trajectory", trajectory(&rep)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("minibatch_sweep")),
+        ("dataset", Json::str(&ds.name)),
+        ("n", Json::num(n as f64)),
+        ("epochs", Json::num(epochs as f64)),
+        (
+            "full_batch",
+            Json::obj(vec![
+                ("method", Json::str("adam")),
+                ("peak_activation_rows", Json::num(full_rows as f64)),
+                ("epoch_s_mean", Json::num(mean_epoch_s(&adam_rep))),
+                ("final_test_acc", Json::num(adam_rep.final_test_acc())),
+                ("best_test_acc", Json::num(adam_rep.best_test_acc())),
+                ("trajectory", trajectory(&adam_rep)),
+            ]),
+        ),
+        (
+            "admm",
+            Json::obj(vec![
+                ("method", Json::str("admm-parallel-m3")),
+                ("final_test_acc", Json::num(admm_rep.final_test_acc())),
+                ("best_test_acc", Json::num(admm_rep.best_test_acc())),
+                ("trajectory", trajectory(&admm_rep)),
+            ]),
+        ),
+        ("minibatch", Json::arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_minibatch.json", json.to_pretty() + "\n")?;
+    println!("(wrote BENCH_minibatch.json)");
+    Ok(())
+}

@@ -21,43 +21,61 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> serve smoke test (train --save → serve → query --verify)"
 SMOKE_DIR="$(mktemp -d)"
-MODEL="$SMOKE_DIR/model.cgnm"
-ADDR_FILE="$SMOKE_DIR/addr"
 cleanup() {
     [[ -n "${SERVE_PID:-}" ]] && kill "$SERVE_PID" 2>/dev/null || true
     rm -rf "$SMOKE_DIR"
 }
 trap cleanup EXIT
 
+# Start the server on an ephemeral port; sets SERVE_PID and ADDR.
+serve_start() { # <model> <addr-file>
+    target/release/cgcn serve --model "$1" --addr 127.0.0.1:0 \
+        --addr-file "$2" --threads 2 --batch-window-us 200 &
+    SERVE_PID=$!
+    for _ in $(seq 1 100); do
+        [[ -s "$2" ]] && break
+        sleep 0.1
+    done
+    [[ -s "$2" ]] || { echo "serve did not come up"; exit 1; }
+    ADDR="$(cat "$2")"
+}
+
+# Remote shutdown + bounded wait: a shutdown regression must fail CI,
+# not hang it.
+serve_stop() {
+    target/release/cgcn query --addr "$ADDR" --shutdown-server
+    for _ in $(seq 1 60); do
+        kill -0 "$SERVE_PID" 2>/dev/null || break
+        sleep 0.5
+    done
+    if kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "server failed to exit within 30s of shutdown"
+        exit 1
+    fi
+    wait "$SERVE_PID"
+    SERVE_PID=""
+}
+
+echo "==> serve smoke test (train --save → serve → query --verify)"
+MODEL="$SMOKE_DIR/model.cgnm"
 target/release/cgcn train --dataset caveman --communities 3 --epochs 3 \
     --save "$MODEL" >/dev/null
-target/release/cgcn serve --model "$MODEL" --addr 127.0.0.1:0 \
-    --addr-file "$ADDR_FILE" --threads 2 --batch-window-us 200 &
-SERVE_PID=$!
-for _ in $(seq 1 100); do
-    [[ -s "$ADDR_FILE" ]] && break
-    sleep 0.1
-done
-[[ -s "$ADDR_FILE" ]] || { echo "serve did not come up"; exit 1; }
-ADDR="$(cat "$ADDR_FILE")"
+serve_start "$MODEL" "$SMOKE_DIR/addr"
 # Served logits must be bitwise-identical to the in-process forward pass.
 target/release/cgcn query --addr "$ADDR" --model "$MODEL" --verify
 target/release/cgcn query --addr "$ADDR" --nodes 0,1,2 >/dev/null
 target/release/cgcn loadgen --addr "$ADDR" --clients 2 --requests 20 >/dev/null
-target/release/cgcn query --addr "$ADDR" --shutdown-server
-# Bounded wait: a shutdown regression must fail CI, not hang it.
-for _ in $(seq 1 60); do
-    kill -0 "$SERVE_PID" 2>/dev/null || break
-    sleep 0.5
-done
-if kill -0 "$SERVE_PID" 2>/dev/null; then
-    echo "server failed to exit within 30s of shutdown"
-    exit 1
-fi
-wait "$SERVE_PID"
-SERVE_PID=""
+serve_stop
+
+echo "==> cluster-gcn smoke test (mini-batch train --save → serve → query --verify)"
+MB_MODEL="$SMOKE_DIR/minibatch.cgnm"
+target/release/cgcn train --dataset caveman --method cluster-gcn \
+    --clusters 8 --batch-clusters 2 --epochs 3 --save "$MB_MODEL" >/dev/null
+serve_start "$MB_MODEL" "$SMOKE_DIR/mb_addr"
+# A mini-batch-trained snapshot must serve bitwise-identically too.
+target/release/cgcn query --addr "$ADDR" --model "$MB_MODEL" --verify
+serve_stop
 
 echo "==> quickstart example (release)"
 cargo run --release --example quickstart >/dev/null

@@ -1,0 +1,476 @@
+//! Stochastic community mini-batch GCN training (Cluster-GCN path).
+//!
+//! Cluster-GCN [Chiang et al. '19, 1905.07953] observes that the same
+//! community structure the paper exploits for distributed ADMM also
+//! supports *memory-bounded stochastic training*: partition `G` into many
+//! small clusters, and each step trains full GCN propagation on the
+//! subgraph induced by a random group of `q` clusters. Multi-cluster
+//! batching keeps between-cluster edges *within the batch*, which repairs
+//! most of the edges a single-cluster batch would drop, while every dense
+//! *training activation* (forward and gradient) is bounded by the batch's
+//! node count — the full-batch baselines can never bound those below the
+//! global row count. (The trainer still holds the full-graph [`Workspace`]
+//! for per-epoch evaluation and snapshotting, so resident memory remains
+//! O(n); it is the per-step activation working set that stops scaling
+//! with the graph.)
+//!
+//! Concretely, per step over batch `B` (the union of `q` clusters):
+//!
+//! ```text
+//! Ã_B  = (D_B + I)^{-1/2} (A_B + I) (D_B + I)^{-1/2}   (induced, renormalised)
+//! H0_B = Ã_B X_B;   Z1 = f(H0_B W1);   H1 = Ã_B Z1;   logits = H1 W2
+//! loss = masked-mean CE over B's labeled nodes (denom = |B ∩ train|)
+//! ```
+//!
+//! Forward/backward runs through the exact [`ComputeBackend`] kernels the
+//! full-batch baselines use (`spmm`, `fwd_relu`, `bp_out_grads`,
+//! `bp_hidden_grads`), with Adam (or any [`Optimizer`]) applying the
+//! updates; evaluation is the standard full-graph forward pass, so
+//! accuracies are directly comparable to the GCN baseline and ADMM.
+//!
+//! Determinism: the fine partition, the weight init and the per-epoch
+//! cluster shuffle are all driven by `hp.seed`, so the same seed yields
+//! identical cluster groupings and bitwise-identical training.
+
+use super::{OptState, Optimizer};
+use crate::coordinator::clock::timed;
+use crate::coordinator::{evaluate_forward, Workspace};
+use crate::data::Dataset;
+use crate::graph::induced_subgraph_with;
+use crate::metrics::{EpochRecord, RunReport};
+use crate::partition::{self, Method, Partition};
+use crate::runtime::ComputeBackend;
+use crate::serve::{ModelSnapshot, SnapshotMeta};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Mini-batch engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterGcnOptions {
+    /// Fine partition count `c` (clamped to the node count). Many small
+    /// clusters → small batches → low peak memory; the METIS objective
+    /// keeps each cluster dense so few edges are lost per batch.
+    pub clusters: usize,
+    /// Clusters grouped per step `q` (Cluster-GCN's stochastic multiple
+    /// partitions). Batch size ≈ `q/c · n`.
+    pub batch_clusters: usize,
+    /// Partitioner for the fine clusters.
+    pub method: Method,
+}
+
+impl Default for ClusterGcnOptions {
+    fn default() -> Self {
+        // c=32, q=8 (quarter-graph batches from fine clusters): the sweet
+        // spot in BENCH_minibatch.json — matches the full-batch accuracy
+        // trajectory while bounding activations to ~n/4 rows. Coarser
+        // clusterings at the same q/c ratio (e.g. 8/2) lose accuracy:
+        // finer clusters re-mix more cross-cluster edges per epoch,
+        // which is Cluster-GCN's stochastic-multiple-partitions argument.
+        ClusterGcnOptions {
+            clusters: 32,
+            batch_clusters: 8,
+            method: Method::Metis,
+        }
+    }
+}
+
+impl ClusterGcnOptions {
+    /// Read `--clusters`, `--batch-clusters` and `--partition` from CLI
+    /// args. Undeclared keys fall back to the defaults (so library
+    /// callers with partial arg specs keep working); declared-but-invalid
+    /// values exit with a CLI error like the other typed getters.
+    pub fn from_args(args: &crate::util::cli::Args) -> ClusterGcnOptions {
+        let d = ClusterGcnOptions::default();
+        let get = |key: &str, dflt: usize| -> usize {
+            match args.get(key) {
+                None => dflt,
+                Some(raw) => match raw.parse::<usize>() {
+                    Ok(v) if v > 0 => v,
+                    _ => {
+                        eprintln!(
+                            "error: invalid value for --{key}: {raw:?} (want a positive integer)"
+                        );
+                        std::process::exit(2);
+                    }
+                },
+            }
+        };
+        ClusterGcnOptions {
+            clusters: get("clusters", d.clusters),
+            batch_clusters: get("batch-clusters", d.batch_clusters),
+            method: args
+                .get("partition")
+                .and_then(Method::parse)
+                .unwrap_or(d.method),
+        }
+    }
+}
+
+/// Stochastic community mini-batch trainer for the 2-layer GCN.
+///
+/// Holds the *original-order* dataset for batch extraction (batches are
+/// induced subgraphs of the raw graph) alongside the community-major
+/// [`Workspace`] used for full-graph evaluation and `.cgnm` snapshots —
+/// the snapshot is identical in kind to the full-batch trainers', so
+/// `serve`/`query --verify` accept it unchanged.
+pub struct ClusterGcnTrainer {
+    ws: Arc<Workspace>,
+    ds: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    opt: Optimizer,
+    /// Fine cluster partition (original node ids; members sorted).
+    fine: Partition,
+    batch_clusters: usize,
+    w: Vec<Matrix>,
+    opt_state: Vec<OptState>,
+    /// Per-epoch cluster-shuffle stream (forked off the init stream so
+    /// weight init stays identical to the full-batch baselines).
+    rng: Rng,
+    /// Reusable global→local map for induced-subgraph extraction (all
+    /// `u32::MAX` between batches), keeping per-step map work O(|B|).
+    scratch: Vec<u32>,
+    /// Largest batch node count seen — the per-step dense-activation row
+    /// bound reported by the mini-batch bench.
+    peak_batch_nodes: usize,
+}
+
+impl ClusterGcnTrainer {
+    pub fn new(
+        ds: Arc<Dataset>,
+        ws: Arc<Workspace>,
+        backend: Arc<dyn ComputeBackend>,
+        opt: Optimizer,
+        opts: ClusterGcnOptions,
+    ) -> Result<ClusterGcnTrainer> {
+        ensure!(
+            ws.layers == 2,
+            "cluster-gcn trainer supports the paper's 2-layer GCN (got L={})",
+            ws.layers
+        );
+        ensure!(ds.n() == ws.n, "dataset/workspace node count mismatch");
+        let clusters = opts.clusters.clamp(1, ds.n());
+        let batch_clusters = opts.batch_clusters.clamp(1, clusters);
+        let fine = partition::partition(&ds.graph, clusters, opts.method, ws.hp.seed);
+
+        // Same init stream as BaselineTrainer: identical starting weights
+        // make the accuracy-trajectory comparison apples-to-apples.
+        let mut rng = Rng::new(ws.hp.seed);
+        let dims = ws.dims.clone();
+        let w: Vec<Matrix> = (1..=ws.layers)
+            .map(|l| Matrix::glorot(dims[l - 1], dims[l], &mut rng))
+            .collect();
+        let opt_state = w.iter().map(|wl| OptState::new(wl.shape())).collect();
+        let batch_rng = rng.fork(0xC1B5);
+        let scratch = vec![u32::MAX; ds.n()];
+        Ok(ClusterGcnTrainer {
+            ws,
+            ds,
+            backend,
+            opt,
+            fine,
+            batch_clusters,
+            w,
+            opt_state,
+            rng: batch_rng,
+            scratch,
+            peak_batch_nodes: 0,
+        })
+    }
+
+    /// Number of fine clusters `c`.
+    pub fn num_clusters(&self) -> usize {
+        self.fine.m()
+    }
+
+    /// Largest batch (node count) processed so far — every dense
+    /// activation in a step has exactly this many rows at peak.
+    pub fn peak_batch_nodes(&self) -> usize {
+        self.peak_batch_nodes
+    }
+
+    /// Draw one epoch's batch schedule: shuffle the cluster ids and chunk
+    /// them into groups of `q`. Every cluster is visited exactly once per
+    /// epoch (sampling without replacement, as in Cluster-GCN).
+    pub fn epoch_groups(&mut self) -> Vec<Vec<usize>> {
+        let mut order: Vec<usize> = (0..self.fine.m()).collect();
+        self.rng.shuffle(&mut order);
+        order
+            .chunks(self.batch_clusters)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// The sorted node union of a cluster group — one batch.
+    pub fn batch_nodes(&self, group: &[usize]) -> Vec<usize> {
+        let mut nodes: Vec<usize> = group
+            .iter()
+            .flat_map(|&c| self.fine.members[c].iter().copied())
+            .collect();
+        // Cluster member lists are sorted and disjoint, so a sort is
+        // enough to produce the sorted unique batch order.
+        nodes.sort_unstable();
+        nodes
+    }
+
+    /// One mini-batch step over the given nodes. Returns
+    /// `Some((loss, labeled))` or `None` when the batch holds no labeled
+    /// node (no gradient — skipped, as in the reference implementations).
+    fn step_batch(&mut self, nodes: &[usize]) -> Result<Option<(f32, f32)>> {
+        let nb = nodes.len();
+        let mask_b: Vec<f32> = nodes.iter().map(|&v| self.ds.train_mask[v]).collect();
+        let denom_b: f32 = mask_b.iter().sum();
+        if denom_b <= 0.0 {
+            return Ok(None);
+        }
+        // Recorded only for batches that allocate activations — skipped
+        // label-free batches never build them, so they don't set the
+        // measured peak.
+        self.peak_batch_nodes = self.peak_batch_nodes.max(nb);
+
+        let sub = induced_subgraph_with(&self.ds.graph, nodes, &mut self.scratch);
+        let x_b = self.ds.features.gather_rows(nodes);
+        let mut y_b = Matrix::zeros(nb, self.ds.num_classes);
+        for (i, &v) in nodes.iter().enumerate() {
+            y_b.set(i, self.ds.labels[v], 1.0);
+        }
+
+        let backend = &*self.backend;
+        // Forward: H0 = Ã_B X_B; Z1 = f(H0 W1); H1 = Ã_B Z1.
+        let h0 = backend.spmm(&sub.a_norm, &x_b);
+        let z1 = backend.fwd_relu(&h0, &self.w[0])?;
+        let h1 = backend.spmm(&sub.a_norm, &z1);
+
+        // Head: loss + dW2 + dH1 with the batch-local denominator.
+        let (loss, dw2, dh1) =
+            backend.bp_out_grads(&h1, &self.w[1], &y_b, &mask_b, denom_b)?;
+
+        // dZ1 = Ã_Bᵀ dH1 = Ã_B dH1 (symmetric), then the hidden tail.
+        let dz1 = backend.spmm(&sub.a_norm, &dh1);
+        let dw1 = backend.bp_hidden_grads(&h0, &self.w[0], &dz1)?;
+
+        self.opt.apply(&mut self.w[0], &dw1, &mut self.opt_state[0]);
+        self.opt.apply(&mut self.w[1], &dw2, &mut self.opt_state[1]);
+        Ok(Some((loss, denom_b)))
+    }
+
+    /// One epoch: every cluster visited once in random `q`-groups.
+    /// Returns the label-count-weighted mean loss (comparable to the
+    /// full-batch per-epoch loss: each labeled node contributes once).
+    pub fn train_epoch(&mut self) -> Result<f64> {
+        let groups = self.epoch_groups();
+        let mut loss_sum = 0.0f64;
+        let mut denom_sum = 0.0f64;
+        for group in &groups {
+            let nodes = self.batch_nodes(group);
+            if let Some((loss, denom)) = self.step_batch(&nodes)? {
+                loss_sum += loss as f64 * denom as f64;
+                denom_sum += denom as f64;
+            }
+        }
+        Ok(loss_sum / denom_sum.max(1.0))
+    }
+
+    /// Full-graph evaluation (train acc, test acc, loss) — identical to
+    /// the full-batch baselines' evaluation path.
+    pub fn evaluate(&self) -> Result<(f64, f64, f64)> {
+        evaluate_forward(&self.ws, &*self.backend, &self.w)
+    }
+
+    pub fn train(&mut self, epochs: usize) -> Result<RunReport> {
+        let mut report = RunReport::new(
+            "cluster-gcn",
+            &format!("n{}", self.ws.n),
+            self.num_clusters(),
+        );
+        for e in 0..epochs {
+            let wall0 = Instant::now();
+            let (loss, secs) = timed(|| self.train_epoch());
+            let loss = loss?;
+            let wall = wall0.elapsed().as_secs_f64();
+            let (train_acc, test_acc, _) = self.evaluate()?;
+            log::debug!(
+                "[cluster-gcn c={} q={}] epoch {e}: loss={loss:.4} train={train_acc:.3} test={test_acc:.3} peak_batch={}",
+                self.num_clusters(),
+                self.batch_clusters,
+                self.peak_batch_nodes
+            );
+            report.push(EpochRecord {
+                epoch: e,
+                train_acc,
+                test_acc,
+                loss,
+                t_train: secs,
+                t_comm: 0.0,
+                t_wall: wall,
+                bytes: 0,
+            });
+        }
+        Ok(report)
+    }
+
+    pub fn weights(&self) -> &[Matrix] {
+        &self.w
+    }
+
+    /// Snapshot the current weights to a `.cgnm` file (`train --save`);
+    /// the snapshot is served exactly like a full-batch one.
+    pub fn save_model(&self, path: &std::path::Path, meta: SnapshotMeta) -> Result<()> {
+        ModelSnapshot::capture(meta, &self.ws, &self.w)?.save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HyperParams;
+    use crate::runtime::NativeBackend;
+
+    fn mk(seed: u64, clusters: usize, q: usize) -> ClusterGcnTrainer {
+        let ds = Arc::new(crate::data::fixtures::caveman(24, 3));
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = 3;
+        hp.hidden = 8;
+        hp.seed = seed;
+        let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let opt = Optimizer::parse("adam", None).unwrap();
+        ClusterGcnTrainer::new(
+            ds,
+            ws,
+            backend,
+            opt,
+            ClusterGcnOptions {
+                clusters,
+                batch_clusters: q,
+                method: Method::Metis,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn same_seed_same_groupings_and_accuracy() {
+        // The mini-batch determinism contract: identical seeds give
+        // identical cluster schedules, bitwise-identical weights and the
+        // same final accuracy.
+        let mut a = mk(11, 8, 2);
+        let mut b = mk(11, 8, 2);
+        assert_eq!(a.epoch_groups(), b.epoch_groups());
+        assert_eq!(a.epoch_groups(), b.epoch_groups());
+        // Fresh trainers (the groups above consumed the shuffle stream).
+        let mut a = mk(11, 8, 2);
+        let mut b = mk(11, 8, 2);
+        let ra = a.train(4).unwrap();
+        let rb = b.train(4).unwrap();
+        for (wa, wb) in a.weights().iter().zip(b.weights()) {
+            assert_eq!(wa.data(), wb.data(), "weights diverged under one seed");
+        }
+        assert_eq!(ra.final_test_acc(), rb.final_test_acc());
+        assert_eq!(ra.final_train_acc(), rb.final_train_acc());
+        // And a different seed actually changes the schedule.
+        let mut c = mk(12, 8, 2);
+        assert_ne!(mk(11, 8, 2).epoch_groups(), c.epoch_groups());
+    }
+
+    #[test]
+    fn peak_batch_is_bounded_by_cluster_group_size() {
+        let mut t = mk(7, 8, 2);
+        t.train(2).unwrap();
+        // Peak dense-activation rows are bounded by the q largest
+        // clusters, and strictly below the full graph.
+        let mut sizes = t.fine.sizes();
+        sizes.sort_unstable_by(|x, y| y.cmp(x));
+        let bound: usize = sizes.iter().take(2).sum();
+        assert!(t.peak_batch_nodes() > 0);
+        assert!(
+            t.peak_batch_nodes() <= bound,
+            "peak {} > q-largest-clusters bound {bound}",
+            t.peak_batch_nodes()
+        );
+        assert!(t.peak_batch_nodes() < t.ds.n());
+    }
+
+    #[test]
+    fn every_cluster_visited_once_per_epoch() {
+        let mut t = mk(5, 8, 3);
+        let groups = t.epoch_groups();
+        let mut seen: Vec<usize> = groups.into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..t.num_clusters()).collect::<Vec<_>>());
+        // Batches cover each node exactly once per epoch.
+        let groups = t.epoch_groups();
+        let mut nodes: Vec<usize> = groups
+            .iter()
+            .flat_map(|g| t.batch_nodes(g))
+            .collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, (0..t.ds.n()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn learns_the_caveman_fixture() {
+        // Mini-batch Adam must decrease the loss and beat random guessing
+        // on the clean two-class fixture (sanity, not a tuning target) —
+        // same lr/epoch budget the full-batch baseline tests use.
+        let ds = Arc::new(crate::data::fixtures::caveman(24, 3));
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = 3;
+        hp.hidden = 8;
+        hp.seed = 17;
+        let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let opt = Optimizer::parse("adam", Some("0.05")).unwrap();
+        let mut t = ClusterGcnTrainer::new(
+            ds,
+            ws,
+            backend,
+            opt,
+            ClusterGcnOptions {
+                clusters: 6,
+                batch_clusters: 2,
+                method: Method::Metis,
+            },
+        )
+        .unwrap();
+        let report = t.train(25).unwrap();
+        let first = report.epochs.first().unwrap().loss;
+        let last = report.epochs.last().unwrap().loss;
+        assert!(last < first, "loss did not decrease ({first} -> {last})");
+        assert!(
+            report.final_train_acc() > 0.6,
+            "train acc {}",
+            report.final_train_acc()
+        );
+    }
+
+    #[test]
+    fn snapshot_from_minibatch_weights_is_servable() {
+        let mut t = mk(9, 8, 2);
+        t.train(2).unwrap();
+        let meta = SnapshotMeta {
+            label: "cluster-gcn".into(),
+            dataset: "caveman".into(),
+            scale: 1.0,
+            seed: 3,
+            partition: "metis".into(),
+            communities: 3,
+            hidden: 8,
+            layers: 2,
+        };
+        let snap = ModelSnapshot::capture(meta, &t.ws, t.weights()).unwrap();
+        let back = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        // The snapshot round-trips and serves through the standard
+        // inference session, agreeing with the trainer's own evaluation.
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let mut session =
+            crate::serve::InferenceSession::new(t.ws.clone(), backend, back.w.clone()).unwrap();
+        let served = session.full_logits().unwrap();
+        assert_eq!(served.rows(), t.ws.n);
+        let (train_acc, _, _) = t.evaluate().unwrap();
+        let (s_train, _, _) = session.evaluate().unwrap();
+        assert_eq!(train_acc, s_train);
+    }
+}

@@ -1,6 +1,6 @@
-//! Baseline optimizers: full-batch backprop GCN training with GD, Adam,
-//! Adagrad and Adadelta — the four comparison methods of the paper's
-//! Figure 2.
+//! Backprop GCN training: the paper's four full-batch comparison methods
+//! (GD, Adam, Adagrad, Adadelta — Figure 2) plus the stochastic community
+//! mini-batch engine ([`ClusterGcnTrainer`], Cluster-GCN path).
 //!
 //! Gradients flow through the same [`ComputeBackend`] kernels + SpMM
 //! pipeline as the ADMM trainer (see python/compile/model.py `bp_*`
@@ -8,8 +8,10 @@
 //! (they're O(params), off the roofline). Paper learning rates: 1e-3 for
 //! Adam/Adagrad/Adadelta, 1e-1 for GD.
 
+mod cluster_gcn;
 mod optim;
 
+pub use cluster_gcn::{ClusterGcnOptions, ClusterGcnTrainer};
 pub use optim::{OptState, Optimizer};
 
 use crate::coordinator::clock::timed;

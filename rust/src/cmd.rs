@@ -86,7 +86,10 @@ pub fn cmd_artifacts(_args: &Args) -> i32 {
     0
 }
 
-/// `cgcn train` — run one training configuration and print per-epoch rows.
+/// `cgcn train` — run one training configuration and print per-epoch
+/// rows. `--method` selects full-batch ADMM/backprop or the stochastic
+/// community mini-batch engine (`cluster-gcn`, with `--clusters` /
+/// `--batch-clusters` controlling batch construction).
 pub fn cmd_train(args: &Args) -> i32 {
     match crate::coordinator::run_from_args(args) {
         Ok(()) => 0,

@@ -32,6 +32,9 @@ use std::sync::Arc;
 /// Everything `cgcn train` needs, resolved from CLI arguments.
 pub struct TrainSetup {
     pub ws: Arc<Workspace>,
+    /// Original-order dataset (the mini-batch engine extracts induced
+    /// subgraphs from it; the workspace holds the permuted view).
+    pub ds: Arc<crate::data::Dataset>,
     pub backend: Arc<dyn ComputeBackend>,
     pub hp: HyperParams,
     pub method: String,
@@ -84,6 +87,7 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
     let link = LinkModel::new(args.get_f64("link-mbps"), args.get_f64("link-lat-us"));
     Ok(TrainSetup {
         ws,
+        ds: Arc::new(ds),
         backend,
         hp: hp.clone(),
         method,
@@ -160,7 +164,30 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
             maybe_save_model(args, &setup.ws, &label, trainer.weights())?;
             Ok(report)
         }
-        other => bail!("unknown method '{other}' (admm|gd|adam|adagrad|adadelta)"),
+        "cluster-gcn" => {
+            // Stochastic community mini-batch engine: Adam over induced
+            // cluster-group subgraphs (paper lr unless --lr overrides).
+            let opt = baselines::Optimizer::parse("adam", args.get("lr"))?;
+            let opts = baselines::ClusterGcnOptions::from_args(args);
+            let mut trainer = baselines::ClusterGcnTrainer::new(
+                setup.ds.clone(),
+                setup.ws.clone(),
+                setup.backend.clone(),
+                opt,
+                opts,
+            )?;
+            let mut report = trainer.train(setup.epochs)?;
+            report.dataset = args.get_str("dataset");
+            log::info!(
+                "cluster-gcn: {} clusters, peak batch {} nodes (full graph: {})",
+                trainer.num_clusters(),
+                trainer.peak_batch_nodes(),
+                setup.ws.n
+            );
+            maybe_save_model(args, &setup.ws, &label, trainer.weights())?;
+            Ok(report)
+        }
+        other => bail!("unknown method '{other}' (admm|gd|adam|adagrad|adadelta|cluster-gcn)"),
     }
 }
 

@@ -102,6 +102,12 @@ impl Graph {
 
 /// Compressed-sparse-row f32 matrix (possibly rectangular — community
 /// blocks `Ã_{m,r}` are n_m × n_r).
+///
+/// **Capacity ceiling:** `row_ptr` (and `col_idx`) use `u32`, so a `Csr`
+/// holds at most `u32::MAX` (≈ 4.29 billion) nonzeros — ~34 GB of
+/// col/val payload, far beyond any current in-memory workload here.
+/// Constructors enforce the ceiling with a checked conversion
+/// (`checked_ptr_u32`) instead of silently truncating.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     nrows: usize,
@@ -109,6 +115,15 @@ pub struct Csr {
     row_ptr: Vec<u32>,
     col_idx: Vec<u32>,
     vals: Vec<f32>,
+}
+
+/// Checked `usize → u32` conversion for CSR row pointers. Panics with a
+/// clear message instead of silently truncating past 2³² nonzeros.
+#[inline]
+fn checked_ptr_u32(nnz: usize) -> u32 {
+    u32::try_from(nnz).unwrap_or_else(|_| {
+        panic!("Csr nnz {nnz} exceeds the u32 row_ptr ceiling ({})", u32::MAX)
+    })
 }
 
 impl Csr {
@@ -126,7 +141,7 @@ impl Csr {
             debug_assert!(cols.iter().all(|&c| (c as usize) < ncols));
             col_idx.extend_from_slice(&cols);
             vals.extend_from_slice(&v);
-            row_ptr.push(col_idx.len() as u32);
+            row_ptr.push(checked_ptr_u32(col_idx.len()));
         }
         Csr {
             nrows,
@@ -230,6 +245,10 @@ impl Csr {
 
     /// Transpose (O(nnz)); needed for rectangular blocks `Ã_{r,m} = Ã_{m,r}^T`.
     pub fn transpose(&self) -> Csr {
+        // The prefix-sum below accumulates in u32; guard the total the
+        // same way `from_rows` does (it is an invariant of `self`, but a
+        // cheap check keeps the truncation impossible by construction).
+        let _ = checked_ptr_u32(self.nnz());
         let mut counts = vec![0u32; self.ncols + 1];
         for &c in &self.col_idx {
             counts[c as usize + 1] += 1;
@@ -398,6 +417,21 @@ mod tests {
         // Node 2 is isolated: Ã[2,2] = 1/(0+1) = 1.
         assert!((a.get(2, 2) - 1.0).abs() < 1e-6);
         assert_eq!(a.row(2).0.len(), 1);
+    }
+
+    #[test]
+    fn nnz_guard_accepts_up_to_u32_max() {
+        assert_eq!(checked_ptr_u32(0), 0);
+        assert_eq!(checked_ptr_u32(u32::MAX as usize), u32::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the u32 row_ptr ceiling")]
+    fn nnz_guard_rejects_beyond_u32() {
+        // A real > 2³²-nnz matrix would need ~34 GB, so exercise the
+        // guard directly (it is the same code path `from_rows` and
+        // `transpose` run per row).
+        checked_ptr_u32(u32::MAX as usize + 1);
     }
 
     #[test]

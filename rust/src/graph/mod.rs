@@ -1,5 +1,6 @@
 //! Graph substrate: CSR sparse matrices, GCN normalisation, community
-//! block extraction, and the SpMM hot path.
+//! block extraction, induced-subgraph renormalisation (the mini-batch
+//! primitive), and the SpMM hot path.
 //!
 //! The ADMM coordinator never materialises a dense adjacency matrix: all
 //! `Ã`-products (the sparse half of every subproblem — see DESIGN.md §1)
@@ -8,6 +9,8 @@
 
 mod csr;
 pub mod blocks;
+pub mod subgraph;
 
 pub use csr::{Csr, Graph};
 pub use blocks::{split_blocks, BlockMatrix};
+pub use subgraph::{induced_subgraph, induced_subgraph_with, InducedSubgraph};

@@ -1,0 +1,222 @@
+//! Node-induced subgraphs with per-batch renormalisation — the graph-side
+//! primitive of Cluster-GCN style mini-batch training [Chiang et al. '19].
+//!
+//! Given a batch `B ⊆ V` (the union of a few partitioner clusters), the
+//! mini-batch step runs the exact GCN propagation rule on the *induced*
+//! subgraph `G[B]`: edges with both endpoints in `B`, degrees recomputed
+//! within the batch, and the self-looped symmetric normalisation applied
+//! over those induced degrees:
+//!
+//! ```text
+//! Ã_B = (D_B + I)^{-1/2} (A_B + I) (D_B + I)^{-1/2}
+//! ```
+//!
+//! This is *not* a row slice of the global `Ã` — cross-batch edges are
+//! dropped and the normalisation denominators shrink accordingly, which is
+//! what bounds every dense *training activation* to `|B|` rows (a bound
+//! the full-batch path can never offer). The partitioner keeps clusters
+//! dense, so few edges are lost in expectation (Cluster-GCN's argument).
+
+use super::{Csr, Graph};
+
+/// A node-induced subgraph in batch-local indexing, ready for mini-batch
+/// forward/backward: local row `i` corresponds to global node `nodes[i]`.
+#[derive(Clone, Debug)]
+pub struct InducedSubgraph {
+    /// Sorted global node ids of the batch (defines the local order).
+    pub nodes: Vec<usize>,
+    /// Renormalised adjacency `Ã_B` over the induced edges (|B| × |B|,
+    /// symmetric, unit Perron structure like the global `Ã`).
+    pub a_norm: Csr,
+    /// Number of induced undirected edges (excluding self-loops).
+    pub num_edges: usize,
+}
+
+impl InducedSubgraph {
+    /// Batch size |B| — the row count of every dense activation in a
+    /// mini-batch step.
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Extract the induced subgraph over `nodes` (must be sorted, unique and
+/// in range) and build its renormalised adjacency.
+///
+/// Allocates a fresh O(n) local-index map; callers extracting many
+/// batches from one graph should hold a scratch map and use
+/// [`induced_subgraph_with`] instead, which is O(Σ_{v∈B} deg(v) + |B|)
+/// per call.
+pub fn induced_subgraph(g: &Graph, nodes: &[usize]) -> InducedSubgraph {
+    let mut scratch = vec![u32::MAX; g.n()];
+    induced_subgraph_with(g, nodes, &mut scratch)
+}
+
+/// [`induced_subgraph`] with a caller-owned global→local scratch map:
+/// `scratch.len() == g.n()`, every entry `u32::MAX` on entry, restored to
+/// that state on return — so repeated batch extraction does O(|B|)
+/// map work per call instead of an O(n) allocation.
+///
+/// Rows come out sorted because `nodes` and every global neighbor list
+/// are sorted, so the result feeds [`Csr::from_rows`] directly (same
+/// construction as [`Graph::normalized_adjacency`], which is the `B = V`
+/// special case).
+pub fn induced_subgraph_with(
+    g: &Graph,
+    nodes: &[usize],
+    scratch: &mut [u32],
+) -> InducedSubgraph {
+    let nb = nodes.len();
+    assert_eq!(scratch.len(), g.n(), "scratch map needs one entry per node");
+    debug_assert!(scratch.iter().all(|&x| x == u32::MAX), "dirty scratch map");
+    let local = scratch;
+    for (i, &v) in nodes.iter().enumerate() {
+        assert!(v < g.n(), "batch node {v} out of range n={}", g.n());
+        assert!(
+            i == 0 || nodes[i - 1] < v,
+            "batch nodes must be sorted and unique"
+        );
+        local[v] = i as u32;
+    }
+
+    // Induced degrees (within-batch neighbors only).
+    let deg: Vec<usize> = nodes
+        .iter()
+        .map(|&v| {
+            g.neighbors(v)
+                .iter()
+                .filter(|&&u| local[u as usize] != u32::MAX)
+                .count()
+        })
+        .collect();
+    let inv_sqrt: Vec<f32> = deg.iter().map(|&d| 1.0 / ((d + 1) as f32).sqrt()).collect();
+
+    let mut num_edges = 0usize;
+    let mut rows = Vec::with_capacity(nb);
+    for (i, &v) in nodes.iter().enumerate() {
+        let mut cols = Vec::with_capacity(deg[i] + 1);
+        let mut vals = Vec::with_capacity(deg[i] + 1);
+        let mut placed_diag = false;
+        for &u in g.neighbors(v) {
+            let j = local[u as usize];
+            if j == u32::MAX {
+                continue;
+            }
+            let j_us = j as usize;
+            if j_us > i {
+                num_edges += 1;
+                if !placed_diag {
+                    cols.push(i as u32);
+                    vals.push(inv_sqrt[i] * inv_sqrt[i]);
+                    placed_diag = true;
+                }
+            }
+            cols.push(j);
+            vals.push(inv_sqrt[i] * inv_sqrt[j_us]);
+        }
+        if !placed_diag {
+            cols.push(i as u32);
+            vals.push(inv_sqrt[i] * inv_sqrt[i]);
+        }
+        rows.push((cols, vals));
+    }
+
+    // Restore the scratch invariant (only touched entries — O(|B|)).
+    for &v in nodes {
+        local[v] = u32::MAX;
+    }
+
+    InducedSubgraph {
+        nodes: nodes.to_vec(),
+        a_norm: Csr::from_rows(nb, rows),
+        num_edges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    fn path_graph(n: usize) -> Graph {
+        Graph::from_edges(n, &(0..n - 1).map(|i| (i, i + 1)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn full_node_set_matches_global_normalisation() {
+        let g = path_graph(12);
+        let all: Vec<usize> = (0..12).collect();
+        let sub = induced_subgraph(&g, &all);
+        assert_eq!(sub.num_edges, g.num_edges());
+        let a = g.normalized_adjacency();
+        assert!(sub.a_norm.to_dense().max_abs_diff(&a.to_dense()) < 1e-7);
+    }
+
+    #[test]
+    fn induced_degrees_are_renormalised() {
+        // Path 0-1-2-3; batch {0,1}: node 1 loses its edge to 2, so its
+        // induced degree is 1 (not 2) and Ã_B[1,1] = 1/2, not 1/3.
+        let g = path_graph(4);
+        let sub = induced_subgraph(&g, &[0, 1]);
+        assert_eq!(sub.n(), 2);
+        assert_eq!(sub.num_edges, 1);
+        assert!((sub.a_norm.get(0, 0) - 0.5).abs() < 1e-6);
+        assert!((sub.a_norm.get(1, 1) - 0.5).abs() < 1e-6);
+        assert!((sub.a_norm.get(0, 1) - 0.5).abs() < 1e-6);
+        assert!(sub.a_norm.is_symmetric(1e-7));
+    }
+
+    #[test]
+    fn batch_with_no_internal_edges_is_identity() {
+        // Batch {0, 3} of a path: no induced edges → Ã_B = I.
+        let g = path_graph(4);
+        let sub = induced_subgraph(&g, &[0, 3]);
+        assert_eq!(sub.num_edges, 0);
+        assert!((sub.a_norm.get(0, 0) - 1.0).abs() < 1e-7);
+        assert!((sub.a_norm.get(1, 1) - 1.0).abs() < 1e-7);
+        assert_eq!(sub.a_norm.nnz(), 2);
+    }
+
+    #[test]
+    fn perron_structure_survives_renormalisation() {
+        // v_i = sqrt(d_i + 1) over *induced* degrees is an eigenvector of
+        // Ã_B with eigenvalue 1 — same spectral sanity property the global
+        // normalisation has.
+        let ds = crate::data::fixtures::caveman(10, 4);
+        let nodes: Vec<usize> = (3..17).collect();
+        let sub = induced_subgraph(&ds.graph, &nodes);
+        let deg: Vec<usize> = (0..sub.n())
+            .map(|i| sub.a_norm.row(i).0.len() - 1)
+            .collect();
+        let v = Matrix::from_fn(sub.n(), 1, |r, _| ((deg[r] + 1) as f32).sqrt());
+        let av = sub.a_norm.spmm(&v);
+        assert!(av.max_abs_diff(&v) < 1e-5);
+        assert!(sub.a_norm.is_symmetric(1e-7));
+        for s in sub.a_norm.row_sums() {
+            assert!(s > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted and unique")]
+    fn rejects_unsorted_batch() {
+        let g = path_graph(4);
+        induced_subgraph(&g, &[2, 1]);
+    }
+
+    #[test]
+    fn scratch_variant_matches_and_restores() {
+        // The reusable-scratch path must equal the allocating path and
+        // leave the scratch all-MAX for the next batch.
+        let ds = crate::data::fixtures::caveman(8, 2);
+        let g = &ds.graph;
+        let mut scratch = vec![u32::MAX; g.n()];
+        for nodes in [vec![0, 1, 2, 3], vec![2, 5, 9, 10, 15], (0..g.n()).collect()] {
+            let a = induced_subgraph(g, &nodes);
+            let b = induced_subgraph_with(g, &nodes, &mut scratch);
+            assert_eq!(a.a_norm, b.a_norm);
+            assert_eq!(a.num_edges, b.num_edges);
+            assert!(scratch.iter().all(|&x| x == u32::MAX), "scratch not restored");
+        }
+    }
+}

@@ -12,8 +12,8 @@
 //!   stats, property-testing, the worker pool) — the offline registry has
 //!   no ecosystem crates, so these are built from scratch.
 //! - [`tensor`] — host-side dense f32 matrices.
-//! - [`graph`] — CSR graphs, symmetric GCN normalisation, block extraction
-//!   and the SpMM hot path.
+//! - [`graph`] — CSR graphs, symmetric GCN normalisation, block extraction,
+//!   induced-subgraph renormalisation (mini-batching) and the SpMM hot path.
 //! - [`data`] — synthetic Amazon-like SBM datasets (Table 2 statistics) and
 //!   a binary dataset format.
 //! - [`partition`] — METIS-style multilevel partitioner plus baselines.
@@ -27,7 +27,9 @@
 //!   with virtual-time accounting or as real pool tasks exchanging
 //!   messages over channels (`--exec serial|threads`), plus the
 //!   multi-process TCP transport.
-//! - [`baselines`] — full-batch backprop GCN with GD/Adam/Adagrad/Adadelta.
+//! - [`baselines`] — backprop GCN training: full-batch GD/Adam/Adagrad/
+//!   Adadelta plus the stochastic community mini-batch engine
+//!   ([`baselines::ClusterGcnTrainer`], `train --method cluster-gcn`).
 //! - [`serve`] — the serving half: the `.cgnm` model-snapshot codec, the
 //!   community-sharded [`serve::InferenceSession`] activation cache, the
 //!   micro-batching multi-threaded TCP inference server, and the load

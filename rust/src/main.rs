@@ -26,7 +26,7 @@ const SUBCOMMANDS: &[Subcommand] = &[
     },
     Subcommand {
         name: "train",
-        help: "train with ADMM (serial or parallel) or a baseline; --save snapshots the model",
+        help: "train with ADMM, a full-batch baseline, or cluster-gcn mini-batches; --save snapshots the model",
         run: cgcn::cmd::cmd_train,
     },
     Subcommand {
@@ -68,8 +68,10 @@ fn main() {
     .opt("layers", Some("2"), "GCN layers L")
     .opt("epochs", Some("50"), "training epochs")
     .opt("communities", Some("3"), "number of communities M (1 = serial)")
-    .opt("method", Some("admm"), "train method: admm|gd|adam|adagrad|adadelta")
+    .opt("method", Some("admm"), "train method: admm|gd|adam|adagrad|adadelta|cluster-gcn")
     .opt("partition", Some("metis"), "partitioner: metis|random|bfs")
+    .opt("clusters", Some("32"), "cluster-gcn: fine partition count c (clamped to n)")
+    .opt("batch-clusters", Some("8"), "cluster-gcn: clusters grouped per mini-batch step q")
     .opt("rho", Some("auto"), "ADMM rho (auto = paper default per dataset)")
     .opt("nu", Some("auto"), "ADMM nu (auto = paper default per dataset)")
     .opt("lr", Some("auto"), "baseline learning rate (auto = paper default)")

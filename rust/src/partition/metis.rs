@@ -52,14 +52,20 @@ impl WGraph {
 }
 
 /// Entry point: multilevel k-way partition.
+///
+/// The effective part count is clamped to `g.n()`: asking for more parts
+/// than nodes yields one singleton community per node (so the returned
+/// [`Partition`] has `min(m, n)` parts, none of them empty).
 pub fn partition(g: &Graph, m: usize, rng: &mut Rng) -> Partition {
     if m == 1 {
         return Partition::from_assignment(1, vec![0; g.n()]);
     }
     if m >= g.n() {
-        // Degenerate: one node per community (+ leftovers into part 0).
-        let assignment: Vec<usize> = (0..g.n()).map(|v| v % m).collect();
-        return Partition::from_assignment(m, assignment);
+        // Degenerate: one node per community. `v % m` here would leave
+        // parts n..m empty; clamping the part count keeps the invariant
+        // that every returned community is non-empty.
+        let assignment: Vec<usize> = (0..g.n()).collect();
+        return Partition::from_assignment(g.n(), assignment);
     }
 
     // ---- phase 1: coarsen -------------------------------------------------
@@ -184,6 +190,11 @@ fn greedy_growing(g: &WGraph, m: usize, rng: &mut Rng) -> Vec<usize> {
     let mut assignment = vec![unassigned; n];
     let mut remaining_weight = total;
     let mut remaining_nodes = n;
+    // Monotone cursor over unassigned vertices for disconnected-component
+    // jumps: vertices below it are all assigned, so each jump resumes the
+    // scan where the last one stopped instead of rescanning from 0
+    // (O(n²) on fragmented graphs otherwise).
+    let mut cursor = 0usize;
 
     for part in 0..m {
         if remaining_nodes == 0 {
@@ -205,11 +216,14 @@ fn greedy_growing(g: &WGraph, m: usize, rng: &mut Rng) -> Vec<usize> {
             let u = match queue.pop_front() {
                 Some(u) => u,
                 None => {
-                    // Disconnected: jump to any unassigned vertex.
-                    match assignment.iter().position(|&a| a == unassigned) {
-                        Some(u) => u,
-                        None => break,
+                    // Disconnected: jump to the next unassigned vertex.
+                    while cursor < n && assignment[cursor] != unassigned {
+                        cursor += 1;
                     }
+                    if cursor == n {
+                        break;
+                    }
+                    cursor
                 }
             };
             if assignment[u] != unassigned {
@@ -243,24 +257,74 @@ fn greedy_growing(g: &WGraph, m: usize, rng: &mut Rng) -> Vec<usize> {
     assignment
 }
 
+/// Upper bound on balance passes — a safety net only. Each executed move
+/// strictly decreases Σ w_p², so the loop reaches a fixed point on its
+/// own; in practice two or three passes suffice.
+const BALANCE_PASSES: usize = 64;
+
 /// Move vertices from overweight parts to lighter ones until the balance
 /// cap holds (used right after initial partitioning).
+///
+/// Iterates to a fixed point: a single pass (trying only the lightest
+/// part per vertex, never revisiting) can exit with parts still above the
+/// `(1 + EPS)` cap. A move is taken whenever *any* part both stays under
+/// cap and is strictly lighter than the donor after the move (so Σ w_p²
+/// strictly decreases and the loop terminates). A part never gives up its
+/// last vertex.
 fn balance_fix(g: &WGraph, m: usize, assignment: &mut [usize]) {
     let total = g.total_weight();
     let cap = (((1.0 + EPS) * total as f64) / m as f64).ceil() as u64;
     let mut weights = vec![0u64; m];
+    let mut counts = vec![0u64; m];
     for v in 0..g.n() {
         weights[assignment[v]] += g.vwgt[v];
+        counts[assignment[v]] += 1;
     }
-    for v in 0..g.n() {
-        let p = assignment[v];
-        if weights[p] > cap {
-            let lightest = (0..m).min_by_key(|&q| weights[q]).unwrap();
-            if lightest != p && weights[lightest] + g.vwgt[v] <= cap {
-                weights[p] -= g.vwgt[v];
-                weights[lightest] += g.vwgt[v];
-                assignment[v] = lightest;
+    for _pass in 0..BALANCE_PASSES {
+        let mut moved = false;
+        for v in 0..g.n() {
+            let p = assignment[v];
+            if weights[p] <= cap || counts[p] <= 1 {
+                continue;
             }
+            let w = g.vwgt[v];
+            // Lightest part the vertex fits into that the move improves.
+            let dest = (0..m)
+                .filter(|&q| q != p && weights[q] + w <= cap && weights[q] + w < weights[p])
+                .min_by_key(|&q| weights[q]);
+            if let Some(q) = dest {
+                weights[p] -= w;
+                counts[p] -= 1;
+                weights[q] += w;
+                counts[q] += 1;
+                assignment[v] = q;
+                moved = true;
+            }
+        }
+        if !moved || (0..m).all(|p| weights[p] <= cap) {
+            break;
+        }
+    }
+    // Post-condition (debug builds): every part is under cap, or the loop
+    // is at a genuine fixed point — no vertex of an overweight part fits
+    // into any other part with room left under the cap.
+    #[cfg(debug_assertions)]
+    for p in 0..m {
+        if weights[p] > cap {
+            let movable = (0..g.n()).any(|v| {
+                assignment[v] == p
+                    && counts[p] > 1
+                    && (0..m).any(|q| {
+                        q != p
+                            && weights[q] + g.vwgt[v] <= cap
+                            && weights[q] + g.vwgt[v] < weights[p]
+                    })
+            });
+            debug_assert!(
+                !movable,
+                "balance_fix exited over cap with a legal move still available (part {p}: {} > {cap})",
+                weights[p]
+            );
         }
     }
 }
@@ -405,6 +469,80 @@ mod tests {
             t
         };
         assert_eq!(fine_total, coarse_total + contracted);
+    }
+
+    #[test]
+    fn degenerate_m_clamps_to_n_with_no_empty_parts() {
+        // Regression for the `v % m` path: m > n used to leave parts
+        // n..m empty (zero-node communities downstream).
+        let ds = fixtures::caveman(5, 1);
+        let n = ds.n();
+        for m in [n, n + 1, 2 * n, 10 * n] {
+            let mut rng = Rng::new(4);
+            let p = partition(&ds.graph, m, &mut rng);
+            assert_eq!(p.m(), n, "m={m} should clamp to n={n}");
+            assert!(p.members.iter().all(|mem| mem.len() == 1));
+            p.validate(n);
+        }
+    }
+
+    #[test]
+    fn balance_fix_reaches_cap_fixed_point() {
+        // Start from a maximally unbalanced assignment (everything in part
+        // 0). The old single-pass version could exit with parts over cap;
+        // the fixed-point version must balance any uniformly-weighted
+        // graph to the cap exactly.
+        for (n, m) in [(40usize, 4usize), (33, 5), (64, 3), (7, 7)] {
+            let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+            let g = crate::graph::Graph::from_edges(n, &edges);
+            let wg = WGraph::from_graph(&g);
+            let mut assignment = vec![0usize; n];
+            balance_fix(&wg, m, &mut assignment);
+            let cap = (((1.0 + EPS) * n as f64) / m as f64).ceil() as u64;
+            let mut weights = vec![0u64; m];
+            for v in 0..n {
+                weights[assignment[v]] += wg.vwgt[v];
+            }
+            for (p, &w) in weights.iter().enumerate() {
+                assert!(
+                    w <= cap,
+                    "n={n} m={m}: part {p} weight {w} > cap {cap} ({weights:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balance_fix_respects_heavy_vertices() {
+        // A coarse vertex heavier than the cap cannot be balanced away;
+        // the fixed point must still hold for all other parts and never
+        // lose vertices.
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let mut wg = WGraph::from_graph(&g);
+        wg.vwgt = vec![100, 1, 1, 1]; // total 103, m=2 → cap 57
+        let mut assignment = vec![0usize, 0, 0, 0];
+        balance_fix(&wg, 2, &mut assignment);
+        assert_eq!(assignment.len(), 4);
+        assert_eq!(assignment[0], 0, "heavy vertex should stay put");
+        // The three light vertices all fit under the cap in part 1.
+        assert!(assignment[1..].iter().all(|&p| p == 1));
+    }
+
+    #[test]
+    fn greedy_growing_handles_fragmented_graphs() {
+        // Edgeless graph: every vertex is its own component, so growth
+        // jumps through the disconnected path for nearly every vertex.
+        let g = crate::graph::Graph::from_edges(200, &[]);
+        let wg = WGraph::from_graph(&g);
+        let mut rng = Rng::new(12);
+        let a = greedy_growing(&wg, 4, &mut rng);
+        assert_eq!(a.len(), 200);
+        assert!(a.iter().all(|&p| p < 4));
+        let mut counts = vec![0usize; 4];
+        for &p in &a {
+            counts[p] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
     }
 
     #[test]

@@ -192,6 +192,37 @@ mod tests {
     }
 
     #[test]
+    fn metis_property_no_empty_community_for_any_m() {
+        // Regression for the `v % m` degenerate path: for every m —
+        // including m == n and m > n — the returned partition must have
+        // no empty community (empty communities become zero-node
+        // Workspace blocks downstream). The part count clamps to n.
+        proplite::check("metis-no-empty", 20, 0xD06, |g| {
+            let n = g.usize_in(4, 60).max(4);
+            let edges = g.edges(n, 0.12);
+            let graph = crate::graph::Graph::from_edges(n, &edges);
+            for m in [1, (n / 2).max(1), n, 2 * n] {
+                let mut rng = crate::util::rng::Rng::new(g.rng.next_u64());
+                let p = metis::partition(&graph, m, &mut rng);
+                prop_assert!(
+                    p.m() == m.min(n),
+                    "m={m}: got {} parts, want {}",
+                    p.m(),
+                    m.min(n)
+                );
+                prop_assert!(
+                    p.members.iter().all(|mem| !mem.is_empty()),
+                    "m={m}: empty community (n={n}, sizes={:?})",
+                    p.sizes()
+                );
+                let total: usize = p.sizes().iter().sum();
+                prop_assert!(total == n, "m={m}: cover {total} != {n}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn m_equals_one_is_trivial() {
         let ds = fixtures::fig1();
         let p = partition(&ds.graph, 1, Method::Metis, 0);

@@ -26,8 +26,11 @@ use anyhow::Result;
 use std::sync::Arc;
 
 /// Dense-kernel execution interface shared by the ADMM trainer, the
-/// backprop baselines, evaluation, the TCP transport workers and the
-/// benches.
+/// backprop baselines, the Cluster-GCN mini-batch engine, evaluation,
+/// the TCP transport workers and the benches. Kernels are shape-agnostic:
+/// the mini-batch path drives the same `spmm`/`fwd_relu`/`bp_*` calls
+/// with batch-sized operands (|B| rows instead of the padded global row
+/// count), which is what makes its memory bound real rather than modeled.
 pub trait ComputeBackend: Send + Sync {
     /// Short human-readable backend name for logs.
     fn name(&self) -> &'static str;

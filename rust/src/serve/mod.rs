@@ -1,7 +1,8 @@
 //! The serving half of the system: train → **snapshot** → **serve**.
 //!
 //! The trainers ([`crate::coordinator::AdmmTrainer`],
-//! [`crate::baselines::BaselineTrainer`]) produce weights; everything
+//! [`crate::baselines::BaselineTrainer`],
+//! [`crate::baselines::ClusterGcnTrainer`]) produce weights; everything
 //! after that lives here:
 //!
 //! - [`snapshot`] — the versioned `.cgnm` model-snapshot codec

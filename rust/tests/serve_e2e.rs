@@ -5,7 +5,7 @@
 //! serving subsystem — batching and threading must be pure scheduling,
 //! never numerics).
 
-use cgcn::baselines::{BaselineTrainer, Optimizer};
+use cgcn::baselines::{BaselineTrainer, ClusterGcnOptions, ClusterGcnTrainer, Optimizer};
 use cgcn::config::HyperParams;
 use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
 use cgcn::partition::Method;
@@ -152,6 +152,57 @@ fn baseline_snapshot_serves_too() {
     let full = session.full_logits().unwrap();
     let mut cold = InferenceSession::from_snapshot(&snap, Arc::new(NativeBackend::new())).unwrap();
     let ids: Vec<usize> = (0..cold.n()).step_by(3).collect();
+    let got = cold.logits_for(&ids).unwrap();
+    for (qi, &id) in ids.iter().enumerate() {
+        assert_eq!(got.row(qi), full.row(id));
+    }
+}
+
+#[test]
+fn cluster_gcn_snapshot_serves_too() {
+    // A mini-batch-trained model must produce a snapshot the serving
+    // stack accepts exactly like a full-batch one: same codec, same
+    // workspace rebuild, identical evaluation through the session.
+    let ds = Arc::new(cgcn::cmd::load_dataset("caveman", 1.0, SEED).unwrap());
+    let ws = caveman_workspace(3);
+    let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+    let opt = Optimizer::parse("adam", None).unwrap();
+    let mut trainer = ClusterGcnTrainer::new(
+        ds,
+        ws.clone(),
+        backend.clone(),
+        opt,
+        ClusterGcnOptions {
+            clusters: 8,
+            batch_clusters: 2,
+            method: Method::Metis,
+        },
+    )
+    .unwrap();
+    trainer.train(3).unwrap();
+    assert!(trainer.peak_batch_nodes() > 0);
+    assert!(
+        trainer.peak_batch_nodes() < ws.n,
+        "mini-batch peak {} should be below the full graph {}",
+        trainer.peak_batch_nodes(),
+        ws.n
+    );
+
+    let path = temp_path("cluster_gcn.cgnm");
+    trainer.save_model(&path, meta("cluster-gcn", &ws)).unwrap();
+    let snap = load_model(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for (a, b) in snap.w.iter().zip(trainer.weights()) {
+        assert_eq!(a.data(), b.data(), "weights drifted through the codec");
+    }
+
+    let mut session = InferenceSession::from_snapshot(&snap, backend).unwrap();
+    assert_eq!(session.evaluate().unwrap(), trainer.evaluate().unwrap());
+
+    // Subset queries (cold cache) match the full pass bitwise.
+    let full = session.full_logits().unwrap();
+    let mut cold = InferenceSession::from_snapshot(&snap, Arc::new(NativeBackend::new())).unwrap();
+    let ids: Vec<usize> = (0..cold.n()).step_by(5).collect();
     let got = cold.logits_for(&ids).unwrap();
     for (qi, &id) in ids.iter().enumerate() {
         assert_eq!(got.row(qi), full.row(id));
