@@ -77,6 +77,50 @@ serve_start "$MB_MODEL" "$SMOKE_DIR/mb_addr"
 target/release/cgcn query --addr "$ADDR" --model "$MB_MODEL" --verify
 serve_stop
 
+echo "==> fault-tolerance smoke (kill -9 a tcp worker mid-run; leader recovers)"
+FT_DIR="$SMOKE_DIR/ft_ckpt"
+FT_LOG="$SMOKE_DIR/ft_leader.log"
+target/release/cgcn train --dataset synth-computers --scale 0.1 --hidden 64 \
+    --communities 3 --epochs 30 --transport tcp \
+    --checkpoint-every 5 --checkpoint-dir "$FT_DIR" \
+    > "$SMOKE_DIR/ft_run.json" 2> "$FT_LOG" &
+LEADER_PID=$!
+# Gate the kill on observed progress, not a fixed sleep: once the leader
+# has logged a completed epoch, all workers are connected and ~28 epochs
+# remain, so the kill is guaranteed to land mid-run.
+for _ in $(seq 1 1200); do
+    grep -q "epoch 1:" "$FT_LOG" 2>/dev/null && break
+    sleep 0.05
+done
+grep -q "epoch 1:" "$FT_LOG" || { echo "tcp run never reached epoch 1"; cat "$FT_LOG"; exit 1; }
+WPID="$(pgrep -f 'cgcn worker --listen' | head -1 || true)"
+[[ -n "$WPID" ]] || { echo "no tcp worker process found"; exit 1; }
+kill -9 "$WPID"
+# The leader must detect the dead agent, reassign its communities and
+# finish the full run with exit 0.
+wait "$LEADER_PID"
+grep -q "reassigning its communities" "$FT_LOG" \
+    || { echo "leader never logged a recovery"; cat "$FT_LOG"; exit 1; }
+grep -q '"final_test_acc"' "$SMOKE_DIR/ft_run.json"
+
+echo "==> fault-tolerance smoke (leader crash after checkpoint; --resume completes)"
+FT2_DIR="$SMOKE_DIR/ft2_ckpt"
+set +e
+CGCN_TEST_LEADER_CRASH_AT=4 target/release/cgcn train --dataset caveman \
+    --communities 3 --epochs 8 --transport tcp \
+    --checkpoint-every 2 --checkpoint-dir "$FT2_DIR" >/dev/null 2>&1
+CRASH_RC=$?
+set -e
+[[ "$CRASH_RC" -ne 0 ]] || { echo "leader was expected to crash"; exit 1; }
+LAST_CKPT="$FT2_DIR/$(ls "$FT2_DIR" | sort | tail -1)"
+target/release/cgcn train --resume "$LAST_CKPT" --epochs 8 --transport tcp \
+    --save "$SMOKE_DIR/resumed.cgnm" >/dev/null
+# Resume determinism: the recovered pipeline's snapshot is byte-identical
+# to an uninterrupted run's.
+target/release/cgcn train --dataset caveman --communities 3 --epochs 8 \
+    --transport tcp --save "$SMOKE_DIR/uninterrupted.cgnm" >/dev/null
+cmp "$SMOKE_DIR/resumed.cgnm" "$SMOKE_DIR/uninterrupted.cgnm"
+
 echo "==> quickstart example (release)"
 cargo run --release --example quickstart >/dev/null
 

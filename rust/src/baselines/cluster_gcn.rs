@@ -33,6 +33,7 @@
 //! identical cluster groupings and bitwise-identical training.
 
 use super::{OptState, Optimizer};
+use crate::coordinator::checkpoint::{CheckpointSink, CkptState};
 use crate::coordinator::clock::timed;
 use crate::coordinator::{evaluate_forward, Workspace};
 use crate::data::Dataset;
@@ -280,12 +281,26 @@ impl ClusterGcnTrainer {
     }
 
     pub fn train(&mut self, epochs: usize) -> Result<RunReport> {
+        self.train_range(0, epochs, None)
+    }
+
+    /// Run epochs `start..epochs` (resume support), optionally writing a
+    /// `.cgck` checkpoint at the sink interval. Checkpoints capture the
+    /// batch-shuffle RNG *after* each epoch's draws, so a resumed run
+    /// continues the exact shuffle stream — same groupings, bitwise-same
+    /// weights as an uninterrupted run.
+    pub fn train_range(
+        &mut self,
+        start: usize,
+        epochs: usize,
+        sink: Option<&CheckpointSink>,
+    ) -> Result<RunReport> {
         let mut report = RunReport::new(
             "cluster-gcn",
             &format!("n{}", self.ws.n),
             self.num_clusters(),
         );
-        for e in 0..epochs {
+        for e in start..epochs {
             let wall0 = Instant::now();
             let (loss, secs) = timed(|| self.train_epoch());
             let loss = loss?;
@@ -307,12 +322,62 @@ impl ClusterGcnTrainer {
                 t_wall: wall,
                 bytes: 0,
             });
+            if let Some(sink) = sink {
+                sink.maybe_write(e + 1, || self.checkpoint_state())?;
+            }
         }
         Ok(report)
     }
 
     pub fn weights(&self) -> &[Matrix] {
         &self.w
+    }
+
+    /// Capture the resumable state.
+    fn checkpoint_state(&self) -> CkptState {
+        CkptState::ClusterGcn {
+            opt: self.opt.name().to_string(),
+            lr: self.opt.lr(),
+            clusters: self.num_clusters() as u32,
+            batch_clusters: self.batch_clusters as u32,
+            rng: self.rng.state(),
+            peak: self.peak_batch_nodes as u64,
+            w: self.w.clone(),
+            m: self.opt_state.iter().map(|s| s.m.clone()).collect(),
+            v: self.opt_state.iter().map(|s| s.v.clone()).collect(),
+            t: self.opt_state.iter().map(|s| s.t).collect(),
+        }
+    }
+
+    /// Restore weights, optimizer slots, shuffle RNG and the measured
+    /// batch peak from a checkpoint (shape-checked).
+    pub fn restore_state(
+        &mut self,
+        w: Vec<Matrix>,
+        st: Vec<OptState>,
+        rng: [u64; 4],
+        peak: usize,
+    ) -> Result<()> {
+        ensure!(
+            w.len() == self.w.len() && st.len() == self.w.len(),
+            "checkpoint has {} weight layers, trainer expects {}",
+            w.len(),
+            self.w.len()
+        );
+        for (li, (wl, cur)) in w.iter().zip(&self.w).enumerate() {
+            ensure!(
+                wl.shape() == cur.shape()
+                    && st[li].m.shape() == cur.shape()
+                    && st[li].v.shape() == cur.shape(),
+                "checkpoint state for W_{} has wrong shape",
+                li + 1
+            );
+        }
+        self.w = w;
+        self.opt_state = st;
+        self.rng = Rng::from_state(rng);
+        self.peak_batch_nodes = peak;
+        Ok(())
     }
 
     /// Snapshot the current weights to a `.cgnm` file (`train --save`);

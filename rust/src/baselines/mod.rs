@@ -14,6 +14,7 @@ mod optim;
 pub use cluster_gcn::{ClusterGcnOptions, ClusterGcnTrainer};
 pub use optim::{OptState, Optimizer};
 
+use crate::coordinator::checkpoint::{CheckpointSink, CkptState};
 use crate::coordinator::clock::timed;
 use crate::coordinator::{evaluate_forward, Workspace};
 use crate::metrics::{EpochRecord, RunReport};
@@ -89,9 +90,22 @@ impl BaselineTrainer {
     }
 
     pub fn train(&mut self, epochs: usize) -> Result<RunReport> {
+        self.train_range(0, epochs, None)
+    }
+
+    /// Run epochs `start..epochs` (resume support), optionally writing a
+    /// `.cgck` checkpoint at the sink interval. The optimizer slots and
+    /// step counters persist with the weights, so a resumed run repeats
+    /// the uninterrupted float sequence exactly.
+    pub fn train_range(
+        &mut self,
+        start: usize,
+        epochs: usize,
+        sink: Option<&CheckpointSink>,
+    ) -> Result<RunReport> {
         let label = self.opt.name();
         let mut report = RunReport::new(label, &format!("n{}", self.ws.n), 1);
-        for e in 0..epochs {
+        for e in start..epochs {
             let wall0 = Instant::now();
             let (loss, secs) = timed(|| self.step());
             let loss = loss?;
@@ -110,12 +124,55 @@ impl BaselineTrainer {
                 t_wall: wall,
                 bytes: 0,
             });
+            if let Some(sink) = sink {
+                sink.maybe_write(e + 1, || self.checkpoint_state())?;
+            }
         }
         Ok(report)
     }
 
     pub fn weights(&self) -> &[Matrix] {
         &self.w
+    }
+
+    /// Capture the resumable state (weights + optimizer slots).
+    fn checkpoint_state(&self) -> CkptState {
+        CkptState::Baseline {
+            opt: self.opt.name().to_string(),
+            lr: self.opt.lr(),
+            w: self.w.clone(),
+            m: self.opt_state.iter().map(|s| s.m.clone()).collect(),
+            v: self.opt_state.iter().map(|s| s.v.clone()).collect(),
+            t: self.opt_state.iter().map(|s| s.t).collect(),
+        }
+    }
+
+    /// Restore weights + optimizer slots from a checkpoint; shape-checked
+    /// so a stale checkpoint errs instead of corrupting training.
+    pub fn restore_state(&mut self, w: Vec<Matrix>, st: Vec<OptState>) -> Result<()> {
+        ensure!(
+            w.len() == self.w.len() && st.len() == self.w.len(),
+            "checkpoint has {} weight layers, trainer expects {}",
+            w.len(),
+            self.w.len()
+        );
+        for (li, (wl, cur)) in w.iter().zip(&self.w).enumerate() {
+            ensure!(
+                wl.shape() == cur.shape(),
+                "checkpoint W_{} shape {:?} != {:?}",
+                li + 1,
+                wl.shape(),
+                cur.shape()
+            );
+            ensure!(
+                st[li].m.shape() == cur.shape() && st[li].v.shape() == cur.shape(),
+                "checkpoint optimizer slots for W_{} have wrong shape",
+                li + 1
+            );
+        }
+        self.w = w;
+        self.opt_state = st;
+        Ok(())
     }
 
     /// Snapshot the current weights to a `.cgnm` file (`train --save`);

@@ -83,6 +83,27 @@ impl Optimizer {
         }
     }
 
+    /// The configured learning rate (persisted in training checkpoints so
+    /// a resumed run reconstructs the exact optimizer).
+    pub fn lr(&self) -> f32 {
+        match *self {
+            Optimizer::Gd { lr }
+            | Optimizer::Adam { lr, .. }
+            | Optimizer::Adagrad { lr, .. }
+            | Optimizer::Adadelta { lr, .. } => lr,
+        }
+    }
+
+    /// Override the learning rate (checkpoint restore).
+    pub fn set_lr(&mut self, new_lr: f32) {
+        match self {
+            Optimizer::Gd { lr }
+            | Optimizer::Adam { lr, .. }
+            | Optimizer::Adagrad { lr, .. }
+            | Optimizer::Adadelta { lr, .. } => *lr = new_lr,
+        }
+    }
+
     /// In-place parameter update.
     pub fn apply(&self, w: &mut Matrix, grad: &Matrix, st: &mut OptState) {
         assert_eq!(w.shape(), grad.shape());
@@ -212,6 +233,20 @@ mod tests {
             3000,
             5e-2,
         );
+    }
+
+    #[test]
+    fn lr_roundtrips_through_accessors() {
+        for name in ["gd", "adam", "adagrad", "adadelta"] {
+            let mut opt = Optimizer::parse(name, None).unwrap();
+            opt.set_lr(0.0625);
+            assert_eq!(opt.lr(), 0.0625, "{name}");
+            // Reconstructing from (name, lr) — the checkpoint restore
+            // path — yields the identical optimizer.
+            let mut back = Optimizer::parse(name, None).unwrap();
+            back.set_lr(opt.lr());
+            assert_eq!(back, opt, "{name}");
+        }
     }
 
     #[test]

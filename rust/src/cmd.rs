@@ -90,6 +90,9 @@ pub fn cmd_artifacts(_args: &Args) -> i32 {
 /// rows. `--method` selects full-batch ADMM/backprop or the stochastic
 /// community mini-batch engine (`cluster-gcn`, with `--clusters` /
 /// `--batch-clusters` controlling batch construction).
+/// `--checkpoint-every N --checkpoint-dir D` writes resumable `.cgck`
+/// training checkpoints; `--resume <path.cgck>` continues an interrupted
+/// run with bitwise-identical results to an uninterrupted one.
 pub fn cmd_train(args: &Args) -> i32 {
     match crate::coordinator::run_from_args(args) {
         Ok(()) => 0,
@@ -100,7 +103,10 @@ pub fn cmd_train(args: &Args) -> i32 {
     }
 }
 
-/// `cgcn worker` — community worker process (TCP transport).
+/// `cgcn worker` — community worker process (TCP transport). Hosts one
+/// community initially and adopts more when the elastic leader reassigns
+/// a crashed peer's communities; heartbeats `Ping` frames so the leader
+/// can tell "busy computing" from "dead".
 pub fn cmd_worker(args: &Args) -> i32 {
     match crate::coordinator::transport::worker_main(args) {
         Ok(()) => 0,

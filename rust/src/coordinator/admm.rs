@@ -80,7 +80,11 @@ impl ExecMode {
     }
 }
 
-/// Mutable ADMM state.
+/// Mutable ADMM state. `Clone` is the crash-recovery primitive: the
+/// elastic coordinator snapshots the state at every epoch barrier and
+/// restores it before retrying an epoch after a host loss, and the
+/// `.cgck` checkpoint persists exactly these fields.
+#[derive(Clone)]
 pub struct AdmmState {
     /// Weights W_1..W_L (index l-1).
     pub w: Vec<Matrix>,
@@ -910,8 +914,23 @@ impl AdmmTrainer {
 
     /// Run a full training: `epochs` ADMM iterations with per-epoch eval.
     pub fn train(&mut self, epochs: usize, label: &str) -> Result<RunReport> {
+        self.train_range(0, epochs, label, None)
+    }
+
+    /// Run epochs `start..epochs`, optionally writing a `.cgck` training
+    /// checkpoint at the sink's interval. Each epoch is a pure function of
+    /// the state at its epoch barrier, so a run interrupted after any
+    /// checkpoint and resumed from it reproduces the uninterrupted run's
+    /// weights bit for bit (see `rust/tests/fault_tolerance.rs`).
+    pub fn train_range(
+        &mut self,
+        start: usize,
+        epochs: usize,
+        label: &str,
+        sink: Option<&super::checkpoint::CheckpointSink>,
+    ) -> Result<RunReport> {
         let mut report = RunReport::new(label, &dataset_label(&self.ws), self.ws.m);
-        for e in 0..epochs {
+        for e in start..epochs {
             let wall0 = Instant::now();
             let clock = self.epoch()?;
             let wall = wall0.elapsed().as_secs_f64();
@@ -932,6 +951,9 @@ impl AdmmTrainer {
                 t_wall: wall,
                 bytes: clock.bytes,
             });
+            if let Some(sink) = sink {
+                sink.maybe_write(e + 1, || super::checkpoint::CkptState::from_admm(&self.state))?;
+            }
         }
         Ok(report)
     }

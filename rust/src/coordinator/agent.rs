@@ -71,6 +71,14 @@ pub struct CommunityAgent {
 }
 
 impl CommunityAgent {
+    /// Rebuild an agent from shipped state — exactly the fields the
+    /// elastic coordinator transfers when a community is adopted by a new
+    /// host after its previous host crashed (and what the `.cgck`
+    /// checkpoint persists per community).
+    pub fn from_state(mi: usize, z: Vec<Matrix>, u: Matrix, theta: Vec<f32>) -> CommunityAgent {
+        CommunityAgent { mi, z, u, theta }
+    }
+
     /// Phase A — first-order products: for every layer l, project the own
     /// Z through W_{l+1} and split through the adjacency blocks into the
     /// diagonal part `p_own[l] = Ã_mm v` and one outgoing message

@@ -1,0 +1,682 @@
+//! `.cgck` — the on-disk training-checkpoint codec (crash recovery).
+//!
+//! A checkpoint is everything needed to *continue training* after a crash
+//! with bitwise-identical results to an uninterrupted run — strictly more
+//! than the `.cgnm` model snapshot, which only rebuilds inference:
+//!
+//! - ADMM: weights `W`, the per-layer `τ` steps, every community's
+//!   `Z`/`U`/`θ` state. One ADMM epoch is a pure function of this state
+//!   and the (deterministically rebuilt) workspace, so resuming from the
+//!   epoch barrier replays the exact float sequence.
+//! - Full-batch baselines: weights plus the optimizer moment slots
+//!   (`m`/`v`/`t` — Adam bias correction depends on `t`, so it persists).
+//! - Cluster-GCN: baseline state plus the batch-shuffle RNG stream
+//!   (xoshiro256** state words) and the measured peak batch size.
+//!
+//! Layout (all little-endian via [`crate::util::wire`], in the style of
+//! `.cgnp`/`.cgnm`):
+//!
+//! ```text
+//! magic "CGCK" | version u32
+//! method str | rho f32 | nu f32 | SnapshotMeta (shared .cgnm field block)
+//! epoch u64                      (completed epochs == resume point)
+//! state tag u8:
+//!   1 ADMM:       L | L×W | L×tau | M | M×( L×Z, U, (L-1)×theta )
+//!   2 BASELINE:   opt str | lr | L | L×( W, m, v, t u64 )
+//!   3 CLUSTER-GCN: opt str | lr | clusters | batch-clusters |
+//!                 rng 4×u64 | peak u64 | L | L×( W, m, v, t u64 )
+//! ```
+//!
+//! Corruption (bad magic, version skew, truncation at any byte, trailing
+//! garbage, bogus state tags) is an error, never a panic — `--resume`
+//! refuses cleanly. Writes are atomic (temp file + rename) so a crash
+//! *during* checkpointing never leaves a half-written `.cgck` behind.
+
+use super::admm::{AdmmState, AdmmTrainer};
+use super::transport::{dec_matrix, enc_matrix};
+use crate::serve::SnapshotMeta;
+use crate::tensor::Matrix;
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"CGCK";
+const VERSION: u32 = 1;
+const TAG_ADMM: u8 = 1;
+const TAG_BASELINE: u8 = 2;
+const TAG_CLUSTER_GCN: u8 = 3;
+
+/// Run identity persisted with every checkpoint: the `.cgnm`-style
+/// metadata that rebuilds the workspace, the training method, and the
+/// resolved ADMM penalties (ρ/ν feed the epoch math directly, so CLI
+/// defaults must not be re-derived at resume time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptMeta {
+    pub snap: SnapshotMeta,
+    /// Training method (`admm`, `gd`, `adam`, ..., `cluster-gcn`).
+    pub method: String,
+    pub rho: f32,
+    pub nu: f32,
+}
+
+/// The resumable mutable state of one trainer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CkptState {
+    Admm {
+        /// Weights W_1..W_L.
+        w: Vec<Matrix>,
+        /// τ_l per layer.
+        tau: Vec<f32>,
+        /// z[l-1][m] = Z_{l,m}.
+        z: Vec<Vec<Matrix>>,
+        /// Dual U_m per community.
+        u: Vec<Matrix>,
+        /// theta[l-1][m] per (hidden layer, community).
+        theta: Vec<Vec<f32>>,
+    },
+    Baseline {
+        opt: String,
+        lr: f32,
+        w: Vec<Matrix>,
+        /// First-moment slots per layer.
+        m: Vec<Matrix>,
+        /// Second-moment slots per layer.
+        v: Vec<Matrix>,
+        /// Step counters per layer.
+        t: Vec<u64>,
+    },
+    ClusterGcn {
+        opt: String,
+        lr: f32,
+        clusters: u32,
+        batch_clusters: u32,
+        /// Batch-shuffle RNG state (continues the exact stream).
+        rng: [u64; 4],
+        /// Measured peak batch node count so far.
+        peak: u64,
+        w: Vec<Matrix>,
+        m: Vec<Matrix>,
+        v: Vec<Matrix>,
+        t: Vec<u64>,
+    },
+}
+
+impl CkptState {
+    /// Capture the ADMM trainer's full mutable state.
+    pub fn from_admm(st: &AdmmState) -> CkptState {
+        CkptState::Admm {
+            w: st.w.clone(),
+            tau: st.tau.clone(),
+            z: st.z.clone(),
+            u: st.u.clone(),
+            theta: st.theta.clone(),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            CkptState::Admm { .. } => "admm",
+            CkptState::Baseline { .. } => "baseline",
+            CkptState::ClusterGcn { .. } => "cluster-gcn",
+        }
+    }
+}
+
+/// A saved training checkpoint: run identity + completed-epoch counter +
+/// the trainer state at that epoch barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCheckpoint {
+    pub meta: CkptMeta,
+    /// Completed epochs — the epoch index training resumes at.
+    pub epoch: u64,
+    pub state: CkptState,
+}
+
+fn enc_opt_layers(e: &mut Enc, w: &[Matrix], m: &[Matrix], v: &[Matrix], t: &[u64]) {
+    e.u32(w.len() as u32);
+    for li in 0..w.len() {
+        enc_matrix(e, &w[li]);
+        enc_matrix(e, &m[li]);
+        enc_matrix(e, &v[li]);
+        e.u64(t[li]);
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn dec_opt_layers(d: &mut Dec) -> Result<(Vec<Matrix>, Vec<Matrix>, Vec<Matrix>, Vec<u64>)> {
+    let l = d.u32()? as usize;
+    ensure!(l >= 1, "checkpoint has zero layers");
+    let (mut w, mut m, mut v, mut t) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for li in 0..l {
+        let wl = dec_matrix(d).with_context(|| format!("W_{}", li + 1))?;
+        let ml = dec_matrix(d).with_context(|| format!("m_{}", li + 1))?;
+        let vl = dec_matrix(d).with_context(|| format!("v_{}", li + 1))?;
+        ensure!(
+            ml.shape() == wl.shape() && vl.shape() == wl.shape(),
+            "optimizer slot shapes disagree with W_{}",
+            li + 1
+        );
+        w.push(wl);
+        m.push(ml);
+        v.push(vl);
+        t.push(d.u64()?);
+    }
+    Ok((w, m, v, t))
+}
+
+impl TrainCheckpoint {
+    /// Serialise to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(4096);
+        e.u8(MAGIC[0]).u8(MAGIC[1]).u8(MAGIC[2]).u8(MAGIC[3]);
+        e.u32(VERSION);
+        e.str(&self.meta.method);
+        e.f32(self.meta.rho).f32(self.meta.nu);
+        self.meta.snap.encode(&mut e);
+        e.u64(self.epoch);
+        match &self.state {
+            CkptState::Admm { w, tau, z, u, theta } => {
+                e.u8(TAG_ADMM);
+                e.u32(w.len() as u32);
+                for wl in w {
+                    enc_matrix(&mut e, wl);
+                }
+                for &tl in tau {
+                    e.f32(tl);
+                }
+                let m = u.len();
+                e.u32(m as u32);
+                for mi in 0..m {
+                    for zl in z {
+                        enc_matrix(&mut e, &zl[mi]);
+                    }
+                    enc_matrix(&mut e, &u[mi]);
+                    e.u32(theta.len() as u32);
+                    for th in theta {
+                        e.f32(th[mi]);
+                    }
+                }
+            }
+            CkptState::Baseline { opt, lr, w, m, v, t } => {
+                e.u8(TAG_BASELINE);
+                e.str(opt);
+                e.f32(*lr);
+                enc_opt_layers(&mut e, w, m, v, t);
+            }
+            CkptState::ClusterGcn {
+                opt,
+                lr,
+                clusters,
+                batch_clusters,
+                rng,
+                peak,
+                w,
+                m,
+                v,
+                t,
+            } => {
+                e.u8(TAG_CLUSTER_GCN);
+                e.str(opt);
+                e.f32(*lr);
+                e.u32(*clusters).u32(*batch_clusters);
+                for &s in rng {
+                    e.u64(s);
+                }
+                e.u64(*peak);
+                enc_opt_layers(&mut e, w, m, v, t);
+            }
+        }
+        e.into_bytes()
+    }
+
+    /// Parse from bytes. Any corruption is an error, never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainCheckpoint> {
+        let mut d = Dec::new(bytes);
+        let magic = [d.u8()?, d.u8()?, d.u8()?, d.u8()?];
+        if &magic != MAGIC {
+            bail!("not a .cgck training checkpoint (bad magic)");
+        }
+        let version = d.u32()?;
+        if version != VERSION {
+            bail!("unsupported .cgck version {version} (this build reads {VERSION})");
+        }
+        let method = d.str()?;
+        let rho = d.f32()?;
+        let nu = d.f32()?;
+        let snap = SnapshotMeta::decode(&mut d)?;
+        let epoch = d.u64()?;
+        let state = match d.u8()? {
+            TAG_ADMM => {
+                let l = d.u32()? as usize;
+                ensure!(l >= 1, "admm checkpoint has zero layers");
+                let mut w = Vec::with_capacity(l);
+                for li in 0..l {
+                    w.push(dec_matrix(&mut d).with_context(|| format!("W_{}", li + 1))?);
+                }
+                let mut tau = Vec::with_capacity(l);
+                for _ in 0..l {
+                    tau.push(d.f32()?);
+                }
+                let m = d.u32()? as usize;
+                ensure!(m >= 1, "admm checkpoint has zero communities");
+                let mut z: Vec<Vec<Matrix>> = (0..l).map(|_| Vec::with_capacity(m)).collect();
+                let mut u = Vec::with_capacity(m);
+                let mut theta: Vec<Vec<f32>> = (0..l - 1).map(|_| Vec::with_capacity(m)).collect();
+                for mi in 0..m {
+                    for zl in z.iter_mut() {
+                        zl.push(dec_matrix(&mut d).with_context(|| format!("Z community {mi}"))?);
+                    }
+                    u.push(dec_matrix(&mut d).with_context(|| format!("U community {mi}"))?);
+                    let nt = d.u32()? as usize;
+                    ensure!(nt == l - 1, "theta count {nt} != layers-1 ({})", l - 1);
+                    for th in theta.iter_mut() {
+                        th.push(d.f32()?);
+                    }
+                }
+                CkptState::Admm { w, tau, z, u, theta }
+            }
+            TAG_BASELINE => {
+                let opt = d.str()?;
+                let lr = d.f32()?;
+                let (w, m, v, t) = dec_opt_layers(&mut d)?;
+                CkptState::Baseline { opt, lr, w, m, v, t }
+            }
+            TAG_CLUSTER_GCN => {
+                let opt = d.str()?;
+                let lr = d.f32()?;
+                let clusters = d.u32()?;
+                let batch_clusters = d.u32()?;
+                ensure!(
+                    clusters >= 1 && batch_clusters >= 1,
+                    "cluster-gcn checkpoint with zero clusters"
+                );
+                let rng = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
+                let peak = d.u64()?;
+                let (w, m, v, t) = dec_opt_layers(&mut d)?;
+                CkptState::ClusterGcn {
+                    opt,
+                    lr,
+                    clusters,
+                    batch_clusters,
+                    rng,
+                    peak,
+                    w,
+                    m,
+                    v,
+                    t,
+                }
+            }
+            other => bail!("unknown .cgck state tag {other}"),
+        };
+        if !d.done() {
+            bail!("trailing bytes in .cgck checkpoint");
+        }
+        Ok(TrainCheckpoint {
+            meta: CkptMeta {
+                snap,
+                method,
+                rho,
+                nu,
+            },
+            epoch,
+            state,
+        })
+    }
+
+    /// Save atomically: write `<path>.tmp`, then rename over `path` — a
+    /// crash mid-write can never leave a truncated checkpoint that a
+    /// later `--resume` would trip over.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("cgck.tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Load a `.cgck` checkpoint from a file.
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        TrainCheckpoint::from_bytes(&bytes)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Canonical checkpoint filename for an epoch (zero-padded so
+/// lexicographic order == epoch order; `ls | sort | tail -1` finds the
+/// latest, as does [`latest_in_dir`]).
+pub fn checkpoint_path(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("ckpt_{epoch:06}.cgck"))
+}
+
+/// The newest checkpoint in a directory (by epoch-ordered filename), or
+/// `None` when the directory holds none.
+pub fn latest_in_dir(dir: &Path) -> Result<Option<PathBuf>> {
+    let mut best: Option<PathBuf> = None;
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("ckpt_") && name.ends_with(".cgck") {
+            let newer = match &best {
+                None => true,
+                Some(b) => b.file_name().and_then(|n| n.to_str()).unwrap_or("") < name,
+            };
+            if newer {
+                best = Some(path);
+            }
+        }
+    }
+    Ok(best)
+}
+
+/// Periodic checkpoint writer handed to the training loops
+/// (`--checkpoint-every N --checkpoint-dir D`).
+pub struct CheckpointSink {
+    every: usize,
+    dir: PathBuf,
+    meta: CkptMeta,
+}
+
+impl CheckpointSink {
+    pub fn new(every: usize, dir: PathBuf, meta: CkptMeta) -> Result<CheckpointSink> {
+        ensure!(every > 0, "checkpoint interval must be positive");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointSink { every, dir, meta })
+    }
+
+    /// True when a checkpoint is due after `completed` epochs.
+    pub fn due(&self, completed: usize) -> bool {
+        completed > 0 && completed % self.every == 0
+    }
+
+    /// Write a checkpoint if one is due; `capture` is only invoked (and
+    /// the state only cloned) when it is.
+    pub fn maybe_write(
+        &self,
+        completed: usize,
+        capture: impl FnOnce() -> CkptState,
+    ) -> Result<()> {
+        if !self.due(completed) {
+            return Ok(());
+        }
+        let ck = TrainCheckpoint {
+            meta: self.meta.clone(),
+            epoch: completed as u64,
+            state: capture(),
+        };
+        let path = checkpoint_path(&self.dir, completed as u64);
+        ck.save(&path)?;
+        log::info!("wrote training checkpoint {}", path.display());
+        leader_crash_hook(completed);
+        Ok(())
+    }
+}
+
+/// Test-only failure hook: `CGCN_TEST_LEADER_CRASH_AT=<completed-epochs>`
+/// hard-aborts the process immediately after the matching checkpoint is
+/// written — `ci.sh` uses it to exercise a leader crash + `--resume`
+/// deterministically (a timed `kill -9` on the leader would race the
+/// checkpoint write).
+fn leader_crash_hook(completed: usize) {
+    if let Ok(v) = std::env::var("CGCN_TEST_LEADER_CRASH_AT") {
+        if v.parse::<usize>() == Ok(completed) {
+            eprintln!("CGCN_TEST_LEADER_CRASH_AT={completed}: aborting after checkpoint write");
+            std::process::abort();
+        }
+    }
+}
+
+/// Restore an ADMM trainer's mutable state from a checkpoint, shape-
+/// checking every tensor against the (freshly rebuilt) workspace so a
+/// stale or mismatched checkpoint errs instead of corrupting training.
+pub fn restore_admm(trainer: &mut AdmmTrainer, ck: &TrainCheckpoint) -> Result<()> {
+    let CkptState::Admm { w, tau, z, u, theta } = &ck.state else {
+        bail!(
+            "checkpoint holds {} state; this run trains with admm",
+            ck.state.label()
+        );
+    };
+    let ws = trainer.ws.clone();
+    let l = ws.layers;
+    let m = ws.m;
+    ensure!(w.len() == l && tau.len() == l, "checkpoint layer count mismatch");
+    ensure!(
+        z.len() == l && u.len() == m && theta.len() == l - 1,
+        "checkpoint community/layer state mismatch"
+    );
+    for (li, wl) in w.iter().enumerate() {
+        ensure!(
+            wl.shape() == (ws.dims[li], ws.dims[li + 1]),
+            "checkpoint W_{} is {:?}, workspace wants {:?}",
+            li + 1,
+            wl.shape(),
+            (ws.dims[li], ws.dims[li + 1])
+        );
+    }
+    for (li, zl) in z.iter().enumerate() {
+        ensure!(zl.len() == m, "checkpoint Z layer {} community count", li + 1);
+        for zm in zl {
+            ensure!(
+                zm.shape() == (ws.n_pad, ws.dims[li + 1]),
+                "checkpoint Z_{} shape {:?} != {:?}",
+                li + 1,
+                zm.shape(),
+                (ws.n_pad, ws.dims[li + 1])
+            );
+        }
+    }
+    for um in u {
+        ensure!(
+            um.shape() == (ws.n_pad, ws.dims[l]),
+            "checkpoint U shape {:?} != {:?}",
+            um.shape(),
+            (ws.n_pad, ws.dims[l])
+        );
+    }
+    for th in theta {
+        ensure!(th.len() == m, "checkpoint theta community count mismatch");
+    }
+    trainer.state.w = w.clone();
+    trainer.state.tau = tau.clone();
+    trainer.state.z = z.clone();
+    trainer.state.u = u.clone();
+    trainer.state.theta = theta.clone();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> CkptMeta {
+        CkptMeta {
+            snap: SnapshotMeta {
+                label: "t".into(),
+                dataset: "caveman".into(),
+                scale: 1.0,
+                seed: 3,
+                partition: "metis".into(),
+                communities: 2,
+                hidden: 4,
+                layers: 2,
+            },
+            method: "admm".into(),
+            rho: 1e-3,
+            nu: 1e-3,
+        }
+    }
+
+    fn mat(r: usize, c: usize, base: f32) -> Matrix {
+        Matrix::from_fn(r, c, |i, j| base + (i * c + j) as f32 * 0.5)
+    }
+
+    fn admm_ckpt() -> TrainCheckpoint {
+        TrainCheckpoint {
+            meta: meta(),
+            epoch: 6,
+            state: CkptState::Admm {
+                w: vec![mat(3, 4, 0.1), mat(4, 2, -1.0)],
+                tau: vec![0.5, 2.0],
+                z: vec![
+                    vec![mat(5, 4, 1.0), mat(5, 4, 2.0)],
+                    vec![mat(5, 2, 3.0), mat(5, 2, 4.0)],
+                ],
+                u: vec![mat(5, 2, -0.5), mat(5, 2, 0.25)],
+                theta: vec![vec![1.0, 0.125]],
+            },
+        }
+    }
+
+    fn baseline_ckpt() -> TrainCheckpoint {
+        let mut m = meta();
+        m.method = "adam".into();
+        TrainCheckpoint {
+            meta: m,
+            epoch: 9,
+            state: CkptState::Baseline {
+                opt: "adam".into(),
+                lr: 1e-3,
+                w: vec![mat(3, 4, 0.0), mat(4, 2, 1.0)],
+                m: vec![mat(3, 4, 0.1), mat(4, 2, 0.2)],
+                v: vec![mat(3, 4, 0.3), mat(4, 2, 0.4)],
+                t: vec![9, 9],
+            },
+        }
+    }
+
+    fn cluster_ckpt() -> TrainCheckpoint {
+        let mut m = meta();
+        m.method = "cluster-gcn".into();
+        TrainCheckpoint {
+            meta: m,
+            epoch: 2,
+            state: CkptState::ClusterGcn {
+                opt: "adam".into(),
+                lr: 5e-2,
+                clusters: 8,
+                batch_clusters: 2,
+                rng: [1, 2, 3, u64::MAX],
+                peak: 31,
+                w: vec![mat(3, 4, 0.0), mat(4, 2, 1.0)],
+                m: vec![mat(3, 4, 0.1), mat(4, 2, 0.2)],
+                v: vec![mat(3, 4, 0.3), mat(4, 2, 0.4)],
+                t: vec![4, 4],
+            },
+        }
+    }
+
+    #[test]
+    fn all_variants_roundtrip_bitwise() {
+        for ck in [admm_ckpt(), baseline_ckpt(), cluster_ckpt()] {
+            let back = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back, ck);
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_errors_never_panics() {
+        for ck in [admm_ckpt(), baseline_ckpt(), cluster_ckpt()] {
+            let bytes = ck.to_bytes();
+            for cut in 0..bytes.len() {
+                assert!(
+                    TrainCheckpoint::from_bytes(&bytes[..cut]).is_err(),
+                    "truncation at {cut}/{} did not error",
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_skew_and_trailing_bytes_error() {
+        let bytes = admm_ckpt().to_bytes();
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let err = TrainCheckpoint::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        let mut bad = bytes.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = TrainCheckpoint::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        let mut bad = bytes.clone();
+        bad.push(0);
+        let err = TrainCheckpoint::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn bogus_state_tag_errors() {
+        // Re-encode the header with a nonsense state tag.
+        let ck = admm_ckpt();
+        let mut e = Enc::new();
+        e.u8(b'C').u8(b'G').u8(b'C').u8(b'K');
+        e.u32(VERSION);
+        e.str(&ck.meta.method);
+        e.f32(ck.meta.rho).f32(ck.meta.nu);
+        ck.meta.snap.encode(&mut e);
+        e.u64(ck.epoch);
+        e.u8(77);
+        let err = TrainCheckpoint::from_bytes(&e.into_bytes()).unwrap_err();
+        assert!(err.to_string().contains("state tag"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_length_fields_error_not_panic() {
+        // Flip every byte of a valid checkpoint one at a time; parsing
+        // must never panic (errors and silent value changes are both
+        // fine — shape checks happen at restore time).
+        let bytes = admm_ckpt().to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xFF;
+            let _ = TrainCheckpoint::from_bytes(&bad);
+        }
+    }
+
+    #[test]
+    fn atomic_save_load_and_latest_selection() {
+        let dir = std::env::temp_dir().join(format!("cgcn_ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = admm_ckpt();
+        for epoch in [2u64, 4, 10] {
+            let mut c = ck.clone();
+            c.epoch = epoch;
+            c.save(&checkpoint_path(&dir, epoch)).unwrap();
+        }
+        let latest = latest_in_dir(&dir).unwrap().expect("checkpoints exist");
+        assert!(latest.ends_with("ckpt_000010.cgck"), "{latest:?}");
+        let back = TrainCheckpoint::load(&latest).unwrap();
+        assert_eq!(back.epoch, 10);
+        // No temp files left behind.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(
+                name.to_string_lossy().ends_with(".cgck"),
+                "stray file {name:?}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sink_interval_and_capture_laziness() {
+        let dir = std::env::temp_dir().join(format!("cgcn_sink_test_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let sink = CheckpointSink::new(2, dir.clone(), meta()).unwrap();
+        assert!(!sink.due(1) && sink.due(2) && !sink.due(3) && sink.due(4));
+        // Not due: capture must not run.
+        sink.maybe_write(3, || panic!("capture ran while not due")).unwrap();
+        sink.maybe_write(4, || admm_ckpt().state).unwrap();
+        assert!(checkpoint_path(&dir, 4).exists());
+        assert!(!checkpoint_path(&dir, 3).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

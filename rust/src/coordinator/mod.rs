@@ -7,17 +7,31 @@
 //! - [`admm`] — Algorithm 1 (W subproblem, epoch loop) plus the serial and
 //!   pool-threaded agent executors.
 //! - [`clock`] — virtual-time accounting + link model (1-core testbed).
-//! - [`transport`] — the multi-process TCP runtime (leader + workers).
+//! - [`transport`] — the elastic distributed runtime: the [`Transport`]
+//!   trait, the [`WorkerCore`] host state machine, the fault-tolerant
+//!   leader loop, and the TCP (multi-process) + channel (in-process
+//!   threads) transports.
+//! - [`sim`] — deterministic fault-injecting transport for chaos tests.
+//! - [`checkpoint`] — the `.cgck` training-checkpoint codec
+//!   (`--checkpoint-every` / `--resume`).
 
 pub mod admm;
 pub mod agent;
+pub mod checkpoint;
 pub mod clock;
+pub mod sim;
 pub mod transport;
 pub mod workspace;
 
 pub use admm::{evaluate_forward, AdmmOptions, AdmmTrainer, ExecMode};
 pub use agent::{AgentCtx, CommunityAgent, PMsg, SMsg};
+pub use checkpoint::{CheckpointSink, CkptMeta, CkptState, TrainCheckpoint};
 pub use clock::{EpochClock, LinkModel};
+pub use sim::{FaultPlan, SimStats, SimTransport};
+pub use transport::{
+    run_elastic_training, ChannelTransport, ElasticCfg, TcpTransport, Transport, TransportError,
+    WorkerCore,
+};
 pub use workspace::{Community, Workspace};
 
 use crate::baselines;
@@ -27,7 +41,19 @@ use crate::runtime::{select_backend, BackendChoice, ComputeBackend};
 use crate::serve::SnapshotMeta;
 use crate::util::cli::Args;
 use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// Resolved run identity (post fixture overrides) — what checkpoints and
+/// snapshots record, and what TCP worker processes are spawned with.
+/// `--resume` rebuilds this from the checkpoint instead of the CLI, so a
+/// resumed run cannot drift from the run it continues.
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub dataset: String,
+    pub scale: f64,
+    pub partition: String,
+}
 
 /// Everything `cgcn train` needs, resolved from CLI arguments.
 pub struct TrainSetup {
@@ -42,6 +68,22 @@ pub struct TrainSetup {
     pub epochs: usize,
     pub exec: ExecMode,
     pub threads: usize,
+    pub run: RunCfg,
+}
+
+/// Resolve `--exec`/`--threads`/`--backend` into an executor + backend
+/// (shared by the fresh-run and resume setup paths).
+fn resolve_exec(args: &Args) -> Result<(ExecMode, usize, Arc<dyn ComputeBackend>)> {
+    let exec = ExecMode::parse(&args.get_str("exec"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --exec value (serial|threads)"))?;
+    let threads = args.get_usize("threads");
+    let choice = BackendChoice::parse(&args.get_str("backend"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
+    // With a threaded agent executor the parallelism budget goes to the
+    // agents; keep native backend ops serial to avoid oversubscription.
+    let op_threads = if exec == ExecMode::Threads { 1 } else { threads.max(1) };
+    let backend = select_backend(choice, op_threads)?;
+    Ok((exec, threads, backend))
 }
 
 /// Resolve CLI args into a workspace + backend (shared by train and bench).
@@ -71,16 +113,7 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
         }
     }
 
-    let exec = ExecMode::parse(&args.get_str("exec"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --exec value (serial|threads)"))?;
-    let threads = args.get_usize("threads");
-    let choice = BackendChoice::parse(&args.get_str("backend"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
-    // With a threaded agent executor the parallelism budget goes to the
-    // agents; keep native backend ops serial to avoid oversubscription.
-    let op_threads = if exec == ExecMode::Threads { 1 } else { threads.max(1) };
-    let backend = select_backend(choice, op_threads)?;
-
+    let (exec, threads, backend) = resolve_exec(args)?;
     let ds = crate::cmd::load_dataset(&dataset, scale, seed)?;
     let pmethod = crate::cmd::parse_method(&args.get_str("partition"))?;
     let ws = Arc::new(Workspace::build(&ds, &hp, pmethod)?);
@@ -95,7 +128,66 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
         epochs: hp.epochs,
         exec,
         threads,
+        run: RunCfg {
+            dataset,
+            scale,
+            partition: args.get_str("partition"),
+        },
     })
+}
+
+/// Rebuild a run from a `.cgck` checkpoint: dataset, seed, partition,
+/// dims and penalties all come from the checkpoint (the CLI only chooses
+/// the epoch target, executor, transport, backend and link model — knobs
+/// that cannot change the math).
+pub fn setup_from_checkpoint(ck: &TrainCheckpoint, args: &Args) -> Result<TrainSetup> {
+    let m = &ck.meta.snap;
+    let mut hp = m.base_hyperparams();
+    hp.rho = ck.meta.rho;
+    hp.nu = ck.meta.nu;
+    hp.epochs = args.get_usize("epochs");
+    anyhow::ensure!(
+        (ck.epoch as usize) < hp.epochs,
+        "checkpoint already covers epoch {} ≥ --epochs {}; raise --epochs to continue training",
+        ck.epoch,
+        hp.epochs
+    );
+    let (exec, threads, backend) = resolve_exec(args)?;
+    let ds = crate::cmd::load_dataset(&m.dataset, m.scale, m.seed)
+        .with_context(|| format!("rebuilding dataset '{}' from checkpoint", m.dataset))?;
+    let pmethod = crate::cmd::parse_method(&m.partition)?;
+    let ws = Arc::new(Workspace::build(&ds, &hp, pmethod)?);
+    let link = LinkModel::new(args.get_f64("link-mbps"), args.get_f64("link-lat-us"));
+    Ok(TrainSetup {
+        ws,
+        ds: Arc::new(ds),
+        backend,
+        hp: hp.clone(),
+        method: ck.meta.method.clone(),
+        link,
+        epochs: hp.epochs,
+        exec,
+        threads,
+        run: RunCfg {
+            dataset: m.dataset.clone(),
+            scale: m.scale,
+            partition: m.partition.clone(),
+        },
+    })
+}
+
+/// The run's `.cgnm`/`.cgck` metadata block from resolved config.
+fn snapshot_meta(run: &RunCfg, ws: &Workspace, label: &str) -> SnapshotMeta {
+    SnapshotMeta {
+        label: label.to_string(),
+        dataset: run.dataset.clone(),
+        scale: run.scale,
+        seed: ws.hp.seed,
+        partition: run.partition.clone(),
+        communities: ws.hp.communities,
+        hidden: ws.hp.hidden,
+        layers: ws.layers,
+    }
 }
 
 /// `train --save <path>`: snapshot `w` to the requested path (no-op
@@ -103,6 +195,7 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
 /// (post fixture overrides), so `rebuild_workspace` replays it verbatim.
 pub(crate) fn maybe_save_model(
     args: &Args,
+    run: &RunCfg,
     ws: &Workspace,
     label: &str,
     w: &[crate::tensor::Matrix],
@@ -110,23 +203,93 @@ pub(crate) fn maybe_save_model(
     let Some(path) = args.get("save").filter(|s| !s.is_empty()) else {
         return Ok(());
     };
-    let meta = SnapshotMeta {
-        label: label.to_string(),
-        dataset: args.get_str("dataset"),
-        scale: args.get_f64("scale"),
-        seed: ws.hp.seed,
-        partition: args.get_str("partition"),
-        communities: ws.hp.communities,
-        hidden: ws.hp.hidden,
-        layers: ws.layers,
-    };
-    crate::serve::ModelSnapshot::capture(meta, ws, w)?.save(std::path::Path::new(path))?;
+    let meta = snapshot_meta(run, ws, label);
+    crate::serve::ModelSnapshot::capture(meta, ws, w)?.save(Path::new(path))?;
     log::info!("saved model snapshot to {path}");
     Ok(())
 }
 
+/// Build the periodic checkpoint writer from `--checkpoint-every` /
+/// `--checkpoint-dir` (None when disabled). Tolerates arg specs that
+/// don't declare the flags (library callers).
+fn checkpoint_sink(args: &Args, setup: &TrainSetup, label: &str) -> Result<Option<CheckpointSink>> {
+    let every = args
+        .get("checkpoint-every")
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
+    if every == 0 {
+        return Ok(None);
+    }
+    let dir = PathBuf::from(args.get("checkpoint-dir").unwrap_or("checkpoints"));
+    let meta = CkptMeta {
+        snap: snapshot_meta(&setup.run, &setup.ws, label),
+        method: setup.method.clone(),
+        rho: setup.ws.hp.rho,
+        nu: setup.ws.hp.nu,
+    };
+    Ok(Some(CheckpointSink::new(every, dir, meta)?))
+}
+
+/// Reconstruct the exact optimizer a baseline/cluster-gcn checkpoint was
+/// written with.
+fn optimizer_from_ckpt(ck: &TrainCheckpoint) -> Result<baselines::Optimizer> {
+    match &ck.state {
+        CkptState::Baseline { opt, lr, .. } | CkptState::ClusterGcn { opt, lr, .. } => {
+            let mut o = baselines::Optimizer::parse(opt, None)?;
+            o.set_lr(*lr);
+            Ok(o)
+        }
+        CkptState::Admm { .. } => bail!("admm checkpoint has no baseline optimizer"),
+    }
+}
+
+/// Reassemble per-layer optimizer slots from a checkpoint's parallel
+/// `m`/`v`/`t` field vectors (shared by both backprop resume paths).
+fn opt_states_from_ckpt(m: &[crate::tensor::Matrix], v: &[crate::tensor::Matrix], t: &[u64]) -> Vec<baselines::OptState> {
+    (0..m.len())
+        .map(|i| baselines::OptState {
+            m: m[i].clone(),
+            v: v[i].clone(),
+            t: t[i],
+        })
+        .collect()
+}
+
+fn restore_baseline(trainer: &mut baselines::BaselineTrainer, ck: &TrainCheckpoint) -> Result<()> {
+    let CkptState::Baseline { w, m, v, t, .. } = &ck.state else {
+        bail!("checkpoint does not hold full-batch baseline state");
+    };
+    trainer.restore_state(w.clone(), opt_states_from_ckpt(m, v, t))
+}
+
+fn restore_cluster_gcn(
+    trainer: &mut baselines::ClusterGcnTrainer,
+    ck: &TrainCheckpoint,
+) -> Result<()> {
+    let CkptState::ClusterGcn {
+        w, m, v, t, rng, peak, ..
+    } = &ck.state
+    else {
+        bail!("checkpoint does not hold cluster-gcn state");
+    };
+    trainer.restore_state(w.clone(), opt_states_from_ckpt(m, v, t), *rng, *peak as usize)
+}
+
 /// Run one training configuration (ADMM or a baseline optimizer).
 pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
+    run_training_resumed(setup, args, None)
+}
+
+/// Run one training configuration, optionally continuing from a `.cgck`
+/// checkpoint (`resume`). The checkpoint's epoch counter becomes the
+/// first epoch; determinism of every trainer makes the resumed run
+/// bitwise-identical to an uninterrupted one.
+pub fn run_training_resumed(
+    setup: &TrainSetup,
+    args: &Args,
+    resume: Option<&TrainCheckpoint>,
+) -> Result<RunReport> {
+    let start = resume.map(|c| c.epoch as usize).unwrap_or(0);
     let label = match setup.method.as_str() {
         "admm" => {
             if setup.ws.m == 1 {
@@ -139,8 +302,16 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
     };
     match setup.method.as_str() {
         "admm" => {
-            if args.get_str("transport") == "tcp" {
-                return transport::run_tcp_training(setup, args);
+            let sink = checkpoint_sink(args, setup, &label)?;
+            match args.get("transport").unwrap_or("local") {
+                "tcp" => {
+                    return transport::run_tcp_training(setup, args, resume, sink.as_ref())
+                }
+                "channel" => {
+                    return transport::run_channel_training(setup, args, resume, sink.as_ref())
+                }
+                "local" => {}
+                other => bail!("unknown --transport '{other}' (local|channel|tcp)"),
             }
             let mut opts = AdmmOptions::for_mode(setup.ws.m);
             opts.link = setup.link;
@@ -150,25 +321,57 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
                 opts.parallel_layers = true;
             }
             let mut trainer = AdmmTrainer::new(setup.ws.clone(), setup.backend.clone(), opts)?;
-            let mut report = trainer.train(setup.epochs, &label)?;
-            report.dataset = args.get_str("dataset");
-            maybe_save_model(args, &setup.ws, &label, &trainer.state.w)?;
+            if let Some(ck) = resume {
+                checkpoint::restore_admm(&mut trainer, ck)?;
+            }
+            let mut report = trainer.train_range(start, setup.epochs, &label, sink.as_ref())?;
+            report.dataset = setup.run.dataset.clone();
+            maybe_save_model(args, &setup.run, &setup.ws, &label, &trainer.state.w)?;
             Ok(report)
         }
         "gd" | "adam" | "adagrad" | "adadelta" => {
-            let opt = baselines::Optimizer::parse(&setup.method, args.get("lr"))?;
+            let opt = match resume {
+                Some(ck) => optimizer_from_ckpt(ck)?,
+                None => baselines::Optimizer::parse(&setup.method, args.get("lr"))?,
+            };
             let mut trainer =
                 baselines::BaselineTrainer::new(setup.ws.clone(), setup.backend.clone(), opt)?;
-            let mut report = trainer.train(setup.epochs)?;
-            report.dataset = args.get_str("dataset");
-            maybe_save_model(args, &setup.ws, &label, trainer.weights())?;
+            if let Some(ck) = resume {
+                restore_baseline(&mut trainer, ck)?;
+            }
+            let sink = checkpoint_sink(args, setup, &label)?;
+            let mut report = trainer.train_range(start, setup.epochs, sink.as_ref())?;
+            report.dataset = setup.run.dataset.clone();
+            maybe_save_model(args, &setup.run, &setup.ws, &label, trainer.weights())?;
             Ok(report)
         }
         "cluster-gcn" => {
             // Stochastic community mini-batch engine: Adam over induced
             // cluster-group subgraphs (paper lr unless --lr overrides).
-            let opt = baselines::Optimizer::parse("adam", args.get("lr"))?;
-            let opts = baselines::ClusterGcnOptions::from_args(args);
+            let (opt, opts) = match resume {
+                Some(ck) => {
+                    let CkptState::ClusterGcn {
+                        clusters,
+                        batch_clusters,
+                        ..
+                    } = &ck.state
+                    else {
+                        bail!("checkpoint does not hold cluster-gcn state");
+                    };
+                    (
+                        optimizer_from_ckpt(ck)?,
+                        baselines::ClusterGcnOptions {
+                            clusters: *clusters as usize,
+                            batch_clusters: *batch_clusters as usize,
+                            method: crate::cmd::parse_method(&setup.run.partition)?,
+                        },
+                    )
+                }
+                None => (
+                    baselines::Optimizer::parse("adam", args.get("lr"))?,
+                    baselines::ClusterGcnOptions::from_args(args),
+                ),
+            };
             let mut trainer = baselines::ClusterGcnTrainer::new(
                 setup.ds.clone(),
                 setup.ws.clone(),
@@ -176,27 +379,47 @@ pub fn run_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
                 opt,
                 opts,
             )?;
-            let mut report = trainer.train(setup.epochs)?;
-            report.dataset = args.get_str("dataset");
+            if let Some(ck) = resume {
+                restore_cluster_gcn(&mut trainer, ck)?;
+            }
+            let sink = checkpoint_sink(args, setup, &label)?;
+            let mut report = trainer.train_range(start, setup.epochs, sink.as_ref())?;
+            report.dataset = setup.run.dataset.clone();
             log::info!(
                 "cluster-gcn: {} clusters, peak batch {} nodes (full graph: {})",
                 trainer.num_clusters(),
                 trainer.peak_batch_nodes(),
                 setup.ws.n
             );
-            maybe_save_model(args, &setup.ws, &label, trainer.weights())?;
+            maybe_save_model(args, &setup.run, &setup.ws, &label, trainer.weights())?;
             Ok(report)
         }
         other => bail!("unknown method '{other}' (admm|gd|adam|adagrad|adadelta|cluster-gcn)"),
     }
 }
 
-/// `cgcn train` entry point.
+/// `cgcn train` entry point. `--resume <path.cgck>` continues a
+/// checkpointed run; everything else starts fresh from the CLI config.
 pub fn run_from_args(args: &Args) -> Result<()> {
-    let setup = setup_from_args(args)?;
+    let (setup, resume) = match args.get("resume").filter(|s| !s.is_empty()) {
+        Some(path) => {
+            let ck = TrainCheckpoint::load(Path::new(path))
+                .with_context(|| format!("--resume {path}"))?;
+            let setup = setup_from_checkpoint(&ck, args)?;
+            log::info!(
+                "resuming {} from {} at epoch {} (of {})",
+                ck.meta.method,
+                path,
+                ck.epoch,
+                setup.epochs
+            );
+            (setup, Some(ck))
+        }
+        None => (setup_from_args(args)?, None),
+    };
     log::info!(
         "train: dataset={} n={} m={} method={} backend={} exec={} hidden={} layers={} epochs={}",
-        args.get_str("dataset"),
+        setup.run.dataset,
         setup.ws.n,
         setup.ws.m,
         setup.method,
@@ -206,7 +429,7 @@ pub fn run_from_args(args: &Args) -> Result<()> {
         setup.hp.layers,
         setup.epochs
     );
-    let report = run_training(&setup, args)?;
+    let report = run_training_resumed(&setup, args, resume.as_ref())?;
     if args.get_flag("csv") {
         print!("{}", report.to_csv());
     } else {

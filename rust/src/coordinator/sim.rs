@@ -1,0 +1,329 @@
+//! `SimTransport` — a single-threaded, fully deterministic simulation of
+//! the distributed transport with seeded, injectable faults.
+//!
+//! The simulated "network" runs every [`WorkerCore`] in-process and
+//! synchronously: a leader `send` delivers the frame (faults permitting)
+//! and immediately runs the worker state machine; replies queue in a
+//! per-host outbox that the leader's `recv` drains. Because there is
+//! exactly one thread, the sequence of transport events — and therefore
+//! every RNG draw in the fault sampler — is a pure function of the
+//! [`FaultPlan`], so chaos tests replay bit for bit from a seed instead
+//! of racing `kill -9` against wall clocks.
+//!
+//! Fault semantics mirror what the TCP transport can actually observe.
+//! TCP never *loses* an in-order frame — a link either delivers or dies —
+//! so a `Drop` (and a `Delay` past the heartbeat deadline) marks the
+//! host's link as lost: nothing flows either way any more, and the
+//! leader's next `recv` reports the host dead, exactly as a heartbeat
+//! timeout would. `Dup` models at-least-once delivery after retries: the
+//! frame arrives twice, which [`WorkerCore`]'s reply cache and the
+//! leader's stale-frame skipping must absorb without changing results.
+//! `crash_at` kills a host the instant it receives `SetW` for the given
+//! epoch — the deterministic equivalent of `kill -9` at an epoch
+//! boundary.
+
+use super::admm::AdmmTrainer;
+use super::transport::{
+    dead, CoreAction, ElasticCfg, TResult, Transport, WorkerCore, TAG_SET_W,
+};
+use super::workspace::Workspace;
+use crate::metrics::RunReport;
+use crate::runtime::ComputeBackend;
+use crate::util::rng::Rng;
+use crate::util::wire::Dec;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// What happens to one frame crossing the simulated network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    None,
+    Drop,
+    Dup,
+    Delay,
+}
+
+/// Seeded fault schedule for one simulated run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for the probabilistic sampler (and the delay-severity draw).
+    pub seed: u64,
+    /// `(host, epoch)`: crash the host the moment it receives `SetW` for
+    /// that epoch — deterministic agent death at an epoch boundary.
+    pub crash_at: Vec<(usize, u64)>,
+    /// Per-frame fault probabilities (all 0.0 = no sampling, no RNG use).
+    pub p_drop: f64,
+    pub p_dup: f64,
+    pub p_delay: f64,
+    /// Scheduled faults by global frame index (deterministic scenarios
+    /// that need an exact fault site rather than a probability).
+    pub drop_frames: Vec<u64>,
+    pub dup_frames: Vec<u64>,
+    pub delay_frames: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the no-fault baseline.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Crash `host` when it receives `SetW` for `epoch`.
+    pub fn crash(host: usize, epoch: u64) -> FaultPlan {
+        FaultPlan {
+            crash_at: vec![(host, epoch)],
+            ..FaultPlan::default()
+        }
+    }
+}
+
+/// Observability counters for assertions in chaos tests.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Frames that entered the fault sampler (both directions).
+    pub frames: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub delayed: u64,
+    /// Links declared lost (drops + fatal delays).
+    pub links_lost: u64,
+    /// Hosts that crashed (scheduled or via internal error).
+    pub crashes: u64,
+}
+
+struct SimHost {
+    core: Option<WorkerCore>,
+    outbox: VecDeque<Arc<Vec<u8>>>,
+    /// A frame on this link was lost: the connection is stalled and the
+    /// leader's next recv on it reports the host dead.
+    lost: bool,
+    fenced: bool,
+}
+
+/// The deterministic fault-injecting transport. Same [`Transport`] trait,
+/// same [`WorkerCore`] state machine as TCP/channel — only the network is
+/// simulated.
+pub struct SimTransport {
+    hosts: Vec<SimHost>,
+    plan: FaultPlan,
+    rng: Rng,
+    frame_idx: u64,
+    bytes: u64,
+    pub stats: SimStats,
+}
+
+impl SimTransport {
+    pub fn new(
+        ws: Arc<Workspace>,
+        backend: Arc<dyn ComputeBackend>,
+        plan: FaultPlan,
+    ) -> SimTransport {
+        let gs = super::admm::AdmmOptions::for_mode(ws.m).gauss_seidel;
+        let hosts = (0..ws.m)
+            .map(|_| SimHost {
+                core: Some(WorkerCore::new(ws.clone(), backend.clone(), gs)),
+                outbox: VecDeque::new(),
+                lost: false,
+                fenced: false,
+            })
+            .collect();
+        let rng = Rng::new(plan.seed);
+        SimTransport {
+            hosts,
+            plan,
+            rng,
+            frame_idx: 0,
+            bytes: 0,
+            stats: SimStats::default(),
+        }
+    }
+
+    /// Sample the fate of the next frame. Scheduled frame indices win;
+    /// otherwise the probabilistic sampler runs (consuming RNG only when
+    /// any probability is non-zero, so a fault-free plan burns no state).
+    fn sample(&mut self) -> Fault {
+        let idx = self.frame_idx;
+        self.frame_idx += 1;
+        self.stats.frames += 1;
+        if self.plan.drop_frames.contains(&idx) {
+            return Fault::Drop;
+        }
+        if self.plan.dup_frames.contains(&idx) {
+            return Fault::Dup;
+        }
+        if self.plan.delay_frames.contains(&idx) {
+            return Fault::Delay;
+        }
+        let (pd, pu, pl) = (self.plan.p_drop, self.plan.p_dup, self.plan.p_delay);
+        if pd <= 0.0 && pu <= 0.0 && pl <= 0.0 {
+            return Fault::None;
+        }
+        let x = self.rng.gen_f64();
+        if x < pd {
+            Fault::Drop
+        } else if x < pd + pu {
+            Fault::Dup
+        } else if x < pd + pu + pl {
+            Fault::Delay
+        } else {
+            Fault::None
+        }
+    }
+
+    /// A delayed frame either lands inside the heartbeat deadline
+    /// (harmless jitter) or beyond it (the link is declared dead) —
+    /// drawn deterministically from the plan's RNG stream.
+    fn delay_is_fatal(&mut self) -> bool {
+        self.stats.delayed += 1;
+        self.rng.gen_bool(0.5)
+    }
+
+    fn lose_link(&mut self, host: usize) {
+        self.stats.links_lost += 1;
+        self.hosts[host].lost = true;
+        self.hosts[host].outbox.clear();
+    }
+
+    /// Deliver a leader→worker frame to the host's state machine,
+    /// honouring crash-at-epoch and fault-sampling any replies.
+    fn process(&mut self, host: usize, frame: &[u8]) {
+        if frame.first() == Some(&TAG_SET_W) {
+            let mut d = Dec::new(&frame[1..]);
+            if let Ok(epoch) = d.u64() {
+                if self
+                    .plan
+                    .crash_at
+                    .iter()
+                    .any(|&(ch, ce)| ch == host && ce == epoch)
+                    && self.hosts[host].core.take().is_some()
+                {
+                    self.stats.crashes += 1;
+                    log::debug!("sim: host {host} crashed receiving SetW for epoch {epoch}");
+                    return;
+                }
+            }
+        }
+        let outcome = {
+            let Some(core) = self.hosts[host].core.as_mut() else {
+                return;
+            };
+            core.handle(frame)
+        };
+        match outcome {
+            Ok(CoreAction::None) => {}
+            Ok(CoreAction::Reply(reply)) => match self.sample() {
+                Fault::None => self.hosts[host].outbox.push_back(reply),
+                Fault::Drop => {
+                    self.stats.dropped += 1;
+                    self.lose_link(host);
+                }
+                Fault::Dup => {
+                    self.stats.duplicated += 1;
+                    self.hosts[host].outbox.push_back(reply.clone());
+                    self.hosts[host].outbox.push_back(reply);
+                }
+                Fault::Delay => {
+                    if self.delay_is_fatal() {
+                        self.lose_link(host);
+                    } else {
+                        self.hosts[host].outbox.push_back(reply);
+                    }
+                }
+            },
+            Ok(CoreAction::Shutdown) => {
+                self.hosts[host].core = None;
+            }
+            Err(e) => {
+                log::warn!("sim: host {host} state machine failed: {e:#}");
+                self.hosts[host].core = None;
+                self.stats.crashes += 1;
+            }
+        }
+    }
+}
+
+impl Transport for SimTransport {
+    fn hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+
+    fn send(&mut self, host: usize, frame: &[u8]) -> TResult<()> {
+        if self.hosts[host].fenced {
+            return dead(host, "fenced");
+        }
+        if self.hosts[host].lost {
+            return dead(host, "link lost");
+        }
+        self.bytes += frame.len() as u64 + 4;
+        match self.sample() {
+            Fault::None => self.process(host, frame),
+            Fault::Drop => {
+                // The write "succeeds" (like a TCP send into a stalled
+                // peer's buffer); the loss surfaces at the next recv.
+                self.stats.dropped += 1;
+                self.lose_link(host);
+            }
+            Fault::Dup => {
+                self.stats.duplicated += 1;
+                self.process(host, frame);
+                self.process(host, frame);
+            }
+            Fault::Delay => {
+                if self.delay_is_fatal() {
+                    self.lose_link(host);
+                } else {
+                    self.process(host, frame);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, host: usize) -> TResult<Vec<u8>> {
+        if self.hosts[host].fenced {
+            return dead(host, "fenced");
+        }
+        if self.hosts[host].lost {
+            return dead(host, "link lost (heartbeat deadline exceeded)");
+        }
+        match self.hosts[host].outbox.pop_front() {
+            Some(f) => {
+                self.bytes += f.len() as u64 + 4;
+                Ok(Arc::try_unwrap(f).unwrap_or_else(|a| (*a).clone()))
+            }
+            None => {
+                if self.hosts[host].core.is_none() {
+                    dead(host, "host crashed")
+                } else {
+                    dead(host, "timed out waiting for frame")
+                }
+            }
+        }
+    }
+
+    fn fence(&mut self, host: usize) {
+        self.hosts[host].fenced = true;
+        self.hosts[host].outbox.clear();
+    }
+
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// Run elastic ADMM training over a fresh [`SimTransport`] built from the
+/// trainer's own workspace/backend; returns the run report plus the
+/// simulation's fault counters.
+pub fn run_sim_training(
+    trainer: &mut AdmmTrainer,
+    plan: FaultPlan,
+    cfg: &ElasticCfg,
+) -> anyhow::Result<(RunReport, SimStats)> {
+    let mut t = SimTransport::new(trainer.ws.clone(), trainer.backend.clone(), plan);
+    let report = super::transport::run_elastic_training(trainer, &mut t, cfg)?;
+    Ok((report, t.stats.clone()))
+}

@@ -1,57 +1,90 @@
-//! Multi-process distributed runtime: leader + one worker process per
-//! community, speaking a length-framed binary protocol over TCP.
+//! The elastic distributed runtime: a transport-agnostic leader loop
+//! driving per-host worker state machines, with crash detection and
+//! community reassignment.
 //!
-//! This is the deployment shape the paper describes (1 agent = 1 machine):
-//! the leader owns the W reduction and message routing (star topology);
-//! each worker owns one community's Z/U state and drives the same
-//! [`CommunityAgent`] phases the in-process executors run, against
-//! messages received over the wire. Workers rebuild the deterministic
-//! workspace from the run config on their command line (dataset synthesis,
-//! partitioning and init are all seeded), so only *state deltas* cross the
-//! wire: W broadcasts, p/s messages and Z/U reports — exactly the traffic
-//! the virtual link model prices in local mode. The leader mirrors worker
-//! state from reports and runs the identical distributed W update, so a
-//! TCP run reproduces a local serial run bit for bit.
+//! The deployment shape is the paper's (1 agent = 1 machine) star
+//! topology, hardened for partial failure:
 //!
-//! Protocol frames (all little-endian, via [`crate::util::wire`]):
+//! - [`Transport`] — the leader's view of the network: an ordered,
+//!   reliable frame channel per *host*, with failure surfaced as
+//!   [`TransportError::Dead`]. Three implementations share it bit for
+//!   bit: [`TcpTransport`] (worker processes + heartbeats),
+//!   [`ChannelTransport`] (in-process worker threads over `mpsc`) and
+//!   [`super::sim::SimTransport`] (single-threaded, deterministic,
+//!   fault-injectable — the chaos-test harness).
+//! - [`WorkerCore`] — the transport-agnostic worker: one host owning one
+//!   *or more* [`CommunityAgent`]s, driven purely by received frames. The
+//!   TCP worker process, the channel worker thread and the simulated host
+//!   all run this same state machine, so recovery behaviour tested under
+//!   `SimTransport` is the behaviour the real deployment executes.
+//! - [`run_elastic_training`] — the leader loop. It snapshots the full
+//!   mirrored ADMM state at every *epoch barrier* (all Z-reports applied
+//!   atomically), and on any host loss it restores the barrier state,
+//!   reassigns the lost host's communities to survivors (shipping their
+//!   authoritative state via `Adopt` frames) and retries the epoch.
+//!   Because an epoch is a pure function of its barrier state, a
+//!   recovered run produces **bitwise-identical** weights to a fault-free
+//!   one — asserted in `rust/tests/fault_tolerance.rs`.
 //!
-//! | tag | dir            | payload                                    |
-//! |-----|----------------|---------------------------------------------|
-//! | 1   | worker→leader  | Hello { worker index }                      |
-//! | 3   | leader→worker  | SetW { L weight matrices }                  |
-//! | 4   | worker→leader  | PMsgs { (layer, dst, matrix)* }             |
-//! | 5   | leader→worker  | PDeliver { (layer, src, matrix)* }          |
-//! | 6   | worker→leader  | SMsgs { (layer, dst, s1, s2)* }             |
-//! | 7   | leader→worker  | SDeliver { (layer, src, s1, s2)* }          |
-//! | 8   | worker→leader  | ZReport { Z_1..Z_L, U, compute seconds }    |
-//! | 9   | leader→worker  | Shutdown                                    |
+//! Protocol frames (all little-endian via [`crate::util::wire`]; data
+//! frames carry an `(epoch, attempt)` tag so stale or duplicated frames
+//! from an aborted epoch are recognised and skipped, and workers answer
+//! duplicated requests from a reply cache instead of recomputing):
+//!
+//! | tag | dir            | payload                                         |
+//! |-----|----------------|-------------------------------------------------|
+//! | 1   | worker→leader  | Hello { host index }                            |
+//! | 2   | worker→leader  | Ping (transport heartbeat)                      |
+//! | 3   | leader→worker  | SetW { epoch, attempt, L weight matrices }      |
+//! | 4   | worker→leader  | PMsgs { epoch, attempt, (layer, src, dst, M)* } |
+//! | 5   | leader→worker  | PDeliver { same layout as 4 }                   |
+//! | 6   | worker→leader  | SMsgs { epoch, attempt, (layer, src, dst, M, M)* } |
+//! | 7   | leader→worker  | SDeliver { same layout as 6 }                   |
+//! | 8   | worker→leader  | ZReport { epoch, attempt, per-community Z/U/θ, secs } |
+//! | 9   | leader→worker  | Shutdown                                        |
+//! | 10  | leader→worker  | Adopt { community, Z_1..Z_L, U, θ }             |
+//!
+//! Dead-host detection is transport-layer: TCP workers heartbeat with
+//! Ping frames from a side thread, and the leader's reads carry a
+//! deadline (`--hb-timeout-ms`) — silence beyond it, EOF, or any socket
+//! error declares the host dead. A `kill -9`'d worker is detected by EOF
+//! within milliseconds; a stalled link by the heartbeat deadline.
 
-use super::agent::{PMsg, SMsg};
 use super::admm::{AdmmOptions, AdmmTrainer};
+use super::agent::{AgentCtx, CommunityAgent, PMsg, SMsg};
+use super::checkpoint::{CheckpointSink, CkptState, TrainCheckpoint};
+use super::clock::LinkModel;
+use super::workspace::Workspace;
 use super::TrainSetup;
 use crate::metrics::{EpochRecord, RunReport};
+use crate::runtime::ComputeBackend;
 use crate::tensor::Matrix;
 use crate::util::cli::Args;
 use crate::util::wire::{read_frame, write_frame, Dec, Enc};
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
-const TAG_HELLO: u8 = 1;
-const TAG_SET_W: u8 = 3;
-const TAG_P_MSGS: u8 = 4;
-const TAG_P_DELIVER: u8 = 5;
-const TAG_S_MSGS: u8 = 6;
-const TAG_S_DELIVER: u8 = 7;
-const TAG_Z_REPORT: u8 = 8;
-const TAG_SHUTDOWN: u8 = 9;
+pub(crate) const TAG_HELLO: u8 = 1;
+pub(crate) const TAG_PING: u8 = 2;
+pub(crate) const TAG_SET_W: u8 = 3;
+pub(crate) const TAG_P_MSGS: u8 = 4;
+pub(crate) const TAG_P_DELIVER: u8 = 5;
+pub(crate) const TAG_S_MSGS: u8 = 6;
+pub(crate) const TAG_S_DELIVER: u8 = 7;
+pub(crate) const TAG_Z_REPORT: u8 = 8;
+pub(crate) const TAG_SHUTDOWN: u8 = 9;
+pub(crate) const TAG_ADOPT: u8 = 10;
 
-fn enc_matrix(e: &mut Enc, m: &Matrix) {
+pub(crate) fn enc_matrix(e: &mut Enc, m: &Matrix) {
     e.u32(m.rows() as u32).u32(m.cols() as u32).f32s(m.data());
 }
 
-fn dec_matrix(d: &mut Dec) -> Result<Matrix> {
+pub(crate) fn dec_matrix(d: &mut Dec) -> Result<Matrix> {
     let rows = d.u32()? as usize;
     let cols = d.u32()? as usize;
     let data = d.f32s()?;
@@ -59,70 +92,1136 @@ fn dec_matrix(d: &mut Dec) -> Result<Matrix> {
     Ok(Matrix::from_vec(rows, cols, data))
 }
 
-struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
-    /// Bytes sent + received on this connection (comm accounting).
-    bytes: u64,
+// ---------------------------------------------------------------------------
+// The transport trait
+// ---------------------------------------------------------------------------
+
+/// Why a leader-side transport operation failed.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The host is unreachable / crashed / timed out — recoverable by
+    /// fencing it and reassigning its communities to survivors.
+    Dead { host: usize, why: String },
+    /// Unrecoverable (protocol invariant broken, local failure).
+    Fatal(anyhow::Error),
 }
 
-impl Conn {
-    fn new(stream: TcpStream) -> Result<Conn> {
-        stream.set_nodelay(true)?;
-        Ok(Conn {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: BufWriter::new(stream),
-            bytes: 0,
-        })
+pub type TResult<T> = std::result::Result<T, TransportError>;
+
+pub(crate) fn dead<T>(host: usize, why: impl std::fmt::Display) -> TResult<T> {
+    Err(TransportError::Dead {
+        host,
+        why: why.to_string(),
+    })
+}
+
+/// The leader's view of the agent network: an ordered, reliable frame
+/// channel per host. `recv` blocks up to the transport's liveness
+/// deadline; both directions surface failure as [`TransportError::Dead`]
+/// so the elastic loop can recover.
+pub trait Transport {
+    fn hosts(&self) -> usize;
+    fn label(&self) -> &'static str;
+    fn send(&mut self, host: usize, frame: &[u8]) -> TResult<()>;
+    fn recv(&mut self, host: usize) -> TResult<Vec<u8>>;
+    /// Fence a dead host: release its resources; every later op on it
+    /// returns `Dead` immediately.
+    fn fence(&mut self, host: usize);
+    /// Total bytes moved so far (both directions, all hosts).
+    fn bytes(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// WorkerCore — the transport-agnostic host state machine
+// ---------------------------------------------------------------------------
+
+/// What the caller should do after a frame is handled.
+pub enum CoreAction {
+    /// Nothing to send back (Adopt, Ping).
+    None,
+    /// Send this reply frame to the leader. `Arc` so the idempotency
+    /// cache shares the buffer instead of copying multi-MB replies on
+    /// the fault-free hot path.
+    Reply(Arc<Vec<u8>>),
+    /// Graceful shutdown requested.
+    Shutdown,
+}
+
+/// One host's state machine: the set of [`CommunityAgent`]s it currently
+/// owns (one initially; more after adopting a crashed host's communities)
+/// plus the in-flight epoch's phase state. Entirely frame-driven — the
+/// TCP worker process, the channel worker thread and the simulated host
+/// feed it the same bytes and get the same bytes back.
+pub struct WorkerCore {
+    ws: Arc<Workspace>,
+    backend: Arc<dyn ComputeBackend>,
+    gauss_seidel: bool,
+    agents: BTreeMap<usize, CommunityAgent>,
+    w: Vec<Matrix>,
+    epoch: u64,
+    attempt: u32,
+    p_own: BTreeMap<usize, Vec<Matrix>>,
+    p_out: BTreeMap<usize, Vec<PMsg>>,
+    fulls: BTreeMap<usize, Vec<Matrix>>,
+    crosses: BTreeMap<usize, Vec<Matrix>>,
+    /// Compute seconds since this epoch's SetW (reported in ZReport).
+    secs: f64,
+    /// Reply cache per request tag: a duplicated request (at-least-once
+    /// delivery under faults) is answered from cache, not recomputed.
+    replay: BTreeMap<u8, (u64, u32, Arc<Vec<u8>>)>,
+}
+
+impl WorkerCore {
+    pub fn new(
+        ws: Arc<Workspace>,
+        backend: Arc<dyn ComputeBackend>,
+        gauss_seidel: bool,
+    ) -> WorkerCore {
+        WorkerCore {
+            ws,
+            backend,
+            gauss_seidel,
+            agents: BTreeMap::new(),
+            w: Vec::new(),
+            epoch: 0,
+            attempt: 0,
+            p_own: BTreeMap::new(),
+            p_out: BTreeMap::new(),
+            fulls: BTreeMap::new(),
+            crosses: BTreeMap::new(),
+            secs: 0.0,
+            replay: BTreeMap::new(),
+        }
     }
 
-    fn send(&mut self, payload: &[u8]) -> Result<()> {
-        self.bytes += payload.len() as u64 + 4;
-        write_frame(&mut self.writer, payload)?;
+    /// Communities currently hosted here (sorted).
+    pub fn communities(&self) -> Vec<usize> {
+        self.agents.keys().copied().collect()
+    }
+
+    fn ctx(&self) -> AgentCtx<'_> {
+        AgentCtx {
+            ws: &self.ws,
+            backend: &*self.backend,
+            w: &self.w,
+            gauss_seidel: self.gauss_seidel,
+        }
+    }
+
+    /// Handle one frame from the leader.
+    pub fn handle(&mut self, frame: &[u8]) -> Result<CoreAction> {
+        match frame.first() {
+            None => bail!("empty frame"),
+            Some(&TAG_SHUTDOWN) => Ok(CoreAction::Shutdown),
+            Some(&TAG_PING) => Ok(CoreAction::None),
+            Some(&TAG_ADOPT) => {
+                self.handle_adopt(&frame[1..])?;
+                Ok(CoreAction::None)
+            }
+            Some(&(tag @ (TAG_SET_W | TAG_P_DELIVER | TAG_S_DELIVER))) => {
+                self.request(tag, &frame[1..])
+            }
+            Some(&other) => bail!("worker got unexpected frame tag {other}"),
+        }
+    }
+
+    fn request(&mut self, tag: u8, payload: &[u8]) -> Result<CoreAction> {
+        let mut d = Dec::new(payload);
+        let epoch = d.u64()?;
+        let attempt = d.u32()?;
+        if let Some((e, a, reply)) = self.replay.get(&tag) {
+            if (*e, *a) == (epoch, attempt) {
+                return Ok(CoreAction::Reply(reply.clone()));
+            }
+        }
+        let reply = Arc::new(match tag {
+            TAG_SET_W => self.phase_a(epoch, attempt, &mut d)?,
+            TAG_P_DELIVER => self.phase_b(epoch, attempt, &mut d)?,
+            TAG_S_DELIVER => self.phase_c(epoch, attempt, &mut d)?,
+            _ => unreachable!("request() called with non-request tag"),
+        });
+        self.replay.insert(tag, (epoch, attempt, reply.clone()));
+        Ok(CoreAction::Reply(reply))
+    }
+
+    /// Adopt a community: install the shipped Z/U/θ state as a fresh
+    /// agent (initial assignment, reassignment after a crash, and epoch
+    /// retry all use this — the leader's barrier state is authoritative).
+    fn handle_adopt(&mut self, payload: &[u8]) -> Result<()> {
+        let ws = self.ws.clone();
+        let l_total = ws.layers;
+        let mut d = Dec::new(payload);
+        let mi = d.u32()? as usize;
+        anyhow::ensure!(mi < ws.m, "adopt: community {mi} out of range");
+        let l = d.u32()? as usize;
+        anyhow::ensure!(l == l_total, "adopt: layer count mismatch");
+        let mut z = Vec::with_capacity(l);
+        for li in 0..l {
+            let zl = dec_matrix(&mut d)?;
+            anyhow::ensure!(
+                zl.shape() == (ws.n_pad, ws.dims[li + 1]),
+                "adopt: Z_{} shape mismatch",
+                li + 1
+            );
+            z.push(zl);
+        }
+        let u = dec_matrix(&mut d)?;
+        anyhow::ensure!(
+            u.shape() == (ws.n_pad, ws.dims[l_total]),
+            "adopt: U shape mismatch"
+        );
+        let nt = d.u32()? as usize;
+        anyhow::ensure!(nt == l_total - 1, "adopt: theta count mismatch");
+        let mut theta = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            theta.push(d.f32()?);
+        }
+        anyhow::ensure!(d.done(), "adopt: trailing bytes");
+        self.agents
+            .insert(mi, CommunityAgent::from_state(mi, z, u, theta));
+        // Any in-flight phase state for this community is now stale.
+        self.p_own.remove(&mi);
+        self.p_out.remove(&mi);
+        self.fulls.remove(&mi);
+        self.crosses.remove(&mi);
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Vec<u8>> {
-        let frame = read_frame(&mut self.reader)?
-            .ok_or_else(|| anyhow::anyhow!("peer closed connection"))?;
-        self.bytes += frame.len() as u64 + 4;
-        Ok(frame)
+    /// SetW: store the epoch's weights, run phase A (first-order products)
+    /// for every hosted agent in community order, reply with all outgoing
+    /// p messages.
+    fn phase_a(&mut self, epoch: u64, attempt: u32, d: &mut Dec) -> Result<Vec<u8>> {
+        let t0 = Instant::now();
+        let l_total = self.ws.layers;
+        let count = d.u32()? as usize;
+        anyhow::ensure!(count == l_total, "setw: layer count mismatch");
+        let mut w = Vec::with_capacity(count);
+        for li in 0..count {
+            let wl = dec_matrix(d)?;
+            anyhow::ensure!(
+                wl.shape() == (self.ws.dims[li], self.ws.dims[li + 1]),
+                "setw: W_{} shape mismatch",
+                li + 1
+            );
+            w.push(wl);
+        }
+        anyhow::ensure!(d.done(), "setw: trailing bytes");
+        anyhow::ensure!(!self.agents.is_empty(), "setw: host has no communities");
+        self.w = w;
+        self.epoch = epoch;
+        self.attempt = attempt;
+        self.secs = 0.0;
+        self.p_own.clear();
+        self.p_out.clear();
+        self.fulls.clear();
+        self.crosses.clear();
+
+        let mut own_map = BTreeMap::new();
+        let mut out_map = BTreeMap::new();
+        {
+            let ctx = self.ctx();
+            for (&mi, ag) in &self.agents {
+                let (own, out) = ag.p_products(&ctx)?;
+                own_map.insert(mi, own);
+                out_map.insert(mi, out);
+            }
+        }
+        let total: usize = out_map.values().map(|o: &Vec<PMsg>| o.len()).sum();
+        let mut e = Enc::new();
+        e.u8(TAG_P_MSGS).u64(epoch).u32(attempt).u32(total as u32);
+        for out in out_map.values() {
+            for msg in out {
+                e.u32(msg.layer as u32).u32(msg.src as u32).u32(msg.dst as u32);
+                enc_matrix(&mut e, &msg.mat);
+            }
+        }
+        self.p_own = own_map;
+        self.p_out = out_map;
+        self.secs += t0.elapsed().as_secs_f64();
+        Ok(e.into_bytes())
     }
 
-    fn expect(&mut self, tag: u8) -> Result<Vec<u8>> {
-        let frame = self.recv()?;
+    /// PDeliver: fold incoming p per agent, build second-order messages,
+    /// reply with all outgoing s messages.
+    fn phase_b(&mut self, epoch: u64, attempt: u32, d: &mut Dec) -> Result<Vec<u8>> {
+        let t0 = Instant::now();
         anyhow::ensure!(
-            frame.first() == Some(&tag),
-            "expected frame tag {tag}, got {:?}",
-            frame.first()
+            (epoch, attempt) == (self.epoch, self.attempt),
+            "p-deliver for epoch {epoch}.{attempt}, host is at {}.{}",
+            self.epoch,
+            self.attempt
         );
-        Ok(frame)
+        let count = d.u32()? as usize;
+        let mut inbox: BTreeMap<usize, Vec<PMsg>> =
+            self.agents.keys().map(|&mi| (mi, Vec::new())).collect();
+        for _ in 0..count {
+            let layer = d.u32()? as usize;
+            let src = d.u32()? as usize;
+            let dst = d.u32()? as usize;
+            let mat = dec_matrix(d)?;
+            let slot = inbox
+                .get_mut(&dst)
+                .ok_or_else(|| anyhow!("p-deliver for community {dst} not hosted here"))?;
+            slot.push(PMsg {
+                layer,
+                src,
+                dst,
+                mat,
+            });
+        }
+        anyhow::ensure!(d.done(), "p-deliver: trailing bytes");
+
+        let mut fulls = BTreeMap::new();
+        let mut crosses = BTreeMap::new();
+        let mut s_total = 0usize;
+        let mut s_frames: Vec<SMsg> = Vec::new();
+        {
+            let ctx = self.ctx();
+            for (&mi, ag) in &self.agents {
+                let own = self
+                    .p_own
+                    .get(&mi)
+                    .ok_or_else(|| anyhow!("p-deliver before setw for community {mi}"))?;
+                let msgs = &inbox[&mi];
+                let mut refs: Vec<&PMsg> = msgs.iter().collect();
+                let (full, cross) = ag.fold_p(&ctx, own, &mut refs);
+                let s_out = ag.s_messages(&ctx, &full, &refs)?;
+                s_total += s_out.len();
+                s_frames.extend(s_out);
+                fulls.insert(mi, full);
+                crosses.insert(mi, cross);
+            }
+        }
+        let mut e = Enc::new();
+        e.u8(TAG_S_MSGS).u64(epoch).u32(attempt).u32(s_total as u32);
+        for msg in &s_frames {
+            e.u32(msg.layer as u32).u32(msg.src as u32).u32(msg.dst as u32);
+            enc_matrix(&mut e, &msg.s1);
+            enc_matrix(&mut e, &msg.s2);
+        }
+        self.fulls = fulls;
+        self.crosses = crosses;
+        self.secs += t0.elapsed().as_secs_f64();
+        Ok(e.into_bytes())
+    }
+
+    /// SDeliver: run the Z/U updates for every hosted agent, reply with
+    /// the fresh per-community state (the leader's mirror + the epoch
+    /// barrier are built from these reports).
+    fn phase_c(&mut self, epoch: u64, attempt: u32, d: &mut Dec) -> Result<Vec<u8>> {
+        let t0 = Instant::now();
+        anyhow::ensure!(
+            (epoch, attempt) == (self.epoch, self.attempt),
+            "s-deliver for epoch {epoch}.{attempt}, host is at {}.{}",
+            self.epoch,
+            self.attempt
+        );
+        let count = d.u32()? as usize;
+        let mut inbox: BTreeMap<usize, Vec<SMsg>> =
+            self.agents.keys().map(|&mi| (mi, Vec::new())).collect();
+        for _ in 0..count {
+            let layer = d.u32()? as usize;
+            let src = d.u32()? as usize;
+            let dst = d.u32()? as usize;
+            let s1 = dec_matrix(d)?;
+            let s2 = dec_matrix(d)?;
+            let slot = inbox
+                .get_mut(&dst)
+                .ok_or_else(|| anyhow!("s-deliver for community {dst} not hosted here"))?;
+            slot.push(SMsg {
+                layer,
+                src,
+                dst,
+                s1,
+                s2,
+            });
+        }
+        anyhow::ensure!(d.done(), "s-deliver: trailing bytes");
+
+        {
+            let WorkerCore {
+                ws,
+                backend,
+                w,
+                gauss_seidel,
+                agents,
+                p_out,
+                fulls,
+                crosses,
+                ..
+            } = self;
+            let ctx = AgentCtx {
+                ws: &**ws,
+                backend: &**backend,
+                w: &**w,
+                gauss_seidel: *gauss_seidel,
+            };
+            for (&mi, ag) in agents.iter_mut() {
+                let full = fulls
+                    .get(&mi)
+                    .ok_or_else(|| anyhow!("s-deliver before p-deliver for community {mi}"))?;
+                let cross = crosses
+                    .get(&mi)
+                    .ok_or_else(|| anyhow!("missing cross state for community {mi}"))?;
+                let out = p_out
+                    .get(&mi)
+                    .ok_or_else(|| anyhow!("missing p_out for community {mi}"))?;
+                let s_in = inbox.get_mut(&mi).expect("inbox slot exists");
+                ag.update_z_u(&ctx, full, cross, out, s_in)?;
+            }
+        }
+        self.secs += t0.elapsed().as_secs_f64();
+
+        let l_total = self.ws.layers;
+        let mut e = Enc::new();
+        e.u8(TAG_Z_REPORT)
+            .u64(epoch)
+            .u32(attempt)
+            .u32(self.agents.len() as u32);
+        for (&mi, ag) in &self.agents {
+            e.u32(mi as u32).u32(l_total as u32);
+            for zl in &ag.z {
+                enc_matrix(&mut e, zl);
+            }
+            enc_matrix(&mut e, &ag.u);
+            e.u32(ag.theta.len() as u32);
+            for &th in &ag.theta {
+                e.f32(th);
+            }
+        }
+        e.f64(self.secs);
+        Ok(e.into_bytes())
     }
 }
 
 // ---------------------------------------------------------------------------
-// Leader side
+// The elastic leader loop (transport-generic)
 // ---------------------------------------------------------------------------
 
-/// Run parallel ADMM with real worker processes. The leader keeps the full
-/// trainer (for W updates + evaluation) and mirrors worker Z/U state from
-/// their reports.
-pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
+/// Elastic training configuration.
+pub struct ElasticCfg<'a> {
+    pub label: String,
+    pub dataset: String,
+    /// First epoch to run (non-zero when resuming from a checkpoint).
+    pub start_epoch: usize,
+    pub epochs: usize,
+    pub link: LinkModel,
+    pub sink: Option<&'a CheckpointSink>,
+}
+
+/// Parse the `(tag, epoch, attempt)` header of a worker data frame.
+fn frame_ea(frame: &[u8]) -> Option<(u8, u64, u32)> {
+    let tag = *frame.first()?;
+    if !(TAG_P_MSGS..=TAG_Z_REPORT).contains(&tag) {
+        return None;
+    }
+    let mut d = Dec::new(&frame[1..]);
+    let e = d.u64().ok()?;
+    let a = d.u32().ok()?;
+    Some((tag, e, a))
+}
+
+/// Receive the next frame matching `(want, epoch, attempt)` from `host`,
+/// skipping heartbeats, stale frames from aborted attempts, and
+/// duplicates of earlier phases (worker→leader tags ascend with the
+/// phases, so `tag < want` at the current `(epoch, attempt)` is a dup).
+fn expect_frame(
+    t: &mut dyn Transport,
+    host: usize,
+    want: u8,
+    epoch: u64,
+    attempt: u32,
+) -> TResult<Vec<u8>> {
+    loop {
+        let f = t.recv(host)?;
+        if matches!(f.first(), Some(&TAG_PING) | Some(&TAG_HELLO)) {
+            continue;
+        }
+        let Some((tag, e, a)) = frame_ea(&f) else {
+            return dead(host, "malformed frame");
+        };
+        if (e, a) == (epoch, attempt) && tag == want {
+            return Ok(f);
+        }
+        if (e, a) < (epoch, attempt) || ((e, a) == (epoch, attempt) && tag < want) {
+            continue; // stale or duplicated — harmless under at-least-once delivery
+        }
+        return Err(TransportError::Fatal(anyhow!(
+            "host {host}: unexpected frame tag {tag} at ({e},{a}) while expecting {want} at ({epoch},{attempt})"
+        )));
+    }
+}
+
+/// Ship every community's authoritative state to its assigned host.
+/// Returns the first host that failed, if any.
+fn ship_state(
+    trainer: &AdmmTrainer,
+    t: &mut dyn Transport,
+    assign: &[usize],
+) -> Option<(usize, String)> {
+    let l_total = trainer.ws.layers;
+    for (mi, &h) in assign.iter().enumerate() {
+        let mut e = Enc::new();
+        e.u8(TAG_ADOPT).u32(mi as u32).u32(l_total as u32);
+        for li in 0..l_total {
+            enc_matrix(&mut e, &trainer.state.z[li][mi]);
+        }
+        enc_matrix(&mut e, &trainer.state.u[mi]);
+        e.u32((l_total - 1) as u32);
+        for li in 0..l_total - 1 {
+            e.f32(trainer.state.theta[li][mi]);
+        }
+        match t.send(h, e.bytes()) {
+            Ok(()) => {}
+            Err(TransportError::Dead { host, why }) => return Some((host, why)),
+            Err(TransportError::Fatal(err)) => return Some((h, format!("{err:#}"))),
+        }
+    }
+    None
+}
+
+/// Fence a lost host and deterministically reassign its communities to
+/// the surviving hosts (ascending round-robin). Errors once no host
+/// survives.
+fn lose_host(
+    t: &mut dyn Transport,
+    host: usize,
+    why: &str,
+    live: &mut [bool],
+    assign: &mut [usize],
+) -> Result<()> {
+    if live[host] {
+        log::warn!("host {host} lost ({why}); reassigning its communities to survivors");
+        t.fence(host);
+        live[host] = false;
+    }
+    let survivors: Vec<usize> = live
+        .iter()
+        .enumerate()
+        .filter(|&(_, &l)| l)
+        .map(|(i, _)| i)
+        .collect();
+    anyhow::ensure!(
+        !survivors.is_empty(),
+        "all agent hosts lost — cannot recover (last failure: host {host}: {why})"
+    );
+    let mut next = 0usize;
+    for slot in assign.iter_mut() {
+        if !live[*slot] {
+            *slot = survivors[next % survivors.len()];
+            next += 1;
+        }
+    }
+    Ok(())
+}
+
+/// One distributed epoch over the transport. On success the leader's
+/// mirror holds the new epoch-barrier state; on `Dead` the epoch must be
+/// considered void (the caller restores the barrier snapshot).
+fn elastic_epoch(
+    trainer: &mut AdmmTrainer,
+    t: &mut dyn Transport,
+    assign: &[usize],
+    epoch: u64,
+    attempt: u32,
+) -> TResult<(f64, f64)> {
+    let ws = trainer.ws.clone();
+    let m = ws.m;
+    let l_total = ws.layers;
+
+    // 1. W update at the leader over the mirrored barrier state —
+    // identical math to the local executors' distributed reduction.
+    let mut w_secs = vec![0.0f64; m];
+    for l in 1..=l_total {
+        trainer
+            .update_w_distributed_public(l, &mut w_secs)
+            .map_err(TransportError::Fatal)?;
+    }
+
+    let hosts: Vec<usize> = {
+        let set: BTreeSet<usize> = assign.iter().copied().collect();
+        set.into_iter().collect()
+    };
+
+    // 2. Broadcast W.
+    let mut e = Enc::new();
+    e.u8(TAG_SET_W)
+        .u64(epoch)
+        .u32(attempt)
+        .u32(l_total as u32);
+    for w in &trainer.state.w {
+        enc_matrix(&mut e, w);
+    }
+    let w_frame = e.into_bytes();
+    for &h in &hosts {
+        t.send(h, &w_frame)?;
+    }
+
+    // 3. Collect p messages, route by destination community.
+    let mut inbox_p: Vec<VecDeque<(usize, usize, Matrix)>> =
+        (0..m).map(|_| VecDeque::new()).collect();
+    for &h in &hosts {
+        let f = expect_frame(t, h, TAG_P_MSGS, epoch, attempt)?;
+        let decode = (|| -> Result<()> {
+            let mut d = Dec::new(&f[1..]);
+            let (_, _) = (d.u64()?, d.u32()?);
+            let count = d.u32()? as usize;
+            for _ in 0..count {
+                let layer = d.u32()? as usize;
+                let src = d.u32()? as usize;
+                let dst = d.u32()? as usize;
+                let mat = dec_matrix(&mut d)?;
+                anyhow::ensure!(layer < l_total && src < m && dst < m, "p message out of range");
+                inbox_p[dst].push_back((layer, src, mat));
+            }
+            anyhow::ensure!(d.done(), "trailing bytes in PMsgs");
+            Ok(())
+        })();
+        if let Err(err) = decode {
+            return dead(h, format!("bad PMsgs frame: {err:#}"));
+        }
+    }
+
+    // 4. Deliver p to each host (its communities' inboxes).
+    for &h in &hosts {
+        let mut e = Enc::new();
+        e.u8(TAG_P_DELIVER).u64(epoch).u32(attempt);
+        let total: usize = (0..m)
+            .filter(|&mi| assign[mi] == h)
+            .map(|mi| inbox_p[mi].len())
+            .sum();
+        e.u32(total as u32);
+        for mi in 0..m {
+            if assign[mi] != h {
+                continue;
+            }
+            for (layer, src, mat) in &inbox_p[mi] {
+                e.u32(*layer as u32).u32(*src as u32).u32(mi as u32);
+                enc_matrix(&mut e, mat);
+            }
+        }
+        t.send(h, e.bytes())?;
+    }
+
+    // 5. Collect + 6. deliver s messages the same way.
+    let mut inbox_s: Vec<VecDeque<(usize, usize, Matrix, Matrix)>> =
+        (0..m).map(|_| VecDeque::new()).collect();
+    for &h in &hosts {
+        let f = expect_frame(t, h, TAG_S_MSGS, epoch, attempt)?;
+        let decode = (|| -> Result<()> {
+            let mut d = Dec::new(&f[1..]);
+            let (_, _) = (d.u64()?, d.u32()?);
+            let count = d.u32()? as usize;
+            for _ in 0..count {
+                let layer = d.u32()? as usize;
+                let src = d.u32()? as usize;
+                let dst = d.u32()? as usize;
+                let s1 = dec_matrix(&mut d)?;
+                let s2 = dec_matrix(&mut d)?;
+                anyhow::ensure!(layer < l_total && src < m && dst < m, "s message out of range");
+                inbox_s[dst].push_back((layer, src, s1, s2));
+            }
+            anyhow::ensure!(d.done(), "trailing bytes in SMsgs");
+            Ok(())
+        })();
+        if let Err(err) = decode {
+            return dead(h, format!("bad SMsgs frame: {err:#}"));
+        }
+    }
+    for &h in &hosts {
+        let mut e = Enc::new();
+        e.u8(TAG_S_DELIVER).u64(epoch).u32(attempt);
+        let total: usize = (0..m)
+            .filter(|&mi| assign[mi] == h)
+            .map(|mi| inbox_s[mi].len())
+            .sum();
+        e.u32(total as u32);
+        for mi in 0..m {
+            if assign[mi] != h {
+                continue;
+            }
+            for (layer, src, s1, s2) in &inbox_s[mi] {
+                e.u32(*layer as u32).u32(*src as u32).u32(mi as u32);
+                enc_matrix(&mut e, s1);
+                enc_matrix(&mut e, s2);
+            }
+        }
+        t.send(h, e.bytes())?;
+    }
+
+    // 7. Z reports — buffer everything, then apply atomically. This is
+    // the epoch barrier: a host death anywhere above leaves the mirror
+    // untouched relative to the caller's snapshot.
+    let mut pending: Vec<(usize, Vec<Matrix>, Matrix, Vec<f32>)> = Vec::new();
+    let mut host_secs = vec![0.0f64; t.hosts()];
+    for &h in &hosts {
+        let f = expect_frame(t, h, TAG_Z_REPORT, epoch, attempt)?;
+        let decode = (|| -> Result<()> {
+            let mut d = Dec::new(&f[1..]);
+            let (_, _) = (d.u64()?, d.u32()?);
+            let ncomm = d.u32()? as usize;
+            let expect: BTreeSet<usize> =
+                (0..m).filter(|&mi| assign[mi] == h).collect();
+            anyhow::ensure!(
+                ncomm == expect.len(),
+                "host reported {ncomm} communities, owns {}",
+                expect.len()
+            );
+            let mut seen = BTreeSet::new();
+            for _ in 0..ncomm {
+                let mi = d.u32()? as usize;
+                anyhow::ensure!(expect.contains(&mi), "unexpected community {mi} in report");
+                anyhow::ensure!(seen.insert(mi), "duplicate community {mi} in report");
+                let l = d.u32()? as usize;
+                anyhow::ensure!(l == l_total, "report layer count mismatch");
+                let mut z = Vec::with_capacity(l);
+                for li in 0..l {
+                    let zl = dec_matrix(&mut d)?;
+                    anyhow::ensure!(
+                        zl.shape() == (ws.n_pad, ws.dims[li + 1]),
+                        "report Z shape mismatch"
+                    );
+                    z.push(zl);
+                }
+                let u = dec_matrix(&mut d)?;
+                anyhow::ensure!(
+                    u.shape() == (ws.n_pad, ws.dims[l_total]),
+                    "report U shape mismatch"
+                );
+                let nt = d.u32()? as usize;
+                anyhow::ensure!(nt == l_total - 1, "report theta count mismatch");
+                let mut theta = Vec::with_capacity(nt);
+                for _ in 0..nt {
+                    theta.push(d.f32()?);
+                }
+                pending.push((mi, z, u, theta));
+            }
+            host_secs[h] = d.f64()?;
+            anyhow::ensure!(d.done(), "trailing bytes in ZReport");
+            Ok(())
+        })();
+        if let Err(err) = decode {
+            return dead(h, format!("bad ZReport frame: {err:#}"));
+        }
+    }
+    for (mi, z, u, theta) in pending {
+        for (li, zl) in z.into_iter().enumerate() {
+            trainer.state.z[li][mi] = zl;
+        }
+        trainer.state.u[mi] = u;
+        for (li, th) in theta.into_iter().enumerate() {
+            trainer.state.theta[li][mi] = th;
+        }
+    }
+    let w_par = w_secs.iter().copied().fold(0.0, f64::max);
+    let z_par = host_secs.iter().copied().fold(0.0, f64::max);
+    Ok((w_par, z_par))
+}
+
+/// Run elastic distributed ADMM training over any [`Transport`]: the
+/// leader mirrors all community state, snapshots it at every epoch
+/// barrier, detects dead hosts, reassigns their communities to survivors
+/// from the last barrier, and (optionally) writes `.cgck` checkpoints.
+pub fn run_elastic_training(
+    trainer: &mut AdmmTrainer,
+    t: &mut dyn Transport,
+    cfg: &ElasticCfg,
+) -> Result<RunReport> {
+    let ws = trainer.ws.clone();
+    let m = ws.m;
+    anyhow::ensure!(
+        t.hosts() == m,
+        "transport has {} hosts for {} communities",
+        t.hosts(),
+        m
+    );
+    let mut live = vec![true; m];
+    let mut assign: Vec<usize> = (0..m).collect();
+    let mut need_ship = true;
+    let mut report = RunReport::new(&cfg.label, &cfg.dataset, m);
+
+    for e in cfg.start_epoch..cfg.epochs {
+        let wall0 = Instant::now();
+        // The epoch barrier: every retry of this epoch restarts from here.
+        let barrier = trainer.state.clone();
+        let mut attempt = 0u32;
+        let (w_par, z_par, bytes) = loop {
+            if need_ship {
+                if let Some((host, why)) = ship_state(trainer, t, &assign) {
+                    lose_host(t, host, &why, &mut live, &mut assign)?;
+                    continue;
+                }
+                need_ship = false;
+            }
+            let bytes0 = t.bytes();
+            match elastic_epoch(trainer, t, &assign, e as u64, attempt) {
+                Ok((w_par, z_par)) => break (w_par, z_par, t.bytes() - bytes0),
+                Err(TransportError::Dead { host, why }) => {
+                    trainer.state = barrier.clone();
+                    lose_host(t, host, &why, &mut live, &mut assign)?;
+                    attempt += 1;
+                    need_ship = true;
+                    log::info!(
+                        "epoch {e}: retrying (attempt {attempt}) with {} live hosts",
+                        live.iter().filter(|&&l| l).count()
+                    );
+                }
+                Err(TransportError::Fatal(err)) => return Err(err),
+            }
+        };
+        let wall = wall0.elapsed().as_secs_f64();
+        let live_n = live.iter().filter(|&&l| l).count().max(1);
+        let (train_acc, test_acc, loss) = trainer.evaluate()?;
+        let t_comm = cfg.link.msg_secs(bytes / live_n as u64) * live_n as f64;
+        log::info!(
+            "[{}] epoch {e}: loss={loss:.4} train={train_acc:.3} test={test_acc:.3} \
+             wall={wall:.2}s bytes={bytes} hosts={live_n}",
+            t.label()
+        );
+        report.push(EpochRecord {
+            epoch: e,
+            train_acc,
+            test_acc,
+            loss,
+            t_train: w_par + z_par,
+            t_comm,
+            t_wall: wall,
+            bytes,
+        });
+        if let Some(sink) = cfg.sink {
+            sink.maybe_write(e + 1, || CkptState::from_admm(&trainer.state))?;
+        }
+    }
+
+    let mut sd = Enc::new();
+    sd.u8(TAG_SHUTDOWN);
+    for h in 0..m {
+        if live[h] {
+            let _ = t.send(h, sd.bytes());
+        }
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport (leader side)
+// ---------------------------------------------------------------------------
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+/// Multi-process transport: one worker process per host, length-framed
+/// binary protocol over TCP, liveness via Ping heartbeats + read
+/// deadlines.
+pub struct TcpTransport {
+    conns: Vec<Option<Conn>>,
+    bytes: u64,
+}
+
+impl TcpTransport {
+    /// Accept `hosts` workers on `listener`, indexed by their Hello
+    /// frames. `hb_timeout` becomes the per-read liveness deadline, and
+    /// the whole accept phase is bounded by a startup deadline — a worker
+    /// that dies *before* connecting (spawn failure, instant OOM-kill)
+    /// must surface as an error, not hang the leader forever. Workers
+    /// connect and Hello before their (possibly long) workspace build, so
+    /// the deadline only needs to cover process startup.
+    pub fn accept(
+        listener: &TcpListener,
+        hosts: usize,
+        hb_timeout: Duration,
+    ) -> Result<TcpTransport> {
+        let startup_grace = hb_timeout.max(Duration::from_secs(5)) * 6;
+        let accept_deadline = Instant::now() + startup_grace;
+        listener.set_nonblocking(true)?;
+        let mut conns: Vec<Option<Conn>> = (0..hosts).map(|_| None).collect();
+        let mut bytes = 0u64;
+        for _ in 0..hosts {
+            let stream = loop {
+                match listener.accept() {
+                    Ok((stream, _)) => break stream,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < accept_deadline,
+                            "only {} of {hosts} workers connected before the startup deadline",
+                            conns.iter().filter(|c| c.is_some()).count()
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(hb_timeout))?;
+            // Writes need a deadline too: a stalled-but-open connection
+            // (SIGSTOP, zero-window partition) would otherwise block the
+            // leader inside a broadcast forever, and recv's heartbeat
+            // deadline never gets the chance to declare the host dead.
+            // It is deliberately looser than the read deadline: the
+            // initial Adopt ship can outpace a worker that is still
+            // rebuilding its workspace, and socket buffers are finite —
+            // a slow-but-alive host must not be killed at startup.
+            stream.set_write_timeout(Some(startup_grace))?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let hello = read_frame(&mut reader)?
+                .ok_or_else(|| anyhow!("worker closed before Hello"))?;
+            bytes += hello.len() as u64 + 4;
+            anyhow::ensure!(hello.first() == Some(&TAG_HELLO), "expected Hello frame");
+            let mut d = Dec::new(&hello[1..]);
+            let idx = d.u32()? as usize;
+            anyhow::ensure!(
+                idx < hosts && conns[idx].is_none(),
+                "bad worker index {idx}"
+            );
+            conns[idx] = Some(Conn {
+                reader,
+                writer: BufWriter::new(stream),
+            });
+        }
+        Ok(TcpTransport { conns, bytes })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn hosts(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn send(&mut self, host: usize, frame: &[u8]) -> TResult<()> {
+        let Some(conn) = self.conns[host].as_mut() else {
+            return dead(host, "fenced");
+        };
+        match write_frame(&mut conn.writer, frame) {
+            Ok(()) => {
+                self.bytes += frame.len() as u64 + 4;
+                Ok(())
+            }
+            Err(e) => dead(host, format!("write failed: {e}")),
+        }
+    }
+
+    fn recv(&mut self, host: usize) -> TResult<Vec<u8>> {
+        let Some(conn) = self.conns[host].as_mut() else {
+            return dead(host, "fenced");
+        };
+        loop {
+            match read_frame(&mut conn.reader) {
+                Ok(Some(f)) => {
+                    self.bytes += f.len() as u64 + 4;
+                    if f.first() == Some(&TAG_PING) {
+                        continue; // heartbeat — liveness proven, keep waiting
+                    }
+                    return Ok(f);
+                }
+                Ok(None) => return dead(host, "connection closed"),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return dead(host, "heartbeat deadline exceeded")
+                }
+                Err(e) => return dead(host, format!("read failed: {e}")),
+            }
+        }
+    }
+
+    fn fence(&mut self, host: usize) {
+        if let Some(conn) = self.conns[host].take() {
+            let _ = conn.writer.get_ref().shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel transport (in-process worker threads over mpsc)
+// ---------------------------------------------------------------------------
+
+/// In-process transport: one real thread per host running [`WorkerCore`],
+/// frames exchanged over `mpsc` channels — the same leader loop and
+/// worker state machine as TCP without process management. There are no
+/// heartbeats here and `recv` blocks without a deadline on purpose: for
+/// in-process threads, channel disconnection (thread exit or panic)
+/// already detects real death precisely, and a timeout could only
+/// produce false positives on long compute phases.
+pub struct ChannelTransport {
+    txs: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    rxs: Vec<Option<mpsc::Receiver<Arc<Vec<u8>>>>>,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
+    bytes: u64,
+}
+
+impl ChannelTransport {
+    pub fn spawn(
+        ws: &Arc<Workspace>,
+        backend: &Arc<dyn ComputeBackend>,
+        gauss_seidel: bool,
+    ) -> ChannelTransport {
+        let hosts = ws.m;
+        let mut txs = Vec::with_capacity(hosts);
+        let mut rxs = Vec::with_capacity(hosts);
+        let mut handles = Vec::with_capacity(hosts);
+        for h in 0..hosts {
+            let (ltx, wrx) = mpsc::channel::<Vec<u8>>();
+            let (wtx, lrx) = mpsc::channel::<Arc<Vec<u8>>>();
+            let mut core = WorkerCore::new(ws.clone(), backend.clone(), gauss_seidel);
+            let handle = std::thread::Builder::new()
+                .name(format!("cgcn-host-{h}"))
+                .spawn(move || {
+                    while let Ok(frame) = wrx.recv() {
+                        match core.handle(&frame) {
+                            Ok(CoreAction::None) => {}
+                            Ok(CoreAction::Reply(reply)) => {
+                                if wtx.send(reply).is_err() {
+                                    break;
+                                }
+                            }
+                            Ok(CoreAction::Shutdown) => break,
+                            Err(e) => {
+                                log::warn!("channel host {h} failed: {e:#}");
+                                break;
+                            }
+                        }
+                    }
+                })
+                .expect("spawning host thread");
+            txs.push(Some(ltx));
+            rxs.push(Some(lrx));
+            handles.push(Some(handle));
+        }
+        ChannelTransport {
+            txs,
+            rxs,
+            handles,
+            bytes: 0,
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn hosts(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "channel"
+    }
+
+    fn send(&mut self, host: usize, frame: &[u8]) -> TResult<()> {
+        let Some(tx) = self.txs[host].as_ref() else {
+            return dead(host, "fenced");
+        };
+        match tx.send(frame.to_vec()) {
+            Ok(()) => {
+                self.bytes += frame.len() as u64 + 4;
+                Ok(())
+            }
+            Err(_) => dead(host, "host thread exited"),
+        }
+    }
+
+    fn recv(&mut self, host: usize) -> TResult<Vec<u8>> {
+        let Some(rx) = self.rxs[host].as_ref() else {
+            return dead(host, "fenced");
+        };
+        match rx.recv() {
+            Ok(f) => {
+                self.bytes += f.len() as u64 + 4;
+                Ok(Arc::try_unwrap(f).unwrap_or_else(|a| (*a).clone()))
+            }
+            Err(_) => dead(host, "host thread exited"),
+        }
+    }
+
+    fn fence(&mut self, host: usize) {
+        self.txs[host] = None;
+        self.rxs[host] = None;
+    }
+
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        for tx in self.txs.iter_mut() {
+            *tx = None; // closing the channel stops the thread
+        }
+        for handle in self.handles.iter_mut().filter_map(|h| h.take()) {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry points (leader side)
+// ---------------------------------------------------------------------------
+
+fn hb_timeout_from_args(args: &Args) -> Duration {
+    let ms = args
+        .get("hb-timeout-ms")
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(5000)
+        .max(100);
+    Duration::from_millis(ms)
+}
+
+fn start_and_restore(
+    setup: &TrainSetup,
+    resume: Option<&TrainCheckpoint>,
+) -> Result<(AdmmTrainer, usize)> {
+    let mut opts = AdmmOptions::for_mode(setup.ws.m);
+    opts.link = setup.link;
+    let mut trainer = AdmmTrainer::new(setup.ws.clone(), setup.backend.clone(), opts)?;
+    let start = match resume {
+        Some(ck) => {
+            super::checkpoint::restore_admm(&mut trainer, ck)?;
+            ck.epoch as usize
+        }
+        None => 0,
+    };
+    Ok((trainer, start))
+}
+
+/// `--transport tcp`: spawn one worker process per community, run the
+/// elastic leader loop, and wait for workers to exit.
+pub fn run_tcp_training(
+    setup: &TrainSetup,
+    args: &Args,
+    resume: Option<&TrainCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> Result<RunReport> {
     let ws = setup.ws.clone();
     anyhow::ensure!(ws.m > 1, "tcp transport needs --communities > 1");
-    let l_total = ws.layers;
+    let hb_timeout = hb_timeout_from_args(args);
 
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     log::info!("leader listening on {addr}, spawning {} workers", ws.m);
 
-    // Spawn workers with the same run config; everything deterministic.
-    // CGCN_WORKER_EXE lets integration tests point at the real binary
-    // (current_exe would be the test harness there).
+    // Spawn workers with the *resolved* run config (post fixture
+    // overrides, post checkpoint restore) — never raw CLI args, so
+    // `--resume` runs spawn workers that rebuild the checkpoint's exact
+    // workspace. CGCN_WORKER_EXE lets integration tests point at the real
+    // binary (current_exe would be the test harness there).
     let exe = match std::env::var("CGCN_WORKER_EXE") {
         Ok(path) => std::path::PathBuf::from(path),
         Err(_) => std::env::current_exe()?,
     };
+    let hb_interval = (hb_timeout.as_millis() as u64 / 4).max(50);
     let mut children = Vec::new();
     for mi in 0..ws.m {
         let child = std::process::Command::new(&exe)
@@ -133,303 +1232,214 @@ pub fn run_tcp_training(setup: &TrainSetup, args: &Args) -> Result<RunReport> {
                 "--worker-idx",
                 &mi.to_string(),
                 "--dataset",
-                &args.get_str("dataset"),
+                &setup.run.dataset,
                 "--scale",
-                &args.get_str("scale"),
+                &setup.run.scale.to_string(),
                 "--seed",
-                &args.get_str("seed"),
+                &ws.hp.seed.to_string(),
                 "--hidden",
-                &args.get_str("hidden"),
+                &ws.hp.hidden.to_string(),
                 "--layers",
-                &args.get_str("layers"),
+                &ws.hp.layers.to_string(),
                 "--communities",
-                &args.get_str("communities"),
+                &ws.hp.communities.to_string(),
                 "--rho",
-                &args.get_str("rho"),
+                &ws.hp.rho.to_string(),
                 "--nu",
-                &args.get_str("nu"),
+                &ws.hp.nu.to_string(),
                 "--partition",
-                &args.get_str("partition"),
+                &setup.run.partition,
                 "--epochs",
-                &args.get_str("epochs"),
+                &setup.epochs.to_string(),
                 "--backend",
                 &args.get_str("backend"),
+                "--hb-interval-ms",
+                &hb_interval.to_string(),
             ])
             .spawn()
             .context("spawning worker process")?;
         children.push(child);
     }
 
-    // Accept + index connections by Hello.
-    let mut conns: Vec<Option<Conn>> = (0..ws.m).map(|_| None).collect();
-    for _ in 0..ws.m {
-        let (stream, _) = listener.accept()?;
-        let mut conn = Conn::new(stream)?;
-        let hello = conn.expect(TAG_HELLO)?;
-        let mut d = Dec::new(&hello[1..]);
-        let idx = d.u32()? as usize;
-        anyhow::ensure!(idx < ws.m && conns[idx].is_none(), "bad worker index {idx}");
-        conns[idx] = Some(conn);
-    }
-    let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
-
-    // Leader-side trainer: W updates + evaluation + state mirror. Runs the
-    // same distributed W reduction as local mode, over the mirrored state.
-    let mut opts = AdmmOptions::for_mode(ws.m);
-    opts.link = setup.link;
-    let mut trainer = AdmmTrainer::new(ws.clone(), setup.backend.clone(), opts)?;
-
-    let mut report = RunReport::new(
-        &format!("admm-tcp-m{}", ws.m),
-        &args.get_str("dataset"),
-        ws.m,
-    );
-    let epochs = setup.epochs;
-    for e in 0..epochs {
-        let wall0 = Instant::now();
-        let bytes0: u64 = conns.iter().map(|c| c.bytes).sum();
-
-        // 1. W update at the leader over the mirrored state (identical math
-        // to local mode's distributed reduction).
-        let mut w_secs = vec![0.0f64; ws.m];
-        for l in 1..=l_total {
-            trainer.update_w_distributed_public(l, &mut w_secs)?;
-        }
-
-        // 2. Broadcast W.
-        let mut enc = Enc::new();
-        enc.u8(TAG_SET_W).u32(l_total as u32);
-        for w in &trainer.state.w {
-            enc_matrix(&mut enc, w);
-        }
-        let w_frame = enc.into_bytes();
-        for conn in conns.iter_mut() {
-            conn.send(&w_frame)?;
-        }
-
-        // 3. Collect p messages, route to destinations.
-        let mut inbox_p: Vec<Vec<(u32, u32, Matrix)>> = vec![Vec::new(); ws.m];
-        for (src, conn) in conns.iter_mut().enumerate() {
-            let frame = conn.expect(TAG_P_MSGS)?;
-            let mut d = Dec::new(&frame[1..]);
-            let count = d.u32()?;
-            for _ in 0..count {
-                let l = d.u32()?;
-                let dst = d.u32()? as usize;
-                let mat = dec_matrix(&mut d)?;
-                inbox_p[dst].push((l, src as u32, mat));
-            }
-        }
-        for (dst, conn) in conns.iter_mut().enumerate() {
-            let mut enc = Enc::new();
-            enc.u8(TAG_P_DELIVER).u32(inbox_p[dst].len() as u32);
-            for (l, src, mat) in &inbox_p[dst] {
-                enc.u32(*l).u32(*src);
-                enc_matrix(&mut enc, mat);
-            }
-            conn.send(&enc.into_bytes())?;
-        }
-
-        // 4. Collect + route s messages.
-        let mut inbox_s: Vec<Vec<(u32, u32, Matrix, Matrix)>> = vec![Vec::new(); ws.m];
-        for (src, conn) in conns.iter_mut().enumerate() {
-            let frame = conn.expect(TAG_S_MSGS)?;
-            let mut d = Dec::new(&frame[1..]);
-            let count = d.u32()?;
-            for _ in 0..count {
-                let l = d.u32()?;
-                let dst = d.u32()? as usize;
-                let s1 = dec_matrix(&mut d)?;
-                let s2 = dec_matrix(&mut d)?;
-                inbox_s[dst].push((l, src as u32, s1, s2));
-            }
-        }
-        for (dst, conn) in conns.iter_mut().enumerate() {
-            let mut enc = Enc::new();
-            enc.u8(TAG_S_DELIVER).u32(inbox_s[dst].len() as u32);
-            for (l, src, s1, s2) in &inbox_s[dst] {
-                enc.u32(*l).u32(*src);
-                enc_matrix(&mut enc, s1);
-                enc_matrix(&mut enc, s2);
-            }
-            conn.send(&enc.into_bytes())?;
-        }
-
-        // 5. Z reports: mirror worker state.
-        let mut z_secs = vec![0.0f64; ws.m];
-        for (mi, conn) in conns.iter_mut().enumerate() {
-            let frame = conn.expect(TAG_Z_REPORT)?;
-            let mut d = Dec::new(&frame[1..]);
-            let layers = d.u32()? as usize;
-            anyhow::ensure!(layers == l_total, "layer count mismatch in ZReport");
-            for li in 0..l_total {
-                trainer.state.z[li][mi] = dec_matrix(&mut d)?;
-            }
-            trainer.state.u[mi] = dec_matrix(&mut d)?;
-            z_secs[mi] = d.f64()?;
-        }
-
-        let wall = wall0.elapsed().as_secs_f64();
-        let bytes: u64 = conns.iter().map(|c| c.bytes).sum::<u64>() - bytes0;
-        let (train_acc, test_acc, loss) = trainer.evaluate()?;
-        // Virtual accounting mirrors local mode: W partials at critical
-        // path, worker compute at critical path, comm from *measured* bytes.
-        let t_train = w_secs.iter().copied().fold(0.0, f64::max)
-            + z_secs.iter().copied().fold(0.0, f64::max);
-        let t_comm = setup.link.msg_secs(bytes / ws.m as u64) * ws.m as f64;
-        log::info!(
-            "[tcp] epoch {e}: loss={loss:.4} train={train_acc:.3} test={test_acc:.3} \
-             wall={wall:.2}s bytes={bytes}"
-        );
-        report.push(EpochRecord {
-            epoch: e,
-            train_acc,
-            test_acc,
-            loss,
-            t_train,
-            t_comm,
-            t_wall: wall,
-            bytes,
-        });
-    }
-
-    for conn in conns.iter_mut() {
-        let mut enc = Enc::new();
-        enc.u8(TAG_SHUTDOWN);
-        conn.send(&enc.into_bytes()).ok();
-    }
+    let mut transport = TcpTransport::accept(&listener, ws.m, hb_timeout)?;
+    let (mut trainer, start) = start_and_restore(setup, resume)?;
+    let cfg = ElasticCfg {
+        label: format!("admm-tcp-m{}", ws.m),
+        dataset: setup.run.dataset.clone(),
+        start_epoch: start,
+        epochs: setup.epochs,
+        link: setup.link,
+        sink,
+    };
+    let result = run_elastic_training(&mut trainer, &mut transport, &cfg);
+    // Fenced workers see their socket close and exit on their own; a
+    // graceful run got a Shutdown frame. Either way, reap every child.
+    drop(transport);
     for mut child in children {
         child.wait().ok();
     }
-    // Save only after the workers are shut down gracefully — a failed
-    // --save must not leave orphaned worker processes behind.
-    super::maybe_save_model(args, &ws, &report.method, &trainer.state.w)?;
+    let report = result?;
+    // Save only after the workers are down — a failed --save must not
+    // leave orphaned worker processes behind.
+    super::maybe_save_model(args, &setup.run, &ws, &report.method, &trainer.state.w)?;
+    Ok(report)
+}
+
+/// `--transport channel`: the same elastic leader loop over in-process
+/// worker threads (mpsc frames, no processes).
+pub fn run_channel_training(
+    setup: &TrainSetup,
+    args: &Args,
+    resume: Option<&TrainCheckpoint>,
+    sink: Option<&CheckpointSink>,
+) -> Result<RunReport> {
+    let ws = setup.ws.clone();
+    anyhow::ensure!(ws.m > 1, "channel transport needs --communities > 1");
+    let gs = AdmmOptions::for_mode(ws.m).gauss_seidel;
+    let mut transport = ChannelTransport::spawn(&ws, &setup.backend, gs);
+    let (mut trainer, start) = start_and_restore(setup, resume)?;
+    let cfg = ElasticCfg {
+        label: format!("admm-channel-m{}", ws.m),
+        dataset: setup.run.dataset.clone(),
+        start_epoch: start,
+        epochs: setup.epochs,
+        link: setup.link,
+        sink,
+    };
+    let report = run_elastic_training(&mut trainer, &mut transport, &cfg)?;
+    drop(transport);
+    super::maybe_save_model(args, &setup.run, &ws, &report.method, &trainer.state.w)?;
     Ok(report)
 }
 
 // ---------------------------------------------------------------------------
-// Worker side
+// Worker side (TCP)
 // ---------------------------------------------------------------------------
 
-/// Worker process entry (`cgcn worker --listen <leader addr> --worker-idx i
-/// <run config>`): owns one community's Z/U state and drives the
-/// [`super::agent::CommunityAgent`] phases against wire messages.
+/// Worker process entry (`cgcn worker --listen <leader> --worker-idx i
+/// <run config>`): rebuilds the deterministic workspace, then runs
+/// [`WorkerCore`] against the leader's frames while a side thread
+/// heartbeats Ping frames so the leader can tell "busy computing" from
+/// "dead".
 pub fn worker_main(args: &Args) -> Result<()> {
     let addr = args.get_str("listen");
     if addr.is_empty() {
         bail!("worker needs --listen <leader address>");
     }
     let mi = args.get_usize("worker-idx");
+    let hb_ms = args
+        .get("hb-interval-ms")
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(1000)
+        .max(10);
 
-    // Rebuild the deterministic workspace + initial state.
-    let setup = super::setup_from_args(args)?;
-    let ws = setup.ws.clone();
-    let l_total = ws.layers;
-    anyhow::ensure!(mi < ws.m, "worker index {mi} out of range");
-    let mut trainer = AdmmTrainer::new(
-        ws.clone(),
-        setup.backend.clone(),
-        AdmmOptions::for_mode(ws.m),
-    )?;
-    let mut agent = trainer.take_agent(mi);
-
-    let mut conn = Conn::new(TcpStream::connect(&addr)?)?;
-    let mut enc = Enc::new();
-    enc.u8(TAG_HELLO).u32(mi as u32);
-    conn.send(&enc.into_bytes())?;
+    // Connect + Hello + heartbeats *before* the (possibly long) workspace
+    // rebuild, so the leader's liveness clock is fed from the first
+    // moment this process exists.
+    let stream = TcpStream::connect(&addr)?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer = Arc::new(Mutex::new(BufWriter::new(stream)));
+    {
+        let mut e = Enc::new();
+        e.u8(TAG_HELLO).u32(mi as u32);
+        let mut w = writer.lock().unwrap();
+        write_frame(&mut *w, e.bytes())?;
+    }
     log::info!("worker {mi} connected to {addr}");
 
-    loop {
-        // SetW or Shutdown.
-        let frame = conn.recv()?;
-        match frame.first() {
-            Some(&TAG_SHUTDOWN) => break,
-            Some(&TAG_SET_W) => {}
-            other => bail!("unexpected frame {other:?}"),
-        }
-        let t0 = Instant::now();
-        let mut d = Dec::new(&frame[1..]);
-        let count = d.u32()? as usize;
-        anyhow::ensure!(count == l_total);
-        for li in 0..count {
-            trainer.state.w[li] = dec_matrix(&mut d)?;
-        }
-        let ctx = trainer.agent_ctx();
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = writer.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut e = Enc::new();
+            e.u8(TAG_PING);
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(hb_ms));
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, e.bytes()).is_err() {
+                    break;
+                }
+            }
+        })
+    };
 
-        // Phase A: local p products; ship outgoing p.
-        let (p_own, p_out) = agent.p_products(&ctx)?;
-        let mut enc = Enc::new();
-        enc.u8(TAG_P_MSGS).u32(p_out.len() as u32);
-        for msg in &p_out {
-            enc.u32(msg.layer as u32).u32(msg.dst as u32);
-            enc_matrix(&mut enc, &msg.mat);
+    let result = (|| -> Result<()> {
+        let setup = super::setup_from_args(args)?;
+        let ws = setup.ws.clone();
+        anyhow::ensure!(mi < ws.m, "worker index {mi} out of range");
+        let gs = AdmmOptions::for_mode(ws.m).gauss_seidel;
+        let mut core = WorkerCore::new(ws, setup.backend.clone(), gs);
+        loop {
+            let frame = read_frame(&mut reader)?
+                .ok_or_else(|| anyhow!("leader closed connection"))?;
+            match core.handle(&frame)? {
+                CoreAction::None => {}
+                CoreAction::Reply(reply) => {
+                    let mut w = writer.lock().unwrap();
+                    write_frame(&mut *w, &reply)?;
+                }
+                CoreAction::Shutdown => break,
+            }
         }
-        conn.send(&enc.into_bytes())?;
-
-        // Receive incoming p.
-        let frame = conn.expect(TAG_P_DELIVER)?;
-        let mut d = Dec::new(&frame[1..]);
-        let count = d.u32()?;
-        let mut p_in_owned: Vec<PMsg> = Vec::with_capacity(count as usize);
-        for _ in 0..count {
-            let layer = d.u32()? as usize;
-            let src = d.u32()? as usize;
-            let mat = dec_matrix(&mut d)?;
-            p_in_owned.push(PMsg {
-                layer,
-                src,
-                dst: mi,
-                mat,
-            });
-        }
-
-        // Phase B: fold + second-order messages; ship outgoing s.
-        let mut p_in: Vec<&PMsg> = p_in_owned.iter().collect();
-        let (p_full, p_cross) = agent.fold_p(&ctx, &p_own, &mut p_in);
-        let s_out = agent.s_messages(&ctx, &p_full, &p_in)?;
-        let mut enc = Enc::new();
-        enc.u8(TAG_S_MSGS).u32(s_out.len() as u32);
-        for msg in &s_out {
-            enc.u32(msg.layer as u32).u32(msg.dst as u32);
-            enc_matrix(&mut enc, &msg.s1);
-            enc_matrix(&mut enc, &msg.s2);
-        }
-        conn.send(&enc.into_bytes())?;
-
-        // Receive incoming s.
-        let frame = conn.expect(TAG_S_DELIVER)?;
-        let mut d = Dec::new(&frame[1..]);
-        let count = d.u32()?;
-        let mut s_in: Vec<SMsg> = Vec::with_capacity(count as usize);
-        for _ in 0..count {
-            let layer = d.u32()? as usize;
-            let src = d.u32()? as usize;
-            let s1 = dec_matrix(&mut d)?;
-            let s2 = dec_matrix(&mut d)?;
-            s_in.push(SMsg {
-                layer,
-                src,
-                dst: mi,
-                s1,
-                s2,
-            });
-        }
-
-        // Phase C: Z + U updates for this community only.
-        agent.update_z_u(&ctx, &p_full, &p_cross, &p_out, &mut s_in)?;
-        let secs = t0.elapsed().as_secs_f64();
-
-        // Report fresh state.
-        let mut enc = Enc::new();
-        enc.u8(TAG_Z_REPORT).u32(l_total as u32);
-        for li in 0..l_total {
-            enc_matrix(&mut enc, &agent.z[li]);
-        }
-        enc_matrix(&mut enc, &agent.u);
-        enc.f64(secs);
-        conn.send(&enc.into_bytes())?;
-    }
-    trainer.put_agent(agent);
+        Ok(())
+    })();
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
     log::info!("worker {mi} shutting down");
-    Ok(())
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_ea_parses_data_frames_only() {
+        let mut e = Enc::new();
+        e.u8(TAG_P_MSGS).u64(7).u32(2).u32(0);
+        assert_eq!(frame_ea(e.bytes()), Some((TAG_P_MSGS, 7, 2)));
+        let mut ping = Enc::new();
+        ping.u8(TAG_PING);
+        assert_eq!(frame_ea(ping.bytes()), None);
+        let mut short = Enc::new();
+        short.u8(TAG_Z_REPORT).u32(1); // truncated header
+        assert_eq!(frame_ea(short.bytes()), None);
+    }
+
+    #[test]
+    fn lose_host_reassigns_round_robin_deterministically() {
+        struct NullTransport;
+        impl Transport for NullTransport {
+            fn hosts(&self) -> usize {
+                4
+            }
+            fn label(&self) -> &'static str {
+                "null"
+            }
+            fn send(&mut self, _: usize, _: &[u8]) -> TResult<()> {
+                Ok(())
+            }
+            fn recv(&mut self, host: usize) -> TResult<Vec<u8>> {
+                dead(host, "null")
+            }
+            fn fence(&mut self, _: usize) {}
+            fn bytes(&self) -> u64 {
+                0
+            }
+        }
+        let mut t = NullTransport;
+        let mut live = vec![true; 4];
+        let mut assign = vec![0, 1, 2, 3];
+        lose_host(&mut t, 1, "test", &mut live, &mut assign).unwrap();
+        assert_eq!(assign, vec![0, 0, 2, 3]);
+        lose_host(&mut t, 0, "test", &mut live, &mut assign).unwrap();
+        // Communities 0 and 1 (both on host 0) round-robin over {2, 3}.
+        assert_eq!(assign, vec![2, 3, 2, 3]);
+        lose_host(&mut t, 2, "test", &mut live, &mut assign).unwrap();
+        assert_eq!(assign, vec![3, 3, 3, 3]);
+        let err = lose_host(&mut t, 3, "test", &mut live, &mut assign).unwrap_err();
+        assert!(err.to_string().contains("cannot recover"), "{err}");
+    }
 }

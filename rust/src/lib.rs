@@ -25,8 +25,11 @@
 //!   message protocol (eq. 4) factored into per-community agents
 //!   ([`coordinator::CommunityAgent`]); executors run the agents serially
 //!   with virtual-time accounting or as real pool tasks exchanging
-//!   messages over channels (`--exec serial|threads`), plus the
-//!   multi-process TCP transport.
+//!   messages over channels (`--exec serial|threads`), plus the elastic
+//!   distributed runtime: a fault-tolerant leader over a transport trait
+//!   (TCP worker processes with heartbeats, in-process channel threads,
+//!   and a deterministic fault-injecting simulator), `.cgck` training
+//!   checkpoints and bitwise-identical crash recovery (DESIGN.md §8).
 //! - [`baselines`] — backprop GCN training: full-batch GD/Adam/Adagrad/
 //!   Adadelta plus the stochastic community mini-batch engine
 //!   ([`baselines::ClusterGcnTrainer`], `train --method cluster-gcn`).

@@ -26,7 +26,7 @@ const SUBCOMMANDS: &[Subcommand] = &[
     },
     Subcommand {
         name: "train",
-        help: "train with ADMM, a full-batch baseline, or cluster-gcn mini-batches; --save snapshots the model",
+        help: "train with ADMM, a full-batch baseline, or cluster-gcn mini-batches; --save snapshots the model, --checkpoint-every/--resume give crash recovery",
         run: cgcn::cmd::cmd_train,
     },
     Subcommand {
@@ -77,12 +77,17 @@ fn main() {
     .opt("lr", Some("auto"), "baseline learning rate (auto = paper default)")
     .opt("seed", Some("17"), "random seed")
     .opt("out", Some(""), "output path (plan json / csv / cgnp / loadgen json)")
-    .opt("transport", Some("local"), "agent transport: local|tcp")
+    .opt("transport", Some("local"), "agent transport: local|channel|tcp (channel = in-process worker threads over mpsc, tcp = one worker process per community)")
     .opt("exec", Some("serial"), "agent execution: serial|threads (threads = real shared-memory parallelism)")
     .opt("threads", Some("0"), "worker threads: train --exec threads agent pool, serve connection pool (0 = all cores); with --exec serial, sets native backend op threads (0 = 1, the deterministic single-thread baseline)")
     .opt("backend", Some("auto"), "compute backend: auto|native|xla")
     .opt("link-mbps", Some("10000"), "simulated link bandwidth (Mbit/s; default models the paper's same-machine agents)")
     .opt("link-lat-us", Some("100"), "simulated link latency (microseconds)")
+    .opt("checkpoint-every", Some("0"), "train: write a .cgck training checkpoint every N epochs (0 = off)")
+    .opt("checkpoint-dir", Some("checkpoints"), "train: directory for .cgck training checkpoints")
+    .opt("resume", Some(""), "train: resume from a .cgck checkpoint (run config comes from the checkpoint; --epochs sets the new target)")
+    .opt("hb-timeout-ms", Some("5000"), "tcp leader: declare a worker dead after this much heartbeat silence")
+    .opt("hb-interval-ms", Some("1000"), "worker: transport heartbeat interval")
     .opt("listen", Some(""), "worker: leader address to connect to")
     .opt("worker-idx", Some("0"), "worker: community index owned by this process")
     .opt("save", Some(""), "train: save the trained weights to a .cgnm model snapshot")

@@ -51,6 +51,50 @@ pub struct SnapshotMeta {
     pub layers: usize,
 }
 
+impl SnapshotMeta {
+    /// Append the meta fields to an encoder — the field set and order are
+    /// shared by the `.cgnm` model snapshot and the `.cgck` training
+    /// checkpoint, so both formats rebuild workspaces the same way.
+    pub fn encode(&self, e: &mut Enc) {
+        e.str(&self.label);
+        e.str(&self.dataset);
+        e.f64(self.scale);
+        e.u64(self.seed);
+        e.str(&self.partition);
+        e.u32(self.communities as u32);
+        e.u32(self.hidden as u32);
+        e.u32(self.layers as u32);
+    }
+
+    /// Decode the meta fields written by [`SnapshotMeta::encode`].
+    pub fn decode(d: &mut Dec) -> Result<SnapshotMeta> {
+        Ok(SnapshotMeta {
+            label: d.str()?,
+            dataset: d.str()?,
+            scale: d.f64()?,
+            seed: d.u64()?,
+            partition: d.str()?,
+            communities: d.u32()? as usize,
+            hidden: d.u32()? as usize,
+            layers: d.u32()? as usize,
+        })
+    }
+
+    /// Hyper-parameters that rebuild the training-time workspace: the
+    /// dataset defaults with the *resolved* (post fixture override)
+    /// hidden/layers/communities/seed recorded in the metadata. Callers
+    /// that persisted ρ/ν separately (the checkpoint codec does) should
+    /// overwrite those fields afterwards.
+    pub fn base_hyperparams(&self) -> HyperParams {
+        let mut hp = HyperParams::for_dataset(&self.dataset);
+        hp.hidden = self.hidden;
+        hp.layers = self.layers;
+        hp.communities = self.communities;
+        hp.seed = self.seed;
+        hp
+    }
+}
+
 /// A saved model: metadata + layer dims + the trained weights W_1..W_L.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
@@ -95,14 +139,7 @@ impl ModelSnapshot {
         let mut e = Enc::with_capacity(wbytes + 256);
         e.u8(MAGIC[0]).u8(MAGIC[1]).u8(MAGIC[2]).u8(MAGIC[3]);
         e.u32(VERSION);
-        e.str(&self.meta.label);
-        e.str(&self.meta.dataset);
-        e.f64(self.meta.scale);
-        e.u64(self.meta.seed);
-        e.str(&self.meta.partition);
-        e.u32(self.meta.communities as u32);
-        e.u32(self.meta.hidden as u32);
-        e.u32(self.meta.layers as u32);
+        self.meta.encode(&mut e);
         e.u32s(&self.dims.iter().map(|&d| d as u32).collect::<Vec<_>>());
         for m in &self.w {
             e.u64(m.rows() as u64).u64(m.cols() as u64);
@@ -123,14 +160,8 @@ impl ModelSnapshot {
         if version != VERSION {
             bail!("unsupported .cgnm version {version} (this build reads {VERSION})");
         }
-        let label = d.str()?;
-        let dataset = d.str()?;
-        let scale = d.f64()?;
-        let seed = d.u64()?;
-        let partition = d.str()?;
-        let communities = d.u32()? as usize;
-        let hidden = d.u32()? as usize;
-        let layers = d.u32()? as usize;
+        let meta = SnapshotMeta::decode(&mut d)?;
+        let layers = meta.layers;
         let dims: Vec<usize> = d.u32s()?.into_iter().map(|x| x as usize).collect();
         ensure!(
             layers >= 1 && dims.len() == layers + 1,
@@ -162,20 +193,7 @@ impl ModelSnapshot {
         if !d.done() {
             bail!("trailing bytes in .cgnm snapshot");
         }
-        Ok(ModelSnapshot {
-            meta: SnapshotMeta {
-                label,
-                dataset,
-                scale,
-                seed,
-                partition,
-                communities,
-                hidden,
-                layers,
-            },
-            dims,
-            w,
-        })
+        Ok(ModelSnapshot { meta, dims, w })
     }
 
     /// Save to a file.
@@ -192,11 +210,7 @@ impl ModelSnapshot {
         let m = &self.meta;
         let ds = crate::data::load_by_name(&m.dataset, m.scale, m.seed)
             .with_context(|| format!("rebuilding dataset '{}'", m.dataset))?;
-        let mut hp = HyperParams::for_dataset(&m.dataset);
-        hp.hidden = m.hidden;
-        hp.layers = m.layers;
-        hp.communities = m.communities;
-        hp.seed = m.seed;
+        let hp = m.base_hyperparams();
         let method = crate::partition::Method::parse(&m.partition)
             .ok_or_else(|| anyhow::anyhow!("unknown partition method '{}'", m.partition))?;
         let ws = Workspace::build(&ds, &hp, method)?;

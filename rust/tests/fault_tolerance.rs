@@ -1,0 +1,407 @@
+//! Chaos suite for the elastic distributed runtime.
+//!
+//! Everything here runs on [`SimTransport`] (single-threaded,
+//! deterministic, seeded fault injection) plus [`ChannelTransport`] for
+//! a real-concurrency cross-check — no processes, no timers, no flaky
+//! `kill -9` races. The contract under test:
+//!
+//! 1. No-fault elastic runs are **bitwise identical** to the local serial
+//!    executor (and the channel transport to the sim).
+//! 2. Crashing any host at any seeded epoch still completes, and the
+//!    recovered run's final weights/accuracy are bitwise identical to the
+//!    no-fault run (recovery restarts the epoch from its barrier, and an
+//!    epoch is a pure function of barrier state).
+//! 3. Recovery is deterministic per fault seed — same plan, same bytes.
+//! 4. Checkpoint + resume reproduces the uninterrupted run bitwise for
+//!    the serial executor, the threaded executor, and the sim transport.
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::checkpoint::{self, CheckpointSink, CkptMeta, TrainCheckpoint};
+use cgcn::coordinator::sim::{run_sim_training, FaultPlan};
+use cgcn::coordinator::{
+    run_elastic_training, AdmmOptions, AdmmTrainer, ChannelTransport, ElasticCfg, ExecMode,
+    LinkModel, Workspace,
+};
+use cgcn::partition::Method;
+use cgcn::runtime::NativeBackend;
+use cgcn::serve::SnapshotMeta;
+use cgcn::tensor::Matrix;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const EPOCHS: usize = 6;
+const SEED: u64 = 7;
+
+fn workspace() -> Arc<Workspace> {
+    let ds = cgcn::data::fixtures::caveman(24, 3);
+    let mut hp = HyperParams::for_dataset("caveman");
+    hp.communities = 3;
+    hp.hidden = 8;
+    hp.seed = SEED;
+    Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap())
+}
+
+fn trainer(ws: &Arc<Workspace>) -> AdmmTrainer {
+    let backend = Arc::new(NativeBackend::new());
+    AdmmTrainer::new(ws.clone(), backend, AdmmOptions::for_mode(ws.m)).unwrap()
+}
+
+fn cfg(start: usize, epochs: usize) -> ElasticCfg<'static> {
+    ElasticCfg {
+        label: "fault-test".into(),
+        dataset: "caveman".into(),
+        start_epoch: start,
+        epochs,
+        link: LinkModel::new(10_000.0, 100.0),
+        sink: None,
+    }
+}
+
+fn assert_weights_eq(a: &[Matrix], b: &[Matrix], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: layer count");
+    for (li, (wa, wb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(wa.data(), wb.data(), "{what}: W_{} differs bitwise", li + 1);
+    }
+}
+
+/// The no-fault reference: local serial executor.
+fn serial_reference(ws: &Arc<Workspace>, epochs: usize) -> AdmmTrainer {
+    let mut t = trainer(ws);
+    t.train(epochs, "serial-ref").unwrap();
+    t
+}
+
+#[test]
+fn no_fault_sim_and_channel_match_local_serial_bitwise() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    let ref_eval = reference.evaluate().unwrap();
+
+    // Sim transport, no faults.
+    let mut sim = trainer(&ws);
+    let (report, stats) = run_sim_training(&mut sim, FaultPlan::none(), &cfg(0, EPOCHS)).unwrap();
+    assert_eq!(report.epochs.len(), EPOCHS);
+    assert_eq!(stats.crashes, 0);
+    assert_eq!(stats.links_lost, 0);
+    assert_weights_eq(&reference.state.w, &sim.state.w, "sim vs serial");
+    assert_eq!(sim.evaluate().unwrap(), ref_eval);
+    assert!(report.total_bytes() > 0, "sim shipped no bytes");
+
+    // Channel transport (real threads + mpsc), no faults.
+    let mut chan = trainer(&ws);
+    let backend = chan.backend.clone();
+    let mut t = ChannelTransport::spawn(&ws, &backend, AdmmOptions::for_mode(ws.m).gauss_seidel);
+    let report = run_elastic_training(&mut chan, &mut t, &cfg(0, EPOCHS)).unwrap();
+    drop(t);
+    assert_eq!(report.epochs.len(), EPOCHS);
+    assert_weights_eq(&reference.state.w, &chan.state.w, "channel vs serial");
+    assert_eq!(chan.evaluate().unwrap(), ref_eval);
+}
+
+#[test]
+fn crashing_each_host_at_seeded_epochs_recovers_bitwise() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    let ref_eval = reference.evaluate().unwrap();
+
+    for host in 0..ws.m {
+        // ≥ 3 distinct fault seeds per scenario, each picking a different
+        // crash epoch for this host.
+        for fault_seed in [1u64, 2, 3] {
+            let epoch = 1 + (fault_seed + host as u64) % (EPOCHS as u64 - 1);
+            let plan = FaultPlan::crash(host, epoch);
+
+            let mut a = trainer(&ws);
+            let (report, stats) = run_sim_training(&mut a, plan.clone(), &cfg(0, EPOCHS))
+                .unwrap_or_else(|e| panic!("host {host} crash at {epoch}: {e:#}"));
+            assert_eq!(report.epochs.len(), EPOCHS, "host {host} epoch {epoch}");
+            assert_eq!(stats.crashes, 1, "host {host} epoch {epoch}");
+            assert_weights_eq(
+                &reference.state.w,
+                &a.state.w,
+                &format!("crash host {host} at epoch {epoch}"),
+            );
+            assert_eq!(a.evaluate().unwrap(), ref_eval);
+
+            // Determinism per seed: the identical plan replays the
+            // identical run (weights AND fault counters).
+            let mut b = trainer(&ws);
+            let (_, stats_b) = run_sim_training(&mut b, plan, &cfg(0, EPOCHS)).unwrap();
+            assert_weights_eq(&a.state.w, &b.state.w, "replay determinism");
+            assert_eq!(stats.frames, stats_b.frames, "replay frame count");
+        }
+    }
+}
+
+#[test]
+fn two_hosts_lost_still_recovers_on_the_survivor() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    let plan = FaultPlan {
+        crash_at: vec![(0, 1), (2, 3)],
+        ..FaultPlan::default()
+    };
+    let mut t = trainer(&ws);
+    let (report, stats) = run_sim_training(&mut t, plan, &cfg(0, EPOCHS)).unwrap();
+    assert_eq!(report.epochs.len(), EPOCHS);
+    assert_eq!(stats.crashes, 2);
+    assert_weights_eq(&reference.state.w, &t.state.w, "two crashes");
+}
+
+#[test]
+fn all_hosts_lost_is_a_clean_error() {
+    let ws = workspace();
+    let plan = FaultPlan {
+        crash_at: vec![(0, 1), (1, 1), (2, 1)],
+        ..FaultPlan::default()
+    };
+    let mut t = trainer(&ws);
+    let err = run_sim_training(&mut t, plan, &cfg(0, EPOCHS)).unwrap_err();
+    assert!(
+        err.to_string().contains("cannot recover"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn dropped_frame_triggers_recovery_with_identical_results() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    // ≥ 3 seeds per scenario: each seed drops a different early frame
+    // (during initial adoption / the first epochs), losing that host's
+    // link mid-protocol.
+    for fault_seed in [11u64, 12, 13] {
+        let plan = FaultPlan {
+            drop_frames: vec![3 + fault_seed % 17],
+            ..FaultPlan::default()
+        };
+        let mut t = trainer(&ws);
+        let (report, stats) = run_sim_training(&mut t, plan.clone(), &cfg(0, EPOCHS))
+            .unwrap_or_else(|e| panic!("seed {fault_seed}: {e:#}"));
+        assert_eq!(report.epochs.len(), EPOCHS);
+        assert_eq!(stats.dropped, 1, "seed {fault_seed}");
+        assert_eq!(stats.links_lost, 1, "seed {fault_seed}");
+        assert_weights_eq(
+            &reference.state.w,
+            &t.state.w,
+            &format!("drop seed {fault_seed}"),
+        );
+
+        let mut b = trainer(&ws);
+        let (_, stats_b) = run_sim_training(&mut b, plan, &cfg(0, EPOCHS)).unwrap();
+        assert_weights_eq(&t.state.w, &b.state.w, "drop replay determinism");
+        assert_eq!(stats.frames, stats_b.frames);
+    }
+}
+
+#[test]
+fn duplicated_frames_are_absorbed_without_changing_results() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    for fault_seed in [21u64, 22, 23] {
+        let plan = FaultPlan {
+            dup_frames: vec![4 + fault_seed % 13, 20 + fault_seed % 7],
+            ..FaultPlan::default()
+        };
+        let mut t = trainer(&ws);
+        let (report, stats) = run_sim_training(&mut t, plan, &cfg(0, EPOCHS))
+            .unwrap_or_else(|e| panic!("seed {fault_seed}: {e:#}"));
+        assert_eq!(report.epochs.len(), EPOCHS);
+        assert!(stats.duplicated >= 1, "seed {fault_seed}");
+        // Duplicates alone must not cost a host or change a single bit.
+        assert_eq!(stats.links_lost, 0, "seed {fault_seed}");
+        assert_weights_eq(
+            &reference.state.w,
+            &t.state.w,
+            &format!("dup seed {fault_seed}"),
+        );
+    }
+}
+
+#[test]
+fn delayed_frames_either_pass_or_fail_over_deterministically() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    for fault_seed in [31u64, 32, 33] {
+        let plan = FaultPlan {
+            seed: fault_seed,
+            delay_frames: vec![5 + fault_seed % 11],
+            ..FaultPlan::default()
+        };
+        let mut t = trainer(&ws);
+        let (report, stats) = run_sim_training(&mut t, plan.clone(), &cfg(0, EPOCHS))
+            .unwrap_or_else(|e| panic!("seed {fault_seed}: {e:#}"));
+        assert_eq!(report.epochs.len(), EPOCHS);
+        assert_eq!(stats.delayed, 1, "seed {fault_seed}");
+        assert_weights_eq(
+            &reference.state.w,
+            &t.state.w,
+            &format!("delay seed {fault_seed}"),
+        );
+        let mut b = trainer(&ws);
+        let (_, stats_b) = run_sim_training(&mut b, plan, &cfg(0, EPOCHS)).unwrap();
+        assert_weights_eq(&t.state.w, &b.state.w, "delay replay determinism");
+        assert_eq!(stats.links_lost, stats_b.links_lost);
+    }
+}
+
+#[test]
+fn probabilistic_chaos_soak_never_panics_and_is_seed_deterministic() {
+    let ws = workspace();
+    let reference = serial_reference(&ws, EPOCHS);
+    for fault_seed in [41u64, 42, 43] {
+        let plan = FaultPlan {
+            seed: fault_seed,
+            p_drop: 0.005,
+            p_dup: 0.05,
+            p_delay: 0.03,
+            ..FaultPlan::default()
+        };
+        let mut a = trainer(&ws);
+        let ra = run_sim_training(&mut a, plan.clone(), &cfg(0, EPOCHS));
+        let mut b = trainer(&ws);
+        let rb = run_sim_training(&mut b, plan, &cfg(0, EPOCHS));
+        match (&ra, &rb) {
+            (Ok((_, sa)), Ok((_, sb))) => {
+                // Completed: identical to the no-fault run, bit for bit.
+                assert_weights_eq(&reference.state.w, &a.state.w, "soak");
+                assert_weights_eq(&a.state.w, &b.state.w, "soak determinism");
+                assert_eq!(sa.frames, sb.frames, "soak frame determinism");
+            }
+            (Err(ea), Err(eb)) => {
+                // Every host can be lost under heavy faults — that must
+                // be the documented clean error, deterministically.
+                assert!(ea.to_string().contains("cannot recover"), "{ea:#}");
+                assert_eq!(ea.to_string(), eb.to_string(), "error determinism");
+            }
+            _ => panic!("seed {fault_seed}: outcomes diverged between identical runs"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint + resume determinism across executors and transports
+// ---------------------------------------------------------------------------
+
+fn ckpt_meta(ws: &Workspace) -> CkptMeta {
+    CkptMeta {
+        snap: SnapshotMeta {
+            label: "fault-test".into(),
+            dataset: "caveman".into(),
+            scale: 1.0,
+            seed: SEED,
+            partition: "metis".into(),
+            communities: ws.m,
+            hidden: ws.hp.hidden,
+            layers: ws.layers,
+        },
+        method: "admm".into(),
+        rho: ws.hp.rho,
+        nu: ws.hp.nu,
+    }
+}
+
+fn temp_ckpt_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cgcn_ft_{}_{}", name, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn resume_is_bitwise_identical_for_serial_and_threads_executors() {
+    let ws = workspace();
+    for exec in [ExecMode::Serial, ExecMode::Threads] {
+        let mk = |ws: &Arc<Workspace>| {
+            let mut opts = AdmmOptions::for_mode(ws.m);
+            opts.exec = exec;
+            opts.threads = 2;
+            AdmmTrainer::new(ws.clone(), Arc::new(NativeBackend::new()), opts).unwrap()
+        };
+        let dir = temp_ckpt_dir(exec.name());
+        let sink = CheckpointSink::new(2, dir.clone(), ckpt_meta(&ws)).unwrap();
+
+        // Uninterrupted run (checkpointing along the way).
+        let mut full = mk(&ws);
+        full.train_range(0, EPOCHS, "full", Some(&sink)).unwrap();
+
+        // Resume from every checkpoint epoch; the tail must land on the
+        // same bits.
+        for k in [2usize, 4] {
+            let path = checkpoint::checkpoint_path(&dir, k as u64);
+            let ck = TrainCheckpoint::load(&path).unwrap();
+            assert_eq!(ck.epoch, k as u64);
+            let mut resumed = mk(&ws);
+            checkpoint::restore_admm(&mut resumed, &ck).unwrap();
+            resumed.train_range(k, EPOCHS, "resumed", None).unwrap();
+            assert_weights_eq(
+                &full.state.w,
+                &resumed.state.w,
+                &format!("{} resume from {k}", exec.name()),
+            );
+            assert_eq!(resumed.evaluate().unwrap(), full.evaluate().unwrap());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn resume_is_bitwise_identical_for_sim_transport() {
+    let ws = workspace();
+    let dir = temp_ckpt_dir("sim");
+    let sink = CheckpointSink::new(2, dir.clone(), ckpt_meta(&ws)).unwrap();
+
+    let mut full = trainer(&ws);
+    let full_cfg = ElasticCfg {
+        label: "fault-test".into(),
+        dataset: "caveman".into(),
+        start_epoch: 0,
+        epochs: EPOCHS,
+        link: LinkModel::new(10_000.0, 100.0),
+        sink: Some(&sink),
+    };
+    run_sim_training(&mut full, FaultPlan::none(), &full_cfg).unwrap();
+
+    for k in [2usize, 4] {
+        let ck = TrainCheckpoint::load(&checkpoint::checkpoint_path(&dir, k as u64)).unwrap();
+        let mut resumed = trainer(&ws);
+        checkpoint::restore_admm(&mut resumed, &ck).unwrap();
+        let (report, _) = run_sim_training(&mut resumed, FaultPlan::none(), &cfg(k, EPOCHS)).unwrap();
+        assert_eq!(report.epochs.len(), EPOCHS - k);
+        assert_weights_eq(
+            &full.state.w,
+            &resumed.state.w,
+            &format!("sim resume from {k}"),
+        );
+    }
+
+    // A crash *after* the checkpoint epoch on the resumed run still lands
+    // on the same bits (recovery + resume compose).
+    let ck = TrainCheckpoint::load(&checkpoint::checkpoint_path(&dir, 2)).unwrap();
+    let mut resumed = trainer(&ws);
+    checkpoint::restore_admm(&mut resumed, &ck).unwrap();
+    let (_, stats) =
+        run_sim_training(&mut resumed, FaultPlan::crash(1, 4), &cfg(2, EPOCHS)).unwrap();
+    assert_eq!(stats.crashes, 1);
+    assert_weights_eq(&full.state.w, &resumed.state.w, "resume + crash");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_checkpoint_for_wrong_shape_refuses_cleanly() {
+    // A checkpoint from a different configuration must be rejected by the
+    // shape checks, not silently corrupt training.
+    let ws = workspace();
+    let mut t = trainer(&ws);
+    let mut ck = TrainCheckpoint {
+        meta: ckpt_meta(&ws),
+        epoch: 2,
+        state: cgcn::coordinator::CkptState::from_admm(&t.state),
+    };
+    // Corrupt one Z block's shape.
+    if let cgcn::coordinator::CkptState::Admm { z, .. } = &mut ck.state {
+        z[0][1] = Matrix::zeros(1, 1);
+    }
+    let err = checkpoint::restore_admm(&mut t, &ck).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}

@@ -41,6 +41,12 @@ fn train_args(extra: &[&str]) -> cgcn::util::cli::Args {
         .opt("link-lat-us", Some("100"), "")
         .opt("listen", Some(""), "")
         .opt("worker-idx", Some("0"), "")
+        .opt("save", Some(""), "")
+        .opt("checkpoint-every", Some("0"), "")
+        .opt("checkpoint-dir", Some("checkpoints"), "")
+        .opt("resume", Some(""), "")
+        .opt("hb-timeout-ms", Some("5000"), "")
+        .opt("hb-interval-ms", Some("1000"), "")
         .flag("parallel-layers", "")
         .flag("csv", "");
     let toks: Vec<String> = base
@@ -55,12 +61,16 @@ fn train_args(extra: &[&str]) -> cgcn::util::cli::Args {
 fn tcp_training_matches_local_training() {
     // Workers are spawned from the real cgcn binary.
     std::env::set_var("CGCN_WORKER_EXE", env!("CARGO_BIN_EXE_cgcn"));
+    let dir = std::env::temp_dir().join(format!("cgcn_tcp_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let local_model = dir.join("local.cgnm");
+    let tcp_model = dir.join("tcp.cgnm");
 
-    let local_args = train_args(&[]);
+    let local_args = train_args(&["--save", local_model.to_str().unwrap()]);
     let local_setup = cgcn::coordinator::setup_from_args(&local_args).unwrap();
     let local = cgcn::coordinator::run_training(&local_setup, &local_args).unwrap();
 
-    let tcp_args = train_args(&["--transport", "tcp"]);
+    let tcp_args = train_args(&["--transport", "tcp", "--save", tcp_model.to_str().unwrap()]);
     let tcp_setup = cgcn::coordinator::setup_from_args(&tcp_args).unwrap();
     let tcp = cgcn::coordinator::run_training(&tcp_setup, &tcp_args).unwrap();
 
@@ -76,6 +86,15 @@ fn tcp_training_matches_local_training() {
         assert_eq!(a.train_acc, b.train_acc, "epoch {} train acc", a.epoch);
         assert_eq!(a.test_acc, b.test_acc, "epoch {} test acc", a.epoch);
     }
+    // Bitwise: the snapshots only differ in the run label, so compare the
+    // decoded weights.
+    let lw = cgcn::serve::load_model(&local_model).unwrap();
+    let tw = cgcn::serve::load_model(&tcp_model).unwrap();
+    assert_eq!(lw.w.len(), tw.w.len());
+    for (a, b) in lw.w.iter().zip(&tw.w) {
+        assert_eq!(a.data(), b.data(), "tcp weights differ bitwise from local");
+    }
+    std::fs::remove_dir_all(&dir).ok();
     // Real bytes actually moved through the sockets.
     assert!(tcp.total_bytes() > 10_000, "tcp bytes {}", tcp.total_bytes());
 }

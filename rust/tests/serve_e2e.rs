@@ -134,6 +134,113 @@ fn admm_snapshot_roundtrips_and_serves_bitwise_identical() {
 }
 
 #[test]
+fn crash_resume_save_serve_is_bitwise_identical_to_uninterrupted() {
+    use cgcn::coordinator::checkpoint::{self, CheckpointSink, CkptMeta, TrainCheckpoint};
+
+    let ws = caveman_workspace(3);
+    let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+
+    // Uninterrupted reference pipeline: train 6 epochs → snapshot.
+    let mut full =
+        AdmmTrainer::new(ws.clone(), backend.clone(), AdmmOptions::for_mode(ws.m)).unwrap();
+    full.train(6, "full").unwrap();
+    let full_path = temp_path("full.cgnm");
+    full.save_model(&full_path, meta("e2e-ckpt", &ws)).unwrap();
+
+    // Interrupted pipeline: checkpoint every 3 epochs, train 3, then the
+    // process "dies" (trainer dropped, nothing persisted but the .cgck).
+    let ckpt_dir = std::env::temp_dir().join(format!("cgcn_e2e_ckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    let cmeta = CkptMeta {
+        snap: meta("e2e-ckpt", &ws),
+        method: "admm".into(),
+        rho: ws.hp.rho,
+        nu: ws.hp.nu,
+    };
+    let sink = CheckpointSink::new(3, ckpt_dir.clone(), cmeta).unwrap();
+    {
+        let mut pre = AdmmTrainer::new(
+            ws.clone(),
+            backend.clone(),
+            AdmmOptions::for_mode(ws.m),
+        )
+        .unwrap();
+        pre.train_range(0, 3, "pre-crash", Some(&sink)).unwrap();
+    } // crash
+
+    // Resume in a "fresh process": rebuild the workspace from checkpoint
+    // metadata alone, restore, finish training, snapshot.
+    let ck_path = checkpoint::latest_in_dir(&ckpt_dir)
+        .unwrap()
+        .expect("checkpoint written before crash");
+    let ck = TrainCheckpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.epoch, 3);
+    let mut hp = ck.meta.snap.base_hyperparams();
+    hp.rho = ck.meta.rho;
+    hp.nu = ck.meta.nu;
+    let ds = cgcn::cmd::load_dataset(&ck.meta.snap.dataset, ck.meta.snap.scale, ck.meta.snap.seed)
+        .unwrap();
+    let rws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+    let mut resumed =
+        AdmmTrainer::new(rws.clone(), backend.clone(), AdmmOptions::for_mode(rws.m)).unwrap();
+    checkpoint::restore_admm(&mut resumed, &ck).unwrap();
+    resumed.train_range(3, 6, "resumed", None).unwrap();
+    let resumed_path = temp_path("resumed.cgnm");
+    resumed
+        .save_model(&resumed_path, meta("e2e-ckpt", &rws))
+        .unwrap();
+
+    // The two snapshots are byte-identical (weights AND metadata).
+    let full_bytes = std::fs::read(&full_path).unwrap();
+    let resumed_bytes = std::fs::read(&resumed_path).unwrap();
+    assert_eq!(
+        full_bytes, resumed_bytes,
+        "resumed .cgnm differs from the uninterrupted pipeline's"
+    );
+
+    // Serve the resumed model; served logits must equal the uninterrupted
+    // pipeline's in-process forward pass bitwise.
+    let snap = load_model(&resumed_path).unwrap();
+    std::fs::remove_file(&full_path).ok();
+    std::fs::remove_file(&resumed_path).ok();
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    let mut reference = InferenceSession::new(ws.clone(), backend.clone(), full.state.w.clone())
+        .unwrap();
+    let full_logits = reference.full_logits().unwrap();
+    let session = InferenceSession::from_snapshot(&snap, backend).unwrap();
+    let n = session.n();
+    let handle = serve(
+        session,
+        &ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 2,
+            batch_window_us: 200,
+            max_batch: 64,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let ids: Vec<usize> = (0..n).collect();
+    for chunk in ids.chunks(64) {
+        let rows = client.query(chunk).unwrap();
+        assert_eq!(rows.len(), chunk.len());
+        for (row, &id) in rows.iter().zip(chunk) {
+            assert_eq!(
+                row.as_slice(),
+                full_logits.row(id),
+                "served logits after crash+resume differ at node {id}"
+            );
+        }
+    }
+    let mut closer = ServeClient::connect(&addr).unwrap();
+    closer.shutdown().unwrap();
+    drop(closer);
+    drop(client);
+    handle.wait();
+}
+
+#[test]
 fn baseline_snapshot_serves_too() {
     let ws = caveman_workspace(2);
     let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
