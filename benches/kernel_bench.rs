@@ -1,0 +1,294 @@
+//! Kernel runtime benchmark: persistent fork-join pool vs spawn-per-op.
+//!
+//! Sweeps every pooled kernel (dense matmuls, nnz-balanced SpMM, the
+//! elementwise residual/prox family, softmax-xent, FISTA) over
+//! op-threads ∈ {1,2,4,8} under both executors, then times end-to-end
+//! ADMM and Cluster-GCN epochs the same way. Results land in
+//! `BENCH_kernels.json`; the calibrated per-op thresholds in
+//! `OpGrains::calibrated()` cite these numbers.
+//!
+//! Env knobs:
+//!   CGCN_BENCH_QUICK=1  — CI quick mode: fewer iters/threads/shapes,
+//!                         epoch section trimmed to the 8-thread A/B pair.
+//!   CGCN_BENCH_GATE=1   — exit non-zero if the pooled executor is slower
+//!                         than spawn-per-op (>10% to absorb timer noise)
+//!                         at 8 threads on the reference shapes.
+//!   CGCN_BENCH_EPOCHS   — timed epochs per end-to-end cell.
+
+use cgcn::bench::{bench, fmt_secs, section, BenchOpts};
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::data::synth;
+use cgcn::partition::Method;
+use cgcn::runtime::{ComputeBackend, NativeBackend};
+use cgcn::tensor::Matrix;
+use cgcn::util::json::Json;
+use cgcn::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_flag(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// One measured (op, shape, threads, executor) cell.
+struct Cell {
+    op: &'static str,
+    shape: String,
+    threads: usize,
+    exec: &'static str,
+    p50: f64,
+    mean: f64,
+}
+
+impl Cell {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(self.op)),
+            ("shape", Json::str(&self.shape)),
+            ("threads", Json::num(self.threads as f64)),
+            ("exec", Json::str(self.exec)),
+            ("p50_s", Json::num(self.p50)),
+            ("mean_s", Json::num(self.mean)),
+        ])
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+    let quick = env_flag("CGCN_BENCH_QUICK");
+    let gate = env_flag("CGCN_BENCH_GATE");
+    let opts = if quick {
+        BenchOpts {
+            warmup_iters: 1,
+            iters: 7,
+        }
+    } else {
+        BenchOpts::default()
+    };
+    let threads_sweep: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8] };
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "kernel_bench: host has {host_threads} hardware threads{}",
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    // Fixture: the synthetic photo graph drives SpMM (real Ã sparsity and
+    // the skewed row-nnz distribution the balanced chunking targets); the
+    // dense shapes mirror the layer-1 subproblem (n × F → n × H).
+    let ds = Arc::new(synth::generate(&synth::AMAZON_PHOTO, 0.25, 17));
+    let a = ds.graph.normalized_adjacency();
+    let n = a.ncols();
+    let mut rng = Rng::new(7);
+    let x_f = Matrix::glorot(n, 745, &mut rng); // features
+    let w1 = Matrix::glorot(745, 256, &mut rng);
+    let h = Matrix::glorot(n, 256, &mut rng); // hidden activations
+    let g = Matrix::glorot(n, 256, &mut rng); // same-shape gradient
+    let z8 = Matrix::glorot(n, 8, &mut rng); // logit-width block
+    let y8 = Matrix::zeros(n, 8);
+    let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let denom = mask.iter().sum::<f32>().max(1.0);
+
+    // ---- kernel sweep: op × shape × threads × executor --------------------
+    section("kernel sweep (grain forced to 0 so every cell actually forks)");
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut ref_pool_p50 = f64::NAN; // reference cells for the CI gate
+    let mut ref_spawn_p50 = f64::NAN;
+    for &t in threads_sweep {
+        for spawn in [false, true] {
+            if spawn && t == 1 {
+                continue; // t=1 never dispatches; identical to pooled
+            }
+            let be = if spawn {
+                NativeBackend::with_spawn_grain(t, 0)
+            } else {
+                NativeBackend::with_grain(t, 0)
+            };
+            let exec = if spawn { "spawn" } else { "pool" };
+            let mut run = |op: &'static str, shape: String, f: &mut dyn FnMut()| {
+                let s = bench(opts, f);
+                println!(
+                    "{exec:<5} t={t}  {op:<15} {shape:<16} {:>10}/iter",
+                    fmt_secs(s.p50)
+                );
+                cells.push(Cell {
+                    op,
+                    shape,
+                    threads: t,
+                    exec,
+                    p50: s.p50,
+                    mean: s.mean,
+                });
+                s.p50
+            };
+            run("mm_nn", format!("{n}x745x256"), &mut || {
+                be.mm_nn(&x_f, &w1).unwrap();
+            });
+            run("mm_tn", format!("745x{n}x256"), &mut || {
+                be.mm_tn(&x_f, &h).unwrap();
+            });
+            run("mm_bt", format!("{n}x256x745"), &mut || {
+                be.mm_bt(&h, &w1).unwrap();
+            });
+            run("spmm", format!("nnz{}x256", a.nnz()), &mut || {
+                be.spmm(&a, &h);
+            });
+            let p50 = run("hidden_residual", format!("{n}x256"), &mut || {
+                be.hidden_residual(&h, &g, 1.0).unwrap();
+            });
+            // Reference cells for the CI gate: the elementwise family is
+            // where spawn overhead dominates, so a pooled regression shows
+            // up here first.
+            if t == 8 {
+                if spawn {
+                    ref_spawn_p50 = p50;
+                } else {
+                    ref_pool_p50 = p50;
+                }
+            }
+            run("z_combine", format!("{n}x256"), &mut || {
+                be.z_combine(&h, &g, &g, 1.0, 1.0).unwrap();
+            });
+            run("xent_loss", format!("{n}x8"), &mut || {
+                be.xent_loss(&z8, &y8, &mask, denom).unwrap();
+            });
+            if !quick {
+                run("zl_fista(10)", format!("{n}x8"), &mut || {
+                    be.zl_fista(&z8, &y8, &y8, &mask, &z8, 1.0, denom, 10)
+                        .unwrap();
+                });
+            }
+        }
+    }
+
+    // ---- end-to-end epochs: ADMM + Cluster-GCN ---------------------------
+    // Agent executor stays serial so the measurement isolates *kernel*
+    // parallelism (the regime `--op-threads` controls); the A/B flips only
+    // the executor behind the same backend trait.
+    section("end-to-end epoch time (pool vs spawn, agent loop serial)");
+    let epochs: usize = env_or("CGCN_BENCH_EPOCHS", if quick { 2 } else { 5 });
+    let hp = HyperParams::for_dataset("synth-photo");
+    let mut epoch_rows: Vec<Json> = Vec::new();
+    let mut admm_pool8 = f64::NAN;
+    let mut admm_spawn8 = f64::NAN;
+    let epoch_threads: &[usize] = if quick { &[8] } else { threads_sweep };
+    for &t in epoch_threads {
+        for spawn in [false, true] {
+            if spawn && t == 1 {
+                continue;
+            }
+            let backend: Arc<dyn ComputeBackend> = if spawn {
+                Arc::new(NativeBackend::with_spawn_threads(t))
+            } else {
+                Arc::new(NativeBackend::with_threads(t))
+            };
+            let exec = if spawn { "spawn" } else { "pool" };
+
+            let mut hp_m = hp.clone();
+            hp_m.communities = 3;
+            let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
+            let mut trainer =
+                AdmmTrainer::new(ws, backend.clone(), AdmmOptions::for_mode(3))?;
+            trainer.train(1, "warmup")?; // page in + fill the arena
+            let t0 = Instant::now();
+            trainer.train(epochs, "bench")?;
+            let admm_s = t0.elapsed().as_secs_f64() / epochs as f64;
+
+            let mut hp_fb = hp.clone();
+            hp_fb.communities = 1;
+            let ws_fb = Arc::new(Workspace::build(&ds, &hp_fb, Method::Metis)?);
+            let mut cg = cgcn::baselines::ClusterGcnTrainer::new(
+                ds.clone(),
+                ws_fb,
+                backend.clone(),
+                cgcn::baselines::Optimizer::parse("adam", None)?,
+                cgcn::baselines::ClusterGcnOptions::default(),
+            )?;
+            cg.train_epoch()?; // warmup
+            let t0 = Instant::now();
+            for _ in 0..epochs {
+                cg.train_epoch()?;
+            }
+            let cg_s = t0.elapsed().as_secs_f64() / epochs as f64;
+
+            println!(
+                "{exec:<5} op-threads={t}:  admm {:>10}/epoch   cluster-gcn {:>10}/epoch",
+                fmt_secs(admm_s),
+                fmt_secs(cg_s)
+            );
+            if t == 8 {
+                if spawn {
+                    admm_spawn8 = admm_s;
+                } else {
+                    admm_pool8 = admm_s;
+                }
+            }
+            epoch_rows.push(Json::obj(vec![
+                ("trainer", Json::str("admm")),
+                ("threads", Json::num(t as f64)),
+                ("exec", Json::str(exec)),
+                ("epoch_s", Json::num(admm_s)),
+            ]));
+            epoch_rows.push(Json::obj(vec![
+                ("trainer", Json::str("cluster_gcn")),
+                ("threads", Json::num(t as f64)),
+                ("exec", Json::str(exec)),
+                ("epoch_s", Json::num(cg_s)),
+            ]));
+        }
+    }
+
+    // ---- gate + JSON ------------------------------------------------------
+    let ref_ok = ref_pool_p50 <= ref_spawn_p50 * 1.10;
+    let out = Json::obj(vec![
+        ("bench", Json::str("kernel_bench")),
+        ("host_threads", Json::num(host_threads as f64)),
+        ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
+        ("spmm_nnz", Json::num(a.nnz() as f64)),
+        ("kernels", Json::arr(cells.iter().map(Cell::json).collect())),
+        ("epochs", Json::arr(epoch_rows)),
+        (
+            "gate",
+            Json::obj(vec![
+                ("ref_op", Json::str("hidden_residual")),
+                ("ref_threads", Json::num(8.0)),
+                ("pool_p50_s", Json::num(ref_pool_p50)),
+                ("spawn_p50_s", Json::num(ref_spawn_p50)),
+                ("pool_not_slower", Json::num(if ref_ok { 1.0 } else { 0.0 })),
+                ("admm_pool_epoch_s", Json::num(admm_pool8)),
+                ("admm_spawn_epoch_s", Json::num(admm_spawn8)),
+                (
+                    "admm_pool_speedup",
+                    Json::num(admm_spawn8 / admm_pool8),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_kernels.json", out.to_pretty() + "\n")?;
+    println!(
+        "\n(wrote BENCH_kernels.json; pool {:>10} vs spawn {:>10} on hidden_residual@8t, \
+         admm epoch pool {:>10} vs spawn {:>10})",
+        fmt_secs(ref_pool_p50),
+        fmt_secs(ref_spawn_p50),
+        fmt_secs(admm_pool8),
+        fmt_secs(admm_spawn8)
+    );
+    if gate && !ref_ok {
+        anyhow::bail!(
+            "gate: pooled executor slower than spawn-per-op at 8 threads \
+             (pool {:.3e}s vs spawn {:.3e}s on hidden_residual {n}x256)",
+            ref_pool_p50,
+            ref_spawn_p50
+        );
+    }
+    Ok(())
+}

@@ -124,4 +124,11 @@ cmp "$SMOKE_DIR/resumed.cgnm" "$SMOKE_DIR/uninterrupted.cgnm"
 echo "==> quickstart example (release)"
 cargo run --release --example quickstart >/dev/null
 
+echo "==> kernel bench quick gate (pooled executor must not lose to spawn-per-op)"
+# Writes BENCH_kernels.json; CGCN_BENCH_GATE makes the bench exit non-zero
+# if the persistent pool is slower (>10% noise margin) than the legacy
+# spawn-per-op executor at 8 threads on the reference elementwise shape.
+CGCN_BENCH_QUICK=1 CGCN_BENCH_GATE=1 cargo bench --bench kernel_bench
+[[ -s BENCH_kernels.json ]] || { echo "kernel bench wrote no BENCH_kernels.json"; exit 1; }
+
 echo "CI OK"

@@ -134,7 +134,14 @@ fn open_session(args: &Args) -> anyhow::Result<crate::serve::InferenceSession> {
     let snap = crate::serve::load_model(std::path::Path::new(&model))?;
     let choice = crate::runtime::BackendChoice::parse(&args.get_str("backend"))
         .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
-    let backend = crate::runtime::select_backend(choice, args.get_usize("op-threads").max(1))?;
+    // Serving: `--op-threads 0` auto-sizes to all cores; request-level
+    // parallelism comes from the connection pool, so heavy per-query
+    // batches still benefit from pooled kernels past the flop grain.
+    let op_threads = match args.get_usize("op-threads") {
+        0 => crate::util::pool::resolve_threads(0),
+        n => n,
+    };
+    let backend = crate::runtime::select_backend(choice, op_threads, args.get_flag("op-spawn"))?;
     log::info!(
         "model '{}' ({}, dims {:?}) on backend {}",
         model,

@@ -48,7 +48,7 @@ use crate::metrics::{EpochRecord, RunReport};
 use crate::runtime::ComputeBackend;
 use crate::serve::{ModelSnapshot, SnapshotMeta};
 use crate::tensor::{argmax_rows, Matrix};
-use crate::util::pool::{resolve_threads, scoped_map, Pool};
+use crate::util::pool::{fj_map, resolve_threads, FjPool, Pool};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::{mpsc, Arc};
@@ -147,6 +147,12 @@ pub struct AdmmTrainer {
     pub state: AdmmState,
     /// Worker pool for `ExecMode::Threads` (one task per community agent).
     pool: Option<Pool>,
+    /// Persistent fork-join pool for the borrowed-data per-community
+    /// W-partial maps in `ExecMode::Threads` (`pool` only takes `'static`
+    /// jobs). Sharing one pool between agent jobs and op parallelism is a
+    /// ROADMAP item; the nested-fork guard in [`crate::util::pool`] makes
+    /// the two coexist safely today.
+    fj: Option<FjPool>,
     /// Resolved thread count (1 in serial mode).
     threads: usize,
 }
@@ -205,6 +211,11 @@ impl AdmmTrainer {
         } else {
             None
         };
+        let fj = if opts.exec == ExecMode::Threads {
+            Some(FjPool::new(threads.min(ws.m.max(1))))
+        } else {
+            None
+        };
         if opts.exec == ExecMode::Threads {
             log::info!(
                 "agent runtime: {} communities on {} pool threads (backend={})",
@@ -231,6 +242,7 @@ impl AdmmTrainer {
             backend,
             opts,
             pool,
+            fj,
             threads,
         })
     }
@@ -325,13 +337,14 @@ impl AdmmTrainer {
         let (nu, rho) = (ws.hp.nu, ws.hp.rho);
         let backend = self.backend.clone();
         let par = self.exec_threads();
+        let fj = self.fj.as_ref();
 
         // S_m = Σ_r Ã_{m,r} Z_{l-1,r} — one sparse aggregate per community,
         // reused by every backtracking trial. For l = 1 it equals the
         // *static* per-community H0 rows (X never changes), so no SpMM at
         // all.
         let state_z = &self.state.z;
-        let s_results: Vec<(Option<Matrix>, f64)> = scoped_map(par, ws.m, |mi| {
+        let s_results: Vec<(Option<Matrix>, f64)> = fj_map(fj, par, ws.m, |mi| {
             if l == 1 {
                 return (None, 0.0);
             }
@@ -358,7 +371,7 @@ impl AdmmTrainer {
         let w_k = &self.state.w[l - 1];
         let zl = &self.state.z[l - 1];
         let u = &self.state.u;
-        let partials: Vec<Result<(f32, Matrix, f64)>> = scoped_map(par, ws.m, |mi| {
+        let partials: Vec<Result<(f32, Matrix, f64)>> = fj_map(fj, par, ws.m, |mi| {
             let t0 = Instant::now();
             let pre = backend.mm_nn(s_refs[mi], w_k)?;
             let (phi_m, r_m) = if last {
@@ -367,6 +380,8 @@ impl AdmmTrainer {
                 backend.hidden_residual(&pre, &zl[mi], nu)?
             };
             let g_m = backend.mm_tn(s_refs[mi], &r_m)?;
+            backend.recycle(pre);
+            backend.recycle(r_m);
             Ok((phi_m, g_m, t0.elapsed().as_secs_f64()))
         });
         let mut phi0 = 0.0f32;
@@ -375,6 +390,7 @@ impl AdmmTrainer {
             let (phi_m, g_m, secs) = res?;
             phi0 += phi_m;
             gw.add_assign(&g_m);
+            backend.recycle(g_m);
             per_comm_secs[mi] += secs;
         }
         let gsq = gw.frob_norm_sq() as f32;
@@ -389,7 +405,7 @@ impl AdmmTrainer {
             let mut cand = self.state.w[l - 1].clone();
             cand.axpy(-1.0 / tau, &gw);
             let cand_ref = &cand;
-            let trial: Vec<Result<(f32, f64)>> = scoped_map(par, ws.m, |mi| {
+            let trial: Vec<Result<(f32, f64)>> = fj_map(fj, par, ws.m, |mi| {
                 let t0 = Instant::now();
                 let pre = backend.mm_nn(s_refs[mi], cand_ref)?;
                 let phi = if last {
@@ -397,6 +413,7 @@ impl AdmmTrainer {
                 } else {
                     backend.hidden_phi(&pre, &zl[mi], nu)?
                 };
+                backend.recycle(pre);
                 Ok((phi, t0.elapsed().as_secs_f64()))
             });
             let mut phi_c = 0.0f32;
@@ -425,6 +442,11 @@ impl AdmmTrainer {
         } else {
             tau
         };
+        // S_m aggregates are epoch-local temporaries; park them for reuse.
+        drop(s_refs);
+        for s in s_own.into_iter().flatten() {
+            backend.recycle(s);
+        }
         Ok(trials)
     }
 

@@ -219,6 +219,7 @@ impl CommunityAgent {
                 backend.hidden_residual(pre_own, &z_prev[l], nu)?
             };
             let mut g_acc = backend.spmm(&comm.blocks[&self.mi], &r_own);
+            backend.recycle(r_own);
 
             // Neighbor couplings (second-order terms, from received s).
             let mut s_cache: Vec<(usize, &Matrix, &Matrix)> = Vec::new();
@@ -235,14 +236,20 @@ impl CommunityAgent {
                 } else {
                     let mut pre = p_sent.clone();
                     pre.add_assign(&sm.s2);
-                    backend.hidden_residual(&pre, &sm.s1, nu)?
+                    let out = backend.hidden_residual(&pre, &sm.s1, nu)?;
+                    backend.recycle(pre);
+                    out
                 };
                 psi0 += val;
                 // Ã_{r,m}ᵀ R = Ã_{m,r} R — the block m already holds.
-                g_acc.add_assign(&backend.spmm(&comm.blocks[&r], &rr));
+                let gr = backend.spmm(&comm.blocks[&r], &rr);
+                g_acc.add_assign(&gr);
+                backend.recycle(gr);
+                backend.recycle(rr);
                 s_cache.push((r, &sm.s1, &sm.s2));
             }
             let gsum = backend.mm_bt(&g_acc, &ctx.w[l])?;
+            backend.recycle(g_acc);
 
             // ψ at a candidate Z (for θ backtracking).
             let u_ref = &self.u;
@@ -256,6 +263,7 @@ impl CommunityAgent {
                 } else {
                     backend.hidden_phi(&pre, &z_prev[l], nu)?
                 };
+                backend.recycle(pre);
                 for (r, s1, s2) in &s_cache {
                     let mut pre_r = backend.spmm(&comm.blocks_t[r], &v);
                     val += if out_layer {
@@ -264,7 +272,9 @@ impl CommunityAgent {
                         pre_r.add_assign(s2);
                         backend.hidden_phi(&pre_r, s1, nu)?
                     };
+                    backend.recycle(pre_r);
                 }
+                backend.recycle(v);
                 Ok(val)
             };
 
@@ -281,10 +291,12 @@ impl CommunityAgent {
                     accepted = Some(znew);
                     break;
                 }
+                backend.recycle(znew);
                 theta *= 2.0;
             }
+            backend.recycle(gsum);
             if let Some(znew) = accepted {
-                self.z[l - 1] = znew;
+                backend.recycle(std::mem::replace(&mut self.z[l - 1], znew));
             }
             if trials > 4 {
                 log::trace!(
@@ -307,6 +319,7 @@ impl CommunityAgent {
             // cross-community terms stay at k (p_cross).
             let v = backend.mm_nn(&self.z[l_total - 2], &ctx.w[l_total - 1])?;
             let mut q = backend.spmm(&comm.blocks[&self.mi], &v);
+            backend.recycle(v);
             q.add_assign(&p_cross[l_total - 1]);
             q
         } else {
@@ -324,10 +337,15 @@ impl CommunityAgent {
         )?;
 
         // ---- dual update (eq. 3, residual against the solved Q) -----------
-        let mut resid = z_l_new.clone();
-        resid.axpy(-1.0, &q);
-        self.u.axpy(rho, &resid);
-        self.z[l_total - 1] = z_l_new;
+        // axpy_sub is bitwise-equivalent to the former clone + axpy(-1) +
+        // axpy(rho) sequence and skips the residual allocation entirely.
+        self.u.axpy_sub(rho, &z_l_new, &q);
+        backend.recycle(q);
+        backend.recycle(std::mem::replace(&mut self.z[l_total - 1], z_l_new));
+        // The Jacobi snapshot is epoch-local; park it for reuse.
+        for m in z_prev {
+            backend.recycle(m);
+        }
         Ok(())
     }
 }

@@ -79,10 +79,18 @@ fn resolve_exec(args: &Args) -> Result<(ExecMode, usize, Arc<dyn ComputeBackend>
     let threads = args.get_usize("threads");
     let choice = BackendChoice::parse(&args.get_str("backend"))
         .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
-    // With a threaded agent executor the parallelism budget goes to the
-    // agents; keep native backend ops serial to avoid oversubscription.
-    let op_threads = if exec == ExecMode::Threads { 1 } else { threads.max(1) };
-    let backend = select_backend(choice, op_threads)?;
+    // Kernel-level parallelism: `--op-threads 0` (the default) auto-sizes.
+    // With the serial agent executor the whole parallelism budget goes to
+    // the kernels (persistent pool over all cores); with `--exec threads`
+    // it goes to the agent pool, so kernels stay serial to avoid
+    // oversubscription. Either way results are bitwise identical — the
+    // pooled kernels are deterministic at any thread count.
+    let op_threads = match args.get_usize("op-threads") {
+        0 if exec == ExecMode::Threads => 1,
+        0 => crate::util::pool::resolve_threads(0),
+        n => n,
+    };
+    let backend = select_backend(choice, op_threads, args.get_flag("op-spawn"))?;
     Ok((exec, threads, backend))
 }
 

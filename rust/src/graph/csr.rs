@@ -355,6 +355,53 @@ impl Csr {
             .map(|r| self.row(r).1.iter().sum())
             .collect()
     }
+
+    /// Split `0..nrows` into at most `chunks` contiguous row ranges of
+    /// (approximately) equal *nonzero* count, via binary search on the
+    /// `row_ptr` prefix sums. SpMM cost is proportional to nnz per row,
+    /// not row count, so this is the load-balanced partition for the
+    /// power-law degree distributions community partitioning concentrates
+    /// (equal-row chunking can leave one chunk holding nearly all the
+    /// work). The per-row kernel is unchanged, so any chunking — balanced
+    /// or uniform — produces bitwise-identical results.
+    ///
+    /// Ranges are non-empty, consecutive and cover `0..nrows` exactly; an
+    /// all-empty matrix falls back to uniform row splitting.
+    pub fn balanced_row_chunks(&self, chunks: usize) -> Vec<(usize, usize)> {
+        let chunks = chunks.max(1).min(self.nrows.max(1));
+        if self.nrows == 0 {
+            return Vec::new();
+        }
+        let nnz = self.nnz();
+        if chunks == 1 || nnz == 0 {
+            return crate::util::pool::uniform_chunks(chunks, self.nrows);
+        }
+        let target = nnz.div_ceil(chunks);
+        let mut out = Vec::with_capacity(chunks);
+        let mut lo = 0usize;
+        for ci in 1..=chunks {
+            if lo >= self.nrows {
+                break;
+            }
+            let hi = if ci == chunks {
+                self.nrows
+            } else {
+                // First row index whose prefix nnz reaches the chunk's
+                // cumulative target; forced past `lo` so every chunk is
+                // non-empty even when one row dominates the nnz budget.
+                let goal = (ci * target).min(nnz) as u32;
+                self.row_ptr
+                    .partition_point(|&p| p < goal)
+                    .clamp(lo + 1, self.nrows)
+            };
+            out.push((lo, hi));
+            lo = hi;
+        }
+        if let Some(last) = out.last_mut() {
+            last.1 = self.nrows;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -408,6 +455,65 @@ mod tests {
             let got = s.spmm(&x);
             assert_eq!(got.data(), full.slice_rows(lo, hi).data(), "{lo}..{hi}");
         }
+    }
+
+    #[test]
+    fn balanced_row_chunks_cover_and_balance() {
+        // Power-law-ish rows: row r has ~r nonzeros, so uniform row
+        // splitting would put most of the work in the last chunk.
+        let mut trips = Vec::new();
+        for r in 0..40usize {
+            for c in 0..r.min(39) {
+                trips.push((r, c, 1.0f32));
+            }
+        }
+        let a = Csr::from_triplets(40, 40, &trips);
+        for chunks in [1usize, 2, 3, 7, 8, 40, 100] {
+            let b = a.balanced_row_chunks(chunks);
+            assert!(!b.is_empty());
+            assert!(b.len() <= chunks.max(1).min(40));
+            let mut next = 0usize;
+            for &(lo, hi) in &b {
+                assert_eq!(lo, next, "chunks={chunks}");
+                assert!(hi > lo, "chunks={chunks}");
+                next = hi;
+            }
+            assert_eq!(next, 40, "chunks={chunks}");
+        }
+        // Balance: at 4 chunks no chunk should hold more than ~2x the
+        // ideal nnz share (the heaviest single row bounds the overshoot).
+        let b = a.balanced_row_chunks(4);
+        let ideal = a.nnz() as f64 / 4.0;
+        for &(lo, hi) in &b {
+            let nnz: usize = (lo..hi).map(|r| a.row(r).0.len()).sum();
+            assert!(
+                (nnz as f64) < 2.0 * ideal + 40.0,
+                "chunk {lo}..{hi} holds {nnz} nnz (ideal {ideal})"
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_row_chunks_degenerate_shapes() {
+        // Empty matrix → uniform fallback still covers all rows.
+        let empty = Csr::from_triplets(5, 5, &[]);
+        let b = empty.balanced_row_chunks(3);
+        assert_eq!(b.iter().map(|&(l, h)| h - l).sum::<usize>(), 5);
+        // One row owning every nonzero: chunks stay non-empty and cover.
+        let trips: Vec<(usize, usize, f32)> = (0..6).map(|c| (2usize, c, 1.0f32)).collect();
+        let spike = Csr::from_triplets(6, 6, &trips);
+        for chunks in [2usize, 3, 6] {
+            let b = spike.balanced_row_chunks(chunks);
+            let mut next = 0usize;
+            for &(lo, hi) in &b {
+                assert_eq!(lo, next);
+                assert!(hi > lo);
+                next = hi;
+            }
+            assert_eq!(next, 6);
+        }
+        // Zero-row matrix.
+        assert!(Csr::from_triplets(0, 4, &[]).balanced_row_chunks(4).is_empty());
     }
 
     #[test]

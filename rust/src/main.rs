@@ -79,7 +79,7 @@ fn main() {
     .opt("out", Some(""), "output path (plan json / csv / cgnp / loadgen json)")
     .opt("transport", Some("local"), "agent transport: local|channel|tcp (channel = in-process worker threads over mpsc, tcp = one worker process per community)")
     .opt("exec", Some("serial"), "agent execution: serial|threads (threads = real shared-memory parallelism)")
-    .opt("threads", Some("0"), "worker threads: train --exec threads agent pool, serve connection pool (0 = all cores); with --exec serial, sets native backend op threads (0 = 1, the deterministic single-thread baseline)")
+    .opt("threads", Some("0"), "worker threads: train --exec threads agent pool, serve connection pool (0 = all cores)")
     .opt("backend", Some("auto"), "compute backend: auto|native|xla")
     .opt("link-mbps", Some("10000"), "simulated link bandwidth (Mbit/s; default models the paper's same-machine agents)")
     .opt("link-lat-us", Some("100"), "simulated link latency (microseconds)")
@@ -96,12 +96,13 @@ fn main() {
     .opt("addr-file", Some(""), "serve: write the bound address to this file once ready")
     .opt("batch-window-us", Some("200"), "serve: micro-batch collection window in microseconds")
     .opt("max-batch", Some("256"), "serve: max queries coalesced into one backend batch")
-    .opt("op-threads", Some("1"), "serve/query: native backend op threads for inference")
+    .opt("op-threads", Some("0"), "native backend kernel threads (persistent pool; results are bitwise identical at any count). 0 = auto: all cores, or 1 under --exec threads to avoid oversubscribing the agent pool")
     .opt("nodes", Some(""), "query: comma-separated node ids")
     .opt("clients", Some("4"), "loadgen: concurrent client connections")
     .opt("requests", Some("200"), "loadgen: queries per client")
     .opt("nodes-per-query", Some("4"), "loadgen: node ids per query")
     .flag("parallel-layers", "ADMM: update W layers in parallel (paper Alg. 1)")
+    .flag("op-spawn", "use the legacy spawn-per-op kernel executor instead of the persistent pool (A/B benchmarking)")
     .flag("csv", "emit per-epoch CSV to stdout")
     .flag("verify", "query: check served logits bitwise against an in-process forward pass of --model")
     .flag("shutdown-server", "query: ask the server to stop");

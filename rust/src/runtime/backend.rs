@@ -3,11 +3,16 @@
 //!
 //! Two implementations:
 //!
-//! - [`NativeBackend`] — pure Rust, always available. Hot paths (dense
-//!   matmul variants, [`Csr::spmm`]) are row-block parallelised through
-//!   [`crate::util::pool`] when constructed with > 1 thread; every output
-//!   row is produced by the same scalar loop the serial path runs, so
-//!   results are bitwise identical at any thread count.
+//! - [`NativeBackend`] — pure Rust, always available. All hot paths (dense
+//!   matmul variants, [`Csr::spmm`], the elementwise ADMM kernels and the
+//!   softmax grad path) are row-block parallelised through a persistent
+//!   [`FjPool`] when constructed with > 1 thread; every output row is
+//!   produced by the same scalar loop the serial path runs and every
+//!   reduction is folded on the caller in row order, so results are
+//!   bitwise identical at any thread count. Temporaries come from a
+//!   per-backend scratch [`Arena`]; callers hand them back through
+//!   [`ComputeBackend::recycle`] to keep the inner ADMM loops
+//!   allocation-free.
 //! - `XlaBackend` (behind `--features xla`) — wraps the PJRT [`Engine`] and
 //!   dispatches each call to the AOT-compiled artifact with the matching
 //!   shape signature, exactly as the seed trainers did directly.
@@ -18,12 +23,17 @@
 //! cross-entropy with an explicit global denominator, FISTA with the
 //! static 1/(ρ + ½) step). `rust/tests/integration_engine.rs` asserts both
 //! backends agree with the host reference ops in [`crate::tensor`].
+//!
+//! See DESIGN.md §9 for the kernel-runtime architecture (FjPool lifecycle,
+//! nnz-balanced SpMM partitioning, arena ownership, and the
+//! bitwise-determinism argument).
 
 use crate::graph::Csr;
 use crate::tensor::Matrix;
-use crate::util::pool::{parallel_row_chunks, resolve_threads};
+use crate::util::pool::{dispatch_ranges, resolve_threads, uniform_chunks, FjPool, OpExec, SendPtr};
 use anyhow::Result;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Dense-kernel execution interface shared by the ADMM trainer, the
 /// backprop baselines, the Cluster-GCN mini-batch engine, evaluation,
@@ -116,6 +126,13 @@ pub trait ComputeBackend: Send + Sync {
         a.spmm(x)
     }
 
+    /// Hand a temporary matrix back to the backend so its allocation can
+    /// be reused by a later kernel of the same size. Purely an
+    /// optimisation hook: dropping the matrix instead is always correct.
+    /// No-op by default; [`NativeBackend`] parks the buffer in its
+    /// scratch arena.
+    fn recycle(&self, _m: Matrix) {}
+
     /// Pre-compile the given artifact signatures (startup, off the timed
     /// path). No-op for backends that compile nothing.
     fn warmup(&self, _sigs: &[String]) -> Result<()> {
@@ -124,60 +141,277 @@ pub trait ComputeBackend: Send + Sync {
 }
 
 // ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Size-bucketed free lists of `f32`/`f64` buffers, so the per-epoch hot
+/// loops (`zl_fista`, the residual/combine kernels, backprop temporaries)
+/// stop allocating once warm. Buffers are keyed by exact length; each
+/// bucket keeps at most [`ARENA_BUCKET_CAP`] entries and anything beyond
+/// that is simply dropped, bounding retained memory at a small multiple of
+/// the live working set.
+///
+/// Ownership rule: a buffer taken from the arena is owned by exactly one
+/// kernel call (or returned to the caller inside a [`Matrix`]); it re-enters
+/// the arena only through an explicit `put` / [`ComputeBackend::recycle`].
+/// Plain `take` returns *stale* contents — callers must overwrite every
+/// element (all elementwise kernels do); accumulating kernels use
+/// `take_zeroed`.
+#[derive(Default)]
+struct Arena {
+    f32s: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    f64s: Mutex<HashMap<usize, Vec<Vec<f64>>>>,
+}
+
+/// Max recycled buffers retained per exact size.
+const ARENA_BUCKET_CAP: usize = 16;
+
+impl Arena {
+    /// A `len`-sized f32 buffer with unspecified (stale) contents.
+    fn take_f32(&self, len: usize) -> Vec<f32> {
+        if let Some(v) = self.f32s.lock().unwrap().get_mut(&len).and_then(Vec::pop) {
+            return v;
+        }
+        vec![0.0; len]
+    }
+
+    /// A `len`-sized f32 buffer guaranteed all-zero.
+    fn take_f32_zeroed(&self, len: usize) -> Vec<f32> {
+        if let Some(mut v) = self.f32s.lock().unwrap().get_mut(&len).and_then(Vec::pop) {
+            v.fill(0.0);
+            return v;
+        }
+        vec![0.0; len]
+    }
+
+    fn put_f32(&self, v: Vec<f32>) {
+        let mut map = self.f32s.lock().unwrap();
+        let bucket = map.entry(v.len()).or_default();
+        if bucket.len() < ARENA_BUCKET_CAP {
+            bucket.push(v);
+        }
+    }
+
+    /// A `len`-sized f64 buffer with unspecified (stale) contents
+    /// (reduction partials: every slot is written before being read).
+    fn take_f64(&self, len: usize) -> Vec<f64> {
+        if let Some(v) = self.f64s.lock().unwrap().get_mut(&len).and_then(Vec::pop) {
+            return v;
+        }
+        vec![0.0; len]
+    }
+
+    fn put_f64(&self, v: Vec<f64>) {
+        let mut map = self.f64s.lock().unwrap();
+        let bucket = map.entry(v.len()).or_default();
+        if bucket.len() < ARENA_BUCKET_CAP {
+            bucket.push(v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-op parallelism grains
+// ---------------------------------------------------------------------------
+
+/// Per-op minimum estimated-flop thresholds below which an op runs
+/// serially even on a multi-thread backend.
+///
+/// Why per-op rather than the old single `MIN_PAR_FLOPS = 1<<21`:
+///
+/// - The persistent [`FjPool`] dispatch costs ~1–2 µs (a mutex round-trip
+///   plus a condvar wake) versus ~30–60 µs for the spawn-per-op
+///   `thread::scope` path the old constant was calibrated against, so the
+///   profitable crossover moves down by roughly an order of magnitude for
+///   every dense op.
+/// - `mm_tn` skips zero inputs, and its left operand in the trainers is a
+///   post-ReLU activation (typically ~50–75 % zeros), so its nominal
+///   `2·a·b·n` estimate overstates real work by ~2–4×. Its threshold is
+///   therefore kept a factor ~8 *higher* than `mm_nn`'s rather than
+///   lowered with the rest.
+/// - `spmm`'s `2·nnz·k` estimate is exact, and the kernel is memory-bound
+///   (one streamed `x` row per nonzero), so it parallelises profitably
+///   earliest of all.
+///
+/// These values are the measured crossover region on the
+/// `benches/kernel_bench.rs` reference shapes (op × shape × threads sweep);
+/// re-run `cargo bench --bench kernel_bench` and inspect
+/// `BENCH_kernels.json` to recalibrate on new hardware.
+#[derive(Clone, Copy, Debug)]
+pub struct OpGrains {
+    /// `mm_nn`/`fwd_relu`, estimate `2·n·a·b`.
+    pub mm_nn: usize,
+    /// `mm_tn`, nominal estimate `2·a·b·n` (pessimistic on sparse inputs).
+    pub mm_tn: usize,
+    /// `mm_bt`, estimate `2·n·a·k`.
+    pub mm_bt: usize,
+    /// `spmm`, exact estimate `2·nnz·k`.
+    pub spmm: usize,
+    /// Elementwise residual/combine/FISTA-update kernels, estimate
+    /// ~`6–10·len`.
+    pub eltwise: usize,
+    /// Softmax cross-entropy rows, estimate `8·n·c`.
+    pub xent: usize,
+}
+
+impl OpGrains {
+    /// The calibrated defaults described on the struct.
+    pub fn calibrated() -> OpGrains {
+        OpGrains {
+            mm_nn: 1 << 19,
+            mm_tn: 1 << 22,
+            mm_bt: 1 << 19,
+            spmm: 1 << 17,
+            eltwise: 1 << 19,
+            xent: 1 << 19,
+        }
+    }
+
+    /// The same threshold for every op (tests/benches use 0 to force the
+    /// parallel path on tiny shapes).
+    pub fn uniform(grain: usize) -> OpGrains {
+        OpGrains {
+            mm_nn: grain,
+            mm_tn: grain,
+            mm_bt: grain,
+            spmm: grain,
+            eltwise: grain,
+            xent: grain,
+        }
+    }
+}
+
+impl Default for OpGrains {
+    fn default() -> Self {
+        OpGrains::calibrated()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // NativeBackend
 // ---------------------------------------------------------------------------
 
-/// Pure-Rust backend. `threads > 1` row-block parallelises matmul/SpMM via
-/// scoped workers once an op's flop count crosses `min_par_flops`
-/// (bitwise-identical results either way — see [`crate::util::pool`]).
+/// Pure-Rust backend. With `threads > 1` every kernel is row-block
+/// parallelised over a persistent [`FjPool`] once its estimated flop count
+/// crosses the per-op [`OpGrains`] threshold; results are bitwise
+/// identical to serial either way (see [`crate::util::pool`] and
+/// DESIGN.md §9). `with_spawn_threads` keeps the legacy spawn-per-op
+/// executor as an A/B reference (`--op-spawn`).
 pub struct NativeBackend {
     threads: usize,
-    min_par_flops: usize,
+    grains: OpGrains,
+    /// Persistent fork-join pool; `None` when serial or in spawn mode.
+    pool: Option<FjPool>,
+    /// Use the legacy `thread::scope` spawn-per-op executor.
+    spawn_ops: bool,
+    arena: Arena,
 }
 
-/// Below this many flops a dense op runs serially even on a multi-thread
-/// backend — thread fork/join (~tens of µs) would dominate.
-const MIN_PAR_FLOPS: usize = 1 << 21;
-
 impl NativeBackend {
-    /// Single-threaded backend (the deterministic baseline).
+    fn build(threads: usize, grains: OpGrains, spawn_ops: bool) -> NativeBackend {
+        let pool = if threads > 1 && !spawn_ops {
+            Some(FjPool::new(threads))
+        } else {
+            None
+        };
+        NativeBackend {
+            threads,
+            grains,
+            pool,
+            spawn_ops,
+            arena: Arena::default(),
+        }
+    }
+
+    /// Single-threaded backend (the deterministic baseline — though since
+    /// parallel results are bitwise identical, "baseline" here only means
+    /// "no worker threads").
     pub fn new() -> NativeBackend {
-        NativeBackend {
-            threads: 1,
-            min_par_flops: MIN_PAR_FLOPS,
-        }
+        NativeBackend::build(1, OpGrains::calibrated(), false)
     }
 
-    /// Backend with op-level row parallelism on up to `threads` workers
-    /// (0 = all available cores).
+    /// Backend with op-level row parallelism on a persistent pool of up to
+    /// `threads` workers (0 = all available cores).
     pub fn with_threads(threads: usize) -> NativeBackend {
-        NativeBackend {
-            threads: resolve_threads(threads),
-            min_par_flops: MIN_PAR_FLOPS,
-        }
+        NativeBackend::build(resolve_threads(threads), OpGrains::calibrated(), false)
     }
 
-    /// Like [`NativeBackend::with_threads`] but with an explicit
+    /// Like [`NativeBackend::with_threads`] but with a uniform explicit
     /// parallelism grain (tests/benches use 0 to force the parallel path
     /// on tiny shapes).
     pub fn with_grain(threads: usize, min_par_flops: usize) -> NativeBackend {
-        NativeBackend {
-            threads: resolve_threads(threads),
-            min_par_flops,
-        }
+        NativeBackend::build(resolve_threads(threads), OpGrains::uniform(min_par_flops), false)
+    }
+
+    /// Legacy spawn-per-op backend: same kernels, but parallel ops fork
+    /// fresh scoped threads instead of using the persistent pool. Kept as
+    /// the `--op-spawn` A/B reference for `benches/kernel_bench.rs`.
+    pub fn with_spawn_threads(threads: usize) -> NativeBackend {
+        NativeBackend::build(resolve_threads(threads), OpGrains::calibrated(), true)
+    }
+
+    /// [`NativeBackend::with_spawn_threads`] with a uniform explicit grain.
+    pub fn with_spawn_grain(threads: usize, min_par_flops: usize) -> NativeBackend {
+        NativeBackend::build(resolve_threads(threads), OpGrains::uniform(min_par_flops), true)
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Threads to use for an op costing `flops`.
-    fn par(&self, flops: usize) -> usize {
-        if self.threads > 1 && flops >= self.min_par_flops {
+    /// Threads to use for an op with estimated cost `flops` gated by
+    /// per-op threshold `grain`.
+    fn par(&self, flops: usize, grain: usize) -> usize {
+        if self.threads > 1 && flops >= grain {
             self.threads
         } else {
             1
         }
+    }
+
+    /// The executor for an op that resolved to `t` threads.
+    fn exec(&self, t: usize) -> OpExec<'_> {
+        if t <= 1 {
+            OpExec::Serial
+        } else if let Some(p) = &self.pool {
+            OpExec::Pool(p)
+        } else if self.spawn_ops {
+            OpExec::Spawn
+        } else {
+            OpExec::Serial
+        }
+    }
+
+    /// A `rows × cols` matrix whose buffer is all-zero (for accumulating
+    /// kernels), drawn from the arena when possible.
+    fn take_mat_zeroed(&self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.arena.take_f32_zeroed(rows * cols))
+    }
+
+    /// A `rows × cols` matrix with stale contents — every element must be
+    /// written before the matrix escapes the kernel.
+    fn take_mat_stale(&self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.arena.take_f32(rows * cols))
+    }
+
+    /// An arena-backed copy of `src`.
+    fn take_mat_copy(&self, src: &Matrix) -> Matrix {
+        let mut v = self.arena.take_f32(src.rows() * src.cols());
+        v.copy_from_slice(src.data());
+        Matrix::from_vec(src.rows(), src.cols(), v)
+    }
+
+    /// Fold row partials in ascending row order on the calling thread —
+    /// the one reduction order used by serial and parallel paths alike,
+    /// which is what keeps reduction outputs bitwise identical across
+    /// thread counts.
+    fn fold_partials(&self, partials: Vec<f64>) -> f64 {
+        let mut acc = 0.0f64;
+        for &p in &partials {
+            acc += p;
+        }
+        self.arena.put_f64(partials);
+        acc
     }
 
     fn matmul(&self, x: &Matrix, w: &Matrix, relu: bool) -> Matrix {
@@ -191,9 +425,13 @@ impl NativeBackend {
             w.cols()
         );
         let (rows, inner, cols) = (x.rows(), x.cols(), w.cols());
-        let mut out = Matrix::zeros(rows, cols);
-        let t = self.par(2 * rows * inner * cols);
-        parallel_row_chunks(t, rows, cols, out.data_mut(), |lo, hi, chunk| {
+        let mut out = self.take_mat_zeroed(rows, cols);
+        let t = self.par(2 * rows * inner * cols, self.grains.mm_nn);
+        let bounds = uniform_chunks(t, rows);
+        let op = SendPtr::new(out.data_mut().as_mut_ptr());
+        dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+            // SAFETY: row ranges are disjoint; `out` outlives the dispatch.
+            let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
             mm_nn_rows(x, w, relu, lo, hi, chunk)
         });
         out
@@ -204,6 +442,16 @@ impl Default for NativeBackend {
     fn default() -> Self {
         NativeBackend::new()
     }
+}
+
+/// Mutable view of rows `lo..hi` (stride `stride`) of the row-major buffer
+/// at `base`.
+///
+/// SAFETY: caller guarantees (a) concurrent calls use disjoint `lo..hi`
+/// ranges, (b) the buffer covers `hi * stride` elements, and (c) it
+/// outlives the dispatch call, which blocks until every range is done.
+unsafe fn span_mut<'a, T>(base: *mut T, lo: usize, hi: usize, stride: usize) -> &'a mut [T] {
+    std::slice::from_raw_parts_mut(base.add(lo * stride), (hi - lo) * stride)
 }
 
 /// Rows `lo..hi` of `X @ W` (optionally ReLU'd) into `chunk` — the same
@@ -237,41 +485,66 @@ fn mm_nn_rows(x: &Matrix, w: &Matrix, relu: bool, lo: usize, hi: usize, chunk: &
 
 /// Rows `lo..hi` of `Xᵀ @ Y` into `chunk` (output is `x.cols() × y.cols()`;
 /// bitwise-matches `x.transpose().matmul(&y)`).
+///
+/// Cache-blocked over the shared dimension: `KB` rows of `x`/`y` are
+/// processed at a time so the strided column reads of `x` and the rows of
+/// `y` stay L1/L2-resident across the chunk. `k` still advances in
+/// ascending order both inside and across blocks, so each output element
+/// accumulates in exactly the serial order — blocking changes locality,
+/// not results.
 fn mm_tn_rows(x: &Matrix, y: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+    const KB: usize = 64;
     let a = x.cols();
     let n = y.cols();
+    let m = x.rows();
     let xd = x.data();
     let yd = y.data();
-    for (ri, i) in (lo..hi).enumerate() {
-        let orow = &mut chunk[ri * n..(ri + 1) * n];
-        for k in 0..x.rows() {
-            let v = xd[k * a + i];
-            if v == 0.0 {
-                continue;
-            }
-            let yrow = &yd[k * n..(k + 1) * n];
-            for (o, &b) in orow.iter_mut().zip(yrow) {
-                *o += v * b;
+    let mut k0 = 0usize;
+    while k0 < m {
+        let k1 = (k0 + KB).min(m);
+        for (ri, i) in (lo..hi).enumerate() {
+            let orow = &mut chunk[ri * n..(ri + 1) * n];
+            for k in k0..k1 {
+                let v = xd[k * a + i];
+                if v == 0.0 {
+                    continue;
+                }
+                let yrow = &yd[k * n..(k + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(yrow) {
+                    *o += v * b;
+                }
             }
         }
+        k0 = k1;
     }
 }
 
 /// Rows `lo..hi` of `Y @ Wᵀ` into `chunk` (output is `y.rows() × w.rows()`).
+///
+/// Blocked over the output columns: a strip of `JB` rows of `w` is reused
+/// across every `y` row in the chunk before moving on, keeping the strip
+/// cache-resident. Each output element is still one complete dot product
+/// in ascending index order, so results are bitwise unchanged.
 fn mm_bt_rows(y: &Matrix, w: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+    const JB: usize = 64;
     let k = y.cols();
     let a = w.rows();
-    for (ri, i) in (lo..hi).enumerate() {
-        let yrow = y.row(i);
-        let orow = &mut chunk[ri * a..(ri + 1) * a];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let wrow = w.row(j);
-            let mut acc = 0.0f32;
-            for idx in 0..k {
-                acc += yrow[idx] * wrow[idx];
+    let mut j0 = 0usize;
+    while j0 < a {
+        let j1 = (j0 + JB).min(a);
+        for (ri, i) in (lo..hi).enumerate() {
+            let yrow = y.row(i);
+            let orow = &mut chunk[ri * a..(ri + 1) * a];
+            for (j, o) in orow[j0..j1].iter_mut().enumerate() {
+                let wrow = w.row(j0 + j);
+                let mut acc = 0.0f32;
+                for idx in 0..k {
+                    acc += yrow[idx] * wrow[idx];
+                }
+                *o = acc;
             }
-            *o = acc;
         }
+        j0 = j1;
     }
 }
 
@@ -292,23 +565,25 @@ fn spmm_rows(a: &Csr, x: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
     }
 }
 
-/// Masked mean softmax cross-entropy per `kernels/ref.py::softmax_xent_ref`:
-/// `loss = Σ_r mask_r (lse_r − ⟨y_r, logits_r⟩) / denom`,
-/// `grad = (softmax(logits) − Y) ⊙ mask / denom` (computed only when
-/// `grad_out` is given). Loss accumulates in f64 for stability.
-fn softmax_xent(
+/// Rows `lo..hi` of masked mean softmax cross-entropy per
+/// `kernels/ref.py::softmax_xent_ref`. Writes each row's (already
+/// mask-weighted) loss term into `partials` and, when `grad` is given, the
+/// gradient rows `(softmax(logits) − Y) ⊙ mask / denom` in place. The grad
+/// row doubles as the exp scratch buffer, so the kernel allocates nothing.
+/// Per-element arithmetic is identical with and without `grad`.
+#[allow(clippy::too_many_arguments)]
+fn softmax_xent_rows(
     logits: &Matrix,
     y: &Matrix,
     mask: &[f32],
     denom: f32,
-    mut grad_out: Option<&mut Matrix>,
-) -> f32 {
-    assert_eq!(logits.shape(), y.shape());
-    assert_eq!(logits.rows(), mask.len());
+    lo: usize,
+    hi: usize,
+    mut grad: Option<&mut [f32]>,
+    partials: &mut [f64],
+) {
     let c = logits.cols();
-    let mut loss = 0.0f64;
-    let mut p_row = vec![0.0f32; c];
-    for r in 0..logits.rows() {
+    for (ri, r) in (lo..hi).enumerate() {
         let row = logits.row(r);
         let mut max = f32::NEG_INFINITY;
         for &x in row {
@@ -316,30 +591,75 @@ fn softmax_xent(
                 max = x;
             }
         }
+        let m = mask[r];
         let mut sum = 0.0f32;
-        for (pc, &x) in p_row.iter_mut().zip(row) {
-            let e = (x - max).exp();
-            *pc = e;
-            sum += e;
+        if let Some(g) = grad.as_mut() {
+            let grow = &mut g[ri * c..(ri + 1) * c];
+            for (gc, &x) in grow.iter_mut().zip(row) {
+                let e = (x - max).exp();
+                *gc = e;
+                sum += e;
+            }
+        } else {
+            for &x in row {
+                sum += (x - max).exp();
+            }
         }
         let inv = 1.0 / sum;
         let lse = sum.ln() + max;
-        let m = mask[r];
+        let mut term = 0.0f64;
         if m != 0.0 {
             let mut picked = 0.0f32;
             for (ci, &x) in row.iter().enumerate() {
                 picked += y.at(r, ci) * x;
             }
-            loss += ((lse - picked) * m) as f64;
+            term = ((lse - picked) * m) as f64;
         }
-        if let Some(g) = grad_out.as_mut() {
-            let grow = g.row_mut(r);
+        partials[ri] = term;
+        if let Some(g) = grad.as_mut() {
+            let grow = &mut g[ri * c..(ri + 1) * c];
             for (ci, gc) in grow.iter_mut().enumerate() {
-                *gc = (p_row[ci] * inv - y.at(r, ci)) * m / denom;
+                *gc = (*gc * inv - y.at(r, ci)) * m / denom;
             }
         }
     }
-    (loss / denom as f64) as f32
+}
+
+impl NativeBackend {
+    /// Masked mean softmax cross-entropy; optionally writes the gradient
+    /// into `grad_out` (shape-checked by the caller). Row-parallel: each
+    /// row's loss term lands in a partials slot and is folded in row order
+    /// on the caller, matching the serial fold bitwise.
+    fn softmax_xent(
+        &self,
+        logits: &Matrix,
+        y: &Matrix,
+        mask: &[f32],
+        denom: f32,
+        grad_out: Option<&mut Matrix>,
+    ) -> f32 {
+        assert_eq!(logits.shape(), y.shape());
+        assert_eq!(logits.rows(), mask.len());
+        let (rows, cols) = (logits.rows(), logits.cols());
+        let t = self.par(8 * rows * cols, self.grains.xent);
+        let mut partials = self.arena.take_f64(rows);
+        {
+            let pp = SendPtr::new(partials.as_mut_ptr());
+            let gp = grad_out.map(|g| SendPtr::new(g.data_mut().as_mut_ptr()));
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: row ranges are disjoint; buffers outlive the
+                // dispatch.
+                let pc = unsafe { span_mut(pp.get(), lo, hi, 1) };
+                let gc = gp
+                    .as_ref()
+                    .map(|g| unsafe { span_mut(g.get(), lo, hi, cols) });
+                softmax_xent_rows(logits, y, mask, denom, lo, hi, gc, pc);
+            });
+        }
+        let loss = self.fold_partials(partials);
+        (loss / denom as f64) as f32
+    }
 }
 
 impl ComputeBackend for NativeBackend {
@@ -354,9 +674,13 @@ impl ComputeBackend for NativeBackend {
     fn mm_tn(&self, x: &Matrix, y: &Matrix) -> Result<Matrix> {
         assert_eq!(x.rows(), y.rows(), "mm_tn row mismatch");
         let (rows, cols) = (x.cols(), y.cols());
-        let mut out = Matrix::zeros(rows, cols);
-        let t = self.par(2 * rows * cols * x.rows());
-        parallel_row_chunks(t, rows, cols, out.data_mut(), |lo, hi, chunk| {
+        let mut out = self.take_mat_zeroed(rows, cols);
+        let t = self.par(2 * rows * cols * x.rows(), self.grains.mm_tn);
+        let bounds = uniform_chunks(t, rows);
+        let op = SendPtr::new(out.data_mut().as_mut_ptr());
+        dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+            // SAFETY: disjoint row ranges; `out` outlives the dispatch.
+            let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
             mm_tn_rows(x, y, lo, hi, chunk)
         });
         Ok(out)
@@ -365,9 +689,13 @@ impl ComputeBackend for NativeBackend {
     fn mm_bt(&self, y: &Matrix, w: &Matrix) -> Result<Matrix> {
         assert_eq!(y.cols(), w.cols(), "mm_bt col mismatch");
         let (rows, cols) = (y.rows(), w.rows());
-        let mut out = Matrix::zeros(rows, cols);
-        let t = self.par(2 * rows * cols * y.cols());
-        parallel_row_chunks(t, rows, cols, out.data_mut(), |lo, hi, chunk| {
+        let mut out = self.take_mat_zeroed(rows, cols);
+        let t = self.par(2 * rows * cols * y.cols(), self.grains.mm_bt);
+        let bounds = uniform_chunks(t, rows);
+        let op = SendPtr::new(out.data_mut().as_mut_ptr());
+        dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+            // SAFETY: disjoint row ranges; `out` outlives the dispatch.
+            let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
             mm_bt_rows(y, w, lo, hi, chunk)
         });
         Ok(out)
@@ -379,25 +707,62 @@ impl ComputeBackend for NativeBackend {
 
     fn hidden_residual(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<(f32, Matrix)> {
         assert_eq!(pre.shape(), zt.shape());
-        let mut r = Matrix::zeros(pre.rows(), pre.cols());
-        let mut val = 0.0f64;
-        let rd = r.data_mut();
-        for (i, (&p, &z)) in pre.data().iter().zip(zt.data()).enumerate() {
-            let act = p.max(0.0);
-            let d = act - z;
-            val += (d as f64) * (d as f64);
-            rd[i] = if p > 0.0 { nu * d } else { 0.0 };
+        let (rows, cols) = pre.shape();
+        let mut r = self.take_mat_stale(rows, cols);
+        let t = self.par(6 * rows * cols, self.grains.eltwise);
+        let mut partials = self.arena.take_f64(rows);
+        {
+            let pd = pre.data();
+            let zd = zt.data();
+            let rp = SendPtr::new(r.data_mut().as_mut_ptr());
+            let pp = SendPtr::new(partials.as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffers outlive the dispatch.
+                let rc = unsafe { span_mut(rp.get(), lo, hi, cols) };
+                let pc = unsafe { span_mut(pp.get(), lo, hi, 1) };
+                for (ri, row) in (lo..hi).enumerate() {
+                    let base = row * cols;
+                    let mut acc = 0.0f64;
+                    for ci in 0..cols {
+                        let p = pd[base + ci];
+                        let d = p.max(0.0) - zd[base + ci];
+                        acc += (d as f64) * (d as f64);
+                        rc[ri * cols + ci] = if p > 0.0 { nu * d } else { 0.0 };
+                    }
+                    pc[ri] = acc;
+                }
+            });
         }
+        let val = self.fold_partials(partials);
         Ok(((0.5 * nu as f64 * val) as f32, r))
     }
 
     fn hidden_phi(&self, pre: &Matrix, zt: &Matrix, nu: f32) -> Result<f32> {
         assert_eq!(pre.shape(), zt.shape());
-        let mut val = 0.0f64;
-        for (&p, &z) in pre.data().iter().zip(zt.data()) {
-            let d = p.max(0.0) - z;
-            val += (d as f64) * (d as f64);
+        let (rows, cols) = pre.shape();
+        let t = self.par(4 * rows * cols, self.grains.eltwise);
+        let mut partials = self.arena.take_f64(rows);
+        {
+            let pd = pre.data();
+            let zd = zt.data();
+            let pp = SendPtr::new(partials.as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffer outlives the dispatch.
+                let pc = unsafe { span_mut(pp.get(), lo, hi, 1) };
+                for (ri, row) in (lo..hi).enumerate() {
+                    let base = row * cols;
+                    let mut acc = 0.0f64;
+                    for ci in 0..cols {
+                        let d = pd[base + ci].max(0.0) - zd[base + ci];
+                        acc += (d as f64) * (d as f64);
+                    }
+                    pc[ri] = acc;
+                }
+            });
         }
+        let val = self.fold_partials(partials);
         Ok((0.5 * nu as f64 * val) as f32)
     }
 
@@ -410,45 +775,109 @@ impl ComputeBackend for NativeBackend {
     ) -> Result<(f32, Matrix)> {
         assert_eq!(pre.shape(), zt.shape());
         assert_eq!(pre.shape(), u.shape());
-        let mut r = Matrix::zeros(pre.rows(), pre.cols());
-        let rd = r.data_mut();
-        let mut lin = 0.0f64;
-        let mut quad = 0.0f64;
-        for (i, ((&p, &z), &uu)) in pre
-            .data()
-            .iter()
-            .zip(zt.data())
-            .zip(u.data())
-            .enumerate()
+        let (rows, cols) = pre.shape();
+        let mut r = self.take_mat_stale(rows, cols);
+        let t = self.par(8 * rows * cols, self.grains.eltwise);
+        // Two partials per row: Σ u·d (lin) and Σ d² (quad), folded
+        // separately so the final combine matches the serial formula.
+        let mut lin_p = self.arena.take_f64(rows);
+        let mut quad_p = self.arena.take_f64(rows);
         {
-            let d = z - p;
-            lin += (uu as f64) * (d as f64);
-            quad += (d as f64) * (d as f64);
-            rd[i] = -(uu + rho * d);
+            let pd = pre.data();
+            let zd = zt.data();
+            let ud = u.data();
+            let rp = SendPtr::new(r.data_mut().as_mut_ptr());
+            let lp = SendPtr::new(lin_p.as_mut_ptr());
+            let qp = SendPtr::new(quad_p.as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffers outlive the dispatch.
+                let rc = unsafe { span_mut(rp.get(), lo, hi, cols) };
+                let lc = unsafe { span_mut(lp.get(), lo, hi, 1) };
+                let qc = unsafe { span_mut(qp.get(), lo, hi, 1) };
+                for (ri, row) in (lo..hi).enumerate() {
+                    let base = row * cols;
+                    let mut lin = 0.0f64;
+                    let mut quad = 0.0f64;
+                    for ci in 0..cols {
+                        let d = zd[base + ci] - pd[base + ci];
+                        let uu = ud[base + ci];
+                        lin += (uu as f64) * (d as f64);
+                        quad += (d as f64) * (d as f64);
+                        rc[ri * cols + ci] = -(uu + rho * d);
+                    }
+                    lc[ri] = lin;
+                    qc[ri] = quad;
+                }
+            });
         }
+        let lin = self.fold_partials(lin_p);
+        let quad = self.fold_partials(quad_p);
         Ok(((lin + 0.5 * rho as f64 * quad) as f32, r))
     }
 
     fn out_phi(&self, pre: &Matrix, zt: &Matrix, u: &Matrix, rho: f32) -> Result<f32> {
         assert_eq!(pre.shape(), zt.shape());
         assert_eq!(pre.shape(), u.shape());
-        let mut lin = 0.0f64;
-        let mut quad = 0.0f64;
-        for ((&p, &z), &uu) in pre.data().iter().zip(zt.data()).zip(u.data()) {
-            let d = z - p;
-            lin += (uu as f64) * (d as f64);
-            quad += (d as f64) * (d as f64);
+        let (rows, cols) = pre.shape();
+        let t = self.par(6 * rows * cols, self.grains.eltwise);
+        let mut lin_p = self.arena.take_f64(rows);
+        let mut quad_p = self.arena.take_f64(rows);
+        {
+            let pd = pre.data();
+            let zd = zt.data();
+            let ud = u.data();
+            let lp = SendPtr::new(lin_p.as_mut_ptr());
+            let qp = SendPtr::new(quad_p.as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffers outlive the dispatch.
+                let lc = unsafe { span_mut(lp.get(), lo, hi, 1) };
+                let qc = unsafe { span_mut(qp.get(), lo, hi, 1) };
+                for (ri, row) in (lo..hi).enumerate() {
+                    let base = row * cols;
+                    let mut lin = 0.0f64;
+                    let mut quad = 0.0f64;
+                    for ci in 0..cols {
+                        let d = zd[base + ci] - pd[base + ci];
+                        lin += (ud[base + ci] as f64) * (d as f64);
+                        quad += (d as f64) * (d as f64);
+                    }
+                    lc[ri] = lin;
+                    qc[ri] = quad;
+                }
+            });
         }
+        let lin = self.fold_partials(lin_p);
+        let quad = self.fold_partials(quad_p);
         Ok((lin + 0.5 * rho as f64 * quad) as f32)
     }
 
     fn z_prox_val(&self, z: &Matrix, pin: &Matrix, nu: f32) -> Result<f32> {
         assert_eq!(z.shape(), pin.shape());
-        let mut val = 0.0f64;
-        for (&zz, &p) in z.data().iter().zip(pin.data()) {
-            let d = zz - p.max(0.0);
-            val += (d as f64) * (d as f64);
+        let (rows, cols) = z.shape();
+        let t = self.par(4 * rows * cols, self.grains.eltwise);
+        let mut partials = self.arena.take_f64(rows);
+        {
+            let zd = z.data();
+            let pd = pin.data();
+            let pp = SendPtr::new(partials.as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffer outlives the dispatch.
+                let pc = unsafe { span_mut(pp.get(), lo, hi, 1) };
+                for (ri, row) in (lo..hi).enumerate() {
+                    let base = row * cols;
+                    let mut acc = 0.0f64;
+                    for ci in 0..cols {
+                        let d = zd[base + ci] - pd[base + ci].max(0.0);
+                        acc += (d as f64) * (d as f64);
+                    }
+                    pc[ri] = acc;
+                }
+            });
         }
+        let val = self.fold_partials(partials);
         Ok((0.5 * nu as f64 * val) as f32)
     }
 
@@ -462,24 +891,44 @@ impl ComputeBackend for NativeBackend {
     ) -> Result<(Matrix, f32, f32)> {
         assert_eq!(z.shape(), pin.shape());
         assert_eq!(z.shape(), gsum.shape());
-        let mut znew = Matrix::zeros(z.rows(), z.cols());
-        let zd = znew.data_mut();
-        let mut prox = 0.0f64;
-        let mut gsq = 0.0f64;
+        let (rows, cols) = z.shape();
+        let mut znew = self.take_mat_stale(rows, cols);
+        let t = self.par(10 * rows * cols, self.grains.eltwise);
+        let mut prox_p = self.arena.take_f64(rows);
+        let mut gsq_p = self.arena.take_f64(rows);
         let inv_theta = 1.0 / theta;
-        for (i, ((&zz, &p), &gs)) in z
-            .data()
-            .iter()
-            .zip(pin.data())
-            .zip(gsum.data())
-            .enumerate()
         {
-            let d = zz - p.max(0.0);
-            prox += (d as f64) * (d as f64);
-            let g = nu * d + gs;
-            gsq += (g as f64) * (g as f64);
-            zd[i] = zz - g * inv_theta;
+            let zd = z.data();
+            let pd = pin.data();
+            let gd = gsum.data();
+            let zp = SendPtr::new(znew.data_mut().as_mut_ptr());
+            let pp = SendPtr::new(prox_p.as_mut_ptr());
+            let gp = SendPtr::new(gsq_p.as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffers outlive the dispatch.
+                let zc = unsafe { span_mut(zp.get(), lo, hi, cols) };
+                let pc = unsafe { span_mut(pp.get(), lo, hi, 1) };
+                let gc = unsafe { span_mut(gp.get(), lo, hi, 1) };
+                for (ri, row) in (lo..hi).enumerate() {
+                    let base = row * cols;
+                    let mut prox = 0.0f64;
+                    let mut gsq = 0.0f64;
+                    for ci in 0..cols {
+                        let zz = zd[base + ci];
+                        let d = zz - pd[base + ci].max(0.0);
+                        prox += (d as f64) * (d as f64);
+                        let g = nu * d + gd[base + ci];
+                        gsq += (g as f64) * (g as f64);
+                        zc[ri * cols + ci] = zz - g * inv_theta;
+                    }
+                    pc[ri] = prox;
+                    gc[ri] = gsq;
+                }
+            });
         }
+        let prox = self.fold_partials(prox_p);
+        let gsq = self.fold_partials(gsq_p);
         Ok((znew, (0.5 * nu as f64 * prox) as f32, gsq as f32))
     }
 
@@ -497,45 +946,60 @@ impl ComputeBackend for NativeBackend {
         assert_eq!(q.shape(), u.shape());
         assert_eq!(q.shape(), y.shape());
         assert_eq!(q.shape(), z0.shape());
+        let (rows, cols) = q.shape();
         let step = 1.0f32 / (rho + 0.5);
-        let mut z = z0.clone();
-        let mut v = z0.clone();
+        // All iteration state lives in arena buffers: z/znext ping-pong via
+        // swap, v is updated in place, g is the reusable gradient buffer.
+        // The seed implementation cloned three matrices and zeroed one per
+        // step; the arithmetic here is element-for-element identical.
+        let mut z = self.take_mat_copy(z0);
+        let mut v = self.take_mat_copy(z0);
+        let mut g = self.take_mat_stale(rows, cols);
+        let mut znext = self.take_mat_stale(rows, cols);
         let mut t = 1.0f32;
-        let mut g = Matrix::zeros(q.rows(), q.cols());
+        let thr = self.par(8 * rows * cols, self.grains.eltwise);
+        let bounds = uniform_chunks(thr, rows);
         for _ in 0..steps {
-            softmax_xent(&v, y, mask, denom, Some(&mut g));
-            // g += U + ρ(v − Q); z_next = v − step * g.
-            let mut z_next = v.clone();
-            {
-                let gd = g.data_mut();
-                let zn = z_next.data_mut();
-                for (i, ((&uu, &qq), &vv)) in
-                    u.data().iter().zip(q.data()).zip(v.data()).enumerate()
-                {
-                    let gi = gd[i] + uu + rho * (vv - qq);
-                    zn[i] = vv - step * gi;
-                }
-            }
+            self.softmax_xent(&v, y, mask, denom, Some(&mut g));
             let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
             let momentum = (t - 1.0) / t_next;
-            // v = z_next + momentum * (z_next − z)
-            let mut v_new = z_next.clone();
             {
-                let vd = v_new.data_mut();
-                for (i, &zold) in z.data().iter().enumerate() {
-                    vd[i] += momentum * (vd[i] - zold);
-                }
+                let qd = q.data();
+                let ud = u.data();
+                let zd = z.data();
+                let gd = g.data();
+                let vp = SendPtr::new(v.data_mut().as_mut_ptr());
+                let np = SendPtr::new(znext.data_mut().as_mut_ptr());
+                // Fused per-element update:
+                //   zn = v − step·(g + U + ρ(v − Q));  v ← zn + momentum·(zn − z)
+                // Reads of v/z happen before the writes within each element,
+                // so updating v in place is safe and order-independent.
+                dispatch_ranges(&self.exec(thr), &bounds, &|lo, hi| {
+                    for i in lo * cols..hi * cols {
+                        // SAFETY: disjoint element ranges (rows lo..hi);
+                        // buffers outlive the dispatch.
+                        unsafe {
+                            let vv = *vp.get().add(i);
+                            let gi = gd[i] + ud[i] + rho * (vv - qd[i]);
+                            let zn = vv - step * gi;
+                            *np.get().add(i) = zn;
+                            *vp.get().add(i) = zn + momentum * (zn - zd[i]);
+                        }
+                    }
+                });
             }
-            z = z_next;
-            v = v_new;
+            std::mem::swap(&mut z, &mut znext);
             t = t_next;
         }
-        let loss = softmax_xent(&z, y, mask, denom, None);
+        let loss = self.softmax_xent(&z, y, mask, denom, None);
+        self.recycle(v);
+        self.recycle(g);
+        self.recycle(znext);
         Ok((z, loss))
     }
 
     fn xent_loss(&self, logits: &Matrix, y: &Matrix, mask: &[f32], denom: f32) -> Result<f32> {
-        Ok(softmax_xent(logits, y, mask, denom, None))
+        Ok(self.softmax_xent(logits, y, mask, denom, None))
     }
 
     fn bp_out_grads(
@@ -547,22 +1011,38 @@ impl ComputeBackend for NativeBackend {
         denom: f32,
     ) -> Result<(f32, Matrix, Matrix)> {
         let logits = self.matmul(h1, w2, false);
-        let mut dl = Matrix::zeros(logits.rows(), logits.cols());
-        let loss = softmax_xent(&logits, y, mask, denom, Some(&mut dl));
+        let mut dl = self.take_mat_stale(logits.rows(), logits.cols());
+        let loss = self.softmax_xent(&logits, y, mask, denom, Some(&mut dl));
         let dw2 = self.mm_tn(h1, &dl)?;
         let dh1 = self.mm_bt(&dl, w2)?;
+        self.recycle(logits);
+        self.recycle(dl);
         Ok((loss, dw2, dh1))
     }
 
     fn bp_hidden_grads(&self, h0: &Matrix, w1: &Matrix, dz1: &Matrix) -> Result<Matrix> {
         let pre = self.matmul(h0, w1, false);
         assert_eq!(pre.shape(), dz1.shape());
-        let mut r = Matrix::zeros(pre.rows(), pre.cols());
-        let rd = r.data_mut();
-        for (i, (&p, &d)) in pre.data().iter().zip(dz1.data()).enumerate() {
-            rd[i] = if p > 0.0 { d } else { 0.0 };
+        let (rows, cols) = pre.shape();
+        let mut r = self.take_mat_stale(rows, cols);
+        let t = self.par(2 * rows * cols, self.grains.eltwise);
+        {
+            let pd = pre.data();
+            let dd = dz1.data();
+            let rp = SendPtr::new(r.data_mut().as_mut_ptr());
+            let bounds = uniform_chunks(t, rows);
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; buffer outlives the dispatch.
+                let rc = unsafe { span_mut(rp.get(), lo, hi, cols) };
+                for (ci, i) in (lo * cols..hi * cols).enumerate() {
+                    rc[ci] = if pd[i] > 0.0 { dd[i] } else { 0.0 };
+                }
+            });
         }
-        self.mm_tn(h0, &r)
+        let out = self.mm_tn(h0, &r)?;
+        self.recycle(pre);
+        self.recycle(r);
+        Ok(out)
     }
 
     fn spmm(&self, a: &Csr, x: &Matrix) -> Matrix {
@@ -576,12 +1056,29 @@ impl ComputeBackend for NativeBackend {
             x.cols()
         );
         let k = x.cols();
-        let mut out = Matrix::zeros(a.nrows(), k);
-        let t = self.par(2 * a.nnz() * k);
-        parallel_row_chunks(t, a.nrows(), k, out.data_mut(), |lo, hi, chunk| {
+        let mut out = self.take_mat_zeroed(a.nrows(), k);
+        let t = self.par(2 * a.nnz() * k, self.grains.spmm);
+        // Balance chunks by nonzero count, not row count: community
+        // partitions concentrate power-law degree mass, so equal-row
+        // chunks can leave one worker with most of the nnz. Any chunking
+        // of rows yields bitwise-identical output (each row is written by
+        // exactly one worker running the serial row kernel).
+        let bounds = if t > 1 {
+            a.balanced_row_chunks(t)
+        } else {
+            uniform_chunks(1, a.nrows())
+        };
+        let op = SendPtr::new(out.data_mut().as_mut_ptr());
+        dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+            // SAFETY: disjoint row ranges; `out` outlives the dispatch.
+            let chunk = unsafe { span_mut(op.get(), lo, hi, k) };
             spmm_rows(a, x, lo, hi, chunk)
         });
         out
+    }
+
+    fn recycle(&self, m: Matrix) {
+        self.arena.put_f32(m.into_vec());
     }
 }
 
@@ -879,16 +1376,29 @@ fn load_xla_backend() -> Result<Arc<dyn ComputeBackend>> {
 }
 
 /// Resolve a backend. `op_threads` sets the native backend's op-level row
-/// parallelism (1 = fully serial ops; ignored by the XLA backend).
-pub fn select_backend(choice: BackendChoice, op_threads: usize) -> Result<Arc<dyn ComputeBackend>> {
+/// parallelism (1 = fully serial ops; ignored by the XLA backend);
+/// `spawn_ops` selects the legacy spawn-per-op executor instead of the
+/// persistent pool (`--op-spawn`, A/B benchmarking only).
+pub fn select_backend(
+    choice: BackendChoice,
+    op_threads: usize,
+    spawn_ops: bool,
+) -> Result<Arc<dyn ComputeBackend>> {
     match choice {
-        BackendChoice::Native => Ok(Arc::new(NativeBackend::with_threads(op_threads.max(1)))),
+        BackendChoice::Native => {
+            let t = op_threads.max(1);
+            Ok(if spawn_ops {
+                Arc::new(NativeBackend::with_spawn_threads(t))
+            } else {
+                Arc::new(NativeBackend::with_threads(t))
+            })
+        }
         BackendChoice::Xla => load_xla_backend(),
         BackendChoice::Auto => {
             if xla_available() {
                 load_xla_backend()
             } else {
-                select_backend(BackendChoice::Native, op_threads)
+                select_backend(BackendChoice::Native, op_threads, spawn_ops)
             }
         }
     }
@@ -897,7 +1407,7 @@ pub fn select_backend(choice: BackendChoice, op_threads: usize) -> Result<Arc<dy
 /// The default backend: XLA when available, else single-threaded native.
 /// Never fails (falls back to native on any XLA load error).
 pub fn default_backend() -> Arc<dyn ComputeBackend> {
-    select_backend(BackendChoice::Auto, 1)
+    select_backend(BackendChoice::Auto, 1, false)
         .unwrap_or_else(|_| Arc::new(NativeBackend::new()) as Arc<dyn ComputeBackend>)
 }
 
@@ -923,6 +1433,27 @@ mod tests {
         assert!(bt.max_abs_diff(&want) < 1e-5);
         let fr = be.fwd_relu(&x, &w).unwrap();
         assert_eq!(fr.data(), crate::tensor::relu(&x.matmul(&w)).data());
+    }
+
+    #[test]
+    fn matmul_blocking_matches_reference_past_block_size() {
+        // Shapes larger than the KB/JB cache tiles, so the blocked loops
+        // actually wrap: results must still match the host reference
+        // bitwise (mm_tn) / to rounding (mm_bt's dot order is unchanged,
+        // so it is bitwise equal to the unblocked backend path too).
+        let mut rng = Rng::new(27);
+        let be = NativeBackend::new();
+        let x = Matrix::glorot(150, 90, &mut rng);
+        let y = Matrix::glorot(150, 70, &mut rng);
+        assert_eq!(
+            be.mm_tn(&x, &y).unwrap().data(),
+            x.transpose().matmul(&y).data()
+        );
+        let w = Matrix::glorot(150, 33, &mut rng);
+        let yy = Matrix::glorot(40, 33, &mut rng);
+        let bt = be.mm_bt(&yy, &w).unwrap();
+        let want = yy.matmul(&w.transpose());
+        assert!(bt.max_abs_diff(&want) < 1e-4);
     }
 
     #[test]
@@ -968,6 +1499,140 @@ mod tests {
                 serial.spmm(&a, &xs).data(),
                 "spmm t={t}"
             );
+        }
+    }
+
+    #[test]
+    fn parallel_elementwise_is_bitwise_identical_to_serial() {
+        // Every elementwise/reduction kernel at forced-parallel grain on
+        // odd shapes: scalars and matrices must match serial exactly,
+        // because partials are per-row and folded in row order on the
+        // caller regardless of thread count.
+        let mut rng = Rng::new(31);
+        let serial = NativeBackend::new();
+        let (n, c) = (37, 5);
+        let pre = Matrix::glorot(n, c, &mut rng);
+        let zt = Matrix::glorot(n, c, &mut rng);
+        let u = Matrix::glorot(n, c, &mut rng);
+        let gsum = Matrix::glorot(n, c, &mut rng);
+        let labels: Vec<usize> = (0..n).map(|_| rng.gen_range(c)).collect();
+        let mut y = Matrix::zeros(n, c);
+        let mut mask = vec![0.0f32; n];
+        for i in 0..n {
+            y.set(i, labels[i], 1.0);
+            if rng.gen_bool(0.7) {
+                mask[i] = 1.0;
+            }
+        }
+        mask[0] = 1.0;
+        let denom: f32 = mask.iter().sum();
+        let (nu, rho, theta) = (0.37f32, 0.05f32, 1.4f32);
+
+        let wsq = Matrix::glorot(c, c, &mut rng); // square head: logits keep n×c
+
+        let (hv_s, hr_s) = serial.hidden_residual(&pre, &zt, nu).unwrap();
+        let (ov_s, or_s) = serial.out_residual(&pre, &zt, &u, rho).unwrap();
+        let (zc_s, zp_s, zg_s) = serial.z_combine(&zt, &pre, &gsum, nu, theta).unwrap();
+        let xl_s = serial.xent_loss(&pre, &y, &mask, denom).unwrap();
+        let (zf_s, fl_s) = serial
+            .zl_fista(&pre, &u, &y, &mask, &zt, rho, denom, 7)
+            .unwrap();
+        let (bl_s, bw_s, bh_s) = serial.bp_out_grads(&pre, &wsq, &y, &mask, denom).unwrap();
+        let bg_s = serial.bp_hidden_grads(&pre, &wsq, &gsum).unwrap();
+
+        for t in [2usize, 3, 8] {
+            let par = NativeBackend::with_grain(t, 0);
+            let (hv, hr) = par.hidden_residual(&pre, &zt, nu).unwrap();
+            assert_eq!(hv, hv_s, "hidden_residual val t={t}");
+            assert_eq!(hr.data(), hr_s.data(), "hidden_residual mat t={t}");
+            assert_eq!(
+                par.hidden_phi(&pre, &zt, nu).unwrap(),
+                hv_s,
+                "hidden_phi t={t}"
+            );
+            let (ov, or_) = par.out_residual(&pre, &zt, &u, rho).unwrap();
+            assert_eq!(ov, ov_s, "out_residual val t={t}");
+            assert_eq!(or_.data(), or_s.data(), "out_residual mat t={t}");
+            assert_eq!(
+                par.out_phi(&pre, &zt, &u, rho).unwrap(),
+                ov_s,
+                "out_phi t={t}"
+            );
+            let (zc, zp, zg) = par.z_combine(&zt, &pre, &gsum, nu, theta).unwrap();
+            assert_eq!(zc.data(), zc_s.data(), "z_combine mat t={t}");
+            assert_eq!(zp, zp_s, "z_combine prox t={t}");
+            assert_eq!(zg, zg_s, "z_combine gsq t={t}");
+            assert_eq!(
+                par.z_prox_val(&zt, &pre, nu).unwrap(),
+                zp_s,
+                "z_prox_val t={t}"
+            );
+            assert_eq!(
+                par.xent_loss(&pre, &y, &mask, denom).unwrap(),
+                xl_s,
+                "xent_loss t={t}"
+            );
+            let (zf, fl) = par
+                .zl_fista(&pre, &u, &y, &mask, &zt, rho, denom, 7)
+                .unwrap();
+            assert_eq!(zf.data(), zf_s.data(), "zl_fista z t={t}");
+            assert_eq!(fl, fl_s, "zl_fista loss t={t}");
+            let (bl, bw, bh) = par.bp_out_grads(&pre, &wsq, &y, &mask, denom).unwrap();
+            assert_eq!(bl, bl_s, "bp_out loss t={t}");
+            assert_eq!(bw.data(), bw_s.data(), "bp_out dW t={t}");
+            assert_eq!(bh.data(), bh_s.data(), "bp_out dH t={t}");
+            assert_eq!(
+                par.bp_hidden_grads(&pre, &wsq, &gsum).unwrap().data(),
+                bg_s.data(),
+                "bp_hidden t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn spawn_executor_matches_pooled() {
+        // The --op-spawn A/B path runs the identical kernels on scoped
+        // threads: results must be bitwise equal to the pooled path.
+        let mut rng = Rng::new(33);
+        let pooled = NativeBackend::with_grain(4, 0);
+        let spawn = NativeBackend::with_spawn_grain(4, 0);
+        let x = Matrix::glorot(41, 19, &mut rng);
+        let w = Matrix::glorot(19, 11, &mut rng);
+        let zt = Matrix::glorot(41, 11, &mut rng);
+        assert_eq!(
+            pooled.mm_nn(&x, &w).unwrap().data(),
+            spawn.mm_nn(&x, &w).unwrap().data()
+        );
+        let pre = pooled.mm_nn(&x, &w).unwrap();
+        let (pv, pr) = pooled.hidden_residual(&pre, &zt, 0.3).unwrap();
+        let (sv, sr) = spawn.hidden_residual(&pre, &zt, 0.3).unwrap();
+        assert_eq!(pv, sv);
+        assert_eq!(pr.data(), sr.data());
+    }
+
+    #[test]
+    fn recycle_reuses_buffers_without_corruption() {
+        // A recycled (dirty) buffer must not leak stale values into the
+        // next op of the same shape: accumulating kernels re-zero, element-
+        // wise kernels overwrite fully.
+        let mut rng = Rng::new(34);
+        let be = NativeBackend::with_threads(2);
+        let x = Matrix::glorot(23, 9, &mut rng);
+        let w = Matrix::glorot(9, 6, &mut rng);
+        let want = x.matmul(&w);
+        for _ in 0..4 {
+            let got = be.mm_nn(&x, &w).unwrap();
+            assert_eq!(got.data(), want.data());
+            be.recycle(got);
+        }
+        let zt = Matrix::glorot(23, 6, &mut rng);
+        let serial = NativeBackend::new();
+        let want_r = serial.hidden_residual(&want, &zt, 0.2).unwrap();
+        for _ in 0..4 {
+            let (v, r) = be.hidden_residual(&want, &zt, 0.2).unwrap();
+            assert_eq!(v, want_r.0);
+            assert_eq!(r.data(), want_r.1.data());
+            be.recycle(r);
         }
     }
 

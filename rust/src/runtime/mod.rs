@@ -25,6 +25,7 @@ mod engine;
 
 pub use backend::{
     default_backend, select_backend, xla_available, BackendChoice, ComputeBackend, NativeBackend,
+    OpGrains,
 };
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;

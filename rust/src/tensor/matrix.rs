@@ -210,6 +210,18 @@ impl Matrix {
         }
     }
 
+    /// self += s * (a − b), without materialising the difference (the
+    /// ADMM dual update `U += ρ (Z − Q)` used to clone Z for this).
+    /// Bitwise-equivalent to `clone a; axpy(-1.0, b); axpy(s, ..)`:
+    /// IEEE negation is exact, so `x + (-1.0)·y == x − y`.
+    pub fn axpy_sub(&mut self, s: f32, a: &Matrix, b: &Matrix) {
+        assert_eq!(self.shape(), a.shape());
+        assert_eq!(self.shape(), b.shape());
+        for ((u, x), y) in self.data.iter_mut().zip(&a.data).zip(&b.data) {
+            *u += s * (x - y);
+        }
+    }
+
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
         Matrix {
             rows: self.rows,
@@ -275,6 +287,22 @@ impl Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn axpy_sub_matches_clone_axpy_bitwise() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::glorot(6, 5, &mut rng);
+        let b = Matrix::glorot(6, 5, &mut rng);
+        let u0 = Matrix::glorot(6, 5, &mut rng);
+        let s = 0.31f32;
+        let mut want = u0.clone();
+        let mut d = a.clone();
+        d.axpy(-1.0, &b);
+        want.axpy(s, &d);
+        let mut got = u0.clone();
+        got.axpy_sub(s, &a, &b);
+        assert_eq!(got.data(), want.data());
+    }
 
     #[test]
     fn matmul_known() {

@@ -1,29 +1,37 @@
-//! In-house worker pool + scoped data-parallel helpers (rayon is not
-//! available offline).
+//! In-house worker pools + data-parallel dispatch (rayon is not available
+//! offline).
 //!
-//! Two execution primitives, matching the two shapes of parallelism in the
-//! trainer:
+//! Three execution primitives, matching the three shapes of parallelism in
+//! the trainer:
 //!
 //! - [`Pool`] — a persistent thread pool for `'static` jobs. The parallel
 //!   agent runtime ([`crate::coordinator`]) moves each community agent's
 //!   state into a job and exchanges p/s messages over `mpsc` channels, so
 //!   jobs own everything they touch and no scoped lifetimes are needed.
-//! - [`scoped_map`] / [`parallel_row_chunks`] — fork-join helpers built on
-//!   `std::thread::scope` for data-parallel loops over *borrowed* data
-//!   (dense matmul / SpMM row blocks, per-community W partials). Scoped
-//!   threads let the closures borrow matrices without `Arc`-ing the world;
-//!   the spawn cost (~tens of µs) only matters below the grain sizes the
-//!   callers already guard against.
+//!   Jobs are panic-isolated: a panicking job is caught at the job
+//!   boundary and its worker keeps serving the queue.
+//! - [`FjPool`] — a persistent *fork-join* pool for borrowed-data jobs:
+//!   workers park on a condvar between ops, so dispatching a parallel
+//!   kernel costs a mutex round-trip + wakeup (~1–2 µs) instead of a fresh
+//!   `thread::scope` spawn per op (~tens of µs). This is what
+//!   [`crate::runtime::NativeBackend`] drives every parallel kernel
+//!   through, and what [`fj_map`] uses for the per-community W partials.
+//! - [`scoped_map`] / [`parallel_row_chunks`] — the legacy spawn-per-op
+//!   fork-join helpers built on `std::thread::scope`. Kept as the A/B
+//!   reference path (`--op-spawn`, `NativeBackend::with_spawn_threads`)
+//!   and as the fallback when no pool is available.
 //!
-//! Determinism: both helpers partition work by index and every output
-//! element is written by exactly one thread with the same scalar math the
-//! serial path uses, so parallel results are bitwise identical to serial
-//! ones. Reductions are always folded on the caller's thread in index
-//! order.
+//! Determinism: every helper partitions work by index and every output
+//! element is written by exactly one thread running the same scalar loop
+//! the serial path runs, so parallel results are bitwise identical to
+//! serial ones at any thread count. Reductions are always folded on the
+//! caller's thread in index order.
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -64,7 +72,17 @@ impl Pool {
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            // Catch panics at the job boundary so a bad job
+                            // cannot silently shrink the pool: the worker
+                            // survives and keeps serving the queue. The
+                            // submitter observes the failure through its
+                            // own result channel going dead (the agent
+                            // executor already handles that case).
+                            Ok(job) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    log::warn!("pool job panicked; worker continues");
+                                }
+                            }
                             Err(_) => break, // all senders dropped
                         }
                     })
@@ -81,8 +99,8 @@ impl Pool {
         self.workers.len()
     }
 
-    /// Enqueue a job. Jobs must not panic the pool away: a panicking job
-    /// kills its worker thread but the queue and remaining workers live on.
+    /// Enqueue a job. Panicking jobs are caught at the job boundary; the
+    /// worker is reused for subsequent jobs.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
@@ -99,6 +117,299 @@ impl Drop for Pool {
             let _ = w.join();
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// FjPool — persistent fork-join pool for borrowed-data kernels
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// True while this thread is executing a fork-join chunk (worker or
+    /// participating caller). A nested [`FjPool::run`] from inside a chunk
+    /// runs its chunks inline instead of re-forking — this makes nesting
+    /// (e.g. a pooled `fj_map` item calling pooled backend kernels)
+    /// deadlock-free by construction.
+    static IN_FJ_CHUNK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Type-erased pointer to the current job closure. The pointee lives on
+/// the stack of the thread blocked in [`FjPool::run`]; see the safety
+/// argument there.
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointer is only dereferenced by workers between job
+// publication and the last `done` increment, a window during which the
+// caller of `run` is pinned (participating or waiting on `done_cv`), so
+// the pointee outlives every dereference.
+unsafe impl Send for JobPtr {}
+
+#[derive(Default)]
+struct FjState {
+    job: Option<JobPtr>,
+    n_chunks: usize,
+    next_chunk: usize,
+    done: usize,
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct FjShared {
+    state: Mutex<FjState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The caller parks here until `done == n_chunks`.
+    done_cv: Condvar,
+}
+
+/// A persistent fork-join pool: `threads − 1` parked workers plus the
+/// calling thread, woken per [`FjPool::run`] call through a condvar.
+///
+/// Compared to `thread::scope` (spawn + join per op) the steady-state
+/// dispatch cost is one mutex round-trip and a wakeup, which is what makes
+/// op-level parallelism profitable at the small grains the ADMM inner
+/// loops actually run at (see `benches/kernel_bench.rs`).
+///
+/// Panic isolation: each chunk runs under `catch_unwind` on both workers
+/// and the caller; the first payload is re-raised on the caller *after*
+/// every chunk has finished, so workers never dangle into a dead caller
+/// frame and the pool stays usable after a panicking job.
+pub struct FjPool {
+    shared: Arc<FjShared>,
+    /// Serialises concurrent `run` callers (one fork-join job at a time).
+    fork_lock: Mutex<()>,
+    threads: usize,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl FjPool {
+    /// Pool sized for `threads` total participants: the caller plus
+    /// `threads − 1` spawned workers (so `FjPool::new(1)` spawns nothing
+    /// and every `run` is a plain serial loop).
+    pub fn new(threads: usize) -> FjPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(FjShared {
+            state: Mutex::new(FjState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("cgcn-fj-{i}"))
+                    .spawn(move || {
+                        IN_FJ_CHUNK.with(|f| f.set(true));
+                        worker_loop(&shared);
+                    })
+                    .expect("spawning fj worker")
+            })
+            .collect();
+        FjPool {
+            shared,
+            fork_lock: Mutex::new(()),
+            threads,
+            workers,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk)` for `chunk in 0..n_chunks`, distributing chunks over
+    /// the pool (the caller participates). Blocks until every chunk has
+    /// finished; re-raises the first chunk panic afterwards. Calls nested
+    /// inside a running chunk execute inline (serially) instead of
+    /// deadlocking on the pool.
+    pub fn run(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        let nested = IN_FJ_CHUNK.with(|c| c.get());
+        if nested || n_chunks == 1 || self.threads <= 1 {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        }
+        let _forking = self.fork_lock.lock().unwrap();
+        // SAFETY: `f` outlives this call; the raw pointer is only
+        // dereferenced while some chunk index is still unclaimed or
+        // running, and this frame does not return (or unwind — the
+        // caller's own chunks run under catch_unwind) until
+        // `done == n_chunks`.
+        let job = JobPtr(f as *const (dyn Fn(usize) + Sync));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.n_chunks = n_chunks;
+            st.next_chunk = 0;
+            st.done = 0;
+            st.panic_payload = None;
+        }
+        self.shared.work_cv.notify_all();
+
+        // Participate: claim chunks like any worker.
+        IN_FJ_CHUNK.with(|c| c.set(true));
+        loop {
+            let chunk = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next_chunk >= st.n_chunks {
+                    break;
+                }
+                let c = st.next_chunk;
+                st.next_chunk += 1;
+                c
+            };
+            let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
+            finish_chunk(&self.shared, result);
+        }
+        IN_FJ_CHUNK.with(|c| c.set(false));
+
+        // Join: wait for workers to drain the remaining chunks.
+        let payload = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.done < st.n_chunks {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic_payload.take()
+        };
+        drop(_forking);
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+fn worker_loop(shared: &FjShared) {
+    loop {
+        let (fptr, chunk) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = &st.job {
+                    if st.next_chunk < st.n_chunks {
+                        let c = st.next_chunk;
+                        st.next_chunk += 1;
+                        break (job.0, c);
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: see JobPtr — the caller is pinned until `done` reaches
+        // `n_chunks`, which only happens after this dereference completes.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*fptr)(chunk) }));
+        finish_chunk(shared, result);
+    }
+}
+
+/// Record a finished chunk (and its panic payload, if any); wake the
+/// caller when it was the last one.
+fn finish_chunk(shared: &FjShared, result: Result<(), Box<dyn std::any::Any + Send>>) {
+    let mut st = shared.state.lock().unwrap();
+    if let Err(p) = result {
+        if st.panic_payload.is_none() {
+            st.panic_payload = Some(p);
+        }
+    }
+    st.done += 1;
+    if st.done == st.n_chunks {
+        shared.done_cv.notify_all();
+    }
+}
+
+impl Drop for FjPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch helpers
+// ---------------------------------------------------------------------------
+
+/// A raw pointer wrapper that asserts cross-thread shareability.
+///
+/// Used to hand disjoint row ranges of one output buffer to fork-join
+/// chunks without the borrow checker seeing an aliased `&mut`. SAFETY
+/// contract for all users: chunks may only touch the index range they were
+/// dispatched, ranges never overlap, and the buffer outlives the dispatch
+/// call (which blocks until every chunk is done).
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// How a single data-parallel op executes.
+pub enum OpExec<'a> {
+    /// On the caller, one chunk after another.
+    Serial,
+    /// Legacy spawn-per-op path: one scoped thread per chunk.
+    Spawn,
+    /// Persistent pool: chunks claimed by parked workers + the caller.
+    Pool(&'a FjPool),
+}
+
+/// Run `f(lo, hi)` once per `(lo, hi)` range in `bounds` on the chosen
+/// executor. Blocks until all ranges are done. `f` must only write state
+/// belonging to its own range — under that contract results are bitwise
+/// identical across executors and thread counts, because each range runs
+/// the identical scalar loop exactly once.
+pub fn dispatch_ranges(exec: &OpExec, bounds: &[(usize, usize)], f: &(dyn Fn(usize, usize) + Sync)) {
+    match exec {
+        OpExec::Serial => {
+            for &(lo, hi) in bounds {
+                f(lo, hi);
+            }
+        }
+        OpExec::Spawn => thread::scope(|s| {
+            for &(lo, hi) in bounds {
+                s.spawn(move || f(lo, hi));
+            }
+        }),
+        OpExec::Pool(p) => p.run(bounds.len(), &|ci| {
+            let (lo, hi) = bounds[ci];
+            f(lo, hi)
+        }),
+    }
+}
+
+/// Split `0..rows` into up to `chunks` contiguous ranges of (near-)equal
+/// row count — the partition rule the legacy `parallel_row_chunks` used,
+/// kept so pooled and spawn dispatch chunk identically.
+pub fn uniform_chunks(chunks: usize, rows: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let t = chunks.max(1).min(rows);
+    let chunk_rows = rows.div_ceil(t);
+    let mut out = Vec::with_capacity(t);
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + chunk_rows).min(rows);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
 }
 
 /// Run `f(i)` for `i in 0..n` on up to `threads` scoped worker threads and
@@ -142,11 +453,39 @@ where
         .collect()
 }
 
+/// [`scoped_map`] semantics on a persistent [`FjPool`]: run `f(i)` for
+/// `i in 0..n` and return results in index order, claiming items from the
+/// pool instead of spawning scoped threads. Falls back to [`scoped_map`]
+/// when no pool is supplied (or parallelism is off).
+pub fn fj_map<T, F>(pool: Option<&FjPool>, threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match pool {
+        Some(p) if threads > 1 && n > 1 => {
+            let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+            let slots = SendPtr::new(out.as_mut_ptr());
+            // SAFETY: item i writes only slot i; `run` blocks until every
+            // item finished and `out` outlives the call.
+            p.run(n, &|i| unsafe { *slots.get().add(i) = Some(f(i)) });
+            out.into_iter()
+                .map(|o| o.expect("fj_map item panicked"))
+                .collect()
+        }
+        _ => scoped_map(threads, n, f),
+    }
+}
+
 /// Split a row-major `rows × cols` output buffer into contiguous row
 /// chunks, one per thread, and run `f(row_lo, row_hi, chunk)` on scoped
 /// threads. With `threads <= 1` the single chunk runs on the caller's
 /// thread. Each output row is written by exactly one invocation, so the
 /// result is bitwise identical to the serial run of the same `f`.
+///
+/// This is the legacy spawn-per-op path; the backend now routes through
+/// [`dispatch_ranges`] + [`FjPool`] by default and keeps this helper as
+/// the `--op-spawn` A/B reference.
 pub fn parallel_row_chunks<F>(threads: usize, rows: usize, cols: usize, out: &mut [f32], f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -200,6 +539,23 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_panicking_job() {
+        // A single-worker pool: if the panicking job killed its worker,
+        // none of the follow-up jobs could ever run.
+        let pool = Pool::new(1);
+        pool.execute(|| panic!("job goes boom"));
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8u64 {
+            let tx = tx.clone();
+            pool.execute(move || tx.send(i).unwrap());
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
     fn scoped_map_is_ordered_and_complete() {
         for threads in [1usize, 2, 4, 8] {
             let got = scoped_map(threads, 37, |i| i * i);
@@ -226,6 +582,130 @@ mod tests {
             let mut par = vec![0.0f32; rows * cols];
             parallel_row_chunks(threads, rows, cols, &mut par, fill);
             assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fj_pool_runs_and_is_reusable() {
+        let pool = FjPool::new(4);
+        for round in 0..50usize {
+            let n = 1 + (round % 7);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, &|c| {
+                hits[c].fetch_add((c + round) as u64, Ordering::Relaxed);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), (c + round) as u64, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn fj_pool_survives_panicking_chunk() {
+        let pool = FjPool::new(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|c| {
+                if c == 3 {
+                    panic!("chunk goes boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "chunk panic must propagate to the caller");
+        // The pool must still be fully usable afterwards.
+        let hits = AtomicU64::new(0);
+        pool.run(16, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn fj_pool_nested_run_executes_inline() {
+        let pool = FjPool::new(4);
+        let outer = AtomicU64::new(0);
+        let inner = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            outer.fetch_add(1, Ordering::Relaxed);
+            // Nested fork from inside a chunk: must not deadlock.
+            pool.run(4, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 4);
+        assert_eq!(inner.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn fj_pool_serialises_concurrent_callers() {
+        let pool = Arc::new(FjPool::new(3));
+        let total = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(thread::spawn(move || {
+                for _ in 0..25 {
+                    pool.run(6, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 6);
+    }
+
+    #[test]
+    fn fj_map_is_ordered_and_complete() {
+        let pool = FjPool::new(4);
+        for threads in [1usize, 2, 4, 8] {
+            let got = fj_map(Some(&pool), threads, 37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(fj_map(Some(&pool), 4, 0, |i| i).is_empty());
+        // No pool → scoped_map fallback.
+        let got = fj_map(None, 4, 9, |i| i + 1);
+        assert_eq!(got, (1..10).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn dispatch_ranges_all_executors_match() {
+        let rows = 41usize;
+        let run = |exec: OpExec| -> Vec<u32> {
+            let mut out = vec![0u32; rows];
+            let bounds = uniform_chunks(4, rows);
+            let p = SendPtr::new(out.as_mut_ptr());
+            dispatch_ranges(&exec, &bounds, &|lo, hi| {
+                for r in lo..hi {
+                    // SAFETY: ranges are disjoint.
+                    unsafe { *p.get().add(r) = (r * r) as u32 };
+                }
+            });
+            out
+        };
+        let want = run(OpExec::Serial);
+        assert_eq!(run(OpExec::Spawn), want);
+        let pool = FjPool::new(4);
+        assert_eq!(run(OpExec::Pool(&pool)), want);
+    }
+
+    #[test]
+    fn uniform_chunks_cover_exactly() {
+        for rows in [0usize, 1, 7, 57, 64] {
+            for chunks in [1usize, 2, 3, 8, 100] {
+                let b = uniform_chunks(chunks, rows);
+                let mut next = 0usize;
+                for &(lo, hi) in &b {
+                    assert_eq!(lo, next);
+                    assert!(hi > lo);
+                    next = hi;
+                }
+                assert_eq!(next, rows);
+                assert!(b.len() <= chunks.max(1));
+            }
         }
     }
 }

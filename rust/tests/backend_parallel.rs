@@ -130,6 +130,138 @@ fn prop_softmax_xent_matches_host_reference() {
     });
 }
 
+#[test]
+fn prop_every_backend_op_is_bitwise_identical_to_serial() {
+    // The full-trait sweep: every ComputeBackend method, odd shapes, grain
+    // forced to 0 so even 1-row matrices take the parallel path, and both
+    // executors (persistent pool and legacy spawn-per-op). "Bitwise" means
+    // `assert_eq!` on raw data and on exact f32 scalar returns — the
+    // one-writer-per-element / caller-ordered-fold scheme admits no
+    // tolerance.
+    proplite::check("all-ops-thread-equiv", 25, 0x5EED, |g| {
+        let n = g.usize_in(1, 37);
+        let c = g.usize_in(2, 11);
+        let k = g.usize_in(1, 9);
+        let pre = gen_matrix(g, n, c);
+        let zt = gen_matrix(g, n, c);
+        let u = gen_matrix(g, n, c);
+        let gsum = gen_matrix(g, n, c);
+        let x = gen_matrix(g, n, k);
+        let w = gen_matrix(g, k, c);
+        let mut y = Matrix::zeros(n, c);
+        let mut mask = vec![0.0f32; n];
+        for i in 0..n {
+            y.set(i, g.rng.gen_range(c), 1.0);
+            if g.rng.gen_bool(0.6) {
+                mask[i] = 1.0;
+            }
+        }
+        mask[0] = 1.0;
+        let denom: f32 = mask.iter().sum();
+        let (nu, rho, theta) = (0.7f32, 1.3f32, 2.0f32);
+
+        let s = NativeBackend::new();
+        let e = |e: anyhow::Error| e.to_string();
+        let s_mm_nn = s.mm_nn(&x, &w).map_err(e)?;
+        let s_mm_tn = s.mm_tn(&pre, &zt).map_err(e)?;
+        let s_mm_bt = s.mm_bt(&pre, &zt).map_err(e)?;
+        let s_relu = s.fwd_relu(&x, &w).map_err(e)?;
+        let s_hres = s.hidden_residual(&pre, &zt, nu).map_err(e)?;
+        let s_hphi = s.hidden_phi(&pre, &zt, nu).map_err(e)?;
+        let s_ores = s.out_residual(&pre, &zt, &u, rho).map_err(e)?;
+        let s_ophi = s.out_phi(&pre, &zt, &u, rho).map_err(e)?;
+        let s_prox = s.z_prox_val(&zt, &pre, nu).map_err(e)?;
+        let s_comb = s.z_combine(&zt, &pre, &gsum, nu, theta).map_err(e)?;
+        let s_fista = s
+            .zl_fista(&pre, &u, &y, &mask, &zt, rho, denom, 5)
+            .map_err(e)?;
+        let s_xent = s.xent_loss(&pre, &y, &mask, denom).map_err(e)?;
+        let s_bpo = s.bp_out_grads(&x, &w, &y, &mask, denom).map_err(e)?;
+        let s_bph = s.bp_hidden_grads(&x, &w, &gsum).map_err(e)?;
+
+        for threads in [2usize, 3, 8] {
+            for spawn in [false, true] {
+                let be = if spawn {
+                    NativeBackend::with_spawn_grain(threads, 0)
+                } else {
+                    NativeBackend::with_grain(threads, 0)
+                };
+                let tag = if spawn { "spawn" } else { "pool" };
+                let ctx = format!("{tag} t={threads} n={n} c={c} k={k}");
+                // Two passes: the second reuses arena buffers recycled
+                // after the first, proving stale scratch never leaks into
+                // results (recycle is part of the trait surface too).
+                for pass in 0..2 {
+                    let p = be.mm_nn(&x, &w).map_err(e)?;
+                    prop_assert!(p.data() == s_mm_nn.data(), "mm_nn {ctx} pass {pass}");
+                    be.recycle(p);
+                    let p = be.mm_tn(&pre, &zt).map_err(e)?;
+                    prop_assert!(p.data() == s_mm_tn.data(), "mm_tn {ctx} pass {pass}");
+                    be.recycle(p);
+                    let p = be.mm_bt(&pre, &zt).map_err(e)?;
+                    prop_assert!(p.data() == s_mm_bt.data(), "mm_bt {ctx} pass {pass}");
+                    be.recycle(p);
+                    let p = be.fwd_relu(&x, &w).map_err(e)?;
+                    prop_assert!(p.data() == s_relu.data(), "fwd_relu {ctx} pass {pass}");
+                    be.recycle(p);
+                    let (v, r) = be.hidden_residual(&pre, &zt, nu).map_err(e)?;
+                    prop_assert!(
+                        v == s_hres.0 && r.data() == s_hres.1.data(),
+                        "hidden_residual {ctx} pass {pass}"
+                    );
+                    be.recycle(r);
+                    let v = be.hidden_phi(&pre, &zt, nu).map_err(e)?;
+                    prop_assert!(v == s_hphi, "hidden_phi {ctx} pass {pass}");
+                    let (v, r) = be.out_residual(&pre, &zt, &u, rho).map_err(e)?;
+                    prop_assert!(
+                        v == s_ores.0 && r.data() == s_ores.1.data(),
+                        "out_residual {ctx} pass {pass}"
+                    );
+                    be.recycle(r);
+                    let v = be.out_phi(&pre, &zt, &u, rho).map_err(e)?;
+                    prop_assert!(v == s_ophi, "out_phi {ctx} pass {pass}");
+                    let v = be.z_prox_val(&zt, &pre, nu).map_err(e)?;
+                    prop_assert!(v == s_prox, "z_prox_val {ctx} pass {pass}");
+                    let (zn, prox0, gsq) =
+                        be.z_combine(&zt, &pre, &gsum, nu, theta).map_err(e)?;
+                    prop_assert!(
+                        zn.data() == s_comb.0.data() && prox0 == s_comb.1 && gsq == s_comb.2,
+                        "z_combine {ctx} pass {pass}"
+                    );
+                    be.recycle(zn);
+                    let (zl, risk) = be
+                        .zl_fista(&pre, &u, &y, &mask, &zt, rho, denom, 5)
+                        .map_err(e)?;
+                    prop_assert!(
+                        zl.data() == s_fista.0.data() && risk == s_fista.1,
+                        "zl_fista {ctx} pass {pass}"
+                    );
+                    be.recycle(zl);
+                    let v = be.xent_loss(&pre, &y, &mask, denom).map_err(e)?;
+                    prop_assert!(v == s_xent, "xent_loss {ctx} pass {pass}");
+                    let (loss, dw2, dh1) =
+                        be.bp_out_grads(&x, &w, &y, &mask, denom).map_err(e)?;
+                    prop_assert!(
+                        loss == s_bpo.0
+                            && dw2.data() == s_bpo.1.data()
+                            && dh1.data() == s_bpo.2.data(),
+                        "bp_out_grads {ctx} pass {pass}"
+                    );
+                    be.recycle(dw2);
+                    be.recycle(dh1);
+                    let dw1 = be.bp_hidden_grads(&x, &w, &gsum).map_err(e)?;
+                    prop_assert!(
+                        dw1.data() == s_bph.data(),
+                        "bp_hidden_grads {ctx} pass {pass}"
+                    );
+                    be.recycle(dw1);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Executor determinism
 // ---------------------------------------------------------------------------
