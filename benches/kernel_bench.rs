@@ -14,6 +14,9 @@
 //!                         than spawn-per-op (>10% to absorb timer noise)
 //!                         at 8 threads on the reference shapes.
 //!   CGCN_BENCH_EPOCHS   — timed epochs per end-to-end cell.
+//!   CGCN_BENCH_OBS_GATE=1 — A/B the CGCN_OBS telemetry gate in-process
+//!                         on pooled ADMM epochs; exit non-zero if
+//!                         enabling telemetry costs more than 5%.
 
 use cgcn::bench::{bench, fmt_secs, section, BenchOpts};
 use cgcn::config::HyperParams;
@@ -247,8 +250,44 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- telemetry overhead gate (CGCN_BENCH_OBS_GATE=1) ------------------
+    // Telemetry is contractually off the hot path (DESIGN.md §10): spans
+    // and sharded counters at phase/chunk granularity, nothing in kernel
+    // inner loops. This A/B flips the CGCN_OBS gate in-process around
+    // otherwise-identical pooled ADMM runs and fails if enabling it costs
+    // more than 5% per epoch.
+    let obs_gate = env_flag("CGCN_BENCH_OBS_GATE");
+    let mut obs_on_s = f64::NAN;
+    let mut obs_off_s = f64::NAN;
+    if obs_gate {
+        section("telemetry overhead (CGCN_OBS on vs off, pooled admm epochs)");
+        let obs_epochs = epochs.max(3);
+        let time_admm = |on: bool| -> anyhow::Result<f64> {
+            cgcn::obs::force(on);
+            let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_threads(8));
+            let mut hp_m = hp.clone();
+            hp_m.communities = 3;
+            let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
+            let mut trainer = AdmmTrainer::new(ws, backend, AdmmOptions::for_mode(3))?;
+            trainer.train(1, "obs-warmup")?;
+            let t0 = Instant::now();
+            trainer.train(obs_epochs, if on { "obs-on" } else { "obs-off" })?;
+            Ok(t0.elapsed().as_secs_f64() / obs_epochs as f64)
+        };
+        obs_off_s = time_admm(false)?;
+        obs_on_s = time_admm(true)?;
+        cgcn::obs::force(true);
+        println!(
+            "obs off {:>10}/epoch   on {:>10}/epoch   overhead {:+.1}%",
+            fmt_secs(obs_off_s),
+            fmt_secs(obs_on_s),
+            (obs_on_s / obs_off_s - 1.0) * 100.0
+        );
+    }
+
     // ---- gate + JSON ------------------------------------------------------
     let ref_ok = ref_pool_p50 <= ref_spawn_p50 * 1.10;
+    let obs_ok = !obs_gate || obs_on_s <= obs_off_s * 1.05;
     let out = Json::obj(vec![
         ("bench", Json::str("kernel_bench")),
         ("host_threads", Json::num(host_threads as f64)),
@@ -270,6 +309,19 @@ fn main() -> anyhow::Result<()> {
                     "admm_pool_speedup",
                     Json::num(admm_spawn8 / admm_pool8),
                 ),
+                // NaN is not JSON: report 0 when the obs A/B did not run.
+                (
+                    "obs_off_epoch_s",
+                    Json::num(if obs_gate { obs_off_s } else { 0.0 }),
+                ),
+                (
+                    "obs_on_epoch_s",
+                    Json::num(if obs_gate { obs_on_s } else { 0.0 }),
+                ),
+                (
+                    "obs_overhead_ok",
+                    Json::num(if obs_ok { 1.0 } else { 0.0 }),
+                ),
             ]),
         ),
     ]);
@@ -288,6 +340,15 @@ fn main() -> anyhow::Result<()> {
              (pool {:.3e}s vs spawn {:.3e}s on hidden_residual {n}x256)",
             ref_pool_p50,
             ref_spawn_p50
+        );
+    }
+    if !obs_ok {
+        anyhow::bail!(
+            "gate: telemetry overhead {:.1}% exceeds 5% \
+             (admm epoch on {:.3e}s vs off {:.3e}s)",
+            (obs_on_s / obs_off_s - 1.0) * 100.0,
+            obs_on_s,
+            obs_off_s
         );
     }
     Ok(())

@@ -121,14 +121,44 @@ target/release/cgcn train --dataset caveman --communities 3 --epochs 8 \
     --transport tcp --save "$SMOKE_DIR/uninterrupted.cgnm" >/dev/null
 cmp "$SMOKE_DIR/resumed.cgnm" "$SMOKE_DIR/uninterrupted.cgnm"
 
+echo "==> observability smoke (train --trace-out/--metrics-out, serve + stats)"
+TRACE="$SMOKE_DIR/trace.json"
+METRICS="$SMOKE_DIR/metrics.json"
+target/release/cgcn train --dataset caveman --communities 3 --epochs 3 \
+    --trace-out "$TRACE" --metrics-out "$METRICS" >/dev/null
+# The Chrome trace must carry the ADMM phase spans (per-community lanes).
+grep -q '"admm.w_update"' "$TRACE" || { echo "trace has no admm.w_update spans"; exit 1; }
+grep -q '"admm.z_update"' "$TRACE" || { echo "trace has no admm.z_update spans"; exit 1; }
+grep -q '"traceEvents"' "$TRACE"
+# The metrics dump must have counted the epochs we ran.
+grep -q '"admm.epochs": 3' "$METRICS" || { echo "metrics.json missed admm.epochs"; cat "$METRICS"; exit 1; }
+grep -q '"spans"' "$METRICS"
+# CGCN_OBS=off must still train and must leave the outputs empty of spans.
+CGCN_OBS=off target/release/cgcn train --dataset caveman --communities 3 --epochs 2 \
+    --trace-out "$SMOKE_DIR/trace_off.json" >/dev/null
+grep -q '"admm.w_update"' "$SMOKE_DIR/trace_off.json" \
+    && { echo "CGCN_OBS=off still recorded spans"; exit 1; }
+# Live scrape: the stats subcommand reports non-zero serve counters and
+# request-latency quantiles from the server process's registry.
+serve_start "$MODEL" "$SMOKE_DIR/obs_addr"
+target/release/cgcn query --addr "$ADDR" --nodes 0,1,2 >/dev/null
+STATS_OUT="$(target/release/cgcn stats --addr "$ADDR")"
+echo "$STATS_OUT" | grep -q 'requests 1' || { echo "stats missed the query"; echo "$STATS_OUT"; exit 1; }
+echo "$STATS_OUT" | grep -q 'cgcn_serve_connections_total' \
+    || { echo "stats carried no registry text"; echo "$STATS_OUT"; exit 1; }
+echo "$STATS_OUT" | grep -q 'cgcn_serve_request_secs{quantile="0.99"}' \
+    || { echo "stats carried no latency quantiles"; echo "$STATS_OUT"; exit 1; }
+serve_stop
+
 echo "==> quickstart example (release)"
 cargo run --release --example quickstart >/dev/null
 
-echo "==> kernel bench quick gate (pooled executor must not lose to spawn-per-op)"
+echo "==> kernel bench quick gate (pool vs spawn; telemetry overhead <=5%)"
 # Writes BENCH_kernels.json; CGCN_BENCH_GATE makes the bench exit non-zero
 # if the persistent pool is slower (>10% noise margin) than the legacy
-# spawn-per-op executor at 8 threads on the reference elementwise shape.
-CGCN_BENCH_QUICK=1 CGCN_BENCH_GATE=1 cargo bench --bench kernel_bench
+# spawn-per-op executor at 8 threads on the reference elementwise shape,
+# and CGCN_BENCH_OBS_GATE if enabling CGCN_OBS costs >5% per ADMM epoch.
+CGCN_BENCH_QUICK=1 CGCN_BENCH_GATE=1 CGCN_BENCH_OBS_GATE=1 cargo bench --bench kernel_bench
 [[ -s BENCH_kernels.json ]] || { echo "kernel bench wrote no BENCH_kernels.json"; exit 1; }
 
 echo "CI OK"

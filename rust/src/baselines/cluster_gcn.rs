@@ -220,6 +220,7 @@ impl ClusterGcnTrainer {
     /// `Some((loss, labeled))` or `None` when the batch holds no labeled
     /// node (no gradient — skipped, as in the reference implementations).
     fn step_batch(&mut self, nodes: &[usize]) -> Result<Option<(f32, f32)>> {
+        let _span = crate::span!("cluster_gcn.step", batch_nodes = nodes.len());
         let nb = nodes.len();
         let mask_b: Vec<f32> = nodes.iter().map(|&v| self.ds.train_mask[v]).collect();
         let denom_b: f32 = mask_b.iter().sum();
@@ -261,6 +262,8 @@ impl ClusterGcnTrainer {
     /// Returns the label-count-weighted mean loss (comparable to the
     /// full-batch per-epoch loss: each labeled node contributes once).
     pub fn train_epoch(&mut self) -> Result<f64> {
+        let _span = crate::span!("cluster_gcn.epoch");
+        crate::obs_counter!("cluster_gcn.epochs").inc();
         let groups = self.epoch_groups();
         let mut loss_sum = 0.0f64;
         let mut denom_sum = 0.0f64;

@@ -289,6 +289,36 @@ pub fn cmd_query(args: &Args) -> i32 {
     }
 }
 
+/// `cgcn stats` — scrape a running inference server: the serve counter
+/// block (Stats frame) plus the server process's whole metrics registry
+/// as Prometheus-style text (Metrics frame), which includes request
+/// latency quantiles. `--out` also writes the text to a file.
+pub fn cmd_stats(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let addr = client_addr(args)?;
+        let mut client = crate::serve::ServeClient::connect(&addr)?;
+        let c = client.stats()?;
+        println!(
+            "server {addr}: requests {}  nodes {}  batches {}  cache warms {}",
+            c.requests, c.nodes, c.batches, c.warms
+        );
+        let text = client.metrics()?;
+        print!("{text}");
+        if let Some(out) = args.get("out").filter(|s| !s.is_empty()) {
+            std::fs::write(out, &text)?;
+            eprintln!("wrote metrics text to {out}");
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("stats error: {e:#}");
+            1
+        }
+    }
+}
+
 /// `cgcn loadgen` — closed-loop load against a running server; prints
 /// qps + latency percentiles, optional JSON to `--out`.
 pub fn cmd_loadgen(args: &Args) -> i32 {

@@ -372,6 +372,7 @@ impl AdmmTrainer {
         let zl = &self.state.z[l - 1];
         let u = &self.state.u;
         let partials: Vec<Result<(f32, Matrix, f64)>> = fj_map(fj, par, ws.m, |mi| {
+            let _span = crate::span!("admm.w_partial", community = mi);
             let t0 = Instant::now();
             let pre = backend.mm_nn(s_refs[mi], w_k)?;
             let (phi_m, r_m) = if last {
@@ -507,6 +508,7 @@ impl AdmmTrainer {
         let mut p_owns: Vec<Vec<Matrix>> = Vec::with_capacity(m);
         let mut p_outs: Vec<Vec<PMsg>> = Vec::with_capacity(m);
         for ag in agents.iter() {
+            let _span = crate::span!("admm.p_products", community = ag.mi);
             let t0 = Instant::now();
             let (own, out) = ag.p_products(&ctx)?;
             msg_secs[ag.mi] += t0.elapsed().as_secs_f64();
@@ -528,6 +530,7 @@ impl AdmmTrainer {
         let mut crosses: Vec<Vec<Matrix>> = Vec::with_capacity(m);
         let mut s_outs: Vec<Vec<SMsg>> = Vec::with_capacity(m);
         for (i, ag) in agents.iter().enumerate() {
+            let _span = crate::span!("admm.s_messages", community = ag.mi);
             let t0 = Instant::now();
             let (full, cross) = ag.fold_p(&ctx, &p_owns[i], &mut p_ins[i]);
             let s = ag.s_messages(&ctx, &full, &p_ins[i])?;
@@ -548,6 +551,7 @@ impl AdmmTrainer {
 
         // Phase C: Z/U updates.
         for (i, ag) in agents.iter_mut().enumerate() {
+            let _span = crate::span!("admm.z_update", community = ag.mi);
             let t0 = Instant::now();
             ag.update_z_u(&ctx, &fulls[i], &crosses[i], &p_outs[i], &mut s_ins[i])?;
             z_secs[i] += t0.elapsed().as_secs_f64();
@@ -599,6 +603,7 @@ impl AdmmTrainer {
             let p_txs = p_txs.clone();
             let done_tx = done_tx.clone();
             pool.execute(move || {
+                let _span = crate::span!("admm.p_products", community = ag.mi);
                 let t0 = Instant::now();
                 let ctx = AgentCtx {
                     ws: &ws,
@@ -622,6 +627,7 @@ impl AdmmTrainer {
             (0..m).map(|_| None).collect();
         let mut failed: Vec<CommunityAgent> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
+        let barrier_a = crate::span!("admm.barrier_wait", phase = 0);
         for _ in 0..m {
             let Ok((ag, res, secs)) = done_rx.recv() else {
                 first_err = first_err.or(Some(anyhow::anyhow!("agent task panicked in phase A")));
@@ -637,6 +643,7 @@ impl AdmmTrainer {
                 }
             }
         }
+        drop(barrier_a);
         if let Some(e) = first_err {
             failed.extend(slots_a.into_iter().flatten().map(|(ag, _, _)| ag));
             return (failed, Err(e));
@@ -663,6 +670,7 @@ impl AdmmTrainer {
             let s_txs = s_txs.clone();
             let done_tx = done_tx.clone();
             pool.execute(move || {
+                let _span = crate::span!("admm.s_messages", community = ag.mi);
                 let t0 = Instant::now();
                 let ctx = AgentCtx {
                     ws: &ws,
@@ -694,6 +702,7 @@ impl AdmmTrainer {
         let mut slots_b: Vec<Option<(CommunityAgent, Vec<Matrix>, Vec<Matrix>, Vec<PMsg>)>> =
             (0..m).map(|_| None).collect();
         let mut s_bytes: Vec<Vec<u64>> = (0..m).map(|_| Vec::new()).collect();
+        let barrier_b = crate::span!("admm.barrier_wait", phase = 1);
         for _ in 0..m {
             let Ok((ag, res, secs)) = done_rx.recv() else {
                 first_err = first_err.or(Some(anyhow::anyhow!("agent task panicked in phase B")));
@@ -712,6 +721,7 @@ impl AdmmTrainer {
                 }
             }
         }
+        drop(barrier_b);
         if let Some(e) = first_err {
             failed.extend(slots_b.into_iter().flatten().map(|(ag, _, _, _)| ag));
             return (failed, Err(e));
@@ -726,6 +736,7 @@ impl AdmmTrainer {
             let w = w.clone();
             let done_tx = done_tx.clone();
             pool.execute(move || {
+                let _span = crate::span!("admm.z_update", community = ag.mi);
                 let t0 = Instant::now();
                 let ctx = AgentCtx {
                     ws: &ws,
@@ -744,6 +755,7 @@ impl AdmmTrainer {
         }
         drop(done_tx);
         let mut out_agents: Vec<Option<CommunityAgent>> = (0..m).map(|_| None).collect();
+        let barrier_c = crate::span!("admm.barrier_wait", phase = 2);
         for _ in 0..m {
             let Ok((ag, res, secs)) = done_rx.recv() else {
                 first_err = first_err.or(Some(anyhow::anyhow!("agent task panicked in phase C")));
@@ -759,6 +771,7 @@ impl AdmmTrainer {
                 }
             }
         }
+        drop(barrier_c);
         let recovered: Vec<CommunityAgent> = out_agents
             .into_iter()
             .flatten()
@@ -773,6 +786,8 @@ impl AdmmTrainer {
     // ---- one ADMM epoch ------------------------------------------------------
 
     pub fn epoch(&mut self) -> Result<EpochClock> {
+        let _span = crate::span!("admm.epoch");
+        crate::obs_counter!("admm.epochs").inc();
         let ws = self.ws.clone();
         let mut clock = EpochClock::default();
         let l_total = ws.layers;
@@ -799,6 +814,7 @@ impl AdmmTrainer {
             let u_glob = ws.gather(&self.state.u);
             let mut layer_secs = Vec::with_capacity(l_total);
             for l in 1..=l_total {
+                let _span = crate::span!("admm.w_update", layer = l);
                 let (res, secs) = timed(|| self.update_w(l, &z_glob, &u_glob));
                 res?;
                 layer_secs.push(secs);
@@ -821,6 +837,7 @@ impl AdmmTrainer {
             let mut w_secs = vec![0.0f64; ws.m];
             let mut total_trials = 0usize;
             for l in 1..=l_total {
+                let _span = crate::span!("admm.w_update", layer = l);
                 if ws.m > 1 && l >= 2 {
                     let per_sender: Vec<Vec<u64>> = ws
                         .communities
@@ -837,7 +854,9 @@ impl AdmmTrainer {
                 total_trials += self.update_w_distributed(l, &mut w_secs)?;
             }
             clock.parallel_phase(&w_secs);
-            let _ = total_trials; // trial count only moves 8-byte scalars
+            // Trial count only moves 8-byte scalars on the wire; keep the
+            // tally visible in the metrics scrape.
+            crate::obs_counter!("admm.w_trials").add(total_trials as u64);
             if ws.m > 1 {
                 // Per layer: M gradient partials up, one aggregated gradient
                 // down per community (workers form W − g/τ locally; the τ
@@ -956,6 +975,7 @@ impl AdmmTrainer {
             let wall0 = Instant::now();
             let clock = self.epoch()?;
             let wall = wall0.elapsed().as_secs_f64();
+            crate::obs_hist!("admm.epoch.secs", crate::obs::TIME_BUCKETS).record(wall);
             let (train_acc, test_acc, loss) = self.evaluate()?;
             log::debug!(
                 "[{label}] epoch {e}: loss={loss:.4} train={train_acc:.3} test={test_acc:.3} \

@@ -325,20 +325,24 @@ impl CommunityAgent {
         } else {
             p_full[l_total - 1].clone()
         };
-        let (z_l_new, _risk) = backend.zl_fista(
-            &q,
-            &self.u,
-            &comm.y,
-            &comm.train_mask,
-            &z_prev[l_total - 1],
-            rho,
-            ws.denom,
-            ws.hp.fista_steps,
-        )?;
+        let (z_l_new, _risk) = {
+            let _span = crate::span!("admm.zl_fista", community = self.mi);
+            backend.zl_fista(
+                &q,
+                &self.u,
+                &comm.y,
+                &comm.train_mask,
+                &z_prev[l_total - 1],
+                rho,
+                ws.denom,
+                ws.hp.fista_steps,
+            )?
+        };
 
         // ---- dual update (eq. 3, residual against the solved Q) -----------
         // axpy_sub is bitwise-equivalent to the former clone + axpy(-1) +
         // axpy(rho) sequence and skips the residual allocation entirely.
+        let _u_span = crate::span!("admm.u_update", community = self.mi);
         self.u.axpy_sub(rho, &z_l_new, &q);
         backend.recycle(q);
         backend.recycle(std::mem::replace(&mut self.z[l_total - 1], z_l_new));

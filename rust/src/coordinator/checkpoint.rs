@@ -404,6 +404,8 @@ impl CheckpointSink {
         if !self.due(completed) {
             return Ok(());
         }
+        let _span = crate::span!("ckpt.write", epoch = completed);
+        let t0 = std::time::Instant::now();
         let ck = TrainCheckpoint {
             meta: self.meta.clone(),
             epoch: completed as u64,
@@ -411,6 +413,8 @@ impl CheckpointSink {
         };
         let path = checkpoint_path(&self.dir, completed as u64);
         ck.save(&path)?;
+        crate::obs_counter!("ckpt.writes").inc();
+        crate::obs_hist!("ckpt.write.secs", crate::obs::TIME_BUCKETS).record_secs(t0);
         log::info!("wrote training checkpoint {}", path.display());
         leader_crash_hook(completed);
         Ok(())

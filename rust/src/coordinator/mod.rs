@@ -447,5 +447,11 @@ pub fn run_from_args(args: &Args) -> Result<()> {
         std::fs::write(out, report.to_csv())?;
         log::info!("wrote per-epoch CSV to {out}");
     }
+    if let Some(out) = args.get("trace-out").filter(|s| !s.is_empty()) {
+        crate::obs::write_chrome_trace(Path::new(out))?;
+    }
+    if let Some(out) = args.get("metrics-out").filter(|s| !s.is_empty()) {
+        crate::obs::write_metrics_json(Path::new(out))?;
+    }
     Ok(())
 }

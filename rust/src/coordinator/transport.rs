@@ -291,6 +291,7 @@ impl WorkerCore {
     /// for every hosted agent in community order, reply with all outgoing
     /// p messages.
     fn phase_a(&mut self, epoch: u64, attempt: u32, d: &mut Dec) -> Result<Vec<u8>> {
+        let _span = crate::span!("worker.phase_a", epoch = epoch);
         let t0 = Instant::now();
         let l_total = self.ws.layers;
         let count = d.u32()? as usize;
@@ -344,6 +345,7 @@ impl WorkerCore {
     /// PDeliver: fold incoming p per agent, build second-order messages,
     /// reply with all outgoing s messages.
     fn phase_b(&mut self, epoch: u64, attempt: u32, d: &mut Dec) -> Result<Vec<u8>> {
+        let _span = crate::span!("worker.phase_b", epoch = epoch);
         let t0 = Instant::now();
         anyhow::ensure!(
             (epoch, attempt) == (self.epoch, self.attempt),
@@ -409,6 +411,7 @@ impl WorkerCore {
     /// the fresh per-community state (the leader's mirror + the epoch
     /// barrier are built from these reports).
     fn phase_c(&mut self, epoch: u64, attempt: u32, d: &mut Dec) -> Result<Vec<u8>> {
+        let _span = crate::span!("worker.phase_c", epoch = epoch);
         let t0 = Instant::now();
         anyhow::ensure!(
             (epoch, attempt) == (self.epoch, self.attempt),
@@ -592,6 +595,7 @@ fn lose_host(
 ) -> Result<()> {
     if live[host] {
         log::warn!("host {host} lost ({why}); reassigning its communities to survivors");
+        crate::obs_counter!("transport.hosts_lost").inc();
         t.fence(host);
         live[host] = false;
     }
@@ -625,6 +629,7 @@ fn elastic_epoch(
     epoch: u64,
     attempt: u32,
 ) -> TResult<(f64, f64)> {
+    let _span = crate::span!("transport.epoch", epoch = epoch);
     let ws = trainer.ws.clone();
     let m = ws.m;
     let l_total = ws.layers;
@@ -857,6 +862,7 @@ pub fn run_elastic_training(
             match elastic_epoch(trainer, t, &assign, e as u64, attempt) {
                 Ok((w_par, z_par)) => break (w_par, z_par, t.bytes() - bytes0),
                 Err(TransportError::Dead { host, why }) => {
+                    crate::obs_counter!("transport.epoch_retries").inc();
                     trainer.state = barrier.clone();
                     lose_host(t, host, &why, &mut live, &mut assign)?;
                     attempt += 1;
@@ -918,6 +924,10 @@ struct Conn {
 pub struct TcpTransport {
     conns: Vec<Option<Conn>>,
     bytes: u64,
+    /// Last heartbeat (or any frame) arrival per host, for the
+    /// heartbeat-gap histogram — a gap creeping toward `--hb-timeout-ms`
+    /// is the early warning before a host is declared dead.
+    last_seen: Vec<Option<Instant>>,
 }
 
 impl TcpTransport {
@@ -981,7 +991,12 @@ impl TcpTransport {
                 writer: BufWriter::new(stream),
             });
         }
-        Ok(TcpTransport { conns, bytes })
+        let last_seen = vec![None; hosts];
+        Ok(TcpTransport {
+            conns,
+            bytes,
+            last_seen,
+        })
     }
 }
 
@@ -1001,6 +1016,8 @@ impl Transport for TcpTransport {
         match write_frame(&mut conn.writer, frame) {
             Ok(()) => {
                 self.bytes += frame.len() as u64 + 4;
+                crate::obs_counter!("transport.frames_sent").inc();
+                crate::obs_counter!("transport.bytes_sent").add(frame.len() as u64 + 4);
                 Ok(())
             }
             Err(e) => dead(host, format!("write failed: {e}")),
@@ -1015,7 +1032,15 @@ impl Transport for TcpTransport {
             match read_frame(&mut conn.reader) {
                 Ok(Some(f)) => {
                     self.bytes += f.len() as u64 + 4;
+                    crate::obs_counter!("transport.frames_recv").inc();
+                    crate::obs_counter!("transport.bytes_recv").add(f.len() as u64 + 4);
+                    let now = Instant::now();
+                    if let Some(prev) = self.last_seen[host].replace(now) {
+                        crate::obs_hist!("transport.heartbeat.gap.secs", crate::obs::TIME_BUCKETS)
+                            .record((now - prev).as_secs_f64());
+                    }
                     if f.first() == Some(&TAG_PING) {
+                        crate::obs_counter!("transport.heartbeats").inc();
                         continue; // heartbeat — liveness proven, keep waiting
                     }
                     return Ok(f);
@@ -1126,6 +1151,8 @@ impl Transport for ChannelTransport {
         match tx.send(frame.to_vec()) {
             Ok(()) => {
                 self.bytes += frame.len() as u64 + 4;
+                crate::obs_counter!("transport.frames_sent").inc();
+                crate::obs_counter!("transport.bytes_sent").add(frame.len() as u64 + 4);
                 Ok(())
             }
             Err(_) => dead(host, "host thread exited"),
@@ -1139,6 +1166,8 @@ impl Transport for ChannelTransport {
         match rx.recv() {
             Ok(f) => {
                 self.bytes += f.len() as u64 + 4;
+                crate::obs_counter!("transport.frames_recv").inc();
+                crate::obs_counter!("transport.bytes_recv").add(f.len() as u64 + 4);
                 Ok(Arc::try_unwrap(f).unwrap_or_else(|a| (*a).clone()))
             }
             Err(_) => dead(host, "host thread exited"),

@@ -39,6 +39,10 @@
 //!   generator (`train --save` → `serve` → `query`/`loadgen`).
 //! - [`metrics`] — timers, counters and CSV emission for the paper's
 //!   tables/figures.
+//! - [`obs`] — zero-dependency telemetry: sharded counter/gauge/histogram
+//!   registry, tracing spans with Chrome trace-event export
+//!   (`--trace-out`), Prometheus-style exposition (`stats` subcommand,
+//!   `--metrics-out`), gated by `CGCN_OBS` (DESIGN.md §10).
 //! - [`config`] — experiment configuration mirroring the paper's settings.
 //! - [`bench`] — the micro/macro benchmark harness (criterion is not
 //!   available offline).
@@ -54,6 +58,7 @@ pub mod coordinator;
 pub mod data;
 pub mod graph;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod serve;

@@ -45,6 +45,11 @@ const SUBCOMMANDS: &[Subcommand] = &[
         run: cgcn::cmd::cmd_loadgen,
     },
     Subcommand {
+        name: "stats",
+        help: "scrape a running inference server: serve counters + the full metrics registry (Prometheus text)",
+        run: cgcn::cmd::cmd_stats,
+    },
+    Subcommand {
         name: "artifacts",
         help: "list indexed artifacts and compile-check them",
         run: cgcn::cmd::cmd_artifacts,
@@ -97,6 +102,8 @@ fn main() {
     .opt("batch-window-us", Some("200"), "serve: micro-batch collection window in microseconds")
     .opt("max-batch", Some("256"), "serve: max queries coalesced into one backend batch")
     .opt("op-threads", Some("0"), "native backend kernel threads (persistent pool; results are bitwise identical at any count). 0 = auto: all cores, or 1 under --exec threads to avoid oversubscribing the agent pool")
+    .opt("trace-out", Some(""), "train: write a Chrome trace-event JSON of the run's spans (load in chrome://tracing or Perfetto)")
+    .opt("metrics-out", Some(""), "train: write the end-of-run metrics registry as JSON")
     .opt("nodes", Some(""), "query: comma-separated node ids")
     .opt("clients", Some("4"), "loadgen: concurrent client connections")
     .opt("requests", Some("200"), "loadgen: queries per client")

@@ -1,0 +1,208 @@
+//! Exporters: Prometheus-style text exposition and `metrics.json`.
+//!
+//! Both render one [`MetricsSnapshot`] scrape. The text form is what the
+//! serve wire's `Metrics` frame and `cgcn stats` print (counter/gauge
+//! sample lines, cumulative `_bucket{le="…"}` histogram series with
+//! `_sum`/`_count`, plus `{quantile="…"}` summary lines interpolated from
+//! the buckets). The JSON form (`--metrics-out`) adds per-span duration
+//! summaries computed from the trace rings through
+//! [`crate::util::stats::Summary`], and round-trips through
+//! [`crate::util::json`].
+
+use super::registry::{registry, HistSnapshot, MetricsSnapshot};
+use super::trace;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Mangle a dotted metric name into a Prometheus-legal one
+/// (`serve.request.latency` → `cgcn_serve_request_latency`).
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("cgcn_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    out
+}
+
+/// Format a bucket bound the way Prometheus expects (`0.005`, `256`).
+fn fmt_bound(b: f64) -> String {
+    if b.fract() == 0.0 && b.abs() < 1e15 {
+        format!("{}", b as i64)
+    } else {
+        format!("{b}")
+    }
+}
+
+fn render_hist(out: &mut String, h: &HistSnapshot) {
+    let base = prom_name(&h.name);
+    let _ = writeln!(out, "# TYPE {base} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        cum += c;
+        let le = match h.bounds.get(i) {
+            Some(&b) => fmt_bound(b),
+            None => "+Inf".to_string(),
+        };
+        let _ = writeln!(out, "{base}_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{base}_sum {}", h.sum);
+    let _ = writeln!(out, "{base}_count {}", h.count);
+    // Summary-style quantile lines so a human (or the ci smoke) can read
+    // percentiles straight off the exposition.
+    for q in [0.5, 0.95, 0.99] {
+        let _ = writeln!(out, "{base}{{quantile=\"{q}\"}} {}", h.quantile(q));
+    }
+}
+
+/// Render a scrape as Prometheus text exposition.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let base = prom_name(name);
+        let _ = writeln!(out, "# TYPE {base}_total counter");
+        let _ = writeln!(out, "{base}_total {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let base = prom_name(name);
+        let _ = writeln!(out, "# TYPE {base} gauge");
+        let _ = writeln!(out, "{base} {v}");
+    }
+    for h in &snap.hists {
+        render_hist(&mut out, h);
+    }
+    out
+}
+
+/// Scrape the global registry and render Prometheus text.
+pub fn prometheus_text() -> String {
+    render_prometheus(&registry().snapshot())
+}
+
+/// Scrape the registry + trace rings into one `metrics.json` document.
+pub fn metrics_json() -> Json {
+    let snap = registry().snapshot();
+    let counters = Json::Obj(
+        snap.counters
+            .iter()
+            .map(|(n, v)| (n.clone(), Json::num(*v as f64)))
+            .collect(),
+    );
+    let gauges = Json::Obj(
+        snap.gauges
+            .iter()
+            .map(|(n, v)| (n.clone(), Json::num(*v as f64)))
+            .collect(),
+    );
+    let hists = Json::Obj(
+        snap.hists
+            .iter()
+            .map(|h| {
+                let buckets: Vec<Json> = h
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &c)| {
+                        Json::obj(vec![
+                            (
+                                "le",
+                                match h.bounds.get(i) {
+                                    Some(&b) => Json::num(b),
+                                    None => Json::str("+Inf"),
+                                },
+                            ),
+                            ("count", Json::num(c as f64)),
+                        ])
+                    })
+                    .collect();
+                let (p50, p95, p99) = h.percentiles();
+                let body = Json::obj(vec![
+                    ("count", Json::num(h.count as f64)),
+                    ("sum", Json::num(h.sum)),
+                    ("mean", Json::num(h.mean())),
+                    ("p50", Json::num(p50)),
+                    ("p95", Json::num(p95)),
+                    ("p99", Json::num(p99)),
+                    ("buckets", Json::arr(buckets)),
+                ]);
+                (h.name.clone(), body)
+            })
+            .collect(),
+    );
+    let spans = Json::Obj(
+        trace::span_summaries()
+            .into_iter()
+            .map(|(name, s)| {
+                let body = Json::obj(vec![
+                    ("count", Json::num(s.n as f64)),
+                    ("mean_us", Json::num(s.mean)),
+                    ("p50_us", Json::num(s.p50)),
+                    ("p95_us", Json::num(s.p95)),
+                    ("p99_us", Json::num(s.p99)),
+                    ("max_us", Json::num(s.max)),
+                    ("total_us", Json::num(s.mean * s.n as f64)),
+                ]);
+                (name, body)
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", hists),
+        ("spans", spans),
+    ])
+}
+
+/// Write the Chrome trace-event JSON for this process's spans.
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    let doc = trace::chrome_trace_json();
+    std::fs::write(path, doc.to_string() + "\n")
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    log::info!("wrote Chrome trace to {} (chrome://tracing)", path.display());
+    Ok(())
+}
+
+/// Write the end-of-run `metrics.json`.
+pub fn write_metrics_json(path: &Path) -> Result<()> {
+    std::fs::write(path, metrics_json().to_pretty() + "\n")
+        .with_context(|| format!("writing metrics to {}", path.display()))?;
+    log::info!("wrote metrics to {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TIME_BUCKETS;
+
+    #[test]
+    fn prometheus_text_renders_registered_metrics() {
+        let _guard = crate::obs::test_lock();
+        crate::obs::force(true);
+        registry().counter("test.export.counter").add(3);
+        registry()
+            .histogram("test.export.lat", TIME_BUCKETS)
+            .record(0.0015);
+        let text = prometheus_text();
+        assert!(text.contains("cgcn_test_export_counter_total 3"));
+        assert!(text.contains("# TYPE cgcn_test_export_lat histogram"));
+        assert!(text.contains("cgcn_test_export_lat_count 1"));
+        assert!(text.contains("quantile=\"0.99\""));
+        // Cumulative buckets end at the total count.
+        assert!(text.contains("cgcn_test_export_lat_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn metrics_json_roundtrips() {
+        let _guard = crate::obs::test_lock();
+        crate::obs::force(true);
+        registry().counter("test.export.json").inc();
+        let doc = metrics_json();
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        assert!(back.get("counters").get("test.export.json").as_f64() >= Some(1.0));
+        assert!(back.get("histograms").as_obj().is_some());
+    }
+}

@@ -1,0 +1,165 @@
+//! Zero-dependency telemetry: a metrics registry, tracing spans, Chrome
+//! trace export and Prometheus-style exposition.
+//!
+//! Three pieces (DESIGN.md §10):
+//!
+//! - [`registry`] — a process-global [`Registry`] of counters, gauges and
+//!   fixed-bucket histograms. Counters and histograms record into
+//!   *per-thread shards* (plain relaxed atomic load+store — the owning
+//!   thread is the only writer, so there is no RMW contention and no lock
+//!   anywhere near a kernel loop); a scrape sums the shards.
+//! - [`trace`] — lightweight spans (`span!("admm.w_update", community = k)`)
+//!   recorded into bounded per-thread ring buffers and exported as Chrome
+//!   trace-event JSON (`--trace-out trace.json` opens directly in
+//!   `chrome://tracing` / Perfetto, with one lane per thread).
+//! - [`export`] — renders a scrape as Prometheus text exposition (the
+//!   serve `Metrics` frame / `cgcn stats`) or as `metrics.json`
+//!   (`--metrics-out`), with span-duration summaries computed through
+//!   [`crate::util::stats`].
+//!
+//! Everything is gated on `CGCN_OBS` (`off`/`0` disables; default on).
+//! Disabled, every record path is one relaxed atomic load and a branch.
+//! Telemetry only *observes* — it never reorders or synchronises work —
+//! so training results are bitwise identical with the gate on or off
+//! (asserted by `rust/tests/obs.rs`).
+//!
+//! Span guards must be *bound* to live for the measured region:
+//! `let _span = span!("phase");` — a bare `let _ =` drops immediately.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::{metrics_json, prometheus_text, write_chrome_trace, write_metrics_json};
+pub use registry::{
+    registry, Counter, Gauge, Histogram, HistSnapshot, MetricsSnapshot, Registry, SIZE_BUCKETS,
+    TIME_BUCKETS,
+};
+pub use trace::{chrome_trace_json, span_summaries, SpanGuard};
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Runtime gate
+// ---------------------------------------------------------------------------
+
+/// 0 = uninitialised, 1 = on, 2 = off.
+static GATE: AtomicU8 = AtomicU8::new(0);
+
+#[cold]
+fn init_gate() -> bool {
+    let on = match std::env::var("CGCN_OBS").as_deref() {
+        Ok("off") | Ok("0") | Ok("false") => false,
+        _ => true,
+    };
+    GATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+    on
+}
+
+/// Is telemetry recording enabled? One relaxed load on the fast path.
+#[inline]
+pub fn enabled() -> bool {
+    match GATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => init_gate(),
+    }
+}
+
+/// Override the `CGCN_OBS` gate at runtime (tests and the bench overhead
+/// gate flip this within one process).
+pub fn force(on: bool) {
+    GATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Time base + thread identity
+// ---------------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide trace time origin (first telemetry touch).
+pub(crate) fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch.
+#[inline]
+pub(crate) fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense per-thread id, shared by metric shards and trace lanes so a
+/// worker occupies the same `tid` lane everywhere.
+pub(crate) fn thread_id() -> u64 {
+    TID.try_with(|t| *t).unwrap_or(0)
+}
+
+/// The current thread's name (trace-lane label), or `thread-<tid>`.
+pub(crate) fn thread_label() -> String {
+    std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{}", thread_id()))
+}
+
+// ---------------------------------------------------------------------------
+// Call-site handle caches
+// ---------------------------------------------------------------------------
+
+/// A cached [`Counter`] handle for a literal metric name — registration
+/// runs once per call site, recording is lock-free after that.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static __OBS_C: std::sync::OnceLock<$crate::obs::Counter> = std::sync::OnceLock::new();
+        *__OBS_C.get_or_init(|| $crate::obs::registry().counter($name))
+    }};
+}
+
+/// A cached [`Gauge`] handle for a literal metric name.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static __OBS_G: std::sync::OnceLock<$crate::obs::Gauge> = std::sync::OnceLock::new();
+        *__OBS_G.get_or_init(|| $crate::obs::registry().gauge($name))
+    }};
+}
+
+/// A cached [`Histogram`] handle: `obs_hist!("name", TIME_BUCKETS)`.
+#[macro_export]
+macro_rules! obs_hist {
+    ($name:expr, $bounds:expr) => {{
+        static __OBS_H: std::sync::OnceLock<$crate::obs::Histogram> = std::sync::OnceLock::new();
+        *__OBS_H.get_or_init(|| $crate::obs::registry().histogram($name, $bounds))
+    }};
+}
+
+/// Serialises unit tests that flip the global gate (tests share one
+/// process; an unsynchronised `force(false)` would drop another test's
+/// samples).
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Open a tracing span; close (and record) on drop. Bind it:
+/// `let _span = span!("admm.w_update", community = k);`
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::SpanGuard::enter($name)
+    };
+    ($name:expr, $key:ident = $val:expr) => {
+        $crate::obs::SpanGuard::enter_arg($name, stringify!($key), ($val) as i64)
+    };
+}

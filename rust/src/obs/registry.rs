@@ -1,0 +1,473 @@
+//! The process-global metrics registry: counters, gauges and fixed-bucket
+//! histograms with per-thread lock-free recorders.
+//!
+//! Recording model: every thread owns one [`Shard`] (created lazily on its
+//! first record and registered with the global [`Registry`]). Counters and
+//! histograms write only to the owning thread's shard with relaxed atomic
+//! *load + store* — the owner is the sole writer, so no `fetch_add`, no
+//! CAS loop and no mutex exist on any record path. Scrapes (`snapshot()`)
+//! read every shard's atomics and sum; a scrape racing a record may miss
+//! the in-flight sample, which is the standard sharded-counter contract
+//! (eventually exact once the writers quiesce — the concurrency test in
+//! `rust/tests/obs.rs` joins its writers before scraping).
+//!
+//! Gauges are point-in-time values set from anywhere (queue depth, live
+//! connections), so they live in one global atomic slot per gauge rather
+//! than per-thread shards.
+//!
+//! Registration is bounded: at most [`MAX_COUNTERS`]/[`MAX_GAUGES`]/
+//! [`MAX_HISTS`] distinct metrics. Shards pre-allocate dense fixed-size
+//! slots so a metric registered *after* a shard exists still has its slot.
+//! Overflowing the bound yields a dead handle (records become no-ops) and
+//! a one-line warning — telemetry must never abort training.
+
+use super::enabled;
+use crate::util::stats;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Distinct counter metrics supported per process.
+pub const MAX_COUNTERS: usize = 192;
+/// Distinct gauge metrics supported per process.
+pub const MAX_GAUGES: usize = 64;
+/// Distinct histogram metrics supported per process.
+pub const MAX_HISTS: usize = 64;
+
+/// Dead-handle sentinel (registration overflow / unknown metric).
+const DEAD: u32 = u32::MAX;
+
+/// Exponential latency bounds in seconds (1 µs … 10 s, 1-2-5 decades).
+/// The final `+Inf` overflow bucket is implicit.
+pub const TIME_BUCKETS: &[f64] = &[
+    1e-6, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2, 2e-2, 5e-2,
+    1e-1, 2e-1, 5e-1, 1.0, 2.0, 5.0, 10.0,
+];
+
+/// Power-of-two size bounds (batch sizes, queue depths, chunk counts).
+pub const SIZE_BUCKETS: &[f64] = &[
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
+];
+
+/// Handle to a monotonically increasing counter.
+#[derive(Clone, Copy, Debug)]
+pub struct Counter(u32);
+
+/// Handle to a set/add point-in-time gauge.
+#[derive(Clone, Copy, Debug)]
+pub struct Gauge(u32);
+
+/// Handle to a fixed-bucket histogram.
+#[derive(Clone, Copy, Debug)]
+pub struct Histogram(u32);
+
+/// One thread's private recording slots. Only the owning thread writes;
+/// scrapes read concurrently (hence atomics, but never RMW contention).
+pub(crate) struct Shard {
+    counters: Box<[AtomicU64]>,
+    /// Lazily sized per-histogram bucket stores (bounds differ per metric).
+    hists: Box<[OnceLock<HistStore>]>,
+}
+
+struct HistStore {
+    /// Bucket upper bounds, cached here at first record so the hot path
+    /// never touches the registry lock.
+    bounds: &'static [f64],
+    /// `bounds.len() + 1` slots; the last is the +Inf overflow bucket.
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Sum of recorded values as f64 bits (owner-only load/modify/store).
+    sum_bits: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counters: (0..MAX_COUNTERS).map(|_| AtomicU64::new(0)).collect(),
+            hists: (0..MAX_HISTS).map(|_| OnceLock::new()).collect(),
+        }
+    }
+}
+
+struct HistDef {
+    name: &'static str,
+    bounds: &'static [f64],
+}
+
+/// The process-global registry. Obtain it with [`registry()`].
+pub struct Registry {
+    counter_names: Mutex<Vec<&'static str>>,
+    gauge_names: Mutex<Vec<&'static str>>,
+    gauge_vals: Box<[AtomicI64]>,
+    hist_defs: Mutex<Vec<HistDef>>,
+    shards: Mutex<Vec<(u64, String, Arc<Shard>)>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global [`Registry`].
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        counter_names: Mutex::new(Vec::new()),
+        gauge_names: Mutex::new(Vec::new()),
+        gauge_vals: (0..MAX_GAUGES).map(|_| AtomicI64::new(0)).collect(),
+        hist_defs: Mutex::new(Vec::new()),
+        shards: Mutex::new(Vec::new()),
+    })
+}
+
+thread_local! {
+    static SHARD: Arc<Shard> = {
+        let shard = Arc::new(Shard::new());
+        let mut shards = registry().shards.lock().unwrap();
+        shards.push((super::thread_id(), super::thread_label(), shard.clone()));
+        shard
+    };
+}
+
+/// Run `f` against the calling thread's shard; a no-op during TLS
+/// teardown (a dropped sample beats a panic in a thread destructor).
+#[inline]
+fn with_shard(f: impl FnOnce(&Shard)) {
+    let _ = SHARD.try_with(|s| f(s));
+}
+
+fn intern(names: &Mutex<Vec<&'static str>>, name: &'static str, cap: usize, kind: &str) -> u32 {
+    let mut names = names.lock().unwrap();
+    if let Some(i) = names.iter().position(|n| *n == name) {
+        return i as u32;
+    }
+    if names.len() >= cap {
+        log::warn!("obs: {kind} registry full ({cap}); '{name}' will not be recorded");
+        return DEAD;
+    }
+    names.push(name);
+    (names.len() - 1) as u32
+}
+
+impl Registry {
+    /// Register (or look up) a counter by name.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        Counter(intern(&self.counter_names, name, MAX_COUNTERS, "counter"))
+    }
+
+    /// Register (or look up) a gauge by name.
+    pub fn gauge(&self, name: &'static str) -> Gauge {
+        Gauge(intern(&self.gauge_names, name, MAX_GAUGES, "gauge"))
+    }
+
+    /// Register (or look up) a histogram with the given bucket upper
+    /// bounds (ascending; a +Inf overflow bucket is implicit). Re-registering
+    /// an existing name keeps the original bounds.
+    pub fn histogram(&self, name: &'static str, bounds: &'static [f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let mut defs = self.hist_defs.lock().unwrap();
+        if let Some(i) = defs.iter().position(|d| d.name == name) {
+            return Histogram(i as u32);
+        }
+        if defs.len() >= MAX_HISTS {
+            log::warn!("obs: histogram registry full ({MAX_HISTS}); '{name}' will not be recorded");
+            return Histogram(DEAD);
+        }
+        defs.push(HistDef { name, bounds });
+        Histogram((defs.len() - 1) as u32)
+    }
+
+    /// Aggregate every shard into one consistent-enough snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counter_names: Vec<&'static str> = self.counter_names.lock().unwrap().clone();
+        let gauge_names: Vec<&'static str> = self.gauge_names.lock().unwrap().clone();
+        let hist_meta: Vec<(&'static str, &'static [f64])> = {
+            let defs = self.hist_defs.lock().unwrap();
+            defs.iter().map(|d| (d.name, d.bounds)).collect()
+        };
+        let shards: Vec<Arc<Shard>> = {
+            let s = self.shards.lock().unwrap();
+            s.iter().map(|(_, _, sh)| sh.clone()).collect()
+        };
+
+        let mut counters: Vec<(String, u64)> = counter_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let total = shards.iter().map(|s| s.counters[i].load(Relaxed)).sum();
+                (n.to_string(), total)
+            })
+            .collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let mut gauges: Vec<(String, i64)> = gauge_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.to_string(), self.gauge_vals[i].load(Relaxed)))
+            .collect();
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let mut hists: Vec<HistSnapshot> = hist_meta
+            .iter()
+            .enumerate()
+            .map(|(i, (name, bounds))| {
+                let mut buckets = vec![0u64; bounds.len() + 1];
+                let mut count = 0u64;
+                let mut sum = 0.0f64;
+                for shard in &shards {
+                    if let Some(store) = shard.hists[i].get() {
+                        for (acc, b) in buckets.iter_mut().zip(store.buckets.iter()) {
+                            *acc += b.load(Relaxed);
+                        }
+                        count += store.count.load(Relaxed);
+                        sum += f64::from_bits(store.sum_bits.load(Relaxed));
+                    }
+                }
+                HistSnapshot {
+                    name: name.to_string(),
+                    bounds: bounds.to_vec(),
+                    buckets,
+                    count,
+                    sum,
+                }
+            })
+            .collect();
+        hists.sort_by(|a, b| a.name.cmp(&b.name));
+
+        MetricsSnapshot {
+            counters,
+            gauges,
+            hists,
+        }
+    }
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(self, n: u64) {
+        if !enabled() || self.0 == DEAD {
+            return;
+        }
+        with_shard(|s| {
+            let c = &s.counters[self.0 as usize];
+            // Owner-only writer: plain load+store beats fetch_add (no
+            // lock prefix) and loses nothing.
+            c.store(c.load(Relaxed).wrapping_add(n), Relaxed);
+        });
+    }
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(self, v: i64) {
+        if !enabled() || self.0 == DEAD {
+            return;
+        }
+        registry().gauge_vals[self.0 as usize].store(v, Relaxed);
+    }
+
+    /// Add a (possibly negative) delta — gauges are written from many
+    /// threads, so unlike counters this must be a real RMW.
+    #[inline]
+    pub fn add(self, d: i64) {
+        if !enabled() || self.0 == DEAD {
+            return;
+        }
+        registry().gauge_vals[self.0 as usize].fetch_add(d, Relaxed);
+    }
+}
+
+impl Histogram {
+    /// Record one observation.
+    #[inline]
+    pub fn record(self, v: f64) {
+        if !enabled() || self.0 == DEAD {
+            return;
+        }
+        with_shard(|s| {
+            // One registry-lock round-trip per (thread, histogram) to cache
+            // the bounds; every later record is pure atomics.
+            let store = s.hists[self.0 as usize].get_or_init(|| {
+                let bounds = {
+                    let defs = registry().hist_defs.lock().unwrap();
+                    defs[self.0 as usize].bounds
+                };
+                HistStore {
+                    bounds,
+                    buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+                    count: AtomicU64::new(0),
+                    sum_bits: AtomicU64::new(0.0f64.to_bits()),
+                }
+            });
+            let bounds = store.bounds;
+            let idx = bounds.iter().position(|&b| v <= b).unwrap_or(bounds.len());
+            let b = &store.buckets[idx];
+            b.store(b.load(Relaxed) + 1, Relaxed);
+            let c = &store.count;
+            c.store(c.load(Relaxed) + 1, Relaxed);
+            let s_ = f64::from_bits(store.sum_bits.load(Relaxed)) + v;
+            store.sum_bits.store(s_.to_bits(), Relaxed);
+        });
+    }
+
+    /// Record a duration in seconds.
+    #[inline]
+    pub fn record_secs(self, t0: std::time::Instant) {
+        if !enabled() || self.0 == DEAD {
+            return;
+        }
+        self.record(t0.elapsed().as_secs_f64());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------------
+
+/// One scrape of the whole registry (sorted by metric name).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Value of a counter by name (0 if never registered).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Histogram scrape by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+}
+
+/// Aggregated histogram state at scrape time.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub name: String,
+    /// Bucket upper bounds (ascending); `buckets` has one extra +Inf slot.
+    pub bounds: Vec<f64>,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Estimated quantile, `q ∈ [0,1]` — the same clamp + linear
+    /// interpolation as [`stats::percentile`], applied to the bucket CDF
+    /// (interpolating within the bucket that holds the target rank).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * (self.count as f64 - 1.0);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (seen + c) as f64 > target {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds.get(i).copied().unwrap_or_else(|| {
+                    // +Inf overflow bucket: fall back to the largest bound
+                    // (or the mean when there are no finite bounds).
+                    self.bounds.last().copied().unwrap_or_else(|| self.mean())
+                });
+                let frac = (target - seen as f64) / c as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+            seen += c;
+        }
+        self.bounds.last().copied().unwrap_or_else(|| self.mean())
+    }
+
+    /// `(p50, p95, p99)` — the percentile triple [`stats::Summary`] reports.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+}
+
+/// Summarise raw samples with the shared percentile math (used by the
+/// exporters for span durations, where exact samples exist).
+pub fn summarize(samples: &[f64]) -> Option<stats::Summary> {
+    if samples.is_empty() {
+        None
+    } else {
+        Some(stats::Summary::of(samples))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_roundtrip_and_gate() {
+        let _guard = super::super::test_lock();
+        super::super::force(true);
+        let c = registry().counter("test.registry.roundtrip");
+        c.inc();
+        c.add(4);
+        assert_eq!(registry().snapshot().counter("test.registry.roundtrip"), 5);
+        // Flipping the gate off drops samples entirely.
+        super::super::force(false);
+        let g = registry().counter("test.registry.gated");
+        g.add(100);
+        super::super::force(true);
+        assert_eq!(registry().snapshot().counter("test.registry.gated"), 0);
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let _guard = super::super::test_lock();
+        super::super::force(true);
+        let g = registry().gauge("test.registry.gauge");
+        g.set(7);
+        g.add(-2);
+        let snap = registry().snapshot();
+        let v = snap.gauges.iter().find(|(n, _)| n == "test.registry.gauge");
+        assert_eq!(v.map(|(_, v)| *v), Some(5));
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        let _guard = super::super::test_lock();
+        super::super::force(true);
+        let h = registry().histogram("test.registry.hist", SIZE_BUCKETS);
+        for v in [1.0, 2.0, 3.0, 100.0] {
+            h.record(v);
+        }
+        let snap = registry().snapshot();
+        let hs = snap.hist("test.registry.hist").unwrap();
+        assert_eq!(hs.count, 4);
+        assert!((hs.sum - 106.0).abs() < 1e-9);
+        let p50 = hs.quantile(0.5);
+        assert!((1.0..=4.0).contains(&p50), "p50 {p50}");
+        assert!(hs.quantile(1.0) >= hs.quantile(0.0));
+    }
+
+    #[test]
+    fn duplicate_registration_reuses_id() {
+        let a = registry().counter("test.registry.dup");
+        let b = registry().counter("test.registry.dup");
+        assert_eq!(a.0, b.0);
+        let ha = registry().histogram("test.registry.dup.h", TIME_BUCKETS);
+        let hb = registry().histogram("test.registry.dup.h", SIZE_BUCKETS);
+        assert_eq!(ha.0, hb.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Tracing spans: per-thread ring buffers + Chrome trace-event export.
+//!
+//! A span is opened with [`crate::span!`] and recorded when its guard
+//! drops — one fixed-size event (name, start, duration, one optional
+//! integer argument) appended to the *calling thread's* ring buffer. The
+//! ring is guarded by a per-thread mutex that only the owner ever takes on
+//! the record path (export is the sole other reader, at end of run /
+//! scrape), so recording is an uncontended lock + a vector write: cheap at
+//! phase/chunk granularity, and kept strictly off kernel inner loops.
+//!
+//! Rings are bounded (`CGCN_OBS_RING` events per thread, default 65536);
+//! on overflow the oldest events are overwritten and a drop count is kept,
+//! so a long run can never exhaust memory through telemetry.
+//!
+//! Export renders the Chrome trace-event format — a JSON object with a
+//! `traceEvents` array of `ph:"X"` (complete) events carrying `ts`/`dur`
+//! in microseconds plus `ph:"M"` thread-name metadata, one `tid` lane per
+//! thread — which `chrome://tracing` and Perfetto open directly. Events
+//! are sorted by `ts` within each thread (guards record at *close* time,
+//! so a parent span lands after its children despite starting earlier).
+
+use super::{enabled, now_us, thread_id, thread_label};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One closed span.
+#[derive(Clone, Copy, Debug)]
+struct SpanEvent {
+    name: &'static str,
+    /// Start, microseconds since the trace epoch.
+    ts_us: f64,
+    dur_us: f64,
+    arg: Option<(&'static str, i64)>,
+}
+
+/// Fixed-capacity overwrite-oldest ring.
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next write slot once `buf.len() == cap`.
+    next: usize,
+    dropped: u64,
+}
+
+struct TraceBuf {
+    tid: u64,
+    label: String,
+    ring: Mutex<Ring>,
+}
+
+struct Trace {
+    bufs: Mutex<Vec<Arc<TraceBuf>>>,
+    cap: usize,
+}
+
+static TRACE: OnceLock<Trace> = OnceLock::new();
+
+fn trace() -> &'static Trace {
+    TRACE.get_or_init(|| {
+        let cap = std::env::var("CGCN_OBS_RING")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&c| c > 0)
+            .unwrap_or(65536);
+        Trace {
+            bufs: Mutex::new(Vec::new()),
+            cap,
+        }
+    })
+}
+
+thread_local! {
+    static TBUF: Arc<TraceBuf> = {
+        let t = trace();
+        let buf = Arc::new(TraceBuf {
+            tid: thread_id(),
+            label: thread_label(),
+            ring: Mutex::new(Ring {
+                buf: Vec::new(),
+                next: 0,
+                dropped: 0,
+            }),
+        });
+        t.bufs.lock().unwrap().push(buf.clone());
+        buf
+    };
+}
+
+fn record(ev: SpanEvent) {
+    let cap = trace().cap;
+    // No-op during TLS teardown: dropping the event beats panicking in a
+    // thread destructor.
+    let _ = TBUF.try_with(|b| {
+        let mut ring = b.ring.lock().unwrap();
+        if ring.buf.len() < cap {
+            ring.buf.push(ev);
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = ev;
+            ring.next = (slot + 1) % cap;
+            ring.dropped += 1;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Span guard
+// ---------------------------------------------------------------------------
+
+/// RAII span: opened by [`crate::span!`], recorded on drop. Unarmed (a
+/// pure no-op) when the `CGCN_OBS` gate is off at entry.
+pub struct SpanGuard {
+    name: &'static str,
+    arg: Option<(&'static str, i64)>,
+    t0_us: f64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    #[inline]
+    pub fn enter(name: &'static str) -> SpanGuard {
+        let armed = enabled();
+        SpanGuard {
+            name,
+            arg: None,
+            t0_us: if armed { now_us() } else { 0.0 },
+            armed,
+        }
+    }
+
+    #[inline]
+    pub fn enter_arg(name: &'static str, key: &'static str, val: i64) -> SpanGuard {
+        let mut g = SpanGuard::enter(name);
+        g.arg = Some((key, val));
+        g
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur = now_us() - self.t0_us;
+        record(SpanEvent {
+            name: self.name,
+            ts_us: self.t0_us,
+            dur_us: dur,
+            arg: self.arg,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Export
+// ---------------------------------------------------------------------------
+
+/// Snapshot one thread's events in `ts` order.
+fn sorted_events(buf: &TraceBuf) -> (Vec<SpanEvent>, u64) {
+    let ring = buf.ring.lock().unwrap();
+    let mut evs = ring.buf.clone();
+    let dropped = ring.dropped;
+    drop(ring);
+    evs.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    (evs, dropped)
+}
+
+/// The full Chrome trace-event document (round-trips through
+/// [`crate::util::json`]; `ts` is non-decreasing within each `tid`).
+pub fn chrome_trace_json() -> Json {
+    let bufs: Vec<Arc<TraceBuf>> = trace().bufs.lock().unwrap().clone();
+    let mut events: Vec<Json> = Vec::new();
+    events.push(Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(1.0)),
+        ("args", Json::obj(vec![("name", Json::str("cgcn"))])),
+    ]));
+    let mut total_dropped = 0u64;
+    for buf in &bufs {
+        let (evs, dropped) = sorted_events(buf);
+        total_dropped += dropped;
+        if evs.is_empty() {
+            continue;
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(buf.tid as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(&buf.label))]),
+            ),
+        ]));
+        for e in evs {
+            let mut fields = vec![
+                ("name", Json::str(e.name)),
+                ("cat", Json::str("cgcn")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(e.ts_us)),
+                ("dur", Json::num(e.dur_us)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(buf.tid as f64)),
+            ];
+            if let Some((k, v)) = e.arg {
+                fields.push(("args", Json::obj(vec![(k, Json::num(v as f64))])));
+            }
+            events.push(Json::obj(fields));
+        }
+    }
+    if total_dropped > 0 {
+        log::warn!("obs: trace rings overflowed; {total_dropped} oldest events dropped");
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("droppedEvents", Json::num(total_dropped as f64)),
+    ])
+}
+
+/// Per-span-name duration summaries in microseconds, across all threads —
+/// computed with the shared [`crate::util::stats`] percentile math.
+pub fn span_summaries() -> Vec<(String, Summary)> {
+    let bufs: Vec<Arc<TraceBuf>> = trace().bufs.lock().unwrap().clone();
+    let mut by_name: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    for buf in &bufs {
+        let (evs, _) = sorted_events(buf);
+        for e in evs {
+            by_name.entry(e.name).or_default().push(e.dur_us);
+        }
+    }
+    by_name
+        .into_iter()
+        .map(|(name, durs)| (name.to_string(), Summary::of(&durs)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_and_exports() {
+        let _guard = super::super::test_lock();
+        super::super::force(true);
+        {
+            let _s = crate::span!("test.trace.outer", community = 3);
+            let _inner = crate::span!("test.trace.inner");
+        }
+        let doc = chrome_trace_json();
+        let evs = doc.get("traceEvents").as_arr().expect("traceEvents");
+        let outer = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("test.trace.outer"))
+            .expect("outer span exported");
+        assert_eq!(outer.get("ph").as_str(), Some("X"));
+        assert_eq!(
+            outer.get("args").get("community").as_f64(),
+            Some(3.0)
+        );
+        assert!(evs
+            .iter()
+            .any(|e| e.get("name").as_str() == Some("test.trace.inner")));
+        // Summaries cover the recorded names.
+        let sums = span_summaries();
+        assert!(sums.iter().any(|(n, s)| n == "test.trace.outer" && s.n >= 1));
+    }
+
+    #[test]
+    fn disabled_gate_records_nothing() {
+        let _guard = super::super::test_lock();
+        super::super::force(false);
+        {
+            let _s = crate::span!("test.trace.gated");
+        }
+        super::super::force(true);
+        let doc = chrome_trace_json();
+        let evs = doc.get("traceEvents").as_arr().expect("traceEvents");
+        assert!(!evs
+            .iter()
+            .any(|e| e.get("name").as_str() == Some("test.trace.gated")));
+    }
+}

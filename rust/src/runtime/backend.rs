@@ -369,15 +369,21 @@ impl NativeBackend {
         }
     }
 
-    /// The executor for an op that resolved to `t` threads.
+    /// The executor for an op that resolved to `t` threads. Also the one
+    /// telemetry choke point for backend ops: a single per-thread counter
+    /// bump per dispatched op (kernel inner loops stay untouched).
     fn exec(&self, t: usize) -> OpExec<'_> {
         if t <= 1 {
+            crate::obs_counter!("backend.ops.serial").inc();
             OpExec::Serial
         } else if let Some(p) = &self.pool {
+            crate::obs_counter!("backend.ops.pooled").inc();
             OpExec::Pool(p)
         } else if self.spawn_ops {
+            crate::obs_counter!("backend.ops.spawn").inc();
             OpExec::Spawn
         } else {
+            crate::obs_counter!("backend.ops.serial").inc();
             OpExec::Serial
         }
     }

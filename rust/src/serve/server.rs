@@ -31,6 +31,12 @@
 //! | 7   | server→client   | StatsR { requests, nodes, batches, warms }  |
 //! | 8   | client→server   | Shutdown {}                                 |
 //! | 9   | server→client   | ShutdownR {}                                |
+//! | 10  | client→server   | Metrics {}                                  |
+//! | 11  | server→client   | MetricsR { prometheus text str }            |
+//!
+//! The Metrics frame scrapes the server process's [`crate::obs`] registry
+//! (Prometheus-style text exposition, including latency quantiles) — the
+//! `cgcn stats` subcommand is a thin client for it (DESIGN.md §10).
 
 use super::session::InferenceSession;
 use crate::util::pool::{resolve_threads, Pool};
@@ -53,6 +59,8 @@ pub const TAG_STATS: u8 = 6;
 pub const TAG_STATS_R: u8 = 7;
 pub const TAG_SHUTDOWN: u8 = 8;
 pub const TAG_SHUTDOWN_R: u8 = 9;
+pub const TAG_METRICS: u8 = 10;
+pub const TAG_METRICS_R: u8 = 11;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -127,6 +135,7 @@ impl BatchQueue {
             return false;
         }
         g.pending.push(p);
+        crate::obs_gauge!("serve.queue.depth").set(g.pending.len() as i64);
         self.cv.notify_all();
         true
     }
@@ -157,7 +166,9 @@ impl BatchQueue {
             }
         }
         let take = g.pending.len().min(max);
-        Some(g.pending.drain(..take).collect())
+        let batch: Vec<Pending> = g.pending.drain(..take).collect();
+        crate::obs_gauge!("serve.queue.depth").set(g.pending.len() as i64);
+        Some(batch)
     }
 
     fn close(&self) {
@@ -383,6 +394,8 @@ fn batcher_loop(
     max_batch: usize,
 ) {
     while let Some(batch) = shared.queue.pop_batch(window, max_batch) {
+        let _span = crate::span!("serve.batch", queries = batch.len());
+        crate::obs_hist!("serve.batch.size", crate::obs::SIZE_BUCKETS).record(batch.len() as f64);
         // Coalesce: union of requested ids, one backend batch.
         let mut ids: Vec<usize> = batch.iter().flat_map(|p| p.nodes.iter().copied()).collect();
         ids.sort_unstable();
@@ -430,6 +443,7 @@ const MAX_REQUEST_FRAME: usize = 16 << 20;
 const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
 fn handle_conn(stream: TcpStream, shared: &ServeShared) -> Result<()> {
+    crate::obs_counter!("serve.connections").inc();
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -476,6 +490,7 @@ fn handle_conn(stream: TcpStream, shared: &ServeShared) -> Result<()> {
                     continue;
                 }
                 let n_nodes = nodes.len() as u64;
+                let t0 = Instant::now();
                 let (tx, rx) = mpsc::channel();
                 let accepted = shared.queue.push(Pending { nodes, resp: tx });
                 if !accepted {
@@ -493,9 +508,17 @@ fn handle_conn(stream: TcpStream, shared: &ServeShared) -> Result<()> {
                         e.f32s(&flat);
                         write_frame(&mut writer, e.bytes())?;
                     }
-                    Ok(Err(msg)) => write_frame(&mut writer, &err_frame(&msg))?,
-                    Err(_) => write_frame(&mut writer, &err_frame("batcher stopped"))?,
+                    Ok(Err(msg)) => {
+                        crate::obs_counter!("serve.request.errors").inc();
+                        write_frame(&mut writer, &err_frame(&msg))?;
+                    }
+                    Err(_) => {
+                        crate::obs_counter!("serve.request.errors").inc();
+                        write_frame(&mut writer, &err_frame("batcher stopped"))?;
+                    }
                 }
+                // Queue wait + batch compute + reply flush, per request.
+                crate::obs_hist!("serve.request.secs", crate::obs::TIME_BUCKETS).record_secs(t0);
             }
             TAG_STATS => {
                 let mut e = Enc::new();
@@ -504,6 +527,11 @@ fn handle_conn(stream: TcpStream, shared: &ServeShared) -> Result<()> {
                     .u64(shared.stats.nodes.load(Ordering::Relaxed))
                     .u64(shared.stats.batches.load(Ordering::Relaxed))
                     .u64(shared.warms.load(Ordering::Relaxed));
+                write_frame(&mut writer, e.bytes())?;
+            }
+            TAG_METRICS => {
+                let mut e = Enc::new();
+                e.u8(TAG_METRICS_R).str(&crate::obs::prometheus_text());
                 write_frame(&mut writer, e.bytes())?;
             }
             TAG_SHUTDOWN => {
@@ -629,6 +657,15 @@ impl ServeClient {
             batches: d.u64()?,
             warms: d.u64()?,
         })
+    }
+
+    /// Scrape the server process's metrics registry as Prometheus-style
+    /// text (counters, gauges, histogram buckets + latency quantiles).
+    pub fn metrics(&mut self) -> Result<String> {
+        let mut e = Enc::new();
+        e.u8(TAG_METRICS);
+        let frame = self.roundtrip(e.bytes(), TAG_METRICS_R)?;
+        Ok(Dec::new(&frame[1..]).str()?)
     }
 
     /// Ask the server to stop (acknowledged before it exits).

@@ -236,6 +236,7 @@ impl InferenceSession {
             self.z_cache[l - 1].copy_rows_from(&rows, lo);
             self.z_valid[l - 1][m] = true;
             self.stats.warms += 1;
+            crate::obs_counter!("serve.cache.warms").inc();
         }
         Ok(())
     }
@@ -263,6 +264,7 @@ impl InferenceSession {
             self.h_cache[l - 1].copy_rows_from(&rows, lo);
             self.h_valid[l - 1][m] = true;
             self.stats.warms += 1;
+            crate::obs_counter!("serve.cache.warms").inc();
         }
         Ok(())
     }
@@ -273,6 +275,7 @@ impl InferenceSession {
     /// one row per requested node, in request order. Cold communities are
     /// warmed on the way; warm ones are a row gather + one matmul.
     pub fn logits_for(&mut self, nodes: &[usize]) -> Result<Matrix> {
+        let _span = crate::span!("serve.logits", nodes = nodes.len());
         let l_total = self.ws.layers;
         let mut rows = Vec::with_capacity(nodes.len());
         for &id in nodes {

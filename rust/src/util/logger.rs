@@ -1,8 +1,10 @@
 //! Minimal `log` facade backend (env_logger is unavailable offline).
 //!
-//! Level is controlled by `CGCN_LOG` (error|warn|info|debug|trace, default
-//! info). Output goes to stderr with elapsed-time prefixes so training logs
-//! double as coarse timing traces.
+//! Level is controlled by `CGCN_LOG` (error|warn|info|debug|trace|off,
+//! default info; `0`/`false`/`none` also disable). Output goes to stderr
+//! with elapsed-time + thread-name prefixes so training logs double as
+//! coarse timing traces and pool-worker / transport lines are
+//! attributable to the thread that emitted them.
 
 use std::io::Write;
 use std::sync::OnceLock;
@@ -23,10 +25,12 @@ impl log::Log for Logger {
             return;
         }
         let t = self.start.elapsed().as_secs_f64();
+        let cur = std::thread::current();
+        let thread = cur.name().unwrap_or("?");
         let mut err = std::io::stderr().lock();
         let _ = writeln!(
             err,
-            "[{t:9.3}s {:5} {}] {}",
+            "[{t:9.3}s {:5} {thread} {}] {}",
             record.level(),
             record.target().split("::").last().unwrap_or(""),
             record.args()
@@ -38,16 +42,22 @@ impl log::Log for Logger {
 
 static LOGGER: OnceLock<Logger> = OnceLock::new();
 
+/// Parse a `CGCN_LOG` value into a level filter. Unknown values (and an
+/// unset variable, passed as `None`) fall back to `Info`.
+pub fn parse_level(v: Option<&str>) -> log::LevelFilter {
+    match v {
+        Some("error") => log::LevelFilter::Error,
+        Some("warn") => log::LevelFilter::Warn,
+        Some("debug") => log::LevelFilter::Debug,
+        Some("trace") => log::LevelFilter::Trace,
+        Some("off") | Some("0") | Some("false") | Some("none") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    }
+}
+
 /// Install the logger (idempotent). Call early in main / test setup.
 pub fn init() {
-    let level = match std::env::var("CGCN_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("off") => log::LevelFilter::Off,
-        _ => log::LevelFilter::Info,
-    };
+    let level = parse_level(std::env::var("CGCN_LOG").ok().as_deref());
     let logger = LOGGER.get_or_init(|| Logger {
         start: Instant::now(),
         level,
@@ -59,10 +69,28 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::parse_level;
+    use log::LevelFilter;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level(Some("error")), LevelFilter::Error);
+        assert_eq!(parse_level(Some("warn")), LevelFilter::Warn);
+        assert_eq!(parse_level(Some("debug")), LevelFilter::Debug);
+        assert_eq!(parse_level(Some("trace")), LevelFilter::Trace);
+        for off in ["off", "0", "false", "none"] {
+            assert_eq!(parse_level(Some(off)), LevelFilter::Off, "{off}");
+        }
+        // Default and unknown values → info.
+        assert_eq!(parse_level(None), LevelFilter::Info);
+        assert_eq!(parse_level(Some("info")), LevelFilter::Info);
+        assert_eq!(parse_level(Some("verbose")), LevelFilter::Info);
     }
 }

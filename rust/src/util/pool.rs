@@ -102,6 +102,7 @@ impl Pool {
     /// Enqueue a job. Panicking jobs are caught at the job boundary; the
     /// worker is reused for subsequent jobs.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        crate::obs_counter!("pool.jobs").inc();
         self.tx
             .as_ref()
             .expect("pool already shut down")
@@ -231,6 +232,7 @@ impl FjPool {
             }
             return;
         }
+        crate::obs_counter!("pool.fj.runs").inc();
         let _forking = self.fork_lock.lock().unwrap();
         // SAFETY: `f` outlives this call; the raw pointer is only
         // dereferenced while some chunk index is still unclaimed or
@@ -260,7 +262,9 @@ impl FjPool {
                 st.next_chunk += 1;
                 c
             };
+            let busy0 = obs_now();
             let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
+            record_chunk(busy0);
             finish_chunk(&self.shared, result);
         }
         IN_FJ_CHUNK.with(|c| c.set(false));
@@ -283,6 +287,7 @@ impl FjPool {
 
 fn worker_loop(shared: &FjShared) {
     loop {
+        let idle0 = obs_now();
         let (fptr, chunk) = {
             let mut st = shared.state.lock().unwrap();
             loop {
@@ -299,10 +304,34 @@ fn worker_loop(shared: &FjShared) {
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
+        if let Some(t) = idle0 {
+            crate::obs_hist!("pool.worker.idle.secs", crate::obs::TIME_BUCKETS)
+                .record(t.elapsed().as_secs_f64());
+        }
+        let busy0 = obs_now();
         // SAFETY: see JobPtr — the caller is pinned until `done` reaches
         // `n_chunks`, which only happens after this dereference completes.
         let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*fptr)(chunk) }));
+        record_chunk(busy0);
         finish_chunk(shared, result);
+    }
+}
+
+/// `Instant::now()` only when telemetry is on — the fork-join loops run at
+/// microsecond chunk grains, so even a clock read must be behind the gate.
+#[inline]
+fn obs_now() -> Option<std::time::Instant> {
+    crate::obs::enabled().then(std::time::Instant::now)
+}
+
+/// Per-chunk telemetry: chunk count + busy-time histogram (counts and
+/// seconds per worker shard; the scrape sums them).
+#[inline]
+fn record_chunk(busy0: Option<std::time::Instant>) {
+    if let Some(t) = busy0 {
+        crate::obs_hist!("pool.worker.busy.secs", crate::obs::TIME_BUCKETS)
+            .record(t.elapsed().as_secs_f64());
+        crate::obs_counter!("pool.chunks").inc();
     }
 }
 

@@ -40,10 +40,13 @@ impl Summary {
 }
 
 /// Linear-interpolated percentile of a pre-sorted sample, q in [0,1].
+/// An empty sample yields 0.0 (telemetry scrapes may race an idle
+/// recorder; a percentile query must never abort the process).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    if sorted.len() == 1 {
-        return sorted[0];
+    match sorted {
+        [] => return 0.0,
+        [only] => return *only,
+        _ => {}
     }
     let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
@@ -107,6 +110,25 @@ mod tests {
         assert!((percentile(&sorted, 0.5) - 5.0).abs() < 1e-12);
         assert_eq!(percentile(&sorted, 0.0), 0.0);
         assert_eq!(percentile(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_edge_lengths() {
+        // q ∈ {0, 0.5, 0.99, 1} on lengths 0, 1, 2: no panics, no
+        // out-of-bounds, correct interpolation.
+        let qs = [0.0, 0.5, 0.99, 1.0];
+        for &q in &qs {
+            assert_eq!(percentile(&[], q), 0.0);
+            assert_eq!(percentile(&[7.5], q), 7.5);
+        }
+        let two = [2.0, 4.0];
+        assert_eq!(percentile(&two, 0.0), 2.0);
+        assert!((percentile(&two, 0.5) - 3.0).abs() < 1e-12);
+        assert!((percentile(&two, 0.99) - 3.98).abs() < 1e-12);
+        assert_eq!(percentile(&two, 1.0), 4.0);
+        // Out-of-range q clamps rather than indexing out of bounds.
+        assert_eq!(percentile(&two, -1.0), 2.0);
+        assert_eq!(percentile(&two, 2.0), 4.0);
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Telemetry subsystem integration tests (DESIGN.md §10).
+//!
+//! Covers the cross-thread registry contract (N threads × M increments
+//! sum exactly), histogram bucket-boundary semantics, the Chrome
+//! trace-event export round-tripping through `cgcn::util::json` with
+//! non-decreasing `ts` per thread lane, and the load-bearing invariant
+//! that flipping the `CGCN_OBS` gate never perturbs training results
+//! bitwise.
+//!
+//! Tests in this binary share one process-global registry and gate, so
+//! every test that flips `obs::force` serialises on [`gate_lock`].
+
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::data::fixtures;
+use cgcn::obs;
+use cgcn::partition::Method;
+use cgcn::runtime::default_backend;
+use cgcn::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+fn gate_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn concurrent_counter_increments_sum_exactly() {
+    let _g = gate_lock();
+    obs::force(true);
+    const N: usize = 8;
+    const M: u64 = 10_000;
+    let c = obs::registry().counter("test.obs.concurrency");
+    let threads: Vec<_> = (0..N)
+        .map(|_| {
+            std::thread::spawn(move || {
+                for _ in 0..M {
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    // Writers have quiesced (joined), so the sharded sum is exact.
+    let total = obs::registry().snapshot().counter("test.obs.concurrency");
+    assert_eq!(total, N as u64 * M, "lost counter increments");
+}
+
+#[test]
+fn histogram_bucket_boundaries_are_inclusive_upper() {
+    let _g = gate_lock();
+    obs::force(true);
+    let h = obs::registry().histogram("test.obs.bounds", obs::SIZE_BUCKETS);
+    h.record(1.0); // exactly on the first bound → bucket 0 (le="1")
+    h.record(1.5); // bucket 1 (le="2")
+    h.record(2.0); // exactly on a bound → same bucket 1
+    h.record(4096.0); // last finite bucket
+    h.record(5000.0); // past every bound → +Inf overflow
+    let snap = obs::registry().snapshot();
+    let hs = snap.hist("test.obs.bounds").expect("histogram registered");
+    let n_bounds = hs.bounds.len();
+    assert_eq!(hs.count, 5);
+    assert_eq!(hs.buckets.len(), n_bounds + 1, "one extra +Inf slot");
+    assert_eq!(hs.buckets[0], 1, "v == bound lands in that bucket");
+    assert_eq!(hs.buckets[1], 2, "(1,2] bucket holds 1.5 and 2.0");
+    assert_eq!(hs.buckets[n_bounds - 1], 1, "last finite bucket");
+    assert_eq!(hs.buckets[n_bounds], 1, "+Inf overflow bucket");
+    assert!((hs.sum - (1.0 + 1.5 + 2.0 + 4096.0 + 5000.0)).abs() < 1e-9);
+}
+
+#[test]
+fn chrome_trace_roundtrips_with_nondecreasing_ts_per_thread() {
+    let _g = gate_lock();
+    obs::force(true);
+    // A few spans on this thread plus one on a named helper thread, so
+    // the export carries at least two tid lanes.
+    for i in 0..4 {
+        let _s = cgcn::span!("test.obs.trace", idx = i);
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
+    std::thread::Builder::new()
+        .name("obs-test-helper".into())
+        .spawn(|| {
+            let _s = cgcn::span!("test.obs.trace.helper");
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+
+    // Round-trip the document through the in-house JSON codec.
+    let text = obs::chrome_trace_json().to_string();
+    let back = Json::parse(&text).expect("trace JSON re-parses");
+    assert_eq!(back.get("displayTimeUnit").as_str(), Some("ms"));
+    let evs = back.get("traceEvents").as_arr().expect("traceEvents array");
+
+    let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    let mut n_complete = 0usize;
+    for e in evs {
+        match e.get("ph").as_str() {
+            Some("X") => {}
+            Some("M") => continue, // metadata (process/thread names)
+            other => panic!("unexpected event phase {other:?}"),
+        }
+        n_complete += 1;
+        assert_eq!(e.get("cat").as_str(), Some("cgcn"));
+        assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+        let tid = e.get("tid").as_f64().expect("tid") as i64;
+        let ts = e.get("ts").as_f64().expect("ts");
+        if let Some(prev) = last_ts.get(&tid) {
+            assert!(*prev <= ts, "ts decreased within tid {tid}: {prev} > {ts}");
+        }
+        last_ts.insert(tid, ts);
+    }
+    assert!(n_complete >= 5, "only {n_complete} complete events exported");
+    let named = |name: &str| evs.iter().any(|e| e.get("name").as_str() == Some(name));
+    assert!(named("test.obs.trace"));
+    assert!(named("test.obs.trace.helper"), "helper thread lane missing");
+    // The span argument survives export.
+    let has_arg = evs.iter().any(|e| {
+        e.get("name").as_str() == Some("test.obs.trace")
+            && e.get("args").get("idx").as_f64() == Some(3.0)
+    });
+    assert!(has_arg, "span arg idx=3 missing from export");
+}
+
+/// Train a few parallel-ADMM epochs and return every weight bit.
+fn train_weight_bits(label: &str) -> Vec<Vec<u32>> {
+    let ds = fixtures::fig1();
+    let mut hp = HyperParams::for_dataset("fig1");
+    hp.hidden = 8;
+    hp.communities = 3;
+    let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+    let mut t = AdmmTrainer::new(ws, default_backend(), AdmmOptions::for_mode(3)).unwrap();
+    t.train(5, label).unwrap();
+    t.state
+        .w
+        .iter()
+        .map(|w| w.data().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn obs_gate_does_not_perturb_training_bitwise() {
+    let _g = gate_lock();
+    obs::force(true);
+    let with_obs = train_weight_bits("obs-on");
+    obs::force(false);
+    let without_obs = train_weight_bits("obs-off");
+    obs::force(true);
+    assert_eq!(
+        with_obs, without_obs,
+        "CGCN_OBS gate changed training results"
+    );
+}
