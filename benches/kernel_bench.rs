@@ -17,15 +17,19 @@
 //!   CGCN_BENCH_OBS_GATE=1 — A/B the CGCN_OBS telemetry gate in-process
 //!                         on pooled ADMM epochs; exit non-zero if
 //!                         enabling telemetry costs more than 5%.
+//!   CGCN_BENCH_RUNTIME_GATE=1 — exit non-zero if the shared work-stealing
+//!                         runtime loses (>10% margin) to the legacy dual
+//!                         pools on the 8-thread end-to-end ADMM epoch.
 
 use cgcn::bench::{bench, fmt_secs, section, BenchOpts};
 use cgcn::config::HyperParams;
-use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, ExecMode, Workspace};
 use cgcn::data::synth;
 use cgcn::partition::Method;
 use cgcn::runtime::{ComputeBackend, NativeBackend};
 use cgcn::tensor::Matrix;
 use cgcn::util::json::Json;
+use cgcn::util::pool::Runtime;
 use cgcn::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -250,6 +254,70 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- shared vs dual thread runtime (end-to-end, --exec threads) -------
+    // The A/B behind `--runtime shared|dual`: dual is the legacy pair of
+    // pools at the CLI defaults (agent Pool over communities, kernels
+    // serial under --exec threads), shared is one 8-thread work-stealing
+    // runtime carrying agent tasks and kernel forks alike. Dual idles
+    // budget-minus-m cores during every kernel; shared lets blocked
+    // agents' workers steal kernel chunks instead.
+    section("runtime A/B: shared work-stealing vs dual pools (--exec threads, 8-thread budget)");
+    let rt_gate = env_flag("CGCN_BENCH_RUNTIME_GATE");
+    let rt_threads = 8usize;
+    let time_admm_rt = |backend: Arc<dyn ComputeBackend>| -> anyhow::Result<f64> {
+        let mut hp_m = hp.clone();
+        hp_m.communities = 3;
+        let ws = Arc::new(Workspace::build(&ds, &hp_m, Method::Metis)?);
+        let mut o = AdmmOptions::for_mode(3);
+        o.exec = ExecMode::Threads;
+        o.threads = rt_threads;
+        let mut trainer = AdmmTrainer::new(ws, backend, o)?;
+        trainer.train(1, "rt-warmup")?;
+        let t0 = Instant::now();
+        trainer.train(epochs, "rt-bench")?;
+        Ok(t0.elapsed().as_secs_f64() / epochs as f64)
+    };
+    let time_cg_rt = |backend: Arc<dyn ComputeBackend>| -> anyhow::Result<f64> {
+        let mut hp_fb = hp.clone();
+        hp_fb.communities = 1;
+        let ws_fb = Arc::new(Workspace::build(&ds, &hp_fb, Method::Metis)?);
+        let mut cg = cgcn::baselines::ClusterGcnTrainer::new(
+            ds.clone(),
+            ws_fb,
+            backend,
+            cgcn::baselines::Optimizer::parse("adam", None)?,
+            cgcn::baselines::ClusterGcnOptions::default(),
+        )?;
+        cg.train_epoch()?; // warmup
+        let t0 = Instant::now();
+        for _ in 0..epochs {
+            cg.train_epoch()?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / epochs as f64)
+    };
+    // Dual, as `--runtime dual` resolves it: admm agents on their own
+    // Pool with serial kernels (op-threads defaults to 1 under --exec
+    // threads); cluster-gcn on an 8-thread op pool, serial batch prep.
+    let admm_dual8 = time_admm_rt(Arc::new(NativeBackend::new()))?;
+    let cg_dual8 = time_cg_rt(Arc::new(NativeBackend::with_threads(rt_threads)))?;
+    // Shared: one runtime under the same total budget for both trainers.
+    let shared_rt = Arc::new(Runtime::new(rt_threads));
+    let shared_be: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::with_runtime(shared_rt, false));
+    let admm_shared8 = time_admm_rt(shared_be.clone())?;
+    let cg_shared8 = time_cg_rt(shared_be)?;
+    let runtime_ok = admm_shared8 <= admm_dual8 * 1.10;
+    println!(
+        "shared admm {:>10}/epoch vs dual {:>10}/epoch ({:+.1}%)   \
+         cluster-gcn shared {:>10} vs dual {:>10} ({:+.1}%)",
+        fmt_secs(admm_shared8),
+        fmt_secs(admm_dual8),
+        (admm_shared8 / admm_dual8 - 1.0) * 100.0,
+        fmt_secs(cg_shared8),
+        fmt_secs(cg_dual8),
+        (cg_shared8 / cg_dual8 - 1.0) * 100.0
+    );
+
     // ---- telemetry overhead gate (CGCN_BENCH_OBS_GATE=1) ------------------
     // Telemetry is contractually off the hot path (DESIGN.md §10): spans
     // and sharded counters at phase/chunk granularity, nothing in kernel
@@ -296,6 +364,25 @@ fn main() -> anyhow::Result<()> {
         ("kernels", Json::arr(cells.iter().map(Cell::json).collect())),
         ("epochs", Json::arr(epoch_rows)),
         (
+            "runtime_ab",
+            Json::obj(vec![
+                ("threads", Json::num(rt_threads as f64)),
+                ("admm_shared_epoch_s", Json::num(admm_shared8)),
+                ("admm_dual_epoch_s", Json::num(admm_dual8)),
+                ("admm_shared_speedup", Json::num(admm_dual8 / admm_shared8)),
+                ("cluster_gcn_shared_epoch_s", Json::num(cg_shared8)),
+                ("cluster_gcn_dual_epoch_s", Json::num(cg_dual8)),
+                (
+                    "cluster_gcn_shared_speedup",
+                    Json::num(cg_dual8 / cg_shared8),
+                ),
+                (
+                    "shared_not_slower",
+                    Json::num(if runtime_ok { 1.0 } else { 0.0 }),
+                ),
+            ]),
+        ),
+        (
             "gate",
             Json::obj(vec![
                 ("ref_op", Json::str("hidden_residual")),
@@ -334,6 +421,14 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(admm_pool8),
         fmt_secs(admm_spawn8)
     );
+    if rt_gate && !runtime_ok {
+        anyhow::bail!(
+            "gate: shared runtime slower than dual pools on the 8-thread \
+             end-to-end ADMM epoch (shared {:.3e}s vs dual {:.3e}s)",
+            admm_shared8,
+            admm_dual8
+        );
+    }
     if gate && !ref_ok {
         anyhow::bail!(
             "gate: pooled executor slower than spawn-per-op at 8 threads \

@@ -31,21 +31,32 @@
 //! Determinism: the fine partition, the weight init and the per-epoch
 //! cluster shuffle are all driven by `hp.seed`, so the same seed yields
 //! identical cluster groupings and bitwise-identical training.
+//!
+//! Under `--runtime shared` the trainer pipelines batch *preparation*
+//! (induced-subgraph extraction, feature/label row gathers) onto the
+//! shared [`Runtime`]: while step `i`'s kernels run on the caller, a
+//! runtime task materialises batch `i+1`. [`prepare_batch`] is a pure
+//! function of the node set and prepared batches are consumed strictly
+//! in schedule order, so the weight stream stays bitwise-identical to
+//! the serial loop — the pipeline changes *when* a batch is built,
+//! never what it contains or the order steps apply.
 
 use super::{OptState, Optimizer};
 use crate::coordinator::checkpoint::{CheckpointSink, CkptState};
 use crate::coordinator::clock::timed;
 use crate::coordinator::{evaluate_forward, Workspace};
 use crate::data::Dataset;
-use crate::graph::induced_subgraph_with;
+use crate::graph::{induced_subgraph_with, InducedSubgraph};
 use crate::metrics::{EpochRecord, RunReport};
 use crate::partition::{self, Method, Partition};
 use crate::runtime::ComputeBackend;
 use crate::serve::{ModelSnapshot, SnapshotMeta};
 use crate::tensor::Matrix;
+use crate::util::pool::Runtime;
 use crate::util::rng::Rng;
-use anyhow::{ensure, Result};
-use std::sync::Arc;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// Mini-batch engine configuration.
@@ -216,28 +227,18 @@ impl ClusterGcnTrainer {
         nodes
     }
 
-    /// One mini-batch step over the given nodes. Returns
+    /// One mini-batch training step over a prepared batch. Returns
     /// `Some((loss, labeled))` or `None` when the batch holds no labeled
     /// node (no gradient — skipped, as in the reference implementations).
-    fn step_batch(&mut self, nodes: &[usize]) -> Result<Option<(f32, f32)>> {
-        let _span = crate::span!("cluster_gcn.step", batch_nodes = nodes.len());
-        let nb = nodes.len();
-        let mask_b: Vec<f32> = nodes.iter().map(|&v| self.ds.train_mask[v]).collect();
-        let denom_b: f32 = mask_b.iter().sum();
-        if denom_b <= 0.0 {
+    fn step_prepared(&mut self, prep: PreparedBatch) -> Result<Option<(f32, f32)>> {
+        let _span = crate::span!("cluster_gcn.step", batch_nodes = prep.nb);
+        let Some((sub, x_b, y_b)) = prep.data else {
             return Ok(None);
-        }
+        };
         // Recorded only for batches that allocate activations — skipped
         // label-free batches never build them, so they don't set the
         // measured peak.
-        self.peak_batch_nodes = self.peak_batch_nodes.max(nb);
-
-        let sub = induced_subgraph_with(&self.ds.graph, nodes, &mut self.scratch);
-        let x_b = self.ds.features.gather_rows(nodes);
-        let mut y_b = Matrix::zeros(nb, self.ds.num_classes);
-        for (i, &v) in nodes.iter().enumerate() {
-            y_b.set(i, self.ds.labels[v], 1.0);
-        }
+        self.peak_batch_nodes = self.peak_batch_nodes.max(prep.nb);
 
         let backend = &*self.backend;
         // Forward: H0 = Ã_B X_B; Z1 = f(H0 W1); H1 = Ã_B Z1.
@@ -247,7 +248,7 @@ impl ClusterGcnTrainer {
 
         // Head: loss + dW2 + dH1 with the batch-local denominator.
         let (loss, dw2, dh1) =
-            backend.bp_out_grads(&h1, &self.w[1], &y_b, &mask_b, denom_b)?;
+            backend.bp_out_grads(&h1, &self.w[1], &y_b, &prep.mask_b, prep.denom_b)?;
 
         // dZ1 = Ã_Bᵀ dH1 = Ã_B dH1 (symmetric), then the hidden tail.
         let dz1 = backend.spmm(&sub.a_norm, &dh1);
@@ -255,26 +256,106 @@ impl ClusterGcnTrainer {
 
         self.opt.apply(&mut self.w[0], &dw1, &mut self.opt_state[0]);
         self.opt.apply(&mut self.w[1], &dw2, &mut self.opt_state[1]);
-        Ok(Some((loss, denom_b)))
+        Ok(Some((loss, prep.denom_b)))
     }
 
     /// One epoch: every cluster visited once in random `q`-groups.
     /// Returns the label-count-weighted mean loss (comparable to the
     /// full-batch per-epoch loss: each labeled node contributes once).
+    ///
+    /// When the backend exposes a shared [`Runtime`], batch preparation
+    /// is pipelined one step ahead on it; either path yields bitwise-
+    /// identical weights (see the module docs).
     pub fn train_epoch(&mut self) -> Result<f64> {
         let _span = crate::span!("cluster_gcn.epoch");
         crate::obs_counter!("cluster_gcn.epochs").inc();
         let groups = self.epoch_groups();
+        let (loss_sum, denom_sum) = match self.backend.runtime().cloned() {
+            Some(rt) if groups.len() > 1 => self.epoch_pipelined(&rt, &groups)?,
+            _ => self.epoch_serial(&groups)?,
+        };
+        Ok(loss_sum / denom_sum.max(1.0))
+    }
+
+    /// In-order epoch loop: prepare and train each batch on the caller.
+    fn epoch_serial(&mut self, groups: &[Vec<usize>]) -> Result<(f64, f64)> {
         let mut loss_sum = 0.0f64;
         let mut denom_sum = 0.0f64;
-        for group in &groups {
+        for group in groups {
             let nodes = self.batch_nodes(group);
-            if let Some((loss, denom)) = self.step_batch(&nodes)? {
+            let ds = Arc::clone(&self.ds);
+            let prep = prepare_batch(&ds, &nodes, &mut self.scratch);
+            if let Some((loss, denom)) = self.step_prepared(prep)? {
                 loss_sum += loss as f64 * denom as f64;
                 denom_sum += denom as f64;
             }
         }
-        Ok(loss_sum / denom_sum.max(1.0))
+        Ok((loss_sum, denom_sum))
+    }
+
+    /// Pipelined epoch on the shared runtime: batch `i+1`'s subgraph
+    /// extraction and row gathers run as a runtime task while the
+    /// caller executes step `i`'s kernels on the same worker set.
+    /// Prepared batches are consumed strictly in schedule order, so the
+    /// weight stream is bitwise-identical to [`Self::epoch_serial`].
+    fn epoch_pipelined(
+        &mut self,
+        rt: &Arc<Runtime>,
+        groups: &[Vec<usize>],
+    ) -> Result<(f64, f64)> {
+        // Two recycled scratch maps bound the prep window to depth 2
+        // (one batch in flight while one is consumed): enough to hide
+        // prep latency behind the kernels, while pipeline memory stays
+        // at two materialised batches regardless of the schedule.
+        let n = self.ds.n();
+        let mut free: Vec<Vec<u32>> =
+            vec![std::mem::take(&mut self.scratch), vec![u32::MAX; n]];
+        let (tx, rx) = mpsc::channel::<(usize, PreparedBatch, Vec<u32>)>();
+        let mut ready: BTreeMap<usize, PreparedBatch> = BTreeMap::new();
+        let mut next_submit = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut denom_sum = 0.0f64;
+        for next_consume in 0..groups.len() {
+            while next_submit < groups.len() {
+                let Some(mut scratch) = free.pop() else { break };
+                if scratch.len() != n {
+                    scratch = vec![u32::MAX; n];
+                }
+                let nodes = self.batch_nodes(&groups[next_submit]);
+                let ds = Arc::clone(&self.ds);
+                let tx = tx.clone();
+                let idx = next_submit;
+                rt.execute(move || {
+                    let prep = prepare_batch(&ds, &nodes, &mut scratch);
+                    // The receiver is gone when the epoch aborted early;
+                    // dropping the result is fine then.
+                    let _ = tx.send((idx, prep, scratch));
+                });
+                next_submit += 1;
+            }
+            let prep = loop {
+                if let Some(p) = ready.remove(&next_consume) {
+                    break p;
+                }
+                // A closed channel means a prep task died without
+                // sending — the runtime logs the panic; surface it here
+                // instead of deadlocking on a batch that never arrives.
+                let (idx, prep, scratch) = rx
+                    .recv()
+                    .map_err(|_| anyhow!("mini-batch prep task panicked"))?;
+                free.push(scratch);
+                ready.insert(idx, prep);
+            };
+            if let Some((loss, denom)) = self.step_prepared(prep)? {
+                loss_sum += loss as f64 * denom as f64;
+                denom_sum += denom as f64;
+            }
+        }
+        // Hand one map back for the next epoch / serial fallback. On an
+        // error path `self.scratch` stays empty and `prepare_batch`'s
+        // size guard re-materialises it on next use.
+        self.scratch = free.pop().unwrap_or_default();
+        Ok((loss_sum, denom_sum))
     }
 
     /// Full-graph evaluation (train acc, test acc, loss) — identical to
@@ -390,6 +471,54 @@ impl ClusterGcnTrainer {
     }
 }
 
+/// A fully materialised mini-batch: everything [`ClusterGcnTrainer::step_prepared`]
+/// needs, built by [`prepare_batch`] as a pure function of the node set
+/// so it can run ahead on the shared runtime while the previous step
+/// trains.
+struct PreparedBatch {
+    /// Batch node count (rows of every dense activation in the step).
+    nb: usize,
+    /// Per-node train-mask slice (the loss mask in batch-local order).
+    mask_b: Vec<f32>,
+    /// Labeled-node count — the batch-local loss denominator.
+    denom_b: f32,
+    /// Induced subgraph, gathered feature rows and one-hot labels.
+    /// `None` when the batch holds no labeled node: the step is skipped
+    /// and no activations are built, matching the serial fast path.
+    data: Option<(InducedSubgraph, Matrix, Matrix)>,
+}
+
+/// Materialise one mini-batch: mask/denominator, renormalised induced
+/// subgraph, feature row gather and one-hot labels. Deterministic in
+/// `nodes` alone — no RNG, no shared mutable state — which is what lets
+/// the pipelined epoch run it ahead of schedule without perturbing the
+/// weight stream. A wrong-sized (or stolen) scratch map is
+/// re-materialised in place, so callers may hand over an empty vector.
+fn prepare_batch(ds: &Dataset, nodes: &[usize], scratch: &mut Vec<u32>) -> PreparedBatch {
+    let _span = crate::span!("cluster_gcn.prep", batch_nodes = nodes.len());
+    if scratch.len() != ds.n() {
+        *scratch = vec![u32::MAX; ds.n()];
+    }
+    let nb = nodes.len();
+    let mask_b: Vec<f32> = nodes.iter().map(|&v| ds.train_mask[v]).collect();
+    let denom_b: f32 = mask_b.iter().sum();
+    if denom_b <= 0.0 {
+        return PreparedBatch { nb, mask_b, denom_b, data: None };
+    }
+    let sub = induced_subgraph_with(&ds.graph, nodes, scratch);
+    let x_b = ds.features.gather_rows(nodes);
+    let mut y_b = Matrix::zeros(nb, ds.num_classes);
+    for (i, &v) in nodes.iter().enumerate() {
+        y_b.set(i, ds.labels[v], 1.0);
+    }
+    PreparedBatch {
+        nb,
+        mask_b,
+        denom_b,
+        data: Some((sub, x_b, y_b)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,6 +570,43 @@ mod tests {
         // And a different seed actually changes the schedule.
         let mut c = mk(12, 8, 2);
         assert_ne!(mk(11, 8, 2).epoch_groups(), c.epoch_groups());
+    }
+
+    #[test]
+    fn pipelined_epochs_match_serial_bitwise() {
+        // The shared-runtime pipelined prep path must reproduce the
+        // serial loop exactly: same losses, bitwise-same weights.
+        let ds = Arc::new(crate::data::fixtures::caveman(24, 3));
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = 3;
+        hp.hidden = 8;
+        hp.seed = 11;
+        let ws = Arc::new(Workspace::build(&ds, &hp, Method::Metis).unwrap());
+        let opts = ClusterGcnOptions {
+            clusters: 8,
+            batch_clusters: 2,
+            method: Method::Metis,
+        };
+        let opt = || Optimizer::parse("adam", None).unwrap();
+
+        let serial_backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let mut serial =
+            ClusterGcnTrainer::new(ds.clone(), ws.clone(), serial_backend, opt(), opts).unwrap();
+        let rs = serial.train(3).unwrap();
+
+        let rt = Arc::new(Runtime::new(4));
+        let shared: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_runtime_grain(rt, 0));
+        assert!(shared.runtime().is_some(), "shared backend must expose the runtime");
+        let mut piped = ClusterGcnTrainer::new(ds, ws, shared, opt(), opts).unwrap();
+        let rp = piped.train(3).unwrap();
+
+        for (a, b) in serial.weights().iter().zip(piped.weights()) {
+            assert_eq!(a.data(), b.data(), "pipelined weights diverged from serial");
+        }
+        for (ea, eb) in rs.epochs.iter().zip(&rp.epochs) {
+            assert_eq!(ea.loss, eb.loss, "epoch {} loss diverged", ea.epoch);
+        }
+        assert_eq!(serial.peak_batch_nodes(), piped.peak_batch_nodes());
     }
 
     #[test]

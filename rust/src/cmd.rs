@@ -127,27 +127,50 @@ pub fn parse_method(s: &str) -> anyhow::Result<Method> {
 // ---------------------------------------------------------------------------
 
 /// Load `--model`, rebuild its workspace, and bind an inference session
-/// on the requested backend (`--backend`, `--op-threads`).
+/// on the requested backend (`--backend`, `--runtime`, `--op-threads`).
 fn open_session(args: &Args) -> anyhow::Result<crate::serve::InferenceSession> {
     let model = args.get_str("model");
     anyhow::ensure!(!model.is_empty(), "need --model <path.cgnm>");
     let snap = crate::serve::load_model(std::path::Path::new(&model))?;
     let choice = crate::runtime::BackendChoice::parse(&args.get_str("backend"))
         .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
-    // Serving: `--op-threads 0` auto-sizes to all cores; request-level
-    // parallelism comes from the connection pool, so heavy per-query
-    // batches still benefit from pooled kernels past the flop grain.
-    let op_threads = match args.get_usize("op-threads") {
-        0 => crate::util::pool::resolve_threads(0),
-        n => n,
+    let spawn_ops = args.get_flag("op-spawn");
+    let op_threads_arg = args.get_usize("op-threads");
+    // `cgcn serve` declares `--threads` (connection handlers); the other
+    // session consumers (`query --verify`) do not — treat absent as 0.
+    let conn_threads = args
+        .get("threads")
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
+    let shared = match args.get("runtime").unwrap_or("shared") {
+        "shared" => true,
+        "dual" => false,
+        other => anyhow::bail!("unknown --runtime '{other}' (shared|dual)"),
     };
-    let backend = crate::runtime::select_backend(choice, op_threads, args.get_flag("op-spawn"))?;
+    let backend = if shared {
+        // One work-stealing runtime under one budget: connection
+        // handlers and kernel forks share the same workers.
+        let budget = crate::util::pool::shared_thread_budget(conn_threads, op_threads_arg);
+        let rt = std::sync::Arc::new(crate::util::pool::Runtime::new(budget));
+        crate::runtime::select_backend_shared(choice, rt, spawn_ops)?
+    } else {
+        // Dual mode: `--op-threads 0` auto-sizes to all cores;
+        // request-level parallelism comes from the connection pool, so
+        // heavy per-query batches still benefit from pooled kernels
+        // past the flop grain.
+        let op_threads = match op_threads_arg {
+            0 => crate::util::pool::resolve_threads(0),
+            n => n,
+        };
+        crate::runtime::select_backend(choice, op_threads, spawn_ops)?
+    };
     log::info!(
-        "model '{}' ({}, dims {:?}) on backend {}",
+        "model '{}' ({}, dims {:?}) on backend {} ({} runtime)",
         model,
         snap.meta.label,
         snap.dims,
-        backend.name()
+        backend.name(),
+        if shared { "shared" } else { "dual" }
     );
     crate::serve::InferenceSession::from_snapshot(&snap, backend)
 }

@@ -20,10 +20,14 @@
 //! - [`ExecMode::Serial`] runs the agents in a loop on the caller's
 //!   thread, pricing "parallel" phases in virtual time at the critical
 //!   path over agents (see [`super::clock`]) — the seed's 1-core model.
-//! - [`ExecMode::Threads`] runs each agent as a real task on the in-house
-//!   worker pool with the p/s message phase exchanged through `mpsc`
-//!   channels, so multi-core hosts observe the speedup in *wall clock*
-//!   too. Message folds are order-canonicalised, so both modes produce
+//! - [`ExecMode::Threads`] runs each agent as a real task with the p/s
+//!   message phase exchanged through `mpsc` channels, so multi-core hosts
+//!   observe the speedup in *wall clock* too. Tasks land on the shared
+//!   work-stealing [`Runtime`] when the backend exposes one
+//!   (`--runtime shared`, DESIGN.md §11 — agent phases and the kernels
+//!   they fork trade the same threads), or on a dedicated agent [`Pool`]
+//!   plus a W-partial [`FjPool`] in legacy `--runtime dual` mode. Message
+//!   folds are order-canonicalised, so every mode produces
 //!   bitwise-identical state; the virtual accounting is computed the same
 //!   way (per-agent task seconds, max over agents per phase).
 //!
@@ -48,7 +52,7 @@ use crate::metrics::{EpochRecord, RunReport};
 use crate::runtime::ComputeBackend;
 use crate::serve::{ModelSnapshot, SnapshotMeta};
 use crate::tensor::{argmax_rows, Matrix};
-use crate::util::pool::{fj_map, resolve_threads, FjPool, Pool};
+use crate::util::pool::{fork_map, resolve_threads, FjPool, ForkExec, Pool, Runtime};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::{mpsc, Arc};
@@ -145,13 +149,19 @@ pub struct AdmmTrainer {
     pub backend: Arc<dyn ComputeBackend>,
     pub opts: AdmmOptions,
     pub state: AdmmState,
-    /// Worker pool for `ExecMode::Threads` (one task per community agent).
+    /// Shared work-stealing runtime, borrowed from the backend
+    /// (`--runtime shared`): agent phase tasks go to its injector and the
+    /// W-partial maps fork on it, alongside the backend's own kernel
+    /// chunks — one thread budget for everything.
+    rt: Option<Arc<Runtime>>,
+    /// Dual-mode worker pool for `ExecMode::Threads` (one task per
+    /// community agent). `None` on the shared runtime.
     pool: Option<Pool>,
-    /// Persistent fork-join pool for the borrowed-data per-community
+    /// Dual-mode fork-join pool for the borrowed-data per-community
     /// W-partial maps in `ExecMode::Threads` (`pool` only takes `'static`
-    /// jobs). Sharing one pool between agent jobs and op parallelism is a
-    /// ROADMAP item; the nested-fork guard in [`crate::util::pool`] makes
-    /// the two coexist safely today.
+    /// jobs); the nested-fork inline guard in [`crate::util::pool`] keeps
+    /// it safe next to the backend's kernel pool. `None` on the shared
+    /// runtime.
     fj: Option<FjPool>,
     /// Resolved thread count (1 in serial mode).
     threads: usize,
@@ -201,28 +211,33 @@ impl AdmmTrainer {
             .map(|_| Matrix::zeros(ws.n_pad, dims[l]))
             .collect();
 
-        // Agent executor resources.
-        let threads = match opts.exec {
-            ExecMode::Serial => 1,
-            ExecMode::Threads => resolve_threads(opts.threads),
+        // Agent executor resources: the backend's shared runtime when it
+        // has one, else dual-mode pools (legacy `--runtime dual`, or a
+        // backend like XLA that cannot share).
+        let rt = backend.runtime().cloned();
+        let threads = match (&opts.exec, &rt) {
+            (ExecMode::Serial, _) => 1,
+            (ExecMode::Threads, Some(rt)) => rt.threads(),
+            (ExecMode::Threads, None) => resolve_threads(opts.threads),
         };
-        let pool = if opts.exec == ExecMode::Threads {
-            Some(Pool::new(threads.min(ws.m.max(1))))
-        } else {
-            None
-        };
-        let fj = if opts.exec == ExecMode::Threads {
-            Some(FjPool::new(threads.min(ws.m.max(1))))
-        } else {
-            None
-        };
+        let dual_pools = opts.exec == ExecMode::Threads && rt.is_none();
+        let pool = dual_pools.then(|| Pool::new(threads.min(ws.m.max(1))));
+        let fj = dual_pools.then(|| FjPool::new(threads.min(ws.m.max(1))));
         if opts.exec == ExecMode::Threads {
-            log::info!(
-                "agent runtime: {} communities on {} pool threads (backend={})",
-                ws.m,
-                threads.min(ws.m.max(1)),
-                backend.name()
-            );
+            match &rt {
+                Some(rt) => log::info!(
+                    "agent runtime: {} communities on the shared runtime ({} threads, backend={})",
+                    ws.m,
+                    rt.threads(),
+                    backend.name()
+                ),
+                None => log::info!(
+                    "agent runtime: {} communities on {} dual-mode pool threads (backend={})",
+                    ws.m,
+                    threads.min(ws.m.max(1)),
+                    backend.name()
+                ),
+            }
         }
 
         // τ/θ start conservatively at 1.0 and adapt both ways: backtracking
@@ -241,6 +256,7 @@ impl AdmmTrainer {
             ws,
             backend,
             opts,
+            rt,
             pool,
             fj,
             threads,
@@ -252,6 +268,27 @@ impl AdmmTrainer {
         match self.opts.exec {
             ExecMode::Serial => 1,
             ExecMode::Threads => self.threads,
+        }
+    }
+
+    /// The fork-join engine for the borrowed-data W-partial maps.
+    fn fork_exec(&self) -> ForkExec<'_> {
+        match (&self.rt, &self.fj) {
+            (Some(rt), _) => ForkExec::Rt(rt),
+            (None, Some(fj)) => ForkExec::Fj(fj),
+            (None, None) => ForkExec::None,
+        }
+    }
+
+    /// Submit one `'static` agent-phase task to the coarse executor: the
+    /// shared runtime's injector, or the dual-mode agent pool. Panicking
+    /// tasks are caught by either executor; the submitter notices through
+    /// its result channel closing.
+    fn submit(&self, task: impl FnOnce() + Send + 'static) {
+        match (&self.rt, &self.pool) {
+            (Some(rt), _) => rt.execute(task),
+            (None, Some(pool)) => pool.execute(task),
+            (None, None) => unreachable!("threads mode without an executor"),
         }
     }
 
@@ -337,14 +374,14 @@ impl AdmmTrainer {
         let (nu, rho) = (ws.hp.nu, ws.hp.rho);
         let backend = self.backend.clone();
         let par = self.exec_threads();
-        let fj = self.fj.as_ref();
+        let fx = self.fork_exec();
 
         // S_m = Σ_r Ã_{m,r} Z_{l-1,r} — one sparse aggregate per community,
         // reused by every backtracking trial. For l = 1 it equals the
         // *static* per-community H0 rows (X never changes), so no SpMM at
         // all.
         let state_z = &self.state.z;
-        let s_results: Vec<(Option<Matrix>, f64)> = fj_map(fj, par, ws.m, |mi| {
+        let s_results: Vec<(Option<Matrix>, f64)> = fork_map(fx, par, ws.m, |mi| {
             if l == 1 {
                 return (None, 0.0);
             }
@@ -371,7 +408,7 @@ impl AdmmTrainer {
         let w_k = &self.state.w[l - 1];
         let zl = &self.state.z[l - 1];
         let u = &self.state.u;
-        let partials: Vec<Result<(f32, Matrix, f64)>> = fj_map(fj, par, ws.m, |mi| {
+        let partials: Vec<Result<(f32, Matrix, f64)>> = fork_map(fx, par, ws.m, |mi| {
             let _span = crate::span!("admm.w_partial", community = mi);
             let t0 = Instant::now();
             let pre = backend.mm_nn(s_refs[mi], w_k)?;
@@ -406,7 +443,7 @@ impl AdmmTrainer {
             let mut cand = self.state.w[l - 1].clone();
             cand.axpy(-1.0 / tau, &gw);
             let cand_ref = &cand;
-            let trial: Vec<Result<(f32, f64)>> = fj_map(fj, par, ws.m, |mi| {
+            let trial: Vec<Result<(f32, f64)>> = fork_map(fx, par, ws.m, |mi| {
                 let t0 = Instant::now();
                 let pre = backend.mm_nn(s_refs[mi], cand_ref)?;
                 let phi = if last {
@@ -559,8 +596,10 @@ impl AdmmTrainer {
         Ok((msg_secs, z_secs, p_bytes, s_bytes))
     }
 
-    /// Threaded executor: one pool task per agent per phase, with the p/s
-    /// messages exchanged through per-community `mpsc` mailboxes. Stage
+    /// Threaded executor: one task per agent per phase (on the shared
+    /// runtime's injector or the dual-mode agent pool — see [`Self::submit`]),
+    /// with the p/s messages exchanged through per-community `mpsc`
+    /// mailboxes. Stage
     /// barriers (collect-all between phases) give every receiver its full
     /// inbox; sorting inside the agent makes fold order — and therefore
     /// the result — identical to the serial executor, bit for bit.
@@ -576,7 +615,6 @@ impl AdmmTrainer {
         Vec<CommunityAgent>,
         Result<(Vec<f64>, Vec<f64>, Vec<Vec<u64>>, Vec<Vec<u64>>)>,
     ) {
-        let pool = self.pool.as_ref().expect("threads mode without a pool");
         let ws = self.ws.clone();
         let backend = self.backend.clone();
         let w = Arc::new(self.state.w.clone());
@@ -602,7 +640,7 @@ impl AdmmTrainer {
             let w = w.clone();
             let p_txs = p_txs.clone();
             let done_tx = done_tx.clone();
-            pool.execute(move || {
+            self.submit(move || {
                 let _span = crate::span!("admm.p_products", community = ag.mi);
                 let t0 = Instant::now();
                 let ctx = AgentCtx {
@@ -669,7 +707,7 @@ impl AdmmTrainer {
             let w = w.clone();
             let s_txs = s_txs.clone();
             let done_tx = done_tx.clone();
-            pool.execute(move || {
+            self.submit(move || {
                 let _span = crate::span!("admm.s_messages", community = ag.mi);
                 let t0 = Instant::now();
                 let ctx = AgentCtx {
@@ -735,7 +773,7 @@ impl AdmmTrainer {
             let backend = backend.clone();
             let w = w.clone();
             let done_tx = done_tx.clone();
-            pool.execute(move || {
+            self.submit(move || {
                 let _span = crate::span!("admm.z_update", community = ag.mi);
                 let t0 = Instant::now();
                 let ctx = AgentCtx {

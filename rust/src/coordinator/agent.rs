@@ -5,7 +5,11 @@
 //! consumes community-local state (`z`, `u`, `θ`), static workspace blocks
 //! and the messages that crossed the agent boundary — exactly the inputs a
 //! remote worker gets over the wire, which is why the TCP transport and
-//! the in-process serial/threaded executors all drive the same code:
+//! the in-process serial/threaded executors all drive the same code. The
+//! agent is scheduler-agnostic: its kernels go through [`ComputeBackend`],
+//! so when a phase task runs on the shared work-stealing runtime
+//! (`--runtime shared`) the kernels fork on the *same* workers the agent
+//! task occupies — no second pool, no oversubscription (DESIGN.md §11):
 //!
 //! ```text
 //! phase A  p_products   →  outgoing p_{l,m→r}            (eq. 4 top)

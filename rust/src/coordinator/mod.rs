@@ -37,9 +37,10 @@ pub use workspace::{Community, Workspace};
 use crate::baselines;
 use crate::config::HyperParams;
 use crate::metrics::RunReport;
-use crate::runtime::{select_backend, BackendChoice, ComputeBackend};
+use crate::runtime::{select_backend, select_backend_shared, BackendChoice, ComputeBackend};
 use crate::serve::SnapshotMeta;
 use crate::util::cli::Args;
+use crate::util::pool::{resolve_threads, shared_thread_budget, Runtime};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -71,26 +72,62 @@ pub struct TrainSetup {
     pub run: RunCfg,
 }
 
-/// Resolve `--exec`/`--threads`/`--backend` into an executor + backend
-/// (shared by the fresh-run and resume setup paths).
+/// Resolve `--exec`/`--threads`/`--runtime`/`--backend` into an executor
+/// + backend (shared by the fresh-run and resume setup paths).
+///
+/// `--runtime shared` (the default) builds one work-stealing [`Runtime`]
+/// whose budget is [`shared_thread_budget`]; the backend borrows it for
+/// kernel forks and trainers submit agent/batch tasks to it through
+/// [`ComputeBackend::runtime`]. `--runtime dual` keeps the legacy
+/// two-pool setup for A/B: a dedicated agent pool plus a backend-owned
+/// kernel pool.
 fn resolve_exec(args: &Args) -> Result<(ExecMode, usize, Arc<dyn ComputeBackend>)> {
     let exec = ExecMode::parse(&args.get_str("exec"))
         .ok_or_else(|| anyhow::anyhow!("unknown --exec value (serial|threads)"))?;
     let threads = args.get_usize("threads");
     let choice = BackendChoice::parse(&args.get_str("backend"))
         .ok_or_else(|| anyhow::anyhow!("unknown --backend value (auto|native|xla)"))?;
-    // Kernel-level parallelism: `--op-threads 0` (the default) auto-sizes.
-    // With the serial agent executor the whole parallelism budget goes to
-    // the kernels (persistent pool over all cores); with `--exec threads`
-    // it goes to the agent pool, so kernels stay serial to avoid
-    // oversubscription. Either way results are bitwise identical — the
-    // pooled kernels are deterministic at any thread count.
-    let op_threads = match args.get_usize("op-threads") {
+    let spawn_ops = args.get_flag("op-spawn");
+    let op_threads_arg = args.get_usize("op-threads");
+    let shared = match args.get("runtime").unwrap_or("shared") {
+        "shared" => true,
+        "dual" => false,
+        other => bail!("unknown --runtime '{other}' (shared|dual)"),
+    };
+    if shared {
+        let budget = shared_thread_budget(threads, op_threads_arg);
+        if threads != 0 && op_threads_arg != 0 && threads != op_threads_arg {
+            log::info!(
+                "--threads {threads} and --op-threads {op_threads_arg} differ; \
+                 shared runtime budget = max = {budget}"
+            );
+        }
+        // A backend that cannot share a runtime (XLA) reports
+        // `runtime() == None` and the trainers fall back to dual-mode
+        // pools on their own.
+        let backend = select_backend_shared(choice, Arc::new(Runtime::new(budget)), spawn_ops)?;
+        return Ok((exec, threads, backend));
+    }
+    // Legacy dual-pool accounting: `--op-threads 0` auto-sizes — all
+    // cores under the serial agent executor, 1 under `--exec threads` so
+    // kernel threads don't multiply against the agent pool. Either way
+    // results are bitwise identical; only speed differs.
+    let op_threads = match op_threads_arg {
         0 if exec == ExecMode::Threads => 1,
-        0 => crate::util::pool::resolve_threads(0),
+        0 => resolve_threads(0),
         n => n,
     };
-    let backend = select_backend(choice, op_threads, args.get_flag("op-spawn"))?;
+    if exec == ExecMode::Threads {
+        let cores = resolve_threads(0);
+        let agents = resolve_threads(threads);
+        if agents.saturating_mul(op_threads) > cores {
+            log::warn!(
+                "dual-pool mode may oversubscribe: up to {agents} agent threads × \
+                 {op_threads} op threads on {cores} cores (--runtime shared uses one budget)"
+            );
+        }
+    }
+    let backend = select_backend(choice, op_threads, spawn_ops)?;
     Ok((exec, threads, backend))
 }
 

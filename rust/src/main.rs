@@ -101,7 +101,8 @@ fn main() {
     .opt("addr-file", Some(""), "serve: write the bound address to this file once ready")
     .opt("batch-window-us", Some("200"), "serve: micro-batch collection window in microseconds")
     .opt("max-batch", Some("256"), "serve: max queries coalesced into one backend batch")
-    .opt("op-threads", Some("0"), "native backend kernel threads (persistent pool; results are bitwise identical at any count). 0 = auto: all cores, or 1 under --exec threads to avoid oversubscribing the agent pool")
+    .opt("runtime", Some("shared"), "thread runtime: shared (one work-stealing worker set for agents, kernels and serving, sized by the max of --threads/--op-threads) | dual (legacy separate pools)")
+    .opt("op-threads", Some("0"), "native backend kernel threads (results are bitwise identical at any count). 0 = auto. Shared runtime: folded into the one budget (max with --threads). Dual: all cores, or 1 under --exec threads to avoid oversubscribing the agent pool")
     .opt("trace-out", Some(""), "train: write a Chrome trace-event JSON of the run's spans (load in chrome://tracing or Perfetto)")
     .opt("metrics-out", Some(""), "train: write the end-of-run metrics registry as JSON")
     .opt("nodes", Some(""), "query: comma-separated node ids")

@@ -5,13 +5,16 @@
 //!
 //! - [`NativeBackend`] — pure Rust, always available. All hot paths (dense
 //!   matmul variants, [`Csr::spmm`], the elementwise ADMM kernels and the
-//!   softmax grad path) are row-block parallelised through a persistent
-//!   [`FjPool`] when constructed with > 1 thread; every output row is
-//!   produced by the same scalar loop the serial path runs and every
+//!   softmax grad path) are row-block parallelised when constructed with
+//!   > 1 thread — through the shared work-stealing [`Runtime`]
+//!   (`--runtime shared`, the default: the backend *borrows* the runtime
+//!   that also executes agent phases and serve handlers, DESIGN.md §11)
+//!   or through an owned [`FjPool`] (`--runtime dual`). Every output row
+//!   is produced by the same scalar loop the serial path runs and every
 //!   reduction is folded on the caller in row order, so results are
-//!   bitwise identical at any thread count. Temporaries come from a
-//!   per-backend scratch [`Arena`]; callers hand them back through
-//!   [`ComputeBackend::recycle`] to keep the inner ADMM loops
+//!   bitwise identical at any thread count on either engine. Temporaries
+//!   come from a per-backend scratch [`Arena`]; callers hand them back
+//!   through [`ComputeBackend::recycle`] to keep the inner ADMM loops
 //!   allocation-free.
 //! - `XlaBackend` (behind `--features xla`) — wraps the PJRT [`Engine`] and
 //!   dispatches each call to the AOT-compiled artifact with the matching
@@ -30,7 +33,9 @@
 
 use crate::graph::Csr;
 use crate::tensor::Matrix;
-use crate::util::pool::{dispatch_ranges, resolve_threads, uniform_chunks, FjPool, OpExec, SendPtr};
+use crate::util::pool::{
+    dispatch_ranges, resolve_threads, uniform_chunks, FjPool, OpExec, Runtime, SendPtr,
+};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -132,6 +137,16 @@ pub trait ComputeBackend: Send + Sync {
     /// No-op by default; [`NativeBackend`] parks the buffer in its
     /// scratch arena.
     fn recycle(&self, _m: Matrix) {}
+
+    /// The shared work-stealing [`Runtime`] this backend forks its kernels
+    /// on, when built in `--runtime shared` mode. Trainers and the serving
+    /// layer submit their own coarse tasks (agent phases, batch prep,
+    /// connection handlers) to the same runtime so the whole process runs
+    /// on one thread budget. `None` means legacy dual-pool mode: callers
+    /// create their own dedicated pools.
+    fn runtime(&self) -> Option<&Arc<Runtime>> {
+        None
+    }
 
     /// Pre-compile the given artifact signatures (startup, off the timed
     /// path). No-op for backends that compile nothing.
@@ -292,16 +307,23 @@ impl Default for OpGrains {
 // ---------------------------------------------------------------------------
 
 /// Pure-Rust backend. With `threads > 1` every kernel is row-block
-/// parallelised over a persistent [`FjPool`] once its estimated flop count
-/// crosses the per-op [`OpGrains`] threshold; results are bitwise
-/// identical to serial either way (see [`crate::util::pool`] and
-/// DESIGN.md §9). `with_spawn_threads` keeps the legacy spawn-per-op
-/// executor as an A/B reference (`--op-spawn`).
+/// parallelised once its estimated flop count crosses the per-op
+/// [`OpGrains`] threshold — over the borrowed shared [`Runtime`]
+/// (`with_runtime`, `--runtime shared`) or an owned [`FjPool`]
+/// (`with_threads`, `--runtime dual`); results are bitwise identical to
+/// serial either way (see [`crate::util::pool`] and DESIGN.md §9/§11).
+/// `with_spawn_threads` keeps the legacy spawn-per-op executor as an A/B
+/// reference (`--op-spawn`).
 pub struct NativeBackend {
     threads: usize,
     grains: OpGrains,
-    /// Persistent fork-join pool; `None` when serial or in spawn mode.
+    /// Owned dual-mode fork-join pool; `None` when serial, in spawn mode,
+    /// or on the shared runtime.
     pool: Option<FjPool>,
+    /// Borrowed shared work-stealing runtime (`--runtime shared`). Kept
+    /// even in spawn mode so [`ComputeBackend::runtime`] still exposes it
+    /// to trainers/serving while kernels A/B against spawn-per-op.
+    runtime: Option<Arc<Runtime>>,
     /// Use the legacy `thread::scope` spawn-per-op executor.
     spawn_ops: bool,
     arena: Arena,
@@ -318,6 +340,18 @@ impl NativeBackend {
             threads,
             grains,
             pool,
+            runtime: None,
+            spawn_ops,
+            arena: Arena::default(),
+        }
+    }
+
+    fn build_on_runtime(rt: Arc<Runtime>, grains: OpGrains, spawn_ops: bool) -> NativeBackend {
+        NativeBackend {
+            threads: rt.threads(),
+            grains,
+            pool: None,
+            runtime: Some(rt),
             spawn_ops,
             arena: Arena::default(),
         }
@@ -355,6 +389,21 @@ impl NativeBackend {
         NativeBackend::build(resolve_threads(threads), OpGrains::uniform(min_par_flops), true)
     }
 
+    /// Backend whose parallel kernels fork on the shared work-stealing
+    /// [`Runtime`] instead of an owned pool (`--runtime shared`). The
+    /// effective thread count is the runtime's budget. With `spawn_ops`
+    /// kernels use the spawn-per-op executor (`--op-spawn` A/B) but the
+    /// runtime handle is still exposed for agent/serving tasks.
+    pub fn with_runtime(rt: Arc<Runtime>, spawn_ops: bool) -> NativeBackend {
+        NativeBackend::build_on_runtime(rt, OpGrains::calibrated(), spawn_ops)
+    }
+
+    /// [`NativeBackend::with_runtime`] with a uniform explicit grain
+    /// (tests use 0 to force the parallel path on tiny shapes).
+    pub fn with_runtime_grain(rt: Arc<Runtime>, min_par_flops: usize) -> NativeBackend {
+        NativeBackend::build_on_runtime(rt, OpGrains::uniform(min_par_flops), false)
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -376,12 +425,15 @@ impl NativeBackend {
         if t <= 1 {
             crate::obs_counter!("backend.ops.serial").inc();
             OpExec::Serial
-        } else if let Some(p) = &self.pool {
-            crate::obs_counter!("backend.ops.pooled").inc();
-            OpExec::Pool(p)
         } else if self.spawn_ops {
             crate::obs_counter!("backend.ops.spawn").inc();
             OpExec::Spawn
+        } else if let Some(rt) = &self.runtime {
+            crate::obs_counter!("backend.ops.pooled").inc();
+            OpExec::Rt(rt)
+        } else if let Some(p) = &self.pool {
+            crate::obs_counter!("backend.ops.pooled").inc();
+            OpExec::Pool(p)
         } else {
             crate::obs_counter!("backend.ops.serial").inc();
             OpExec::Serial
@@ -671,6 +723,10 @@ impl NativeBackend {
 impl ComputeBackend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn runtime(&self) -> Option<&Arc<Runtime>> {
+        self.runtime.as_ref()
     }
 
     fn mm_nn(&self, x: &Matrix, w: &Matrix) -> Result<Matrix> {
@@ -1405,6 +1461,32 @@ pub fn select_backend(
                 load_xla_backend()
             } else {
                 select_backend(BackendChoice::Native, op_threads, spawn_ops)
+            }
+        }
+    }
+}
+
+/// [`select_backend`] for `--runtime shared`: the native backend borrows
+/// the shared work-stealing runtime (whose budget sets the effective op
+/// thread count) instead of owning a pool. The XLA backend has no op
+/// threads to share — it falls back to [`select_backend`] semantics and
+/// the caller's trainers run dual-mode.
+pub fn select_backend_shared(
+    choice: BackendChoice,
+    rt: Arc<Runtime>,
+    spawn_ops: bool,
+) -> Result<Arc<dyn ComputeBackend>> {
+    match choice {
+        BackendChoice::Native => Ok(Arc::new(NativeBackend::with_runtime(rt, spawn_ops))),
+        BackendChoice::Xla => {
+            log::info!("xla backend does not share the thread runtime; using dual-mode pools");
+            load_xla_backend()
+        }
+        BackendChoice::Auto => {
+            if xla_available() {
+                select_backend_shared(BackendChoice::Xla, rt, spawn_ops)
+            } else {
+                select_backend_shared(BackendChoice::Native, rt, spawn_ops)
             }
         }
     }

@@ -24,8 +24,8 @@ mod backend;
 mod engine;
 
 pub use backend::{
-    default_backend, select_backend, xla_available, BackendChoice, ComputeBackend, NativeBackend,
-    OpGrains,
+    default_backend, select_backend, select_backend_shared, xla_available, BackendChoice,
+    ComputeBackend, NativeBackend, OpGrains,
 };
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;

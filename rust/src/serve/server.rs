@@ -1,9 +1,16 @@
 //! The multi-threaded TCP inference server and its client.
 //!
-//! Topology: an accept thread hands each connection to a job on the
-//! in-house worker pool ([`crate::util::pool::Pool`]) — the pool size
-//! bounds concurrently *served* connections, and the acceptor sheds
-//! load with an error frame beyond a small backlog multiple of it.
+//! Topology: an accept thread hands each connection to a task on the
+//! shared work-stealing [`Runtime`] when the session's backend exposes
+//! one (`--runtime shared`, the default) — handlers and the batcher's
+//! kernel forks then share one worker set under one thread budget — or
+//! to a dedicated [`crate::util::pool::Pool`] in dual mode. Either way
+//! the thread count bounds concurrently *served* connections, and the
+//! acceptor sheds load with an error frame beyond a small backlog
+//! multiple of it. In shared mode a [`TaskGroup`] restores the
+//! drain-on-drop guarantee the dedicated pool used to provide: the
+//! accept loop waits for every in-flight handler before returning, so
+//! replies flush before the server reports stopped.
 //! Handlers parse length-framed requests
 //! ([`crate::util::wire`]) and push node queries into a shared
 //! **micro-batching queue**; a single batcher thread owns the
@@ -39,7 +46,7 @@
 //! `cgcn stats` subcommand is a thin client for it (DESIGN.md §10).
 
 use super::session::InferenceSession;
-use crate::util::pool::{resolve_threads, Pool};
+use crate::util::pool::{resolve_threads, Pool, Runtime};
 use crate::util::wire::{read_frame, read_frame_capped, write_frame, Dec, Enc};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -67,8 +74,10 @@ pub const TAG_METRICS_R: u8 = 11;
 pub struct ServeOptions {
     /// Bind address; port 0 picks a free port (the handle reports it).
     pub addr: String,
-    /// Connection-handler pool threads (0 = all cores). Bounds the number
-    /// of concurrently served connections.
+    /// Connection-handler threads (0 = all cores). Bounds the number of
+    /// concurrently served connections. When the session's backend
+    /// carries a shared [`Runtime`] this is ignored in favour of the
+    /// runtime's budget — one knob governs handlers and kernels alike.
     pub threads: usize,
     /// Micro-batch window in microseconds: after the first query of a
     /// batch arrives, the batcher keeps collecting this long. 0 = drain
@@ -256,7 +265,13 @@ pub fn serve(session: InferenceSession, opts: &ServeOptions) -> Result<ServerHan
     });
     let window = Duration::from_micros(opts.batch_window_us);
     let max_batch = opts.max_batch.max(1);
-    let threads = resolve_threads(opts.threads);
+    // Shared-runtime mode: handlers run on the same workers the
+    // batcher's kernels fork onto, under the runtime's one budget.
+    let rt = session.backend().runtime().cloned();
+    let threads = match &rt {
+        Some(rt) => rt.threads(),
+        None => resolve_threads(opts.threads),
+    };
 
     let batcher = {
         let shared = shared.clone();
@@ -268,7 +283,7 @@ pub fn serve(session: InferenceSession, opts: &ServeOptions) -> Result<ServerHan
         let shared = shared.clone();
         std::thread::Builder::new()
             .name("cgcn-serve-accept".into())
-            .spawn(move || accept_loop(listener, shared, threads))?
+            .spawn(move || accept_loop(listener, shared, threads, rt))?
     };
     log::info!("inference server on {addr} ({threads} handler threads, window {window:?})");
     Ok(ServerHandle {
@@ -330,11 +345,68 @@ impl Drop for ServerHandle {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>, threads: usize) {
-    let pool = Pool::new(threads);
+/// In-flight handler tasks on the shared runtime. The dual-mode `Pool`
+/// joins its workers on drop, which is what guaranteed every reply had
+/// flushed before `accept_loop` returned; runtime tasks have no such
+/// implicit join, so the group counts them and [`TaskGroup::wait_idle`]
+/// restores the drain-before-return contract.
+struct TaskGroup {
+    live: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl TaskGroup {
+    fn new() -> Arc<TaskGroup> {
+        Arc::new(TaskGroup {
+            live: Mutex::new(0),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Run `f` as a runtime task, counted until it finishes. The
+    /// decrement rides a `Drop` guard *inside* the task, so a panicking
+    /// handler (caught by the runtime worker) still counts down and
+    /// `wait_idle` cannot hang on it.
+    fn spawn_on(self: &Arc<Self>, rt: &Runtime, f: impl FnOnce() + Send + 'static) {
+        *self.live.lock().unwrap() += 1;
+        struct Dec(Arc<TaskGroup>);
+        impl Drop for Dec {
+            fn drop(&mut self) {
+                let mut live = self.0.live.lock().unwrap();
+                *live -= 1;
+                if *live == 0 {
+                    self.0.cv.notify_all();
+                }
+            }
+        }
+        let dec = Dec(self.clone());
+        rt.execute(move || {
+            let _dec = dec;
+            f();
+        });
+    }
+
+    /// Block until every spawned task has finished.
+    fn wait_idle(&self) {
+        let g = self.live.lock().unwrap();
+        drop(self.cv.wait_while(g, |live| *live > 0).unwrap());
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ServeShared>,
+    threads: usize,
+    rt: Option<Arc<Runtime>>,
+) {
+    // Dual mode owns a dedicated handler pool; shared mode schedules
+    // handlers as tasks on the runtime and tracks them in a TaskGroup.
+    let pool = rt.is_none().then(|| Pool::new(threads));
+    let group = TaskGroup::new();
     // Live connections (running + queued for a handler) are bounded at a
-    // small multiple of the pool; beyond that the acceptor sheds load
-    // with an error frame instead of queueing fds without limit.
+    // small multiple of the thread budget; beyond that the acceptor
+    // sheds load with an error frame instead of queueing fds without
+    // limit.
     let max_conns = threads * 8;
     loop {
         match listener.accept() {
@@ -357,13 +429,13 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>, threads: usize) 
                 // Re-check after registering: if shutdown's close_conns
                 // drained the registry before our insert, the flag
                 // (stored before the drain) is now visible — close this
-                // socket ourselves so it can't pin a pool worker.
+                // socket ourselves so it can't pin a worker.
                 if shared.shutdown.load(Ordering::SeqCst) {
                     let _ = stream.shutdown(std::net::Shutdown::Both);
                     break;
                 }
                 let shared = shared.clone();
-                pool.execute(move || {
+                let task = move || {
                     let result = handle_conn(stream, &shared);
                     // Deregister (drops the dup'd fd — the registry must
                     // not outlive the connection or fds leak per client).
@@ -371,7 +443,12 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>, threads: usize) 
                     if let Err(e) = result {
                         log::debug!("serve connection ended: {e:#}");
                     }
-                });
+                };
+                match (&rt, &pool) {
+                    (Some(rt), _) => group.spawn_on(rt, task),
+                    (None, Some(pool)) => pool.execute(task),
+                    (None, None) => unreachable!("accept loop without an executor"),
+                }
             }
             Err(e) => {
                 if shared.shutdown.load(Ordering::SeqCst) {
@@ -383,8 +460,11 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServeShared>, threads: usize) 
             }
         }
     }
-    // Pool drop joins the handlers; close_conns has already unblocked
-    // (or will unblock, via the shutdown paths) any blocked reads.
+    // Dual: Pool drop joins the handlers. Shared: wait for the in-flight
+    // handler tasks (the runtime outlives us — it belongs to the
+    // backend). Either way close_conns has already unblocked (or will
+    // unblock, via the shutdown paths) any blocked reads.
+    group.wait_idle();
 }
 
 fn batcher_loop(

@@ -149,6 +149,13 @@ impl InferenceSession {
         &self.ws
     }
 
+    /// The compute backend answering this session's queries. The server
+    /// probes it for a shared [`crate::util::pool::Runtime`] so
+    /// connection handlers can run on the same workers as the kernels.
+    pub fn backend(&self) -> &Arc<dyn ComputeBackend> {
+        &self.backend
+    }
+
     /// Model label shown to clients (snapshot run label when available).
     pub fn label(&self) -> &str {
         &self.label

@@ -1,33 +1,36 @@
 //! In-house worker pools + data-parallel dispatch (rayon is not available
 //! offline).
 //!
-//! Three execution primitives, matching the three shapes of parallelism in
-//! the trainer:
+//! The primary engine is the shared work-stealing [`Runtime`]
+//! (`--runtime shared`, DESIGN.md §11): one pool of workers with
+//! per-worker job deques plus a global injector, executing *both* coarse
+//! `'static` tasks (community-agent phases, serve connection handlers) and
+//! fork-join kernel chunks, so agent-level and kernel-level parallelism
+//! trade threads dynamically instead of owning separate pools. Blocked
+//! fork-join callers steal other jobs' chunks instead of parking.
 //!
-//! - [`Pool`] — a persistent thread pool for `'static` jobs. The parallel
-//!   agent runtime ([`crate::coordinator`]) moves each community agent's
-//!   state into a job and exchanges p/s messages over `mpsc` channels, so
-//!   jobs own everything they touch and no scoped lifetimes are needed.
-//!   Jobs are panic-isolated: a panicking job is caught at the job
-//!   boundary and its worker keeps serving the queue.
-//! - [`FjPool`] — a persistent *fork-join* pool for borrowed-data jobs:
-//!   workers park on a condvar between ops, so dispatching a parallel
-//!   kernel costs a mutex round-trip + wakeup (~1–2 µs) instead of a fresh
-//!   `thread::scope` spawn per op (~tens of µs). This is what
-//!   [`crate::runtime::NativeBackend`] drives every parallel kernel
-//!   through, and what [`fj_map`] uses for the per-community W partials.
-//! - [`scoped_map`] / [`parallel_row_chunks`] — the legacy spawn-per-op
-//!   fork-join helpers built on `std::thread::scope`. Kept as the A/B
-//!   reference path (`--op-spawn`, `NativeBackend::with_spawn_threads`)
-//!   and as the fallback when no pool is available.
+//! The legacy primitives survive as the `--runtime dual` escape hatch and
+//! A/B references:
+//!
+//! - [`Pool`] — a persistent thread pool for `'static` jobs (the dual-mode
+//!   agent executor). Jobs are panic-isolated at the job boundary.
+//! - [`FjPool`] — a persistent single-job fork-join pool (the dual-mode
+//!   kernel executor): workers park on a condvar between ops, a
+//!   `fork_lock` serialises concurrent callers, and nested forks run
+//!   inline.
+//! - [`scoped_map`] / [`parallel_row_chunks`] — spawn-per-op fork-join on
+//!   `std::thread::scope` (`--op-spawn`, `NativeBackend::with_spawn_threads`)
+//!   and the fallback when no pool is available.
 //!
 //! Determinism: every helper partitions work by index and every output
 //! element is written by exactly one thread running the same scalar loop
 //! the serial path runs, so parallel results are bitwise identical to
-//! serial ones at any thread count. Reductions are always folded on the
-//! caller's thread in index order.
+//! serial ones at any thread count — stealing only moves *which worker*
+//! runs a chunk, never what the chunk computes. Reductions are always
+//! folded on the caller's thread in index order.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -45,6 +48,21 @@ pub fn resolve_threads(threads: usize) -> usize {
             .unwrap_or(1)
     } else {
         threads
+    }
+}
+
+/// The single thread budget of the shared [`Runtime`]
+/// (`--runtime shared`): the max over the *nonzero* `--threads` /
+/// `--op-threads` knobs, or all cores when both are 0. A `0` defers to
+/// the other knob rather than meaning "all cores", so an explicit cap on
+/// either level caps the whole process — unlike dual mode, where the two
+/// pools multiply (agents × op-threads) and can oversubscribe.
+pub fn shared_thread_budget(threads: usize, op_threads: usize) -> usize {
+    match (threads, op_threads) {
+        (0, 0) => resolve_threads(0),
+        (t, 0) => t,
+        (0, k) => k,
+        (t, k) => t.max(k),
     }
 }
 
@@ -140,8 +158,11 @@ struct JobPtr(*const (dyn Fn(usize) + Sync));
 // SAFETY: the pointer is only dereferenced by workers between job
 // publication and the last `done` increment, a window during which the
 // caller of `run` is pinned (participating or waiting on `done_cv`), so
-// the pointee outlives every dereference.
+// the pointee outlives every dereference. Sync: the pointee type is
+// `dyn Fn(usize) + Sync`, so concurrent calls from several threads are
+// part of its contract.
 unsafe impl Send for JobPtr {}
+unsafe impl Sync for JobPtr {}
 
 #[derive(Default)]
 struct FjState {
@@ -364,6 +385,414 @@ impl Drop for FjPool {
 }
 
 // ---------------------------------------------------------------------------
+// Runtime — shared work-stealing runtime (agents + kernels + serving)
+// ---------------------------------------------------------------------------
+
+/// Distinguishes runtime instances so a worker publishing a nested
+/// fork-join job can tell "my runtime's deque" from "some other runtime"
+/// (tests routinely build several runtimes in one process).
+static RUNTIME_IDS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// `(runtime id, worker index)` on [`Runtime`] worker threads; `None`
+    /// on external threads (trainer main thread, transport threads, …).
+    static RT_WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+/// One in-flight fork-join job on the [`Runtime`].
+///
+/// Chunk *claims* happen under the scheduler lock (same cost profile as
+/// [`FjPool`], which also takes a mutex per claim); chunk *completion*
+/// lands under the job's own `fin` lock so finishing work never contends
+/// with scheduling. Lock order is always sched → fin, never the reverse.
+struct RtJob {
+    /// Borrowed chunk closure — valid until the publishing [`Runtime::run`]
+    /// frame observes `done == n_chunks` (see the [`JobPtr`] safety note).
+    job: JobPtr,
+    n_chunks: usize,
+    /// Where the job was published: `Some(worker)` = that worker's deque,
+    /// `None` = the external-jobs queue. Immutable after publication; used
+    /// to eagerly remove the job from its deque at the exhausting claim.
+    home: Option<usize>,
+    /// Next unclaimed chunk. Mutated only under the scheduler lock — the
+    /// atomic is for interior mutability through the `Arc`, not for
+    /// lock-free claiming.
+    next: AtomicUsize,
+    fin: Mutex<RtJobFin>,
+    /// The publisher parks here until `done == n_chunks` (only after it
+    /// has run out of work to steal).
+    done_cv: Condvar,
+}
+
+#[derive(Default)]
+struct RtJobFin {
+    done: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// Scheduler state: all queues live behind one mutex. Critical sections
+/// are O(live jobs) pointer shuffles — queue residency is tiny (nesting
+/// depth per worker, plus one entry per concurrent external caller) and
+/// chunk granularity is already bounded below by the backend's flop
+/// grains, so a single lock is not the bottleneck and buys airtight
+/// condvar wakeups (work is published under the same lock the sleep
+/// predicate is evaluated under).
+struct Sched {
+    /// Global FIFO of coarse `'static` tasks (agent phases, serve
+    /// connection handlers). Only idle workers take from here — a thread
+    /// blocked inside [`Runtime::run`] never steals an injector task,
+    /// because a coarse task may block arbitrarily long (e.g. a connection
+    /// handler waiting on a socket) and would wedge the fork it owes.
+    injector: VecDeque<Job>,
+    /// Fork-join jobs published by worker `i`. Chase-lev discipline under
+    /// the lock: the owner works the back (newest job — the fork it is
+    /// currently blocked in), thieves take the front (oldest job).
+    worker_jobs: Vec<VecDeque<Arc<RtJob>>>,
+    /// Fork-join jobs published by non-worker threads, oldest first.
+    external_jobs: VecDeque<Arc<RtJob>>,
+    shutdown: bool,
+}
+
+struct RtShared {
+    id: usize,
+    threads: usize,
+    sched: Mutex<Sched>,
+    /// Idle workers park here; notified on every publication.
+    work_cv: Condvar,
+}
+
+/// A work unit a worker picked up: a fork-join chunk or a coarse task.
+enum Unit {
+    Chunk {
+        job: Arc<RtJob>,
+        chunk: usize,
+        stolen: bool,
+    },
+    Task(Job),
+}
+
+/// The shared work-stealing runtime (`--runtime shared`, DESIGN.md §11):
+/// one thread budget serving community-agent phase tasks, fork-join
+/// kernel chunks, and serve connection handlers.
+///
+/// Differences from the [`Pool`]+[`FjPool`] dual setup it replaces:
+///
+/// - **One budget.** `Runtime::new(b)` spawns `b − 1` workers; fork-join
+///   callers participate, so `b` threads compute during any fork. Agent
+///   tasks and kernel chunks draw from the same workers instead of two
+///   pools that blindly oversubscribe (or strand) cores.
+/// - **Concurrent + nested forks.** There is no `fork_lock` and no nested
+///   inline guard: every fork publishes a job deque entry and any worker
+///   may claim its chunks. C agents forking kernels concurrently all make
+///   progress on whatever threads are free.
+/// - **Blocked forks steal.** A caller whose chunks are all claimed steals
+///   *other jobs' chunks* (never injector tasks) until its own job
+///   finishes — lending its thread instead of parking.
+///
+/// Deadlock freedom: a thread parks only when every chunk of its awaited
+/// job is claimed and nothing is stealable; each claimed chunk is being
+/// executed by exactly one thread. Take the deepest-nested job awaited by
+/// any parked thread — the thread executing its unfinished chunk would
+/// have to be parked on a strictly deeper job, contradiction; so some
+/// thread always runs, and the done-counts strictly increase.
+///
+/// Determinism: identical to the [`FjPool`] argument — stealing moves
+/// *which thread* runs a chunk, never what the chunk computes or the
+/// order any output element is accumulated in, so results stay bitwise
+/// equal to serial at any budget.
+///
+/// Panic semantics match [`FjPool`] ([`Runtime::run`] re-raises the first
+/// chunk panic after all chunks finish) and [`Pool`] ([`Runtime::execute`]
+/// tasks are caught at the task boundary; the worker survives).
+pub struct Runtime {
+    shared: Arc<RtShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Runtime with a total thread budget of `threads` (at least 1):
+    /// `threads − 1` spawned workers plus participating fork-join callers.
+    /// A budget of 1 still spawns one worker so [`Runtime::execute`] tasks
+    /// have somewhere to run (forks run inline on the caller).
+    pub fn new(threads: usize) -> Runtime {
+        let threads = threads.max(1);
+        let n_workers = (threads - 1).max(1);
+        let shared = Arc::new(RtShared {
+            id: RUNTIME_IDS.fetch_add(1, Ordering::Relaxed),
+            threads,
+            sched: Mutex::new(Sched {
+                injector: VecDeque::new(),
+                worker_jobs: (0..n_workers).map(|_| VecDeque::new()).collect(),
+                external_jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("cgcn-rt-{i}"))
+                    .spawn(move || {
+                        RT_WORKER.with(|w| w.set(Some((shared.id, i))));
+                        rt_worker_loop(&shared, i);
+                    })
+                    .expect("spawning runtime worker")
+            })
+            .collect();
+        Runtime { shared, workers }
+    }
+
+    /// The total thread budget (spawned workers + the participating
+    /// caller), i.e. how many threads compute during a fork-join.
+    pub fn threads(&self) -> usize {
+        self.shared.threads
+    }
+
+    /// Enqueue a coarse `'static` task on the global injector. Panicking
+    /// tasks are caught at the task boundary; the worker survives (the
+    /// submitter observes failure through its own result channel dying,
+    /// exactly as with [`Pool::execute`]).
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        crate::obs_counter!("runtime.tasks").inc();
+        let depth = {
+            let mut s = self.shared.sched.lock().unwrap();
+            assert!(!s.shutdown, "runtime already shut down");
+            s.injector.push_back(Box::new(task));
+            s.injector.len()
+        };
+        crate::obs_gauge!("runtime.injector.depth").set(depth as i64);
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Run `f(chunk)` for `chunk in 0..n_chunks`, distributing chunks over
+    /// the runtime (the caller participates, then steals while blocked).
+    /// Blocks until every chunk has finished; re-raises the first chunk
+    /// panic afterwards. Drop-in compatible with [`FjPool::run`], but
+    /// concurrent callers proceed in parallel and nested calls fork for
+    /// real instead of inlining.
+    pub fn run(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        if n_chunks == 1 || self.shared.threads <= 1 {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        }
+        crate::obs_counter!("runtime.runs").inc();
+        let me = RT_WORKER
+            .with(|w| w.get())
+            .filter(|(id, _)| *id == self.shared.id)
+            .map(|(_, i)| i);
+        // SAFETY (JobPtr): `f` outlives this call — this frame does not
+        // return until `done == n_chunks`, and every dereference happens
+        // before the final `done` increment.
+        let job = Arc::new(RtJob {
+            job: JobPtr(f as *const (dyn Fn(usize) + Sync)),
+            n_chunks,
+            home: me,
+            next: AtomicUsize::new(0),
+            fin: Mutex::new(RtJobFin::default()),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut s = self.shared.sched.lock().unwrap();
+            match me {
+                Some(i) => s.worker_jobs[i].push_back(Arc::clone(&job)),
+                None => s.external_jobs.push_back(Arc::clone(&job)),
+            }
+        }
+        self.shared.work_cv.notify_all();
+
+        // Participate: claim our own job's chunks first.
+        loop {
+            let c = {
+                let mut s = self.shared.sched.lock().unwrap();
+                claim(&mut s, &job)
+            };
+            match c {
+                Some(c) => run_rt_chunk(&job, c, false),
+                None => break,
+            }
+        }
+
+        // Every chunk is claimed. Steal other jobs' chunks while ours
+        // drain; park on the job's condvar only when nothing is stealable.
+        loop {
+            if job.fin.lock().unwrap().done == job.n_chunks {
+                break;
+            }
+            let other = {
+                let mut s = self.shared.sched.lock().unwrap();
+                next_chunk_unit(&mut s, me)
+            };
+            match other {
+                Some((j, c, stolen)) => run_rt_chunk(&j, c, stolen),
+                None => {
+                    let fin = job.fin.lock().unwrap();
+                    let _fin = job
+                        .done_cv
+                        .wait_while(fin, |f| f.done < job.n_chunks)
+                        .unwrap();
+                    break;
+                }
+            }
+        }
+
+        let payload = job.fin.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.sched.lock().unwrap();
+            s.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Claim the next chunk of `job` (scheduler lock held). The claim that
+/// exhausts the job also removes it from its home queue, so queues never
+/// hold exhausted jobs.
+fn claim(s: &mut Sched, job: &Arc<RtJob>) -> Option<usize> {
+    let c = job.next.load(Ordering::Relaxed);
+    if c >= job.n_chunks {
+        return None;
+    }
+    job.next.store(c + 1, Ordering::Relaxed);
+    if c + 1 == job.n_chunks {
+        remove_job(s, job);
+    }
+    Some(c)
+}
+
+fn remove_job(s: &mut Sched, job: &Arc<RtJob>) {
+    let dq = match job.home {
+        Some(i) => &mut s.worker_jobs[i],
+        None => &mut s.external_jobs,
+    };
+    if let Some(pos) = dq.iter().position(|j| Arc::ptr_eq(j, job)) {
+        dq.remove(pos);
+    }
+}
+
+/// Find the next fork-join chunk for thread `me` (scheduler lock held):
+/// own deque newest-first (the fork we are inside), then external jobs
+/// oldest-first, then other workers' deques from the cold end — the
+/// chase-lev scan order. Returns `(job, chunk, stolen)`; a claim is a
+/// *steal* when the claimer did not publish the job. Never touches the
+/// injector — coarse tasks are for idle workers only.
+fn next_chunk_unit(s: &mut Sched, me: Option<usize>) -> Option<(Arc<RtJob>, usize, bool)> {
+    if let Some(i) = me {
+        while let Some(j) = s.worker_jobs[i].back().cloned() {
+            match claim(s, &j) {
+                Some(c) => return Some((j, c, false)),
+                None => remove_job(s, &j), // stale entry; drop and rescan
+            }
+        }
+    }
+    while let Some(j) = s.external_jobs.front().cloned() {
+        match claim(s, &j) {
+            Some(c) => return Some((j, c, true)),
+            None => remove_job(s, &j),
+        }
+    }
+    let n = s.worker_jobs.len();
+    let start = me.map(|i| i + 1).unwrap_or(0);
+    for d in 0..n {
+        let v = (start + d) % n;
+        if Some(v) == me {
+            continue;
+        }
+        while let Some(j) = s.worker_jobs[v].front().cloned() {
+            match claim(s, &j) {
+                Some(c) => return Some((j, c, true)),
+                None => remove_job(s, &j),
+            }
+        }
+    }
+    None
+}
+
+/// Execute one claimed chunk and record its completion. Steals bump
+/// `pool.steal` (scraped as `cgcn_pool_steal_total`) and land in the
+/// steal-duration histogram alongside the shared busy histogram.
+fn run_rt_chunk(job: &RtJob, chunk: usize, stolen: bool) {
+    if stolen {
+        crate::obs_counter!("pool.steal").inc();
+    }
+    let busy0 = obs_now();
+    let fptr = job.job.0;
+    // SAFETY: see JobPtr — the publishing `run` frame is pinned until
+    // `done == n_chunks`, which happens only after this call returns.
+    let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*fptr)(chunk) }));
+    if let Some(t) = busy0 {
+        let secs = t.elapsed().as_secs_f64();
+        crate::obs_hist!("pool.worker.busy.secs", crate::obs::TIME_BUCKETS).record(secs);
+        if stolen {
+            crate::obs_hist!("pool.worker.steal.secs", crate::obs::TIME_BUCKETS).record(secs);
+        }
+        crate::obs_counter!("pool.chunks").inc();
+    }
+    let mut fin = job.fin.lock().unwrap();
+    if let Err(p) = result {
+        if fin.panic.is_none() {
+            fin.panic = Some(p);
+        }
+    }
+    fin.done += 1;
+    if fin.done == job.n_chunks {
+        job.done_cv.notify_all();
+    }
+}
+
+fn rt_worker_loop(shared: &RtShared, me: usize) {
+    loop {
+        let idle0 = obs_now();
+        let unit = {
+            let mut s = shared.sched.lock().unwrap();
+            loop {
+                if let Some((job, chunk, stolen)) = next_chunk_unit(&mut s, Some(me)) {
+                    break Unit::Chunk { job, chunk, stolen };
+                }
+                if let Some(t) = s.injector.pop_front() {
+                    crate::obs_gauge!("runtime.injector.depth").set(s.injector.len() as i64);
+                    break Unit::Task(t);
+                }
+                // Shutdown only once all queues are drained, so tasks
+                // submitted before Drop still run (Pool drains likewise).
+                if s.shutdown {
+                    return;
+                }
+                s = shared.work_cv.wait(s).unwrap();
+            }
+        };
+        if let Some(t) = idle0 {
+            crate::obs_hist!("pool.worker.idle.secs", crate::obs::TIME_BUCKETS)
+                .record(t.elapsed().as_secs_f64());
+        }
+        match unit {
+            Unit::Chunk { job, chunk, stolen } => run_rt_chunk(&job, chunk, stolen),
+            Unit::Task(task) => {
+                if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    log::warn!("runtime task panicked; worker continues");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Dispatch helpers
 // ---------------------------------------------------------------------------
 
@@ -394,8 +823,12 @@ pub enum OpExec<'a> {
     Serial,
     /// Legacy spawn-per-op path: one scoped thread per chunk.
     Spawn,
-    /// Persistent pool: chunks claimed by parked workers + the caller.
+    /// Dual-mode persistent pool: chunks claimed by parked workers + the
+    /// caller (`--runtime dual`).
     Pool(&'a FjPool),
+    /// Shared work-stealing runtime (`--runtime shared`): chunks claimed
+    /// by whichever runtime workers are free, stolen by blocked forks.
+    Rt(&'a Runtime),
 }
 
 /// Run `f(lo, hi)` once per `(lo, hi)` range in `bounds` on the chosen
@@ -416,6 +849,10 @@ pub fn dispatch_ranges(exec: &OpExec, bounds: &[(usize, usize)], f: &(dyn Fn(usi
             }
         }),
         OpExec::Pool(p) => p.run(bounds.len(), &|ci| {
+            let (lo, hi) = bounds[ci];
+            f(lo, hi)
+        }),
+        OpExec::Rt(rt) => rt.run(bounds.len(), &|ci| {
             let (lo, hi) = bounds[ci];
             f(lo, hi)
         }),
@@ -482,28 +919,52 @@ where
         .collect()
 }
 
-/// [`scoped_map`] semantics on a persistent [`FjPool`]: run `f(i)` for
-/// `i in 0..n` and return results in index order, claiming items from the
-/// pool instead of spawning scoped threads. Falls back to [`scoped_map`]
-/// when no pool is supplied (or parallelism is off).
+/// Which fork-join engine a [`fork_map`] should fan out on.
+#[derive(Clone, Copy)]
+pub enum ForkExec<'a> {
+    /// No persistent engine: fall back to [`scoped_map`].
+    None,
+    /// Dual-mode [`FjPool`].
+    Fj(&'a FjPool),
+    /// Shared work-stealing [`Runtime`].
+    Rt(&'a Runtime),
+}
+
+/// [`scoped_map`] semantics on a persistent fork-join engine: run `f(i)`
+/// for `i in 0..n` and return results in index order, claiming items from
+/// the engine instead of spawning scoped threads. Falls back to
+/// [`scoped_map`] when no engine is supplied (or parallelism is off).
+pub fn fork_map<T, F>(exec: ForkExec, threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 || matches!(exec, ForkExec::None) {
+        return scoped_map(threads, n, f);
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = SendPtr::new(out.as_mut_ptr());
+    // SAFETY: item i writes only slot i; `run` blocks until every item
+    // finished and `out` outlives the call.
+    let item = |i: usize| unsafe { *slots.get().add(i) = Some(f(i)) };
+    match exec {
+        ForkExec::None => unreachable!(),
+        ForkExec::Fj(p) => p.run(n, &item),
+        ForkExec::Rt(rt) => rt.run(n, &item),
+    }
+    out.into_iter()
+        .map(|o| o.expect("fork_map item panicked"))
+        .collect()
+}
+
+/// [`fork_map`] on an optional [`FjPool`] — the original dual-mode entry
+/// point, kept for the legacy call sites and tests.
 pub fn fj_map<T, F>(pool: Option<&FjPool>, threads: usize, n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    match pool {
-        Some(p) if threads > 1 && n > 1 => {
-            let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-            let slots = SendPtr::new(out.as_mut_ptr());
-            // SAFETY: item i writes only slot i; `run` blocks until every
-            // item finished and `out` outlives the call.
-            p.run(n, &|i| unsafe { *slots.get().add(i) = Some(f(i)) });
-            out.into_iter()
-                .map(|o| o.expect("fj_map item panicked"))
-                .collect()
-        }
-        _ => scoped_map(threads, n, f),
-    }
+    fork_map(pool.map_or(ForkExec::None, ForkExec::Fj), threads, n, f)
 }
 
 /// Split a row-major `rows × cols` output buffer into contiguous row
@@ -719,6 +1180,181 @@ mod tests {
         assert_eq!(run(OpExec::Spawn), want);
         let pool = FjPool::new(4);
         assert_eq!(run(OpExec::Pool(&pool)), want);
+        let rt = Runtime::new(4);
+        assert_eq!(run(OpExec::Rt(&rt)), want);
+    }
+
+    #[test]
+    fn runtime_runs_and_is_reusable() {
+        for budget in [1usize, 2, 4] {
+            let rt = Runtime::new(budget);
+            assert_eq!(rt.threads(), budget);
+            for round in 0..50usize {
+                let n = 1 + (round % 7);
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                rt.run(n, &|c| {
+                    hits[c].fetch_add((c + round) as u64, Ordering::Relaxed);
+                });
+                for (c, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        (c + round) as u64,
+                        "budget {budget} round {round}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_executes_tasks_and_survives_task_panic() {
+        let rt = Runtime::new(2); // 1 worker: a dead worker would hang this
+        rt.execute(|| panic!("task goes boom"));
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8u64 {
+            let tx = tx.clone();
+            rt.execute(move || tx.send(i).unwrap());
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn runtime_concurrent_forks_make_progress() {
+        // Unlike FjPool (fork_lock), concurrent callers fork in parallel:
+        // more callers than workers, each forking repeatedly, must all
+        // complete with exact totals.
+        let rt = Arc::new(Runtime::new(3));
+        let total = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let rt = Arc::clone(&rt);
+            let total = Arc::clone(&total);
+            handles.push(thread::spawn(move || {
+                for _ in 0..25 {
+                    rt.run(6, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 6 * 25 * 6);
+    }
+
+    #[test]
+    fn runtime_nested_fork_from_task_completes() {
+        // An injector task (agent-phase shape) forking kernels on the same
+        // runtime: the worker running the task participates in its own
+        // fork and steals, so this must complete even on a 2-thread budget
+        // where the only other thread is the blocked test caller.
+        let rt = Arc::new(Runtime::new(2));
+        let inner = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for t in 0..4u64 {
+            let rt2 = Arc::clone(&rt);
+            let inner = Arc::clone(&inner);
+            let tx = tx.clone();
+            rt.execute(move || {
+                rt2.run(8, &|_| {
+                    inner.fetch_add(1, Ordering::Relaxed);
+                });
+                tx.send(t).unwrap();
+            });
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 4);
+        assert_eq!(inner.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn runtime_nested_run_inside_chunk_completes() {
+        // A fork inside a fork chunk (trainer fork_map item calling pooled
+        // backend kernels). FjPool inlines this; the runtime forks for
+        // real — both must give exact counts.
+        let rt = Runtime::new(4);
+        let outer = AtomicU64::new(0);
+        let inner = AtomicU64::new(0);
+        rt.run(4, &|_| {
+            outer.fetch_add(1, Ordering::Relaxed);
+            rt.run(4, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 4);
+        assert_eq!(inner.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn runtime_survives_panicking_chunk() {
+        let rt = Runtime::new(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            rt.run(8, &|c| {
+                if c == 3 {
+                    panic!("chunk goes boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "chunk panic must propagate to the caller");
+        let hits = AtomicU64::new(0);
+        rt.run(16, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn runtime_blocked_fork_steals_under_skew() {
+        // One giant chunk pins a thread; the publisher must not park but
+        // steal the other job's chunks so both forks finish. Budget 2 =
+        // 1 worker + caller: if the blocked caller refused to steal, the
+        // second fork could only finish after the slow chunk (~forever
+        // relative to the barrier below).
+        let rt = Arc::new(Runtime::new(2));
+        let (slow_tx, slow_rx) = mpsc::channel::<()>();
+        let slow_rx = Mutex::new(slow_rx);
+        let rt2 = Arc::clone(&rt);
+        let done = Arc::new(AtomicU64::new(0));
+        let done2 = Arc::clone(&done);
+        let h = thread::spawn(move || {
+            rt2.run(2, &|c| {
+                if c == 0 {
+                    // Block until the main thread's fork finished.
+                    slow_rx.lock().unwrap().recv().unwrap();
+                }
+            });
+            done2.fetch_add(1, Ordering::Relaxed);
+        });
+        // Give the spawned fork time to get its slow chunk claimed.
+        thread::sleep(std::time::Duration::from_millis(50));
+        // This fork's chunks can only run via stealing: the sole worker
+        // (or the spawned caller) is busy/blocked in the slow job.
+        let hits = AtomicU64::new(0);
+        rt.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        slow_tx.send(()).unwrap();
+        h.join().unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fork_map_matches_scoped_map_on_all_engines() {
+        let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+        let pool = FjPool::new(4);
+        let rt = Runtime::new(4);
+        for threads in [1usize, 2, 4, 8] {
+            for exec in [ForkExec::None, ForkExec::Fj(&pool), ForkExec::Rt(&rt)] {
+                let got = fork_map(exec, threads, 37, |i| i * i);
+                assert_eq!(got, want, "threads={threads}");
+            }
+        }
+        assert!(fork_map(ForkExec::Rt(&rt), 4, 0, |i| i).is_empty());
     }
 
     #[test]

@@ -10,13 +10,17 @@
 //!    exchange canonicalises fold order.
 
 use cgcn::config::HyperParams;
-use cgcn::coordinator::{AdmmOptions, AdmmTrainer, ExecMode, Workspace};
+use cgcn::coordinator::{
+    run_elastic_training, AdmmOptions, AdmmTrainer, ChannelTransport, ElasticCfg, ExecMode,
+    LinkModel, Workspace,
+};
 use cgcn::data::fixtures;
 use cgcn::graph::Csr;
 use cgcn::partition::Method;
 use cgcn::runtime::{ComputeBackend, NativeBackend};
 use cgcn::tensor::{masked_cross_entropy, Matrix};
 use cgcn::prop_assert;
+use cgcn::util::pool::Runtime;
 use cgcn::util::proplite;
 use std::sync::Arc;
 
@@ -336,4 +340,163 @@ fn exec_mode_parses() {
     assert_eq!(ExecMode::parse("threads"), Some(ExecMode::Threads));
     assert_eq!(ExecMode::parse("gpu"), None);
     assert_eq!(ExecMode::Threads.name(), "threads");
+}
+
+// ---------------------------------------------------------------------------
+// Shared work-stealing runtime (`--runtime shared`)
+// ---------------------------------------------------------------------------
+
+/// Agents (communities) × runtime budgets, all nested on one shared
+/// work-stealing runtime with grain 0 (every kernel forks, so agent
+/// tasks and kernel chunks genuinely interleave on the same workers).
+/// Stealing may move chunks between workers, but must never change a
+/// single bit of the training output.
+#[test]
+fn shared_runtime_nested_parallelism_is_bitwise_identical_to_serial() {
+    for m in [1usize, 2, 4] {
+        let ws = caveman_ws(m);
+        let serial_be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let mut serial =
+            AdmmTrainer::new(ws.clone(), serial_be, AdmmOptions::for_mode(m)).unwrap();
+        let rs = serial.train(3, "serial-ref").unwrap();
+
+        for budget in [1usize, 2, 8] {
+            let rt = Arc::new(Runtime::new(budget));
+            let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_runtime_grain(rt, 0));
+            assert!(be.runtime().is_some(), "backend must expose the runtime");
+            let mut o = AdmmOptions::for_mode(m);
+            o.exec = ExecMode::Threads;
+            let mut t = AdmmTrainer::new(ws.clone(), be, o).unwrap();
+            let r = t.train(3, "shared-rt").unwrap();
+
+            assert_eq!(rs.epochs.len(), r.epochs.len());
+            for (a, b) in rs.epochs.iter().zip(&r.epochs) {
+                assert_eq!(a.loss, b.loss, "m={m} budget={budget} epoch {} loss", a.epoch);
+                assert_eq!(a.train_acc, b.train_acc, "m={m} budget={budget} train acc");
+                assert_eq!(a.test_acc, b.test_acc, "m={m} budget={budget} test acc");
+            }
+            for (a, b) in serial.state.w.iter().zip(&t.state.w) {
+                assert_eq!(a.data(), b.data(), "m={m} budget={budget}: W diverged");
+            }
+            for (zl_s, zl_t) in serial.state.z.iter().zip(&t.state.z) {
+                for (zs, zt) in zl_s.iter().zip(zl_t) {
+                    assert_eq!(zs.data(), zt.data(), "m={m} budget={budget}: Z diverged");
+                }
+            }
+            for (us, ut) in serial.state.u.iter().zip(&t.state.u) {
+                assert_eq!(us.data(), ut.data(), "m={m} budget={budget}: U diverged");
+            }
+        }
+    }
+}
+
+/// A hub-and-spokes (power-law-ish) graph gives `balanced_row_chunks`
+/// a heavily skewed nnz distribution; repeated SpMM forks from the main
+/// thread must both (a) be stolen by runtime workers at least once and
+/// (b) stay bitwise identical to the serial kernel.
+#[test]
+fn runtime_steals_skewed_spmm_chunks_without_changing_bits() {
+    cgcn::obs::force(true);
+    let n = 2048;
+    let mut trips: Vec<(usize, usize, f32)> = Vec::new();
+    for v in 1..n {
+        trips.push((0, v, 1.0));
+        trips.push((v, 0, 1.0));
+    }
+    for v in 1..n - 1 {
+        trips.push((v, v + 1, 0.5));
+    }
+    let a = Csr::from_triplets(n, n, &trips);
+    // The hub row dominates: nnz-balanced chunking yields uneven row
+    // spans (first chunk ~1 row, later chunks thousands).
+    let chunks = a.balanced_row_chunks(8);
+    assert!(chunks.len() > 1, "skewed graph should split into chunks");
+    let spans: Vec<usize> = chunks.iter().map(|&(lo, hi)| hi - lo).collect();
+    assert!(
+        spans.iter().max() > spans.iter().min(),
+        "expected uneven row spans from the hub row, got {spans:?}"
+    );
+
+    let x = {
+        let mut g = proplite::Gen::new(0xD00F, 64);
+        gen_matrix(&mut g, n, 16)
+    };
+    let want = NativeBackend::new().spmm(&a, &x);
+
+    let before = cgcn::obs::registry().snapshot().counter("pool.steal");
+    let rt = Arc::new(Runtime::new(4));
+    let be = NativeBackend::with_runtime_grain(rt, 0);
+    for round in 0..50 {
+        let got = be.spmm(&a, &x);
+        assert_eq!(got.data(), want.data(), "spmm diverged on round {round}");
+        be.recycle(got);
+    }
+    let after = cgcn::obs::registry().snapshot().counter("pool.steal");
+    assert!(
+        after > before,
+        "no chunk was stolen across 50 skewed spmm forks (before={before} after={after})"
+    );
+}
+
+/// A panic inside a (possibly stolen) chunk must land on the fork
+/// caller — not on whichever worker ran the chunk — and the runtime
+/// must stay fully usable afterwards.
+#[test]
+fn runtime_panic_under_stealing_propagates_to_fork_caller() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let rt = Arc::new(Runtime::new(4));
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        rt.run(16, &|i| {
+            if i == 11 {
+                panic!("chunk 11 exploded");
+            }
+        });
+    }));
+    let payload = caught.expect_err("panic must propagate to the fork caller");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .unwrap_or_default();
+    assert!(msg.contains("chunk 11"), "unexpected panic payload {msg:?}");
+
+    // The runtime survives the poisoned fork.
+    let total = AtomicUsize::new(0);
+    rt.run(16, &|i| {
+        total.fetch_add(i + 1, Ordering::Relaxed);
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 136);
+}
+
+/// `--transport channel` workers share the leader's backend, so on a
+/// shared runtime their per-community kernels all fork onto the same
+/// worker set — and the run must still match local serial bitwise.
+#[test]
+fn channel_transport_on_shared_runtime_matches_serial_bitwise() {
+    let ws = caveman_ws(3);
+    let serial_be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+    let mut reference =
+        AdmmTrainer::new(ws.clone(), serial_be, AdmmOptions::for_mode(3)).unwrap();
+    reference.train(4, "serial-ref").unwrap();
+
+    let rt = Arc::new(Runtime::new(4));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_runtime_grain(rt, 0));
+    let mut chan = AdmmTrainer::new(ws.clone(), backend.clone(), AdmmOptions::for_mode(3)).unwrap();
+    let mut t = ChannelTransport::spawn(&ws, &backend, AdmmOptions::for_mode(3).gauss_seidel);
+    let cfg = ElasticCfg {
+        label: "shared-rt-channel".into(),
+        dataset: "caveman".into(),
+        start_epoch: 0,
+        epochs: 4,
+        link: LinkModel::new(10_000.0, 100.0),
+        sink: None,
+    };
+    let report = run_elastic_training(&mut chan, &mut t, &cfg).unwrap();
+    drop(t);
+    assert_eq!(report.epochs.len(), 4);
+    for (a, b) in reference.state.w.iter().zip(&chan.state.w) {
+        assert_eq!(a.data(), b.data(), "channel-on-shared-runtime weights diverged");
+    }
+    assert_eq!(reference.evaluate().unwrap(), chan.evaluate().unwrap());
 }
