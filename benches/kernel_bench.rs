@@ -20,6 +20,10 @@
 //!   CGCN_BENCH_RUNTIME_GATE=1 — exit non-zero if the shared work-stealing
 //!                         runtime loses (>10% margin) to the legacy dual
 //!                         pools on the 8-thread end-to-end ADMM epoch.
+//!   CGCN_BENCH_SIMD_GATE=1 — A/B the 8-wide AVX matmul microkernel vs the
+//!                         scalar inner loop per dense op on the large
+//!                         reference shapes; exit non-zero if SIMD loses
+//!                         (>10% margin) on hardware that detects AVX.
 
 use cgcn::bench::{bench, fmt_secs, section, BenchOpts};
 use cgcn::config::HyperParams;
@@ -175,6 +179,53 @@ fn main() -> anyhow::Result<()> {
                 });
             }
         }
+    }
+
+    // ---- simd vs scalar microkernel A/B -----------------------------------
+    // Serial backends isolate the inner-loop change from dispatch effects;
+    // the shapes are the large dense trainer shapes where the roofline
+    // lift must show. Results are bitwise identical by construction
+    // (DESIGN.md §12), so this measures speed only.
+    section("simd A/B: 8-wide AVX microkernel vs scalar inner loop (serial backend)");
+    let simd_gate = env_flag("CGCN_BENCH_SIMD_GATE");
+    let simd_detected = cgcn::tensor::simd::detected();
+    let mut simd_rows: Vec<Json> = Vec::new();
+    let mut simd_ok = true;
+    {
+        let scalar_be = NativeBackend::new().with_simd(false);
+        let simd_be = NativeBackend::new().with_simd(true);
+        let mut ab = |op: &'static str, shape: String, f: &mut dyn FnMut(&NativeBackend)| {
+            let s_scalar = bench(opts, &mut || f(&scalar_be));
+            let s_simd = bench(opts, &mut || f(&simd_be));
+            let speedup = s_scalar.p50 / s_simd.p50;
+            println!(
+                "simd  {op:<15} {shape:<16} simd {:>10} vs scalar {:>10}  ({speedup:.2}x)",
+                fmt_secs(s_simd.p50),
+                fmt_secs(s_scalar.p50)
+            );
+            if s_simd.p50 > s_scalar.p50 * 1.10 {
+                simd_ok = false;
+            }
+            simd_rows.push(Json::obj(vec![
+                ("op", Json::str(op)),
+                ("shape", Json::str(&shape)),
+                ("simd_p50_s", Json::num(s_simd.p50)),
+                ("scalar_p50_s", Json::num(s_scalar.p50)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        };
+        ab("mm_nn", format!("{n}x745x256"), &mut |be| {
+            be.mm_nn(&x_f, &w1).unwrap();
+        });
+        ab("mm_tn", format!("745x{n}x256"), &mut |be| {
+            be.mm_tn(&x_f, &h).unwrap();
+        });
+        ab("mm_bt", format!("{n}x256x745"), &mut |be| {
+            be.mm_bt(&h, &w1).unwrap();
+        });
+    }
+    if !simd_detected {
+        println!("(AVX not detected on this host; simd cells ran the scalar fallback)");
     }
 
     // ---- end-to-end epochs: ADMM + Cluster-GCN ---------------------------
@@ -383,6 +434,14 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         (
+            "simd_ab",
+            Json::obj(vec![
+                ("avx_detected", Json::num(if simd_detected { 1.0 } else { 0.0 })),
+                ("ops", Json::arr(simd_rows)),
+                ("simd_not_slower", Json::num(if simd_ok { 1.0 } else { 0.0 })),
+            ]),
+        ),
+        (
             "gate",
             Json::obj(vec![
                 ("ref_op", Json::str("hidden_residual")),
@@ -427,6 +486,12 @@ fn main() -> anyhow::Result<()> {
              end-to-end ADMM epoch (shared {:.3e}s vs dual {:.3e}s)",
             admm_shared8,
             admm_dual8
+        );
+    }
+    if simd_gate && simd_detected && !simd_ok {
+        anyhow::bail!(
+            "gate: simd microkernel slower than the scalar inner loop on a \
+             large dense shape (see simd_ab in BENCH_kernels.json)"
         );
     }
     if gate && !ref_ok {

@@ -21,6 +21,9 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> CGCN_SIMD=off smoke (scalar fallback must stay bitwise identical)"
+CGCN_SIMD=off cargo test -q --test backend_parallel
+
 SMOKE_DIR="$(mktemp -d)"
 cleanup() {
     [[ -n "${SERVE_PID:-}" ]] && kill "$SERVE_PID" 2>/dev/null || true
@@ -153,14 +156,17 @@ serve_stop
 echo "==> quickstart example (release)"
 cargo run --release --example quickstart >/dev/null
 
-echo "==> kernel bench quick gate (pool vs spawn; shared vs dual runtime; telemetry overhead <=5%)"
+echo "==> kernel bench quick gate (pool vs spawn; shared vs dual runtime; simd vs scalar; telemetry overhead <=5%)"
 # Writes BENCH_kernels.json; CGCN_BENCH_GATE makes the bench exit non-zero
 # if the persistent pool is slower (>10% noise margin) than the legacy
 # spawn-per-op executor at 8 threads on the reference elementwise shape,
 # CGCN_BENCH_RUNTIME_GATE if the shared work-stealing runtime loses to the
 # legacy dual pools on the 8-thread end-to-end ADMM epoch (same margin),
+# CGCN_BENCH_SIMD_GATE if the 8-wide AVX microkernel loses to the scalar
+# inner loop on any large dense matmul shape (skipped when AVX is absent),
 # and CGCN_BENCH_OBS_GATE if enabling CGCN_OBS costs >5% per ADMM epoch.
-CGCN_BENCH_QUICK=1 CGCN_BENCH_GATE=1 CGCN_BENCH_RUNTIME_GATE=1 CGCN_BENCH_OBS_GATE=1 cargo bench --bench kernel_bench
+CGCN_BENCH_QUICK=1 CGCN_BENCH_GATE=1 CGCN_BENCH_RUNTIME_GATE=1 \
+    CGCN_BENCH_SIMD_GATE=1 CGCN_BENCH_OBS_GATE=1 cargo bench --bench kernel_bench
 [[ -s BENCH_kernels.json ]] || { echo "kernel bench wrote no BENCH_kernels.json"; exit 1; }
 
 echo "CI OK"

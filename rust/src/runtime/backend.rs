@@ -12,7 +12,12 @@
 //!   or through an owned [`FjPool`] (`--runtime dual`). Every output row
 //!   is produced by the same scalar loop the serial path runs and every
 //!   reduction is folded on the caller in row order, so results are
-//!   bitwise identical at any thread count on either engine. Temporaries
+//!   bitwise identical at any thread count on either engine. The dense
+//!   matmul inner loops additionally run the 8-wide AVX microkernel in
+//!   [`crate::tensor::simd`] when the hardware supports it
+//!   (`CGCN_SIMD=off` disables; DESIGN.md §12) — the lane layout keeps
+//!   per-element accumulation order, so SIMD on/off is bitwise identical
+//!   too. Temporaries
 //!   come from a per-backend scratch [`Arena`]; callers hand them back
 //!   through [`ComputeBackend::recycle`] to keep the inner ADMM loops
 //!   allocation-free.
@@ -32,7 +37,7 @@
 //! bitwise-determinism argument).
 
 use crate::graph::Csr;
-use crate::tensor::Matrix;
+use crate::tensor::{simd, Matrix};
 use crate::util::pool::{
     dispatch_ranges, resolve_threads, uniform_chunks, FjPool, OpExec, Runtime, SendPtr,
 };
@@ -46,6 +51,18 @@ use std::sync::{Arc, Mutex};
 /// the mini-batch path drives the same `spmm`/`fwd_relu`/`bp_*` calls
 /// with batch-sized operands (|B| rows instead of the padded global row
 /// count), which is what makes its memory bound real rather than modeled.
+///
+/// **Finite-operand contract:** every matrix/vector operand must contain
+/// only finite values (no NaN, no ±inf). The dense matmuls skip
+/// zero-valued left-operand entries (post-ReLU activations are 50–75 %
+/// zeros), which drops the `0 · x` term — equal to real IEEE matmul only
+/// when `x` is finite (`0 · ±inf = NaN`). The native kernels assert the
+/// contract at entry in debug builds ([`simd::debug_assert_finite`]), so
+/// a NaN entering training surfaces loudly at the first matmul instead
+/// of being silently masked by the skip; release builds do not scan.
+/// The SIMD path implements the identical skip semantics (the skip is
+/// decided on the scalar operand before the vector row update), so the
+/// contract and the results are the same with SIMD on or off.
 pub trait ComputeBackend: Send + Sync {
     /// Short human-readable backend name for logs.
     fn name(&self) -> &'static str;
@@ -270,7 +287,7 @@ pub struct OpGrains {
 }
 
 impl OpGrains {
-    /// The calibrated defaults described on the struct.
+    /// The calibrated defaults described on the struct (scalar kernels).
     pub fn calibrated() -> OpGrains {
         OpGrains {
             mm_nn: 1 << 19,
@@ -280,6 +297,22 @@ impl OpGrains {
             eltwise: 1 << 19,
             xent: 1 << 19,
         }
+    }
+
+    /// Calibration matched to the active matmul inner loop. The 8-wide
+    /// SIMD axpy roughly quadruples serial dense-matmul throughput, so the
+    /// flop count at which forking amortises the ~1–2 µs pool dispatch
+    /// moves up by about the same factor for `mm_nn`/`mm_bt`; `mm_tn`
+    /// stays put (its threshold is dominated by the zero-skip discount,
+    /// not raw loop speed), as do the non-vectorised op families. Bench
+    /// `simd_ab` in `BENCH_kernels.json` is the recalibration reference.
+    pub fn calibrated_for(simd: bool) -> OpGrains {
+        let mut g = OpGrains::calibrated();
+        if simd {
+            g.mm_nn = 1 << 21;
+            g.mm_bt = 1 << 21;
+        }
+        g
     }
 
     /// The same threshold for every op (tests/benches use 0 to force the
@@ -326,6 +359,10 @@ pub struct NativeBackend {
     runtime: Option<Arc<Runtime>>,
     /// Use the legacy `thread::scope` spawn-per-op executor.
     spawn_ops: bool,
+    /// Run the dense matmul inner loops through the 8-wide AVX microkernel
+    /// ([`simd`], DESIGN.md §12). Snapshotted from detection + `CGCN_SIMD`
+    /// at construction; results are bitwise identical either way.
+    simd: bool,
     arena: Arena,
 }
 
@@ -342,6 +379,7 @@ impl NativeBackend {
             pool,
             runtime: None,
             spawn_ops,
+            simd: simd::enabled(),
             arena: Arena::default(),
         }
     }
@@ -353,21 +391,34 @@ impl NativeBackend {
             pool: None,
             runtime: Some(rt),
             spawn_ops,
+            simd: simd::enabled(),
             arena: Arena::default(),
         }
+    }
+
+    /// Override the microkernel choice (tests/benches A/B the SIMD and
+    /// scalar paths in one process). Forcing `true` is clamped to hardware
+    /// support, so the override selects a code path but never a result.
+    pub fn with_simd(mut self, on: bool) -> NativeBackend {
+        self.simd = on && simd::detected();
+        self
     }
 
     /// Single-threaded backend (the deterministic baseline — though since
     /// parallel results are bitwise identical, "baseline" here only means
     /// "no worker threads").
     pub fn new() -> NativeBackend {
-        NativeBackend::build(1, OpGrains::calibrated(), false)
+        NativeBackend::build(1, OpGrains::calibrated_for(simd::enabled()), false)
     }
 
     /// Backend with op-level row parallelism on a persistent pool of up to
     /// `threads` workers (0 = all available cores).
     pub fn with_threads(threads: usize) -> NativeBackend {
-        NativeBackend::build(resolve_threads(threads), OpGrains::calibrated(), false)
+        NativeBackend::build(
+            resolve_threads(threads),
+            OpGrains::calibrated_for(simd::enabled()),
+            false,
+        )
     }
 
     /// Like [`NativeBackend::with_threads`] but with a uniform explicit
@@ -381,7 +432,11 @@ impl NativeBackend {
     /// fresh scoped threads instead of using the persistent pool. Kept as
     /// the `--op-spawn` A/B reference for `benches/kernel_bench.rs`.
     pub fn with_spawn_threads(threads: usize) -> NativeBackend {
-        NativeBackend::build(resolve_threads(threads), OpGrains::calibrated(), true)
+        NativeBackend::build(
+            resolve_threads(threads),
+            OpGrains::calibrated_for(simd::enabled()),
+            true,
+        )
     }
 
     /// [`NativeBackend::with_spawn_threads`] with a uniform explicit grain.
@@ -395,7 +450,7 @@ impl NativeBackend {
     /// kernels use the spawn-per-op executor (`--op-spawn` A/B) but the
     /// runtime handle is still exposed for agent/serving tasks.
     pub fn with_runtime(rt: Arc<Runtime>, spawn_ops: bool) -> NativeBackend {
-        NativeBackend::build_on_runtime(rt, OpGrains::calibrated(), spawn_ops)
+        NativeBackend::build_on_runtime(rt, OpGrains::calibrated_for(simd::enabled()), spawn_ops)
     }
 
     /// [`NativeBackend::with_runtime`] with a uniform explicit grain
@@ -482,6 +537,8 @@ impl NativeBackend {
             w.rows(),
             w.cols()
         );
+        simd::debug_assert_finite("mm_nn lhs", x.data());
+        simd::debug_assert_finite("mm_nn rhs", w.data());
         let (rows, inner, cols) = (x.rows(), x.cols(), w.cols());
         let mut out = self.take_mat_zeroed(rows, cols);
         let t = self.par(2 * rows * inner * cols, self.grains.mm_nn);
@@ -490,7 +547,7 @@ impl NativeBackend {
         dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
             // SAFETY: row ranges are disjoint; `out` outlives the dispatch.
             let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
-            mm_nn_rows(x, w, relu, lo, hi, chunk)
+            mm_nn_rows(x, w, relu, self.simd, lo, hi, chunk)
         });
         out
     }
@@ -513,8 +570,19 @@ unsafe fn span_mut<'a, T>(base: *mut T, lo: usize, hi: usize, stride: usize) -> 
 }
 
 /// Rows `lo..hi` of `X @ W` (optionally ReLU'd) into `chunk` — the same
-/// ikj loop as [`Matrix::matmul`], so results match it bitwise.
-fn mm_nn_rows(x: &Matrix, w: &Matrix, relu: bool, lo: usize, hi: usize, chunk: &mut [f32]) {
+/// ikj loop as [`Matrix::matmul`], so results match it bitwise. `simd`
+/// selects the 8-lane row update ([`simd::axpy`]); the zero-skip is
+/// decided on the scalar `a` before the row update either way, so skip
+/// semantics and bits are identical across paths.
+fn mm_nn_rows(
+    x: &Matrix,
+    w: &Matrix,
+    relu: bool,
+    simd: bool,
+    lo: usize,
+    hi: usize,
+    chunk: &mut [f32],
+) {
     let inner = x.cols();
     let n = w.cols();
     let xd = x.data();
@@ -527,9 +595,7 @@ fn mm_nn_rows(x: &Matrix, w: &Matrix, relu: bool, lo: usize, hi: usize, chunk: &
                 continue;
             }
             let wrow = &wd[k * n..(k + 1) * n];
-            for (o, &b) in orow.iter_mut().zip(wrow) {
-                *o += a * b;
-            }
+            simd::axpy(simd, orow, a, wrow);
         }
         if relu {
             for o in orow.iter_mut() {
@@ -549,8 +615,9 @@ fn mm_nn_rows(x: &Matrix, w: &Matrix, relu: bool, lo: usize, hi: usize, chunk: &
 /// `y` stay L1/L2-resident across the chunk. `k` still advances in
 /// ascending order both inside and across blocks, so each output element
 /// accumulates in exactly the serial order — blocking changes locality,
-/// not results.
-fn mm_tn_rows(x: &Matrix, y: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+/// not results. The inner row update is the same [`simd::axpy`] as
+/// `mm_nn_rows` (zero-skip decided on the scalar `v` first).
+fn mm_tn_rows(x: &Matrix, y: &Matrix, simd: bool, lo: usize, hi: usize, chunk: &mut [f32]) {
     const KB: usize = 64;
     let a = x.cols();
     let n = y.cols();
@@ -568,9 +635,7 @@ fn mm_tn_rows(x: &Matrix, y: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
                     continue;
                 }
                 let yrow = &yd[k * n..(k + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(yrow) {
-                    *o += v * b;
-                }
+                simd::axpy(simd, orow, v, yrow);
             }
         }
         k0 = k1;
@@ -600,6 +665,37 @@ fn mm_bt_rows(y: &Matrix, w: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
                     acc += yrow[idx] * wrow[idx];
                 }
                 *o = acc;
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// SIMD rows `lo..hi` of `Y @ Wᵀ` given the pre-transposed strip
+/// `wt = Wᵀ` (`y.cols() × w.rows()`): `out[i][j] = Σ_idx y[i][idx] ·
+/// wt[idx][j]`, lifted 8 `j` lanes at a time by [`simd::axpy`].
+///
+/// Bitwise identity with the scalar `mm_bt_rows` dot product: the chunk
+/// arrives zeroed, so each output element accumulates `0 + y₀·w₀ + y₁·w₁
+/// + …` in ascending `idx` — the exact f32 sequence the scalar `acc`
+/// register walks (transposing copies values, it doesn't change them,
+/// and the scalar dot has no zero-skip so neither does this path). The
+/// same `JB` output-column blocking keeps the `wt` strip cache-resident;
+/// a full ascending-`idx` sweep runs per block, so blocking reorders
+/// nothing per element.
+fn mm_bt_rows_simd(y: &Matrix, wt: &Matrix, lo: usize, hi: usize, chunk: &mut [f32]) {
+    const JB: usize = 64;
+    debug_assert_eq!(wt.rows(), y.cols());
+    let a = wt.cols();
+    let wd = wt.data();
+    let mut j0 = 0usize;
+    while j0 < a {
+        let j1 = (j0 + JB).min(a);
+        for (ri, i) in (lo..hi).enumerate() {
+            let yrow = y.row(i);
+            let orow = &mut chunk[ri * a + j0..ri * a + j1];
+            for (idx, &v) in yrow.iter().enumerate() {
+                simd::axpy(true, orow, v, &wd[idx * a + j0..idx * a + j1]);
             }
         }
         j0 = j1;
@@ -735,6 +831,8 @@ impl ComputeBackend for NativeBackend {
 
     fn mm_tn(&self, x: &Matrix, y: &Matrix) -> Result<Matrix> {
         assert_eq!(x.rows(), y.rows(), "mm_tn row mismatch");
+        simd::debug_assert_finite("mm_tn lhs", x.data());
+        simd::debug_assert_finite("mm_tn rhs", y.data());
         let (rows, cols) = (x.cols(), y.cols());
         let mut out = self.take_mat_zeroed(rows, cols);
         let t = self.par(2 * rows * cols * x.rows(), self.grains.mm_tn);
@@ -743,23 +841,50 @@ impl ComputeBackend for NativeBackend {
         dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
             // SAFETY: disjoint row ranges; `out` outlives the dispatch.
             let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
-            mm_tn_rows(x, y, lo, hi, chunk)
+            mm_tn_rows(x, y, self.simd, lo, hi, chunk)
         });
         Ok(out)
     }
 
     fn mm_bt(&self, y: &Matrix, w: &Matrix) -> Result<Matrix> {
         assert_eq!(y.cols(), w.cols(), "mm_bt col mismatch");
+        simd::debug_assert_finite("mm_bt lhs", y.data());
+        simd::debug_assert_finite("mm_bt rhs", w.data());
         let (rows, cols) = (y.rows(), w.rows());
         let mut out = self.take_mat_zeroed(rows, cols);
         let t = self.par(2 * rows * cols * y.cols(), self.grains.mm_bt);
         let bounds = uniform_chunks(t, rows);
         let op = SendPtr::new(out.data_mut().as_mut_ptr());
-        dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
-            // SAFETY: disjoint row ranges; `out` outlives the dispatch.
-            let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
-            mm_bt_rows(y, w, lo, hi, chunk)
-        });
+        if self.simd {
+            // The vector path wants unit-stride `j` lanes, so transpose `w`
+            // once into an arena strip and accumulate outer products —
+            // same per-element ascending-`idx` chain as the scalar dot
+            // (see `mm_bt_rows_simd`). Transpose cost is `a·k` copies vs
+            // `2·rows·a·k` flops, and the strip is recycled afterwards.
+            let mut wt = self.take_mat_stale(w.cols(), w.rows());
+            {
+                let wd = w.data();
+                let (wr, wc) = (w.rows(), w.cols());
+                let td = wt.data_mut();
+                for r in 0..wr {
+                    for c in 0..wc {
+                        td[c * wr + r] = wd[r * wc + c];
+                    }
+                }
+            }
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; `out` outlives the dispatch.
+                let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
+                mm_bt_rows_simd(y, &wt, lo, hi, chunk)
+            });
+            self.recycle(wt);
+        } else {
+            dispatch_ranges(&self.exec(t), &bounds, &|lo, hi| {
+                // SAFETY: disjoint row ranges; `out` outlives the dispatch.
+                let chunk = unsafe { span_mut(op.get(), lo, hi, cols) };
+                mm_bt_rows(y, w, lo, hi, chunk)
+            });
+        }
         Ok(out)
     }
 
@@ -1542,6 +1667,43 @@ mod tests {
         let bt = be.mm_bt(&yy, &w).unwrap();
         let want = yy.matmul(&w.transpose());
         assert!(bt.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn simd_matmuls_are_bitwise_identical_to_scalar() {
+        // Shapes straddle the 8-lane width (cols < 8, == 8, and every
+        // remainder) so both the vector body and the scalar tail run.
+        // With AVX undetected `with_simd(true)` clamps to scalar and the
+        // assertions hold trivially.
+        let mut rng = Rng::new(41);
+        for cols in [1usize, 5, 7, 8, 9, 13, 16, 21] {
+            let x = Matrix::glorot(11, 10, &mut rng);
+            let w = Matrix::glorot(10, cols, &mut rng); // mm_nn lanes = cols
+            let y = Matrix::glorot(11, cols, &mut rng); // mm_tn lanes = cols
+            let wb = Matrix::glorot(cols, 10, &mut rng); // mm_bt lanes = cols
+            let scalar = NativeBackend::new().with_simd(false);
+            let vector = NativeBackend::new().with_simd(true);
+            assert_eq!(
+                scalar.mm_nn(&x, &w).unwrap().data(),
+                vector.mm_nn(&x, &w).unwrap().data(),
+                "mm_nn cols={cols}"
+            );
+            assert_eq!(
+                scalar.mm_tn(&x, &y).unwrap().data(),
+                vector.mm_tn(&x, &y).unwrap().data(),
+                "mm_tn cols={cols}"
+            );
+            assert_eq!(
+                scalar.mm_bt(&x, &wb).unwrap().data(),
+                vector.mm_bt(&x, &wb).unwrap().data(),
+                "mm_bt cols={cols}"
+            );
+            assert_eq!(
+                scalar.fwd_relu(&x, &w).unwrap().data(),
+                vector.fwd_relu(&x, &w).unwrap().data(),
+                "fwd_relu cols={cols}"
+            );
+        }
     }
 
     #[test]

@@ -156,12 +156,21 @@ impl Matrix {
     /// Reference dense matmul (ikj loop order, row-major friendly). Used
     /// for verification and small host-side products; the training path
     /// uses XLA artifacts instead.
+    ///
+    /// The inner `j` loop runs the 8-wide [`crate::tensor::simd`] axpy
+    /// when the gate is on; each output element accumulates in the same
+    /// ascending-`k` IEEE sequence either way, so results are bitwise
+    /// identical with SIMD on or off. Operands must be finite — the
+    /// zero-skip drops `0 · x` terms (debug builds assert this).
     pub fn matmul(&self, rhs: &Matrix) -> Matrix {
         assert_eq!(
             self.cols, rhs.rows,
             "matmul shape mismatch: {}x{} @ {}x{}",
             self.rows, self.cols, rhs.rows, rhs.cols
         );
+        crate::tensor::simd::debug_assert_finite("matmul lhs", &self.data);
+        crate::tensor::simd::debug_assert_finite("matmul rhs", &rhs.data);
+        let simd = crate::tensor::simd::enabled();
         let mut out = Matrix::zeros(self.rows, rhs.cols);
         let n = rhs.cols;
         for i in 0..self.rows {
@@ -172,9 +181,7 @@ impl Matrix {
                     continue;
                 }
                 let rhs_row = &rhs.data[k * n..(k + 1) * n];
-                for (o, &b) in out_row.iter_mut().zip(rhs_row) {
-                    *o += a * b;
-                }
+                crate::tensor::simd::axpy(simd, out_row, a, rhs_row);
             }
         }
         out

@@ -8,6 +8,7 @@
 
 mod matrix;
 mod ops;
+pub mod simd;
 
 pub use matrix::Matrix;
 pub use ops::{argmax, argmax_rows, masked_cross_entropy, relu, relu_mask, softmax_rows};

@@ -1,0 +1,198 @@
+//! The 8-wide f32 SIMD microkernel behind the dense matmul family.
+//!
+//! One primitive covers every dense inner loop ([`Matrix::matmul`],
+//! `mm_nn_rows`, `mm_tn_rows` and the transposed-strip `mm_bt` path in
+//! `runtime/backend.rs`): [`axpy`], the row update `o[j] += a · b[j]`.
+//! The vector form lifts 8 output columns (`j` lanes) per AVX register
+//! with *separate* `vmulps`/`vaddps` — never `vfmadd`, because fusing
+//! skips the intermediate rounding of the product and would change the
+//! result bits. Each output element therefore accumulates through the
+//! exact IEEE operation sequence the scalar loop performs, in the same
+//! ascending-`k` order (lanes are independent elements; vectorising
+//! across `j` reorders nothing), so SIMD-on, SIMD-off, serial and any
+//! thread count are all bitwise identical. The `cols % 8` remainder
+//! lanes run the scalar loop. See DESIGN.md §12.
+//!
+//! Gate: AVX is detected once per process (`is_x86_feature_detected!`);
+//! `CGCN_SIMD=off` (or `0`/`false`) is the escape hatch, and
+//! [`force`] flips the gate in-process for A/B tests and benches —
+//! forcing *on* is clamped to hardware support, so the override can
+//! change code paths but never results. Backends snapshot the gate at
+//! construction ([`enabled`]); [`Matrix::matmul`] reads it per call.
+//!
+//! [`Matrix::matmul`]: crate::tensor::Matrix::matmul
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNSET: u8 = 0;
+const ON: u8 = 1;
+const OFF: u8 = 2;
+
+/// Process-wide gate: lazily initialised from detection + `CGCN_SIMD`,
+/// overridable via [`force`].
+static GATE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// True when the host CPU supports the AVX ops the microkernel uses.
+/// Always false off x86-64.
+pub fn detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn env_off() -> bool {
+    matches!(
+        std::env::var("CGCN_SIMD").as_deref(),
+        Ok("off") | Ok("0") | Ok("false")
+    )
+}
+
+/// Whether the vector path is active: AVX detected and not disabled by
+/// `CGCN_SIMD=off` (or a [`force`] override). Cached after first use.
+pub fn enabled() -> bool {
+    match GATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = detected() && !env_off();
+            let v = if on { ON } else { OFF };
+            // compare_exchange so a racing `force` is never overwritten by
+            // a stale lazy init.
+            match GATE.compare_exchange(UNSET, v, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => on,
+                Err(cur) => cur == ON,
+            }
+        }
+    }
+}
+
+/// Override the gate in-process (tests/benches A/B `CGCN_SIMD` without
+/// re-exec). Forcing `true` is clamped to hardware support; since the
+/// vector path is bitwise identical to scalar, flipping this mid-run is
+/// observable only in speed.
+pub fn force(on: bool) {
+    GATE.store(if on && detected() { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// `orow[j] += a * brow[j]` over the zipped length. With `simd` the 8-lane
+/// AVX body runs (caller must only pass `simd = true` under [`enabled`] /
+/// [`detected`] — backends snapshot that at construction); otherwise the
+/// scalar loop, which is the exact inner loop the pre-SIMD kernels ran.
+#[inline]
+pub fn axpy(simd: bool, orow: &mut [f32], a: f32, brow: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `simd` is only true when AVX was detected (the gate and
+        // `NativeBackend` both clamp on `detected()`).
+        unsafe { axpy_avx(orow, a, brow) };
+        return;
+    }
+    let _ = simd;
+    for (o, &b) in orow.iter_mut().zip(brow) {
+        *o += a * b;
+    }
+}
+
+/// 8-lane AVX body of [`axpy`]: broadcast `a`, then per group of 8 columns
+/// load-mul-add-store. Mul and add stay separate instructions so each lane
+/// rounds the product before the sum exactly like the scalar `a * b` then
+/// `+=` — do not "optimise" this into `_mm256_fmadd_ps`.
+///
+/// SAFETY: caller guarantees the CPU supports AVX.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn axpy_avx(orow: &mut [f32], a: f32, brow: &[f32]) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    let n = orow.len().min(brow.len());
+    let av = _mm256_set1_ps(a);
+    let op = orow.as_mut_ptr();
+    let bp = brow.as_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let bv = _mm256_loadu_ps(bp.add(j));
+        let ov = _mm256_loadu_ps(op.add(j));
+        let prod = _mm256_mul_ps(av, bv);
+        _mm256_storeu_ps(op.add(j), _mm256_add_ps(ov, prod));
+        j += 8;
+    }
+    while j < n {
+        *op.add(j) += a * *bp.add(j);
+        j += 1;
+    }
+}
+
+/// Debug-build guard for the finite-operand kernel contract
+/// (`ComputeBackend` docs, DESIGN.md §12): the zero-skip matmuls drop
+/// `0 · x` terms, which only equals real IEEE matmul when every operand is
+/// finite (`0 · ±inf = NaN`). Release builds skip the scan; a NaN entering
+/// training under `debug_assertions` panics here instead of being silently
+/// masked by the skip.
+#[inline]
+pub fn debug_assert_finite(tag: &str, data: &[f32]) {
+    if cfg!(debug_assertions) {
+        if let Some((i, v)) = data.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+            panic!(
+                "{tag}: non-finite operand {v} at flat index {i} violates the \
+                 finite-operand kernel contract (DESIGN.md §12)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_axpy(orow: &mut [f32], a: f32, brow: &[f32]) {
+        for (o, &b) in orow.iter_mut().zip(brow) {
+            *o += a * b;
+        }
+    }
+
+    #[test]
+    fn axpy_simd_is_bitwise_identical_to_scalar_at_every_remainder() {
+        // Lengths 0..=33 cover len < 8 and every len % 8; values include
+        // denormals and awkward magnitudes so rounding actually differs if
+        // anyone fuses the mul-add. Compared via to_bits: exact or bust.
+        let mut rng = crate::util::rng::Rng::new(0x51AD);
+        for len in 0..=33usize {
+            let a = rng.gen_f32() * 3.0 - 1.5;
+            let brow: Vec<f32> = (0..len).map(|_| rng.gen_f32() * 2e3 - 1e3).collect();
+            let base: Vec<f32> = (0..len).map(|_| rng.gen_f32() * 1e-3).collect();
+            let mut want = base.clone();
+            scalar_axpy(&mut want, a, &brow);
+            let mut got = base.clone();
+            axpy(detected(), &mut got, a, &brow);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "len={len} lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn force_clamps_to_detection() {
+        force(true);
+        assert_eq!(enabled(), detected(), "forcing on must clamp to hardware");
+        force(false);
+        assert!(!enabled());
+        force(true); // leave the gate in its default-on state for other tests
+    }
+
+    #[test]
+    fn finite_guard_trips_on_nan_in_debug() {
+        debug_assert_finite("ok", &[0.0, -1.5, 3.0e37]);
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(|| {
+                debug_assert_finite("bad", &[1.0, f32::NAN]);
+            });
+            assert!(r.is_err(), "NaN must trip the debug finite guard");
+        }
+    }
+}

@@ -867,11 +867,17 @@ pub fn uniform_chunks(chunks: usize, rows: usize) -> Vec<(usize, usize)> {
         return Vec::new();
     }
     let t = chunks.max(1).min(rows);
-    let chunk_rows = rows.div_ceil(t);
+    // Spread the remainder one row per leading chunk so sizes differ by at
+    // most one and exactly `t` chunks come back. (The old `div_ceil`
+    // sizing left stragglers — 65 rows × 8 chunks gave seven 9-row chunks
+    // plus one of 2 — and could return fewer chunks than workers: 17 rows
+    // × 8 chunks rounded up to 3-row chunks, i.e. only 6.)
+    let base = rows / t;
+    let rem = rows % t;
     let mut out = Vec::with_capacity(t);
     let mut lo = 0usize;
-    while lo < rows {
-        let hi = (lo + chunk_rows).min(rows);
+    for i in 0..t {
+        let hi = lo + base + usize::from(i < rem);
         out.push((lo, hi));
         lo = hi;
     }
@@ -1359,7 +1365,7 @@ mod tests {
 
     #[test]
     fn uniform_chunks_cover_exactly() {
-        for rows in [0usize, 1, 7, 57, 64] {
+        for rows in [0usize, 1, 7, 17, 57, 64, 65] {
             for chunks in [1usize, 2, 3, 8, 100] {
                 let b = uniform_chunks(chunks, rows);
                 let mut next = 0usize;
@@ -1370,6 +1376,17 @@ mod tests {
                 }
                 assert_eq!(next, rows);
                 assert!(b.len() <= chunks.max(1));
+                if rows > 0 {
+                    // Every requested worker gets a chunk (capped by rows),
+                    // and the split is balanced: max − min ≤ 1 row.
+                    assert_eq!(b.len(), chunks.max(1).min(rows), "rows={rows} chunks={chunks}");
+                    let min = b.iter().map(|&(lo, hi)| hi - lo).min().unwrap();
+                    let max = b.iter().map(|&(lo, hi)| hi - lo).max().unwrap();
+                    assert!(
+                        max - min <= 1,
+                        "unbalanced split rows={rows} chunks={chunks}: {b:?}"
+                    );
+                }
             }
         }
     }

@@ -469,6 +469,120 @@ fn runtime_panic_under_stealing_propagates_to_fork_caller() {
     assert_eq!(total.load(Ordering::Relaxed), 136);
 }
 
+// ---------------------------------------------------------------------------
+// SIMD microkernel (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Serialises the tests that flip the global `tensor::simd` gate. Results
+/// are bitwise invariant under the gate, so concurrent flips can't corrupt
+/// any *data* assertion — but the fallback test asserts the gate *value*,
+/// which must not race another test's `force` calls.
+static SIMD_GATE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// The tentpole claim for the 8-wide AVX matmul microkernel: SIMD-on,
+/// SIMD-off and serial are bitwise identical for every dense matmul-family
+/// op, at shapes hitting every remainder lane (`cols % 8 ∈ {0..7}`,
+/// including `cols < 8` where only the scalar tail runs), at threads
+/// {1, 2, 8}, on both kernel engines (owned `FjPool` and the shared
+/// work-stealing `Runtime`). On hosts without AVX `with_simd(true)`
+/// clamps to scalar and the sweep still holds. The host-side
+/// `Matrix::matmul` runs the same microkernel behind the global
+/// `tensor::simd` gate — flipping the gate mid-process is safe precisely
+/// because results never depend on it.
+#[test]
+fn simd_sweep_every_lane_thread_count_and_engine_is_bitwise_identical() {
+    use cgcn::tensor::simd;
+    let _gate = SIMD_GATE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut g = proplite::Gen::new(0x51BD, 64);
+    // One shared runtime per budget, reused across the whole sweep.
+    let rts: Vec<Arc<Runtime>> = [1usize, 2, 8]
+        .iter()
+        .map(|&t| Arc::new(Runtime::new(t)))
+        .collect();
+    for cols in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 12, 15, 16, 24] {
+        let n = g.usize_in(3, 17);
+        let inner = g.usize_in(1, 11);
+        let x = gen_matrix(&mut g, n, inner); // mm_nn/fwd_relu lhs
+        let w = gen_matrix(&mut g, inner, cols); // lanes = cols
+        let y = gen_matrix(&mut g, n, cols); // mm_tn rhs, lanes = cols
+        let wb = gen_matrix(&mut g, cols, inner); // mm_bt rhs, lanes = cols
+
+        // Host reference with the global gate forced off, then on: the
+        // serial `Matrix::matmul` must not move a bit either.
+        simd::force(false);
+        let want_nn = x.matmul(&w);
+        let want_tn = x.transpose().matmul(&y);
+        simd::force(true);
+        assert_eq!(x.matmul(&w).data(), want_nn.data(), "host matmul cols={cols}");
+        assert_eq!(
+            x.transpose().matmul(&y).data(),
+            want_tn.data(),
+            "host matmul (tn) cols={cols}"
+        );
+
+        let serial = NativeBackend::new().with_simd(false);
+        let want_bt = serial.mm_bt(&x, &wb).unwrap();
+        let want_relu = serial.fwd_relu(&x, &w).unwrap();
+        for (ti, &threads) in [1usize, 2, 8].iter().enumerate() {
+            for shared in [false, true] {
+                for on in [false, true] {
+                    let be = if shared {
+                        NativeBackend::with_runtime_grain(rts[ti].clone(), 0).with_simd(on)
+                    } else {
+                        NativeBackend::with_grain(threads, 0).with_simd(on)
+                    };
+                    let ctx = format!(
+                        "cols={cols} t={threads} {} simd={on}",
+                        if shared { "shared-rt" } else { "pool" }
+                    );
+                    assert_eq!(be.mm_nn(&x, &w).unwrap().data(), want_nn.data(), "mm_nn {ctx}");
+                    assert_eq!(be.mm_tn(&x, &y).unwrap().data(), want_tn.data(), "mm_tn {ctx}");
+                    assert_eq!(be.mm_bt(&x, &wb).unwrap().data(), want_bt.data(), "mm_bt {ctx}");
+                    assert_eq!(
+                        be.fwd_relu(&x, &w).unwrap().data(),
+                        want_relu.data(),
+                        "fwd_relu {ctx}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Detection/fallback unit contract: forcing the gate on clamps to what
+/// `is_x86_feature_detected!` reported, `CGCN_SIMD=off`-style forcing off
+/// always sticks, and a backend built with either override trains the
+/// same bits (the end-to-end identity every other test leans on).
+#[test]
+fn simd_detection_fallback_clamps_and_preserves_bits() {
+    use cgcn::tensor::simd;
+    let _gate = SIMD_GATE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    simd::force(true);
+    assert_eq!(
+        simd::enabled(),
+        simd::detected(),
+        "forcing the gate on must clamp to hardware detection"
+    );
+    simd::force(false);
+    assert!(!simd::enabled(), "forcing the gate off must stick");
+    simd::force(true);
+
+    let ws = caveman_ws(2);
+    let scalar_be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new().with_simd(false));
+    let simd_be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new().with_simd(true));
+    let mut a = AdmmTrainer::new(ws.clone(), scalar_be, AdmmOptions::for_mode(2)).unwrap();
+    let mut b = AdmmTrainer::new(ws, simd_be, AdmmOptions::for_mode(2)).unwrap();
+    let ra = a.train(2, "scalar").unwrap();
+    let rb = b.train(2, "simd").unwrap();
+    for (ea, eb) in ra.epochs.iter().zip(&rb.epochs) {
+        assert_eq!(ea.loss, eb.loss, "epoch {} loss", ea.epoch);
+        assert_eq!(ea.test_acc, eb.test_acc, "epoch {} acc", ea.epoch);
+    }
+    for (wa, wb) in a.state.w.iter().zip(&b.state.w) {
+        assert_eq!(wa.data(), wb.data(), "weights diverged across SIMD on/off");
+    }
+}
+
 /// `--transport channel` workers share the leader's backend, so on a
 /// shared runtime their per-community kernels all fork onto the same
 /// worker set — and the run must still match local serial bitwise.
