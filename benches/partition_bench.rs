@@ -1,0 +1,206 @@
+//! Partition benchmark: community detection vs the edge-cut baselines.
+//!
+//! Sweeps every partitioner (louvain, lpa, metis, random, bfs) over the
+//! synthetic Table-2 twins, recording detection time, the full quality
+//! report (modularity, edge-cut, boundary volume, conductance, balance),
+//! and the downstream cost that quality is supposed to buy: time per
+//! ADMM epoch training on the resulting partition. Results land in
+//! `BENCH_partition.json`.
+//!
+//! Env knobs:
+//!   CGCN_BENCH_QUICK=1    — CI quick mode: smaller graphs, fewer epochs,
+//!                           downstream ADMM timed on synth-photo only.
+//!   CGCN_BENCH_PARTITION_GATE=1 — exit non-zero unless, on every synth
+//!                           graph, louvain modularity beats random by at
+//!                           least 0.15 and louvain edge-cut stays within
+//!                           2x of metis.
+//!   CGCN_BENCH_EPOCHS     — timed epochs per downstream cell.
+//!   CGCN_BENCH_PARTITION_SCALE — synth node-count scale override.
+
+use cgcn::community;
+use cgcn::config::HyperParams;
+use cgcn::coordinator::{AdmmOptions, AdmmTrainer, Workspace};
+use cgcn::data::synth;
+use cgcn::partition::{partition_with_runtime, Method};
+use cgcn::runtime::{ComputeBackend, NativeBackend};
+use cgcn::util::json::Json;
+use cgcn::util::pool::Runtime;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_flag(key: &str) -> bool {
+    std::env::var(key).map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// One (graph, method) cell: quality + detection time + downstream cost.
+struct Cell {
+    graph: String,
+    method: &'static str,
+    m: usize,
+    detect_s: f64,
+    modularity: f64,
+    edge_cut: usize,
+    cut_fraction: f64,
+    boundary_nodes: usize,
+    imbalance: f64,
+    max_conductance: f64,
+    /// Seconds per downstream ADMM epoch on this partition (0 = not timed).
+    admm_epoch_s: f64,
+}
+
+impl Cell {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", Json::str(&self.graph)),
+            ("method", Json::str(self.method)),
+            ("m", Json::num(self.m as f64)),
+            ("detect_s", Json::num(self.detect_s)),
+            ("modularity", Json::num(self.modularity)),
+            ("edge_cut", Json::num(self.edge_cut as f64)),
+            ("cut_fraction", Json::num(self.cut_fraction)),
+            ("boundary_nodes", Json::num(self.boundary_nodes as f64)),
+            ("imbalance", Json::num(self.imbalance)),
+            ("max_conductance", Json::num(self.max_conductance)),
+            ("admm_epoch_s", Json::num(self.admm_epoch_s)),
+        ])
+    }
+}
+
+/// Gate margins: louvain must beat random's modularity by this much and
+/// keep its edge-cut within this factor of metis.
+const MOD_MARGIN: f64 = 0.15;
+const CUT_FACTOR: f64 = 2.0;
+
+fn main() -> anyhow::Result<()> {
+    cgcn::util::logger::init();
+    let quick = env_flag("CGCN_BENCH_QUICK");
+    let gate = env_flag("CGCN_BENCH_PARTITION_GATE");
+    let scale: f64 = env_or("CGCN_BENCH_PARTITION_SCALE", if quick { 0.1 } else { 0.25 });
+    let epochs: usize = env_or("CGCN_BENCH_EPOCHS", if quick { 2 } else { 5 });
+    let m = 3usize; // the paper's community count
+    let seed = 17u64;
+    let rt = Runtime::new(8);
+    println!(
+        "partition_bench: scale {scale}, m {m}, {epochs} timed epochs{}",
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    let graphs: [(&str, &synth::SynthSpec); 2] = [
+        ("synth-photo", &synth::AMAZON_PHOTO),
+        ("synth-computers", &synth::AMAZON_COMPUTERS),
+    ];
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut gate_rows: Vec<Json> = Vec::new();
+    let mut gate_ok = true;
+    for (gname, spec) in graphs {
+        let ds = Arc::new(synth::generate(spec, scale, seed));
+        println!(
+            "\n{gname}: {} nodes, {} edges",
+            ds.n(),
+            ds.graph.num_edges()
+        );
+        // Downstream ADMM on every graph is slow; quick mode times only
+        // the first graph and reports 0 for the rest (logged, not silent).
+        let downstream = !quick || gname == "synth-photo";
+        if !downstream {
+            println!("(quick mode: skipping downstream ADMM epochs on {gname})");
+        }
+        let mut mod_by: std::collections::HashMap<&str, f64> = std::collections::HashMap::new();
+        let mut cut_by: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+        for method in Method::ALL {
+            let t0 = Instant::now();
+            let p = partition_with_runtime(&ds.graph, m, method, seed, Some(&rt));
+            let detect_s = t0.elapsed().as_secs_f64();
+            let q = community::evaluate(&ds.graph, &p, method.name());
+            let admm_epoch_s = if downstream {
+                let mut hp = HyperParams::for_dataset(gname);
+                hp.communities = m;
+                hp.seed = seed;
+                let ws = Arc::new(Workspace::from_partition(&ds, &hp, p.clone())?);
+                let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_threads(8));
+                let mut trainer = AdmmTrainer::new(ws, backend, AdmmOptions::for_mode(m))?;
+                trainer.train(1, "warmup")?;
+                let t0 = Instant::now();
+                trainer.train(epochs, "bench")?;
+                t0.elapsed().as_secs_f64() / epochs as f64
+            } else {
+                0.0
+            };
+            println!(
+                "{:<8} detect {:>8.3}s  Q {:>7.4}  cut {:>7} ({:>5.1}%)  boundary {:>6}  \
+                 imbal {:>5.3}  admm {:>8.4}s/epoch",
+                method.name(),
+                detect_s,
+                q.modularity,
+                q.edge_cut,
+                q.cut_fraction * 100.0,
+                q.boundary_nodes,
+                q.imbalance,
+                admm_epoch_s
+            );
+            mod_by.insert(method.name(), q.modularity);
+            cut_by.insert(method.name(), q.edge_cut);
+            cells.push(Cell {
+                graph: gname.to_string(),
+                method: method.name(),
+                m,
+                detect_s,
+                modularity: q.modularity,
+                edge_cut: q.edge_cut,
+                cut_fraction: q.cut_fraction,
+                boundary_nodes: q.boundary_nodes,
+                imbalance: q.imbalance,
+                max_conductance: q.max_conductance,
+                admm_epoch_s,
+            });
+        }
+        let (lv_mod, rnd_mod) = (mod_by["louvain"], mod_by["random"]);
+        let (lv_cut, metis_cut) = (cut_by["louvain"], cut_by["metis"]);
+        let mod_ok = lv_mod >= rnd_mod + MOD_MARGIN;
+        let cut_ok = (lv_cut as f64) <= CUT_FACTOR * metis_cut.max(1) as f64;
+        println!(
+            "{gname} gate: louvain Q {lv_mod:.4} vs random {rnd_mod:.4} (margin {MOD_MARGIN}) \
+             [{}]; louvain cut {lv_cut} vs metis {metis_cut} (factor {CUT_FACTOR}) [{}]",
+            if mod_ok { "ok" } else { "FAIL" },
+            if cut_ok { "ok" } else { "FAIL" }
+        );
+        gate_ok &= mod_ok && cut_ok;
+        gate_rows.push(Json::obj(vec![
+            ("graph", Json::str(gname)),
+            ("louvain_modularity", Json::num(lv_mod)),
+            ("random_modularity", Json::num(rnd_mod)),
+            ("modularity_margin", Json::num(MOD_MARGIN)),
+            ("modularity_ok", Json::num(if mod_ok { 1.0 } else { 0.0 })),
+            ("louvain_edge_cut", Json::num(lv_cut as f64)),
+            ("metis_edge_cut", Json::num(metis_cut as f64)),
+            ("cut_factor", Json::num(CUT_FACTOR)),
+            ("cut_ok", Json::num(if cut_ok { 1.0 } else { 0.0 })),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("partition_bench")),
+        ("scale", Json::num(scale)),
+        ("m", Json::num(m as f64)),
+        ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
+        ("cells", Json::arr(cells.iter().map(Cell::json).collect())),
+        ("gate", Json::arr(gate_rows)),
+    ]);
+    std::fs::write("BENCH_partition.json", out.to_pretty() + "\n")?;
+    println!("\n(wrote BENCH_partition.json)");
+    if gate && !gate_ok {
+        anyhow::bail!(
+            "gate: louvain must beat random modularity by {MOD_MARGIN} and keep \
+             edge-cut within {CUT_FACTOR}x of metis on every synth graph \
+             (see gate rows in BENCH_partition.json)"
+        );
+    }
+    Ok(())
+}

@@ -153,6 +153,28 @@ echo "$STATS_OUT" | grep -q 'cgcn_serve_request_secs{quantile="0.99"}' \
     || { echo "stats carried no latency quantiles"; echo "$STATS_OUT"; exit 1; }
 serve_stop
 
+echo "==> community partition smoke (cgcn partition → train --partition-file roundtrip)"
+PART_FILE="$SMOKE_DIR/louvain_part.json"
+PART_REPORT="$SMOKE_DIR/partition_quality.json"
+target/release/cgcn partition --dataset caveman --communities 3 \
+    --partition louvain --partition-file "$PART_FILE" --out "$PART_REPORT"
+grep -q '"cgcn-partition-v1"' "$PART_FILE" || { echo "partition export missing format tag"; exit 1; }
+grep -q '"modularity"' "$PART_REPORT" || { echo "quality report missing modularity"; exit 1; }
+# Louvain end-to-end on the ADMM path, bitwise-deterministic across
+# thread counts (the detector parallelises on the shared runtime).
+target/release/cgcn train --dataset caveman --communities 3 --epochs 3 \
+    --partition louvain --op-threads 1 --save "$SMOKE_DIR/louvain_t1.cgnm" >/dev/null
+target/release/cgcn train --dataset caveman --communities 3 --epochs 3 \
+    --partition louvain --op-threads 8 --save "$SMOKE_DIR/louvain_t8.cgnm" >/dev/null
+cmp "$SMOKE_DIR/louvain_t1.cgnm" "$SMOKE_DIR/louvain_t8.cgnm"
+# Importing the exported assignment must reproduce the same model.
+target/release/cgcn train --dataset caveman --communities 3 --epochs 3 \
+    --partition-file "$PART_FILE" --save "$SMOKE_DIR/louvain_file.cgnm" >/dev/null
+cmp "$SMOKE_DIR/louvain_t1.cgnm" "$SMOKE_DIR/louvain_file.cgnm"
+# The cluster-gcn mini-batch path must accept community partitions too.
+target/release/cgcn train --dataset caveman --method cluster-gcn \
+    --partition louvain --clusters 8 --batch-clusters 2 --epochs 2 >/dev/null
+
 echo "==> quickstart example (release)"
 cargo run --release --example quickstart >/dev/null
 
@@ -168,5 +190,12 @@ echo "==> kernel bench quick gate (pool vs spawn; shared vs dual runtime; simd v
 CGCN_BENCH_QUICK=1 CGCN_BENCH_GATE=1 CGCN_BENCH_RUNTIME_GATE=1 \
     CGCN_BENCH_SIMD_GATE=1 CGCN_BENCH_OBS_GATE=1 cargo bench --bench kernel_bench
 [[ -s BENCH_kernels.json ]] || { echo "kernel bench wrote no BENCH_kernels.json"; exit 1; }
+
+echo "==> partition bench quick gate (louvain modularity vs random; edge-cut vs metis)"
+# Writes BENCH_partition.json; CGCN_BENCH_PARTITION_GATE makes the bench
+# exit non-zero unless louvain beats random modularity by >=0.15 and keeps
+# its edge-cut within 2x of metis on every synth graph.
+CGCN_BENCH_QUICK=1 CGCN_BENCH_PARTITION_GATE=1 cargo bench --bench partition_bench
+[[ -s BENCH_partition.json ]] || { echo "partition bench wrote no BENCH_partition.json"; exit 1; }
 
 echo "CI OK"

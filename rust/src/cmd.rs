@@ -63,6 +63,98 @@ pub fn cmd_data(args: &Args) -> i32 {
     0
 }
 
+/// `cgcn partition` — partition a dataset with any method, print a
+/// partition-quality report (modularity, edge-cut, boundary volume,
+/// conductance, balance), and optionally export the assignment
+/// (`--partition-file`) for `train --partition-file` to reuse, or the
+/// quality report as JSON (`--out`).
+pub fn cmd_partition(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let name = args.get_str("dataset");
+        let scale = args.get_f64("scale");
+        let seed = args.get_u64("seed");
+        let ds = load_dataset(&name, scale, seed)?;
+        let m = args.get_usize("communities");
+        anyhow::ensure!(
+            (1..=ds.n()).contains(&m),
+            "--communities {m} out of range for {} nodes",
+            ds.n()
+        );
+        let method = parse_method(&args.get_str("partition"))?;
+        // Louvain/LPA sweeps dispatch on a shared runtime; results are
+        // bitwise identical at any thread budget.
+        let budget = crate::util::pool::shared_thread_budget(
+            args.get("threads").and_then(|s| s.parse().ok()).unwrap_or(0),
+            args.get("op-threads").and_then(|s| s.parse().ok()).unwrap_or(0),
+        );
+        let rt = crate::util::pool::Runtime::new(budget);
+        let t0 = std::time::Instant::now();
+        let p = crate::partition::partition_with_runtime(&ds.graph, m, method, seed, Some(&rt));
+        let detect_secs = t0.elapsed().as_secs_f64();
+        let q = crate::community::evaluate(&ds.graph, &p, method.name());
+        q.record_obs();
+        println!(
+            "partition {}: {} ({} nodes, {} edges) into {} communities in {:.3}s",
+            method.name(),
+            name,
+            q.n,
+            q.num_edges,
+            q.m,
+            detect_secs
+        );
+        println!("  modularity      {:.4}", q.modularity);
+        println!(
+            "  edge-cut        {} ({:.1}% of edges)",
+            q.edge_cut,
+            q.cut_fraction * 100.0
+        );
+        println!(
+            "  boundary nodes  {} ({:.1}% of nodes)",
+            q.boundary_nodes,
+            q.boundary_nodes as f64 / (q.n.max(1)) as f64 * 100.0
+        );
+        println!(
+            "  imbalance       {:.3} (sizes {}..{}, cap {})",
+            q.imbalance,
+            q.min_size,
+            q.max_size,
+            config::community_cap(q.n, q.m)
+        );
+        println!(
+            "  conductance     max {:.3}  mean {:.3}",
+            q.max_conductance, q.mean_conductance
+        );
+        if let Some(path) = args.get("partition-file").filter(|s| !s.is_empty()) {
+            let pf = crate::community::PartitionFile {
+                dataset: name.clone(),
+                method: method.name().to_string(),
+                seed,
+                partition: p.clone(),
+            };
+            crate::community::save_partition_file(path, &pf)?;
+            println!("wrote assignment to {path} (feed to train via --partition-file)");
+        }
+        if let Some(out) = args.get("out").filter(|s| !s.is_empty()) {
+            let json = crate::util::json::Json::obj(vec![
+                ("dataset", crate::util::json::Json::str(&name)),
+                ("seed", crate::util::json::Json::num(seed as f64)),
+                ("detect_secs", crate::util::json::Json::num(detect_secs)),
+                ("quality", q.to_json()),
+            ]);
+            std::fs::write(out, json.to_pretty() + "\n")?;
+            println!("wrote quality report to {out}");
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("partition error: {e:#}");
+            1
+        }
+    }
+}
+
 /// `cgcn artifacts` — list and compile-check artifacts (XLA backend only).
 #[cfg(feature = "xla")]
 pub fn cmd_artifacts(_args: &Args) -> i32 {

@@ -1,0 +1,376 @@
+//! Louvain modularity maximization [Blondel et al. '08], deterministic at
+//! any thread count.
+//!
+//! Each level runs local-moving sweeps in two phases (DESIGN.md §13):
+//!
+//! 1. **Proposal** — for every node, the best-gain community among its
+//!    neighbors is computed against the state *frozen at sweep start*
+//!    (assignment + per-community strength totals). Each proposal is a
+//!    pure function of that frozen state with one writer per output
+//!    element, so the pass dispatches on the shared [`Runtime`] and is
+//!    bitwise identical to the serial loop at any thread count.
+//! 2. **Application** — proposals are applied serially in ascending node
+//!    order, revalidating each move's gain against the *live* state and
+//!    skipping moves whose gain is no longer positive. Every applied move
+//!    strictly increases modularity, so sweeps cannot oscillate and each
+//!    level terminates at a genuine local optimum (a sweep that applies
+//!    no moves saw live == frozen state, i.e. no positive-gain move
+//!    exists).
+//!
+//! Ties between equal-gain target communities always break to the lowest
+//! community id; the node-visit order is fixed (ascending id); no RNG is
+//! consulted anywhere — the detector is a pure function of the graph.
+//!
+//! After local moving converges the communities are contracted into a
+//! weighted coarse graph (self-loops carry intra-community weight, both
+//! directions) and the next level repeats, exactly as in the original
+//! multilevel scheme.
+
+use crate::graph::Graph;
+use crate::util::pool::{uniform_chunks, Runtime, SendPtr};
+use std::collections::HashMap;
+
+/// Safety cap on local-moving sweeps per level. Convergence normally
+/// stops the loop long before this (each sweep strictly increases Q).
+const MAX_SWEEPS: usize = 64;
+/// Safety cap on aggregation levels (each level shrinks the graph).
+const MAX_LEVELS: usize = 16;
+/// A move must beat this modularity-gain threshold (in the unnormalised
+/// `ΔQ · 2m` scale) to be taken — filters float dust near local optima.
+const GAIN_EPS: f64 = 1e-9;
+/// Below this many nodes a proposal pass runs serially even when a
+/// runtime is available (dispatch overhead beats the scan).
+const PAR_MIN_NODES: usize = 512;
+
+/// Weighted multigraph for aggregation levels. Level 0 is the input graph
+/// (unit edge weights, no self-loops); coarser levels accumulate weights.
+struct WGraph {
+    /// adj[u] = (neighbor, weight), neighbor-sorted, no self entries.
+    adj: Vec<Vec<(u32, u64)>>,
+    /// Self-loop weight (counts both directions: 2 × intra weight).
+    self_w: Vec<u64>,
+    /// Strength k_u = self_w[u] + Σ adjacent weights.
+    node_w: Vec<u64>,
+    /// Σ node_w — the `2m` normaliser, invariant across levels.
+    total_w: u64,
+}
+
+impl WGraph {
+    fn n(&self) -> usize {
+        self.node_w.len()
+    }
+
+    fn from_graph(g: &Graph) -> WGraph {
+        let adj: Vec<Vec<(u32, u64)>> = (0..g.n())
+            .map(|u| g.neighbors(u).iter().map(|&v| (v, 1u64)).collect())
+            .collect();
+        let node_w: Vec<u64> = (0..g.n()).map(|u| g.degree(u) as u64).collect();
+        let total_w = node_w.iter().sum();
+        WGraph {
+            adj,
+            self_w: vec![0; g.n()],
+            node_w,
+            total_w,
+        }
+    }
+
+    /// Contract each community into one coarse vertex. `comm` must be
+    /// compact (values 0..ncomm). Edge weights between communities sum;
+    /// intra-community weight (both directions) plus member self-loops
+    /// become the coarse self-loop, so `total_w` is preserved.
+    fn aggregate(&self, comm: &[usize], ncomm: usize) -> WGraph {
+        let mut self_w = vec![0u64; ncomm];
+        let mut acc: Vec<HashMap<u32, u64>> = vec![HashMap::new(); ncomm];
+        for u in 0..self.n() {
+            let cu = comm[u];
+            self_w[cu] += self.self_w[u];
+            for &(v, w) in &self.adj[u] {
+                let cv = comm[v as usize];
+                if cu == cv {
+                    // Each intra edge appears from both endpoints, so this
+                    // accumulates 2× the intra weight — the self-loop
+                    // convention node_w expects.
+                    self_w[cu] += w;
+                } else {
+                    *acc[cu].entry(cv as u32).or_insert(0) += w;
+                }
+            }
+        }
+        let mut adj: Vec<Vec<(u32, u64)>> = Vec::with_capacity(ncomm);
+        for h in acc {
+            let mut row: Vec<(u32, u64)> = h.into_iter().collect();
+            row.sort_unstable_by_key(|&(v, _)| v);
+            adj.push(row);
+        }
+        let node_w: Vec<u64> = (0..ncomm)
+            .map(|c| self_w[c] + adj[c].iter().map(|&(_, w)| w).sum::<u64>())
+            .collect();
+        let total_w = node_w.iter().sum();
+        debug_assert_eq!(total_w, self.total_w, "aggregation lost weight");
+        WGraph {
+            adj,
+            self_w,
+            node_w,
+            total_w,
+        }
+    }
+}
+
+/// Best-move proposal for node `v` against the frozen (comm, tot) state:
+/// the neighboring community with the highest modularity gain (strictly
+/// positive, ties to the lowest community id), or `comm[v]` to stay.
+fn propose_one(wg: &WGraph, comm: &[usize], tot: &[u64], m2: f64, v: usize) -> usize {
+    let a = comm[v];
+    if wg.adj[v].is_empty() {
+        return a;
+    }
+    // Accumulate v's edge weight into each adjacent community. Candidate
+    // order is first-seen (CSR neighbor order) but the winner is selected
+    // by (gain, lowest id), so iteration order cannot change the result.
+    let mut cand: Vec<usize> = Vec::new();
+    let mut wto: HashMap<usize, u64> = HashMap::new();
+    for &(u, w) in &wg.adj[v] {
+        let c = comm[u as usize];
+        match wto.entry(c) {
+            std::collections::hash_map::Entry::Occupied(mut e) => *e.get_mut() += w,
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(w);
+                cand.push(c);
+            }
+        }
+    }
+    let kv = wg.node_w[v] as f64;
+    let ka = wto.get(&a).copied().unwrap_or(0) as f64;
+    let tot_a_less_v = (tot[a] - wg.node_w[v]) as f64;
+    let mut best: Option<(usize, f64)> = None;
+    for &c in &cand {
+        if c == a {
+            continue;
+        }
+        let kc = wto[&c] as f64;
+        // ΔQ · 2m for moving v from a to c (v's own self-loop travels
+        // with it and cancels out of the difference).
+        let gain = (kc - ka) - kv * (tot[c] as f64 - tot_a_less_v) / m2;
+        let better = match best {
+            None => true,
+            Some((bc, bg)) => gain > bg || (gain == bg && c < bc),
+        };
+        if better {
+            best = Some((c, gain));
+        }
+    }
+    match best {
+        Some((c, g)) if g > GAIN_EPS => c,
+        _ => a,
+    }
+}
+
+/// The frozen-state proposal pass over all nodes — serial, or dispatched
+/// on the runtime in disjoint index chunks (one writer per element, same
+/// scalar loop, so results are bitwise identical either way).
+fn propose_all(
+    wg: &WGraph,
+    comm: &[usize],
+    tot: &[u64],
+    m2: f64,
+    rt: Option<&Runtime>,
+) -> Vec<usize> {
+    let n = wg.n();
+    let mut props = vec![0usize; n];
+    match rt {
+        Some(rt) if rt.threads() > 1 && n >= PAR_MIN_NODES => {
+            let chunks = uniform_chunks(rt.threads() * 4, n);
+            let ptr = SendPtr::new(props.as_mut_ptr());
+            rt.run(chunks.len(), &|ci| {
+                let (lo, hi) = chunks[ci];
+                for v in lo..hi {
+                    // SAFETY: chunks are disjoint and `props` outlives the
+                    // blocking dispatch; element v has exactly one writer.
+                    unsafe {
+                        *ptr.get().add(v) = propose_one(wg, comm, tot, m2, v);
+                    }
+                }
+            });
+        }
+        _ => {
+            for (v, p) in props.iter_mut().enumerate() {
+                *p = propose_one(wg, comm, tot, m2, v);
+            }
+        }
+    }
+    props
+}
+
+/// Exact live-state edge weight from `v` to communities `a` and `b`.
+fn weight_to(wg: &WGraph, comm: &[usize], v: usize, a: usize, b: usize) -> (u64, u64) {
+    let (mut wa, mut wb) = (0u64, 0u64);
+    for &(u, w) in &wg.adj[v] {
+        let c = comm[u as usize];
+        if c == a {
+            wa += w;
+        } else if c == b {
+            wb += w;
+        }
+    }
+    (wa, wb)
+}
+
+/// One level of local moving. Returns the compacted community assignment
+/// (ids renumbered by first occurrence in node order).
+fn local_moving(wg: &WGraph, rt: Option<&Runtime>) -> Vec<usize> {
+    let n = wg.n();
+    let m2 = wg.total_w as f64;
+    let mut comm: Vec<usize> = (0..n).collect();
+    let mut tot: Vec<u64> = wg.node_w.clone();
+    for sweep in 0..MAX_SWEEPS {
+        let _span = crate::span!("community.louvain.local_move", sweep = sweep);
+        let props = propose_all(wg, &comm, &tot, m2, rt);
+        let mut moves = 0usize;
+        for v in 0..n {
+            let b = props[v];
+            let a = comm[v];
+            if b == a {
+                continue;
+            }
+            // Revalidate against the live state: earlier moves this sweep
+            // may have changed both communities since the proposal froze.
+            let (wa, wb) = weight_to(wg, &comm, v, a, b);
+            let kv = wg.node_w[v] as f64;
+            let gain = (wb as f64 - wa as f64)
+                - kv * (tot[b] as f64 - (tot[a] - wg.node_w[v]) as f64) / m2;
+            if gain > GAIN_EPS {
+                tot[a] -= wg.node_w[v];
+                tot[b] += wg.node_w[v];
+                comm[v] = b;
+                moves += 1;
+            }
+        }
+        crate::obs_counter!("community.louvain.moves").add(moves as u64);
+        if moves == 0 {
+            break;
+        }
+    }
+    compact(&comm)
+}
+
+/// Renumber arbitrary labels to 0..k by first occurrence in index order.
+pub(crate) fn compact(labels: &[usize]) -> Vec<usize> {
+    let mut map: HashMap<usize, usize> = HashMap::new();
+    let mut out = Vec::with_capacity(labels.len());
+    for &l in labels {
+        let next = map.len();
+        out.push(*map.entry(l).or_insert(next));
+    }
+    out
+}
+
+/// Multilevel Louvain community detection. Returns one compact community
+/// label per node (0..k in first-occurrence order). Deterministic: fixed
+/// visit order, lowest-id tie-breaking, no RNG — and bitwise identical
+/// with `rt` at any thread count (the parallel pass is pure per element).
+pub fn louvain(g: &Graph, rt: Option<&Runtime>) -> Vec<usize> {
+    let n = g.n();
+    if n == 0 || g.num_edges() == 0 {
+        // No edges: modularity is undefined (2m = 0); every node is its
+        // own community and the merge step packs them.
+        return (0..n).collect();
+    }
+    let mut wg = WGraph::from_graph(g);
+    let mut labels: Vec<usize> = (0..n).collect();
+    for level in 0..MAX_LEVELS {
+        let _span = crate::span!("community.louvain.level", level = level);
+        let comm = local_moving(&wg, rt);
+        let ncomm = comm.iter().copied().max().map_or(0, |c| c + 1);
+        if ncomm == wg.n() {
+            break; // no node moved — a local optimum at this level
+        }
+        for l in labels.iter_mut() {
+            *l = comm[*l];
+        }
+        if ncomm <= 1 {
+            break;
+        }
+        wg = wg.aggregate(&comm, ncomm);
+    }
+    compact(&labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+
+    #[test]
+    fn two_cliques_become_two_communities() {
+        // Two K4s joined by one bridge edge.
+        let mut edges = Vec::new();
+        for a in 0..4usize {
+            for b in (a + 1)..4 {
+                edges.push((a, b));
+                edges.push((a + 4, b + 4));
+            }
+        }
+        edges.push((0, 4));
+        let g = Graph::from_edges(8, &edges);
+        let labels = louvain(&g, None);
+        assert_eq!(labels.len(), 8);
+        let k = labels.iter().copied().max().unwrap() + 1;
+        assert_eq!(k, 2, "labels {labels:?}");
+        assert!(labels[0..4].iter().all(|&l| l == labels[0]));
+        assert!(labels[4..8].iter().all(|&l| l == labels[4]));
+        assert_ne!(labels[0], labels[4]);
+    }
+
+    #[test]
+    fn caveman_communities_respect_cave_boundary() {
+        // Two dense caves of 12 joined by 2 bridges: no detected community
+        // may straddle the bridge (each community lives inside one cave).
+        let ds = fixtures::caveman(12, 4);
+        let labels = louvain(&ds.graph, None);
+        let k = labels.iter().copied().max().unwrap() + 1;
+        assert!((2..=6).contains(&k), "unexpected community count {k}");
+        for c in 0..k {
+            let members: Vec<usize> = (0..24).filter(|&v| labels[v] == c).collect();
+            assert!(!members.is_empty());
+            let in_first = members[0] < 12;
+            assert!(
+                members.iter().all(|&v| (v < 12) == in_first),
+                "community {c} straddles the bridge: {labels:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn edgeless_graph_is_all_singletons() {
+        let g = Graph::from_edges(5, &[]);
+        assert_eq!(louvain(&g, None), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_dispatch_matches_serial_exactly() {
+        let ds = crate::data::synth::generate(&crate::data::synth::AMAZON_PHOTO, 0.1, 9);
+        let serial = louvain(&ds.graph, None);
+        for t in [1usize, 2, 8] {
+            let rt = Runtime::new(t);
+            let par = louvain(&ds.graph, Some(&rt));
+            assert_eq!(serial, par, "louvain diverged at {t} threads");
+        }
+    }
+
+    #[test]
+    fn aggregate_preserves_total_weight() {
+        let ds = fixtures::caveman(10, 3);
+        let wg = WGraph::from_graph(&ds.graph);
+        let comm = local_moving(&wg, None);
+        let ncomm = comm.iter().copied().max().unwrap() + 1;
+        let coarse = wg.aggregate(&comm, ncomm);
+        assert_eq!(coarse.total_w, wg.total_w);
+        assert_eq!(coarse.n(), ncomm);
+    }
+
+    #[test]
+    fn compact_renumbers_by_first_occurrence() {
+        assert_eq!(compact(&[7, 7, 3, 7, 9]), vec![0, 0, 1, 0, 2]);
+        assert_eq!(compact(&[]), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,137 @@
+//! Label propagation (LPA) [Raghavan et al. '07] — the cheap second
+//! detector: no objective function, just neighbor-majority voting.
+//!
+//! The update is *synchronous*: every node's next label is a pure
+//! function of the frozen sweep-start labels (most frequent label among
+//! its neighbors plus one self-vote, ties to the lowest label), so the
+//! sweep dispatches on the shared [`Runtime`] with one writer per element
+//! and is bitwise identical to the serial loop at any thread count. The
+//! self-vote damps the classic two-node swap oscillation (a pair of
+//! adjacent singletons converges to the lower label instead of trading
+//! labels forever); a sweep cap bounds the pathological cases that
+//! remain, and the result is always a valid labelling regardless of where
+//! the cap lands.
+
+use crate::graph::Graph;
+use crate::util::pool::{uniform_chunks, Runtime, SendPtr};
+use std::collections::HashMap;
+
+/// Sweep cap — LPA usually settles in a handful of sweeps.
+const MAX_SWEEPS: usize = 64;
+/// Below this many nodes a sweep runs serially even with a runtime.
+const PAR_MIN_NODES: usize = 512;
+
+/// Next label for `v` against the frozen labels: most frequent neighbor
+/// label with one vote added for v's own label; ties break low.
+fn vote_one(g: &Graph, labels: &[usize], v: usize) -> usize {
+    let own = labels[v];
+    if g.degree(v) == 0 {
+        return own;
+    }
+    let mut counts: HashMap<usize, u64> = HashMap::new();
+    counts.insert(own, 1); // self-vote: damps synchronous swaps
+    for &u in g.neighbors(v) {
+        *counts.entry(labels[u as usize]).or_insert(0) += 1;
+    }
+    // Winner by (count, lowest label) — selection is order-independent.
+    let mut best = (own, counts[&own]);
+    for (&l, &c) in &counts {
+        if c > best.1 || (c == best.1 && l < best.0) {
+            best = (l, c);
+        }
+    }
+    best.0
+}
+
+/// Synchronous label-propagation community detection. Returns one compact
+/// label per node (0..k, first-occurrence order). Deterministic and
+/// bitwise identical at any thread count.
+pub fn lpa(g: &Graph, rt: Option<&Runtime>) -> Vec<usize> {
+    let n = g.n();
+    let mut labels: Vec<usize> = (0..n).collect();
+    let mut next = vec![0usize; n];
+    for sweep in 0..MAX_SWEEPS {
+        let _span = crate::span!("community.lpa.sweep", sweep = sweep);
+        match rt {
+            Some(rt) if rt.threads() > 1 && n >= PAR_MIN_NODES => {
+                let chunks = uniform_chunks(rt.threads() * 4, n);
+                let ptr = SendPtr::new(next.as_mut_ptr());
+                let frozen = &labels;
+                rt.run(chunks.len(), &|ci| {
+                    let (lo, hi) = chunks[ci];
+                    for v in lo..hi {
+                        // SAFETY: disjoint chunks, one writer per element,
+                        // `next` outlives the blocking dispatch.
+                        unsafe {
+                            *ptr.get().add(v) = vote_one(g, frozen, v);
+                        }
+                    }
+                });
+            }
+            _ => {
+                for (v, slot) in next.iter_mut().enumerate() {
+                    *slot = vote_one(g, &labels, v);
+                }
+            }
+        }
+        let changed = labels
+            .iter()
+            .zip(&next)
+            .filter(|(a, b)| a != b)
+            .count();
+        std::mem::swap(&mut labels, &mut next);
+        crate::obs_counter!("community.lpa.changes").add(changed as u64);
+        if changed == 0 {
+            break;
+        }
+    }
+    super::louvain::compact(&labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+
+    #[test]
+    fn pair_converges_to_lower_label() {
+        let g = Graph::from_edges(2, &[(0, 1)]);
+        assert_eq!(lpa(&g, None), vec![0, 0]);
+    }
+
+    #[test]
+    fn caveman_caves_get_distinct_labels() {
+        let ds = fixtures::caveman(15, 6); // two caves of 15, 2 bridges
+        let labels = lpa(&ds.graph, None);
+        let k = labels.iter().copied().max().unwrap() + 1;
+        assert!((2..=6).contains(&k), "unexpected label count {k}");
+        // The dominant label of each cave must differ.
+        let dom = |lo: usize, hi: usize| -> usize {
+            let mut c = std::collections::HashMap::new();
+            for v in lo..hi {
+                *c.entry(labels[v]).or_insert(0usize) += 1;
+            }
+            c.into_iter().max_by_key(|&(l, n)| (n, usize::MAX - l)).unwrap().0
+        };
+        assert_ne!(dom(0, 15), dom(15, 30), "caves merged: {labels:?}");
+    }
+
+    #[test]
+    fn isolated_nodes_keep_singleton_labels() {
+        let g = Graph::from_edges(4, &[(0, 1)]);
+        let labels = lpa(&g, None);
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[2], labels[3]);
+        assert_ne!(labels[2], labels[0]);
+    }
+
+    #[test]
+    fn parallel_dispatch_matches_serial_exactly() {
+        let ds = crate::data::synth::generate(&crate::data::synth::AMAZON_PHOTO, 0.1, 3);
+        let serial = lpa(&ds.graph, None);
+        for t in [2usize, 8] {
+            let rt = Runtime::new(t);
+            assert_eq!(serial, lpa(&ds.graph, Some(&rt)), "lpa diverged at {t} threads");
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! Community detection + partition analytics (DESIGN.md §13).
+//!
+//! The paper's premise is that training cost is governed by *community
+//! structure* — dense intra-community subgraphs with thin boundaries —
+//! yet the seed repo only had an edge-cut minimizer ([`crate::partition::metis`]).
+//! This module adds true community detection and the analytics to judge
+//! any partition:
+//!
+//! - [`louvain`] — multilevel modularity maximization (local moving +
+//!   graph aggregation), deterministic at any thread count;
+//! - [`lpa`] — synchronous label propagation, the cheap second detector;
+//! - [`merge_to_m`] — deterministic size-aware merge/split that maps a
+//!   variable number of detected communities onto exactly `m` balanced
+//!   agents (respecting [`config::community_cap`]), so the resulting
+//!   [`Partition`] plugs into ADMM, cluster-gcn, and the elastic
+//!   transport unchanged;
+//! - [`quality`] — modularity / edge-cut / boundary / conductance /
+//!   balance analytics for any partition;
+//! - [`save_partition_file`] / [`load_partition_file`] — a JSON
+//!   assignment format (`cgcn-partition-v1`) so `cgcn partition` can
+//!   export an assignment and `cgcn train --partition-file` can reuse it.
+
+pub mod louvain;
+pub mod lpa;
+pub mod quality;
+
+pub use louvain::louvain;
+pub use lpa::lpa;
+pub use quality::{evaluate, QualityReport};
+
+use crate::config;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::util::json::Json;
+use crate::util::pool::Runtime;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// Louvain detection mapped onto exactly `m` communities.
+pub fn louvain_partition(g: &Graph, m: usize, rt: Option<&Runtime>) -> Partition {
+    merge_to_m(g.n(), &louvain(g, rt), m)
+}
+
+/// LPA detection mapped onto exactly `m` communities.
+pub fn lpa_partition(g: &Graph, m: usize, rt: Option<&Runtime>) -> Partition {
+    merge_to_m(g.n(), &lpa(g, rt), m)
+}
+
+/// Map a detected labelling (any number of communities) onto exactly `m`
+/// non-empty parts, each within [`config::community_cap`]. Deterministic:
+/// no RNG, no iteration-order dependence.
+///
+/// Steps (DESIGN.md §13.2):
+/// 1. compact labels by first occurrence → pieces (node ids ascending);
+/// 2. split any piece over the cap into near-equal chunks under it;
+/// 3. while fewer than `m` pieces, halve the largest (a size-≥2 piece
+///    always exists while pieces < m ≤ n, by pigeonhole);
+/// 4. sort pieces by (size desc, first node asc) and pack each into the
+///    least-loaded bin (ties → lowest bin index). If a piece overflows
+///    the cap, the bin is filled to the cap and the remainder spills to
+///    the next-least-loaded bin — `m · cap ≥ n` guarantees room.
+///
+/// Because pieces arrive largest-first, the first `m` pieces land in `m`
+/// distinct empty bins, so every part is non-empty.
+pub fn merge_to_m(n: usize, labels: &[usize], m: usize) -> Partition {
+    assert_eq!(labels.len(), n);
+    assert!((1..=n).contains(&m), "need 1 <= m <= n");
+    let cap = config::community_cap(n, m);
+    // 1. Gather pieces; `compact` guarantees labels are 0..k dense.
+    let labels = louvain::compact(labels);
+    let k = labels.iter().copied().max().map_or(0, |x| x + 1);
+    let mut pieces: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (v, &c) in labels.iter().enumerate() {
+        pieces[c].push(v);
+    }
+    // 2. Split oversized pieces into near-equal chunks under the cap.
+    let mut sized: Vec<Vec<usize>> = Vec::with_capacity(pieces.len());
+    for piece in pieces {
+        if piece.len() <= cap {
+            sized.push(piece);
+            continue;
+        }
+        let chunks = piece.len().div_ceil(cap);
+        let base = piece.len() / chunks;
+        let extra = piece.len() % chunks;
+        let mut pos = 0;
+        for c in 0..chunks {
+            let len = base + usize::from(c < extra);
+            sized.push(piece[pos..pos + len].to_vec());
+            pos += len;
+        }
+    }
+    // 3. Guarantee at least m pieces by halving the largest.
+    while sized.len() < m {
+        let (big, _) = sized
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, p)| (p.len(), usize::MAX - i))
+            .expect("pieces is non-empty since m >= 1 and n >= 1");
+        let piece = std::mem::take(&mut sized[big]);
+        debug_assert!(piece.len() >= 2, "pigeonhole: m <= n");
+        let half = piece.len() / 2;
+        sized[big] = piece[..half].to_vec();
+        sized.push(piece[half..].to_vec());
+    }
+    // 4. Largest-first greedy packing with cap-spill.
+    sized.sort_by(|a, b| b.len().cmp(&a.len()).then(a[0].cmp(&b[0])));
+    let mut load = vec![0usize; m];
+    let mut assignment = vec![0usize; n];
+    for piece in &sized {
+        let mut rest: &[usize] = piece;
+        while !rest.is_empty() {
+            let (bin, _) = load
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &l)| (l, i))
+                .expect("m >= 1");
+            let space = cap - load[bin];
+            assert!(space > 0, "all bins at cap with nodes left (m*cap >= n)");
+            let take = rest.len().min(space);
+            for &v in &rest[..take] {
+                assignment[v] = bin;
+            }
+            load[bin] += take;
+            rest = &rest[take..];
+        }
+    }
+    Partition::from_assignment(m, assignment)
+}
+
+/// File-format tag for exported assignments.
+pub const PARTITION_FORMAT: &str = "cgcn-partition-v1";
+
+/// A partition loaded from (or about to be written to) an assignment file.
+#[derive(Clone, Debug)]
+pub struct PartitionFile {
+    /// Dataset name/path the assignment was computed on (advisory —
+    /// import only checks the node count).
+    pub dataset: String,
+    /// Partitioner that produced it ("louvain", "metis", …).
+    pub method: String,
+    /// Seed it was produced with.
+    pub seed: u64,
+    pub partition: Partition,
+}
+
+/// Write an assignment file (`cgcn-partition-v1` JSON).
+pub fn save_partition_file(path: &str, pf: &PartitionFile) -> Result<()> {
+    let json = Json::obj(vec![
+        ("format", Json::str(PARTITION_FORMAT)),
+        ("dataset", Json::str(&pf.dataset)),
+        ("n", Json::num(pf.partition.assignment.len() as f64)),
+        ("m", Json::num(pf.partition.m() as f64)),
+        ("method", Json::str(&pf.method)),
+        ("seed", Json::num(pf.seed as f64)),
+        (
+            "assignment",
+            Json::arr(
+                pf.partition
+                    .assignment
+                    .iter()
+                    .map(|&c| Json::num(c as f64))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, json.to_pretty() + "\n")
+        .with_context(|| format!("writing partition file {path}"))
+}
+
+/// Load and validate an assignment file: format tag, coverage, community
+/// count, and no empty community.
+pub fn load_partition_file(path: &str) -> Result<PartitionFile> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading partition file {path}"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("{path}: invalid JSON: {e:?}"))?;
+    let format = json.get("format").as_str().unwrap_or("");
+    ensure!(
+        format == PARTITION_FORMAT,
+        "{path}: format {format:?}, want {PARTITION_FORMAT:?}"
+    );
+    let n = json.get("n").as_usize().context("missing n")?;
+    let m = json.get("m").as_usize().context("missing m")?;
+    ensure!((1..=n).contains(&m), "{path}: invalid m={m} for n={n}");
+    let raw = json.get("assignment").as_arr().context("missing assignment")?;
+    ensure!(
+        raw.len() == n,
+        "{path}: assignment has {} entries, header says n={n}",
+        raw.len()
+    );
+    let mut assignment = Vec::with_capacity(n);
+    for (v, j) in raw.iter().enumerate() {
+        let c = j
+            .as_usize()
+            .with_context(|| format!("assignment[{v}] not an index"))?;
+        if c >= m {
+            bail!("{path}: assignment[{v}] = {c} out of range (m={m})");
+        }
+        assignment.push(c);
+    }
+    let partition = Partition::from_assignment(m, assignment);
+    if let Some(empty) = partition.members.iter().position(|mem| mem.is_empty()) {
+        bail!("{path}: community {empty} is empty");
+    }
+    Ok(PartitionFile {
+        dataset: json.get("dataset").as_str().unwrap_or("").to_string(),
+        method: json.get("method").as_str().unwrap_or("").to_string(),
+        seed: json.get("seed").as_f64().unwrap_or(0.0) as u64,
+        partition,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+    use crate::prop_assert;
+    use crate::util::proplite;
+
+    #[test]
+    fn merge_keeps_exact_community_count() {
+        // 5 detected communities of varying size onto m = 1..=8 agents.
+        let labels = [0, 0, 0, 0, 1, 1, 2, 2, 2, 3, 4, 4];
+        let n = labels.len();
+        for m in 1..=8 {
+            let p = merge_to_m(n, &labels, m);
+            p.validate(n);
+            assert_eq!(p.m(), m);
+            assert!(p.members.iter().all(|mem| !mem.is_empty()), "m={m}");
+            let cap = crate::config::community_cap(n, m);
+            assert!(p.sizes().iter().all(|&s| s <= cap), "m={m}: {:?}", p.sizes());
+        }
+    }
+
+    #[test]
+    fn merge_preserves_small_communities_when_counts_match() {
+        // k == m and everything under cap: pieces must not be split.
+        let labels = [0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let p = merge_to_m(9, &labels, 3);
+        let mut sizes = p.sizes();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![3, 3, 3]);
+        // Nodes 0-2 stayed together (in some bin).
+        assert_eq!(p.assignment[0], p.assignment[1]);
+        assert_eq!(p.assignment[1], p.assignment[2]);
+    }
+
+    #[test]
+    fn merge_property_cover_nonempty_capped() {
+        proplite::check("merge-to-m", 40, 0xC0DE, |g| {
+            let n = g.usize_in(4, 120).max(4);
+            let k = g.usize_in(1, n);
+            let labels: Vec<usize> = (0..n).map(|_| g.usize_in(0, k - 1).min(k - 1)).collect();
+            let m = g.usize_in(1, n.min(9)).clamp(1, n);
+            let p = merge_to_m(n, &labels, m);
+            let total: usize = p.sizes().iter().sum();
+            prop_assert!(total == n, "cover {total} != {n} (m={m})");
+            prop_assert!(p.m() == m, "got {} parts, want {m}", p.m());
+            prop_assert!(
+                p.members.iter().all(|mem| !mem.is_empty()),
+                "empty part (n={n}, m={m}, sizes={:?})",
+                p.sizes()
+            );
+            let cap = crate::config::community_cap(n, m);
+            prop_assert!(
+                p.sizes().iter().all(|&s| s <= cap),
+                "cap {cap} exceeded (n={n}, m={m}, sizes={:?})",
+                p.sizes()
+            );
+            // Determinism: same labels, same result.
+            let p2 = merge_to_m(n, &labels, m);
+            prop_assert!(p.assignment == p2.assignment, "merge_to_m not deterministic");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn louvain_partition_is_valid_and_low_cut_on_caveman() {
+        let ds = fixtures::caveman(20, 5);
+        let p = louvain_partition(&ds.graph, 2, None);
+        p.validate(ds.n());
+        assert_eq!(p.m(), 2);
+        // Two caves, two bridges: a community-aware split keeps the cut
+        // near the bridge count (random would cut ~half the edges).
+        let cut = p.edgecut(&ds.graph);
+        assert!(cut <= 6, "louvain caveman edgecut {cut} too high");
+    }
+
+    #[test]
+    fn partition_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cgcn_part_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        let path = path.to_str().unwrap();
+        let ds = fixtures::caveman(10, 1);
+        let p = louvain_partition(&ds.graph, 3, None);
+        let pf = PartitionFile {
+            dataset: "caveman".into(),
+            method: "louvain".into(),
+            seed: 17,
+            partition: p.clone(),
+        };
+        save_partition_file(path, &pf).unwrap();
+        let back = load_partition_file(path).unwrap();
+        assert_eq!(back.dataset, "caveman");
+        assert_eq!(back.method, "louvain");
+        assert_eq!(back.seed, 17);
+        assert_eq!(back.partition.assignment, p.assignment);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partition_file_rejects_bad_input() {
+        let dir = std::env::temp_dir().join(format!("cgcn_part_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, text: &str| -> String {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            p.to_str().unwrap().to_string()
+        };
+        // Wrong format tag.
+        let p = write("fmt.json", r#"{"format":"nope","n":1,"m":1,"assignment":[0]}"#);
+        assert!(load_partition_file(&p).is_err());
+        // Out-of-range community id.
+        let p = write(
+            "range.json",
+            r#"{"format":"cgcn-partition-v1","n":2,"m":2,"assignment":[0,2]}"#,
+        );
+        assert!(load_partition_file(&p).is_err());
+        // Empty community.
+        let p = write(
+            "empty.json",
+            r#"{"format":"cgcn-partition-v1","n":2,"m":2,"assignment":[0,0]}"#,
+        );
+        assert!(load_partition_file(&p).is_err());
+        // Length mismatch.
+        let p = write(
+            "len.json",
+            r#"{"format":"cgcn-partition-v1","n":3,"m":1,"assignment":[0,0]}"#,
+        );
+        assert!(load_partition_file(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,222 @@
+//! Partition-quality analytics: modularity, edge-cut, boundary volume,
+//! per-community conductance, and balance for **any** [`Partition`] —
+//! the numbers the paper's argument rests on (dense communities ⇒ small
+//! `p`/`s` boundary messages ⇒ cheap distributed ADMM).
+//!
+//! One entry point: [`evaluate`] walks the edge list once and the nodes
+//! once, so it is O(E + V) and safe to run on every training startup.
+//! Reports export as JSON ([`QualityReport::to_json`]) and, behind the
+//! `CGCN_OBS` gate, as `cgcn_partition_*` gauges ([`QualityReport::record_obs`]).
+
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::util::json::Json;
+
+/// Quality metrics for one (graph, partition) pair.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    /// Partitioner name ("louvain", "metis", …) — label only.
+    pub method: String,
+    pub n: usize,
+    pub m: usize,
+    /// Undirected edge count of the graph.
+    pub num_edges: usize,
+    /// Newman modularity Q = Σ_c [l_c/E − (d_c/2E)²] ∈ [−0.5, 1).
+    pub modularity: f64,
+    /// Edges with endpoints in different communities.
+    pub edge_cut: usize,
+    /// edge_cut / num_edges (0 when the graph has no edges).
+    pub cut_fraction: f64,
+    /// Nodes with at least one neighbor in another community — the `p`/`s`
+    /// exchange set of the paper's ADMM formulation.
+    pub boundary_nodes: usize,
+    /// max community size / ideal size (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    pub min_size: usize,
+    pub max_size: usize,
+    /// Per-community conductance cut(c)/min(vol(c), vol(V∖c)) ∈ [0, 1].
+    pub conductance: Vec<f64>,
+    pub max_conductance: f64,
+    pub mean_conductance: f64,
+}
+
+/// Compute every quality metric for `p` over `g` in one O(E + V) pass.
+pub fn evaluate(g: &Graph, p: &Partition, method: &str) -> QualityReport {
+    let n = g.n();
+    let m = p.m();
+    let e = g.num_edges();
+    // Per-community tallies: intra edges, cut edges, degree volume.
+    let mut intra = vec![0u64; m];
+    let mut cut = vec![0u64; m];
+    let mut vol = vec![0u64; m];
+    let mut edge_cut = 0usize;
+    for &(u, v) in g.edges() {
+        let (cu, cv) = (p.assignment[u as usize], p.assignment[v as usize]);
+        if cu == cv {
+            intra[cu] += 1;
+        } else {
+            edge_cut += 1;
+            cut[cu] += 1;
+            cut[cv] += 1;
+        }
+    }
+    for v in 0..n {
+        vol[p.assignment[v]] += g.degree(v) as u64;
+    }
+    let total_vol: u64 = vol.iter().sum(); // = 2E
+    let modularity = if e == 0 {
+        0.0
+    } else {
+        let ef = e as f64;
+        (0..m)
+            .map(|c| intra[c] as f64 / ef - (vol[c] as f64 / (2.0 * ef)).powi(2))
+            .sum()
+    };
+    let conductance: Vec<f64> = (0..m)
+        .map(|c| {
+            let denom = vol[c].min(total_vol - vol[c]);
+            if denom == 0 {
+                0.0
+            } else {
+                cut[c] as f64 / denom as f64
+            }
+        })
+        .collect();
+    let boundary_nodes = (0..n)
+        .filter(|&v| {
+            let c = p.assignment[v];
+            g.neighbors(v)
+                .iter()
+                .any(|&u| p.assignment[u as usize] != c)
+        })
+        .count();
+    let sizes = p.sizes();
+    QualityReport {
+        method: method.to_string(),
+        n,
+        m,
+        num_edges: e,
+        modularity,
+        edge_cut,
+        cut_fraction: if e == 0 { 0.0 } else { edge_cut as f64 / e as f64 },
+        boundary_nodes,
+        imbalance: p.imbalance(n),
+        min_size: sizes.iter().copied().min().unwrap_or(0),
+        max_size: sizes.iter().copied().max().unwrap_or(0),
+        max_conductance: conductance.iter().copied().fold(0.0, f64::max),
+        mean_conductance: if m == 0 {
+            0.0
+        } else {
+            conductance.iter().sum::<f64>() / m as f64
+        },
+        conductance,
+    }
+}
+
+impl QualityReport {
+    /// Serialise the full report (per-community conductances included).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("n", Json::num(self.n as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("num_edges", Json::num(self.num_edges as f64)),
+            ("modularity", Json::num(self.modularity)),
+            ("edge_cut", Json::num(self.edge_cut as f64)),
+            ("cut_fraction", Json::num(self.cut_fraction)),
+            ("boundary_nodes", Json::num(self.boundary_nodes as f64)),
+            ("imbalance", Json::num(self.imbalance)),
+            ("min_size", Json::num(self.min_size as f64)),
+            ("max_size", Json::num(self.max_size as f64)),
+            ("max_conductance", Json::num(self.max_conductance)),
+            ("mean_conductance", Json::num(self.mean_conductance)),
+            (
+                "conductance",
+                Json::arr(self.conductance.iter().map(|&c| Json::num(c)).collect()),
+            ),
+        ])
+    }
+
+    /// Export the scalar metrics as `cgcn_partition_*` gauges. Gauges are
+    /// integral, so float metrics are milli-scaled (modularity 0.413 →
+    /// 413). No-op (one load + branch inside `Gauge::set`) unless
+    /// `CGCN_OBS` is on.
+    pub fn record_obs(&self) {
+        let milli = |x: f64| (x * 1000.0).round() as i64;
+        crate::obs_gauge!("cgcn_partition_communities").set(self.m as i64);
+        crate::obs_gauge!("cgcn_partition_modularity_milli").set(milli(self.modularity));
+        crate::obs_gauge!("cgcn_partition_edge_cut").set(self.edge_cut as i64);
+        crate::obs_gauge!("cgcn_partition_boundary_nodes").set(self.boundary_nodes as i64);
+        crate::obs_gauge!("cgcn_partition_imbalance_milli").set(milli(self.imbalance));
+        crate::obs_gauge!("cgcn_partition_max_conductance_milli").set(milli(self.max_conductance));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fixtures;
+    use crate::partition::{partition, Method};
+
+    #[test]
+    fn single_community_has_zero_modularity_and_cut() {
+        let ds = fixtures::fig1();
+        let p = partition(&ds.graph, 1, Method::Metis, 0);
+        let q = evaluate(&ds.graph, &p, "metis");
+        assert_eq!(q.edge_cut, 0);
+        assert_eq!(q.boundary_nodes, 0);
+        assert!(q.modularity.abs() < 1e-12, "Q = {}", q.modularity);
+        assert_eq!(q.conductance, vec![0.0]);
+    }
+
+    #[test]
+    fn planted_split_beats_random_on_every_metric() {
+        let ds = fixtures::caveman(20, 8);
+        let good = partition(&ds.graph, 2, Method::Metis, 1);
+        let bad = partition(&ds.graph, 2, Method::Random, 1);
+        let qg = evaluate(&ds.graph, &good, "metis");
+        let qb = evaluate(&ds.graph, &bad, "random");
+        assert!(qg.modularity > qb.modularity, "{} <= {}", qg.modularity, qb.modularity);
+        assert!(qg.edge_cut < qb.edge_cut);
+        assert!(qg.boundary_nodes <= qb.boundary_nodes);
+        assert!(qg.max_conductance < qb.max_conductance);
+    }
+
+    #[test]
+    fn conductance_bounded_and_cut_consistent() {
+        let ds = fixtures::caveman(15, 2);
+        for m in [2, 3, 4] {
+            for method in [Method::Metis, Method::Random, Method::Bfs] {
+                let p = partition(&ds.graph, m, method, 9);
+                let q = evaluate(&ds.graph, &p, method.name());
+                assert!(q.conductance.iter().all(|&c| (0.0..=1.0).contains(&c)));
+                assert_eq!(q.edge_cut, p.edgecut(&ds.graph));
+                assert!(q.cut_fraction <= 1.0);
+                assert!(q.boundary_nodes <= ds.n());
+            }
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let ds = fixtures::fig1();
+        let p = partition(&ds.graph, 3, Method::Metis, 0);
+        let q = evaluate(&ds.graph, &p, "metis");
+        let back = Json::parse(&q.to_json().to_pretty()).unwrap();
+        assert_eq!(back.get("method").as_str().unwrap(), "metis");
+        assert_eq!(back.get("m").as_usize().unwrap(), 3);
+        let qj = back.get("modularity").as_f64().unwrap();
+        assert!((qj - q.modularity).abs() < 1e-9);
+        assert_eq!(back.get("conductance").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn edgeless_graph_reports_zeros() {
+        let g = Graph::from_edges(4, &[]);
+        let p = Partition::from_assignment(2, vec![0, 0, 1, 1]);
+        let q = evaluate(&g, &p, "test");
+        assert_eq!(q.modularity, 0.0);
+        assert_eq!(q.cut_fraction, 0.0);
+        assert_eq!(q.max_conductance, 0.0);
+    }
+}

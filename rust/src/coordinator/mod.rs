@@ -160,8 +160,33 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
 
     let (exec, threads, backend) = resolve_exec(args)?;
     let ds = crate::cmd::load_dataset(&dataset, scale, seed)?;
-    let pmethod = crate::cmd::parse_method(&args.get_str("partition"))?;
-    let ws = Arc::new(Workspace::build(&ds, &hp, pmethod)?);
+    let pfile = args.get("partition-file").unwrap_or("").to_string();
+    let (ws, partition_name) = if pfile.is_empty() {
+        let pmethod = crate::cmd::parse_method(&args.get_str("partition"))?;
+        (
+            Arc::new(Workspace::build(&ds, &hp, pmethod)?),
+            args.get_str("partition"),
+        )
+    } else {
+        // Import a precomputed assignment. The file's community count
+        // overrides --communities, and its method name is recorded as
+        // the run's partition so checkpoints/snapshots stay parseable
+        // (a --resume re-detects with that method + hp.seed rather than
+        // re-reading the file).
+        let pf = crate::community::load_partition_file(&pfile)
+            .with_context(|| format!("--partition-file {pfile}"))?;
+        hp.communities = pf.partition.m();
+        let name = if pf.method.is_empty() {
+            args.get_str("partition")
+        } else {
+            pf.method.clone()
+        };
+        anyhow::ensure!(
+            crate::cmd::parse_method(&name).is_ok(),
+            "--partition-file {pfile}: unknown method {name:?}"
+        );
+        (Arc::new(Workspace::from_partition(&ds, &hp, pf.partition)?), name)
+    };
     let link = LinkModel::new(args.get_f64("link-mbps"), args.get_f64("link-lat-us"));
     Ok(TrainSetup {
         ws,
@@ -176,7 +201,7 @@ pub fn setup_from_args(args: &Args) -> Result<TrainSetup> {
         run: RunCfg {
             dataset,
             scale,
-            partition: args.get_str("partition"),
+            partition: partition_name,
         },
     })
 }

@@ -87,12 +87,35 @@ pub struct Workspace {
 impl Workspace {
     /// Build a workspace: partition, permute, extract and pad blocks.
     pub fn build(ds: &Dataset, hp: &HyperParams, method: Method) -> Result<Workspace> {
+        let part = partition::partition(&ds.graph, hp.communities, method, hp.seed);
+        Workspace::from_partition(ds, hp, part)
+    }
+
+    /// Build a workspace from an already-computed partition (e.g. one
+    /// imported with `--partition-file`). Validates that the partition
+    /// matches the dataset and hyper-parameters: node coverage, exactly
+    /// `hp.communities` non-empty parts, and the balance cap every padded
+    /// artifact shape assumes.
+    pub fn from_partition(ds: &Dataset, hp: &HyperParams, part: Partition) -> Result<Workspace> {
         let n = ds.n();
         let m = hp.communities;
         let dims = hp.dims(ds.num_features(), ds.num_classes);
         let layers = dims.len() - 1;
 
-        let part = partition::partition(&ds.graph, m, method, hp.seed);
+        anyhow::ensure!(
+            part.assignment.len() == n,
+            "partition covers {} nodes, dataset has {n}",
+            part.assignment.len()
+        );
+        anyhow::ensure!(
+            part.m() == m,
+            "partition has {} communities, run wants --communities {m}",
+            part.m()
+        );
+        anyhow::ensure!(
+            part.members.iter().all(|mem| !mem.is_empty()),
+            "partition has an empty community"
+        );
         let cap = config::community_cap(n, m);
         for (ci, s) in part.sizes().iter().enumerate() {
             anyhow::ensure!(
@@ -296,6 +319,21 @@ mod tests {
             let total: usize = w.communities.iter().map(|c| c.size).sum();
             assert_eq!(total, 48);
         }
+    }
+
+    #[test]
+    fn from_partition_accepts_valid_rejects_mismatched() {
+        let ds = fixtures::caveman(24, 3);
+        let mut hp = HyperParams::for_dataset("caveman");
+        hp.communities = 3;
+        hp.hidden = 8;
+        let part = crate::partition::partition(&ds.graph, 3, Method::Louvain, hp.seed);
+        let w = Workspace::from_partition(&ds, &hp, part.clone()).unwrap();
+        assert_eq!(w.m, 3);
+        assert_eq!(w.partition.assignment, part.assignment);
+        // Community-count mismatch must be rejected, not mis-shaped.
+        hp.communities = 4;
+        assert!(Workspace::from_partition(&ds, &hp, part).is_err());
     }
 
     #[test]

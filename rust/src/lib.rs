@@ -17,6 +17,10 @@
 //! - [`data`] — synthetic Amazon-like SBM datasets (Table 2 statistics) and
 //!   a binary dataset format.
 //! - [`partition`] — METIS-style multilevel partitioner plus baselines.
+//! - [`community`] — community detection (Louvain, LPA) with a
+//!   deterministic merge-to-M mapping onto balanced agents, partition
+//!   quality analytics (modularity/edge-cut/conductance), and the
+//!   `cgcn-partition-v1` assignment file format (DESIGN.md §13).
 //! - [`runtime`] — the [`runtime::ComputeBackend`] trait with the native
 //!   and (feature-gated) XLA implementations; every dense training kernel
 //!   dispatches through it.
@@ -53,6 +57,7 @@
 pub mod bench;
 pub mod cmd;
 pub mod baselines;
+pub mod community;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -30,6 +30,11 @@ const SUBCOMMANDS: &[Subcommand] = &[
         run: cgcn::cmd::cmd_train,
     },
     Subcommand {
+        name: "partition",
+        help: "partition a dataset (louvain|lpa|metis|random|bfs), print a quality report (modularity/edge-cut/conductance/balance), optionally export the assignment (--partition-file) for train to reuse",
+        run: cgcn::cmd::cmd_partition,
+    },
+    Subcommand {
         name: "serve",
         help: "run the batched multi-threaded inference server on a saved model",
         run: cgcn::cmd::cmd_serve,
@@ -74,7 +79,8 @@ fn main() {
     .opt("epochs", Some("50"), "training epochs")
     .opt("communities", Some("3"), "number of communities M (1 = serial)")
     .opt("method", Some("admm"), "train method: admm|gd|adam|adagrad|adadelta|cluster-gcn")
-    .opt("partition", Some("metis"), "partitioner: metis|random|bfs")
+    .opt("partition", Some("metis"), "partitioner: metis|random|bfs|louvain|lpa")
+    .opt("partition-file", Some(""), "partition: export the assignment to this path; train: import a precomputed assignment (cgcn-partition-v1 JSON) instead of partitioning")
     .opt("clusters", Some("32"), "cluster-gcn: fine partition count c (clamped to n)")
     .opt("batch-clusters", Some("8"), "cluster-gcn: clusters grouped per mini-batch step q")
     .opt("rho", Some("auto"), "ADMM rho (auto = paper default per dataset)")

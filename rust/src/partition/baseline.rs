@@ -10,14 +10,17 @@ use crate::graph::Graph;
 use crate::util::rng::Rng;
 
 /// Exactly-balanced random partition: shuffle nodes, deal round-robin.
+/// Like the metis path, `m > n` clamps to `n` singleton parts so no
+/// community is ever empty.
 pub fn random(g: &Graph, m: usize, rng: &mut Rng) -> Partition {
+    let parts = m.min(g.n()).max(1);
     let mut order: Vec<usize> = (0..g.n()).collect();
     rng.shuffle(&mut order);
     let mut assignment = vec![0usize; g.n()];
     for (i, &v) in order.iter().enumerate() {
-        assignment[v] = i % m;
+        assignment[v] = i % parts;
     }
-    Partition::from_assignment(m, assignment)
+    Partition::from_assignment(parts, assignment)
 }
 
 /// BFS partition: traverse from a random root (restarting on disconnected
@@ -55,9 +58,12 @@ pub fn bfs(g: &Graph, m: usize, rng: &mut Rng) -> Partition {
     chunk_order(&order, m)
 }
 
-/// Cut a node order into `m` near-equal contiguous chunks.
+/// Cut a node order into `m` near-equal contiguous chunks. `m > n`
+/// clamps to `n` singleton chunks (an `n/m == 0` base would otherwise
+/// produce empty communities).
 pub(super) fn chunk_order(order: &[usize], m: usize) -> Partition {
     let n = order.len();
+    let m = m.min(n).max(1);
     let mut assignment = vec![0usize; n];
     // Sizes differ by at most 1: first (n % m) chunks get one extra.
     let base = n / m;
@@ -105,6 +111,29 @@ mod tests {
         let pb = bfs(&ds.graph, 2, &mut rng);
         let pr = random(&ds.graph, 2, &mut rng);
         assert!(pb.edgecut(&ds.graph) < pr.edgecut(&ds.graph));
+    }
+
+    #[test]
+    fn baselines_clamp_m_to_n_with_no_empty_community() {
+        // Regression: `bfs` (via chunk_order's n/m == 0 base) and
+        // `random` (i % m) used to emit empty communities when m > n.
+        // Both now clamp to n singleton parts, matching metis.
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let n = 5;
+        for m in [n - 1, n, n + 1, 2 * n, 10 * n] {
+            for (name, p) in [
+                ("random", random(&g, m, &mut Rng::new(7))),
+                ("bfs", bfs(&g, m, &mut Rng::new(7))),
+            ] {
+                p.validate(n);
+                assert_eq!(p.m(), m.min(n), "{name} m={m}: wrong part count");
+                assert!(
+                    p.members.iter().all(|mem| !mem.is_empty()),
+                    "{name} m={m}: empty community, sizes={:?}",
+                    p.sizes()
+                );
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod baseline;
 pub mod metis;
 
 use crate::graph::Graph;
+use crate::util::pool::Runtime;
 use crate::util::rng::Rng;
 
 /// Which partitioner to use.
@@ -19,6 +20,12 @@ pub enum Method {
     Random,
     /// BFS traversal chunks (cheap locality).
     Bfs,
+    /// Louvain modularity maximization mapped onto `m` balanced agents
+    /// ([`crate::community`]). Deterministic; ignores the seed.
+    Louvain,
+    /// Label propagation mapped onto `m` balanced agents. Deterministic;
+    /// ignores the seed.
+    Lpa,
 }
 
 impl Method {
@@ -27,6 +34,8 @@ impl Method {
             "metis" => Some(Method::Metis),
             "random" => Some(Method::Random),
             "bfs" => Some(Method::Bfs),
+            "louvain" => Some(Method::Louvain),
+            "lpa" => Some(Method::Lpa),
             _ => None,
         }
     }
@@ -35,8 +44,18 @@ impl Method {
             Method::Metis => "metis",
             Method::Random => "random",
             Method::Bfs => "bfs",
+            Method::Louvain => "louvain",
+            Method::Lpa => "lpa",
         }
     }
+    /// Every method, for sweeps and property tests.
+    pub const ALL: [Method; 5] = [
+        Method::Metis,
+        Method::Random,
+        Method::Bfs,
+        Method::Louvain,
+        Method::Lpa,
+    ];
 }
 
 /// A disjoint cover of the graph's nodes into `m` communities.
@@ -102,9 +121,22 @@ impl Partition {
 /// Partition `g` into `m` communities with the chosen method.
 ///
 /// All methods guarantee: disjoint cover, every community non-empty
-/// (for m <= n), imbalance <= ~1.1 for metis/bfs (random is balanced in
-/// expectation and then rebalanced exactly).
+/// (for m <= n), and a max community size within
+/// [`crate::config::community_cap`].
 pub fn partition(g: &Graph, m: usize, method: Method, seed: u64) -> Partition {
+    partition_with_runtime(g, m, method, seed, None)
+}
+
+/// [`partition`] with an optional shared [`Runtime`] for the detectors
+/// that parallelise (louvain, lpa). Results are bitwise identical with
+/// and without a runtime, at any thread count.
+pub fn partition_with_runtime(
+    g: &Graph,
+    m: usize,
+    method: Method,
+    seed: u64,
+    rt: Option<&Runtime>,
+) -> Partition {
     assert!(m >= 1, "need at least one community");
     assert!(m <= g.n(), "more communities than nodes");
     let mut rng = Rng::new(seed);
@@ -112,6 +144,8 @@ pub fn partition(g: &Graph, m: usize, method: Method, seed: u64) -> Partition {
         Method::Metis => metis::partition(g, m, &mut rng),
         Method::Random => baseline::random(g, m, &mut rng),
         Method::Bfs => baseline::bfs(g, m, &mut rng),
+        Method::Louvain => crate::community::louvain_partition(g, m, rt),
+        Method::Lpa => crate::community::lpa_partition(g, m, rt),
     };
     p.validate(g.n());
     debug_assert!(p.members.iter().all(|mem| !mem.is_empty()));
@@ -129,7 +163,7 @@ mod tests {
     #[test]
     fn all_methods_produce_valid_partitions() {
         let ds = fixtures::caveman(20, 3);
-        for method in [Method::Metis, Method::Random, Method::Bfs] {
+        for method in Method::ALL {
             for m in [1, 2, 3, 5] {
                 let p = partition(&ds.graph, m, method, 7);
                 p.validate(ds.n());
@@ -173,7 +207,7 @@ mod tests {
             let edges = g.edges(n, 0.15);
             let graph = crate::graph::Graph::from_edges(n, &edges);
             let m = g.usize_in(1, 4).clamp(1, n);
-            for method in [Method::Metis, Method::Random, Method::Bfs] {
+            for method in Method::ALL {
                 let p = partition(&graph, m, method, g.rng.next_u64());
                 let total: usize = p.sizes().iter().sum();
                 prop_assert!(total == n, "{method:?}: cover {total} != {n}");
@@ -220,6 +254,26 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn every_method_is_deterministic_across_thread_counts() {
+        // n = 765 > the detectors' parallel threshold, so louvain/lpa
+        // really dispatch on the runtime at t > 1. The contract is
+        // bitwise-identical assignments for a fixed seed at any thread
+        // count (metis/random/bfs ignore the runtime entirely).
+        let ds = synth::generate(&synth::AMAZON_PHOTO, 0.1, 11);
+        for method in Method::ALL {
+            let serial = partition(&ds.graph, 4, method, 42);
+            for t in [1usize, 2, 8] {
+                let rt = crate::util::pool::Runtime::new(t);
+                let p = partition_with_runtime(&ds.graph, 4, method, 42, Some(&rt));
+                assert_eq!(
+                    serial.assignment, p.assignment,
+                    "{method:?} diverged at {t} threads"
+                );
+            }
+        }
     }
 
     #[test]
